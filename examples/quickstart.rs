@@ -1,0 +1,59 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Loads the AOT artifacts, pre-trains a tiny LLaMA with Q-GaLore for a few
+//! dozen steps on the synthetic C4-like corpus, and prints what the paper
+//! cares about: loss trajectory, live memory of the quantized state, and
+//! how many SVDs the lazy scheduler actually spent.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use qgalore::coordinator::{pretrain, TrainConfig};
+use qgalore::manifest::Manifest;
+use qgalore::optim::{BuildOptions, Method};
+use qgalore::scheduler::SchedulerConfig;
+use qgalore::util::human_bytes;
+
+fn main() -> Result<()> {
+    let man = Manifest::load("artifacts")?;
+    println!(
+        "loaded manifest: {} model configs, {} update artifacts\n",
+        man.configs.len(),
+        man.updates.len()
+    );
+
+    let cfg = TrainConfig {
+        cfg_name: "llama-tiny".into(),
+        method: Method::QGaLore,
+        steps: 60,
+        lr_max: 0.01,
+        warmup: 6,
+        eval_every: 20,
+        eval_batches: 4,
+        n_documents: 256,
+        seed: 42,
+        opts: BuildOptions {
+            seed: 42,
+            sched: SchedulerConfig { base_interval: 10, ..Default::default() },
+            ..Default::default()
+        },
+        log_every: 10,
+        quiet: false,
+    };
+    let r = pretrain(&man, cfg)?;
+
+    println!("\n=== Q-GaLore quickstart summary ===");
+    println!("final val perplexity : {:.2}", r.final_ppl);
+    println!(
+        "live training state  : {} (INT8 weights + INT4 projections + 8-bit Adam)",
+        human_bytes(r.live_bytes)
+    );
+    println!(
+        "SVD calls            : {} ({:.0}% of a fixed GaLore schedule)",
+        r.svd_count,
+        r.svd_fraction * 100.0
+    );
+    println!("throughput           : {:.2} steps/s", r.steps_per_sec);
+    Ok(())
+}

@@ -1,0 +1,351 @@
+"""AOT lowering: JAX (L2 + L1 Pallas) -> HLO text artifacts + manifest.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the rust side's XLA
+(xla_extension 0.5.1) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Everything the rust coordinator needs to drive the artifacts — operand and
+result names/dtypes/shapes, parameter tables, ABI ordering, hyperparameter
+constants — is written to `artifacts/manifest.json`.  Rust never re-derives
+a shape.
+
+Run: `cd python && python -m compile.aot --out-dir ../artifacts`
+"""
+
+import argparse
+import json
+import os
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import update_step as U
+from .configs import CONFIGS, PAPER_CONFIGS, QUANT_BLOCK, ModelConfig
+
+DTYPES = {
+    "f32": jnp.float32,
+    "i8": jnp.int8,
+    "u8": jnp.uint8,
+    "i32": jnp.int32,
+}
+DTYPE_NAMES = {v: k for k, v in DTYPES.items()}
+
+Spec = Tuple[str, str, Tuple[int, ...]]  # (name, dtype, shape)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(spec: Spec):
+    _, dt, shape = spec
+    return jax.ShapeDtypeStruct(shape, DTYPES[dt])
+
+
+def _dtype_name(dt) -> str:
+    return DTYPE_NAMES[jnp.dtype(dt).type if not isinstance(dt, type) else dt]
+
+
+def result_specs(fn, operands: Sequence[Spec]) -> List[Spec]:
+    outs = jax.eval_shape(fn, *[_sds(s) for s in operands])
+    specs = []
+    for i, o in enumerate(outs):
+        name = f"out{i}"
+        dname = {np.dtype("float32"): "f32", np.dtype("int8"): "i8",
+                 np.dtype("uint8"): "u8", np.dtype("int32"): "i32"}[np.dtype(o.dtype)]
+        specs.append((name, dname, tuple(o.shape)))
+    return specs
+
+
+def lower_artifact(fn: Callable, operands: Sequence[Spec], path: str) -> str:
+    lowered = jax.jit(fn).lower(*[_sds(s) for s in operands])
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return text
+
+
+# ---------------------------------------------------------------------------
+# Operand spec builders (the ABI; mirrored by rust/src/model).
+# ---------------------------------------------------------------------------
+
+def _blk(numel: int) -> int:
+    return min(QUANT_BLOCK, numel)
+
+
+def quant8_specs(prefix: str, numel: int) -> List[Spec]:
+    b = _blk(numel)
+    nb = numel // b
+    return [
+        (f"{prefix}.q", "i8", (nb, b)),
+        (f"{prefix}.scale", "f32", (nb,)),
+        (f"{prefix}.zero", "f32", (nb,)),
+    ]
+
+
+def quant4_specs(prefix: str, numel: int) -> List[Spec]:
+    b = _blk(numel)
+    nb = numel // b
+    return [
+        (f"{prefix}.q4", "u8", (nb, b // 2)),
+        (f"{prefix}.scale", "f32", (nb,)),
+        (f"{prefix}.zero", "f32", (nb,)),
+    ]
+
+
+def adam8_state_specs(prefix: str, numel: int) -> List[Spec]:
+    b = _blk(numel)
+    nb = numel // b
+    return [
+        (f"{prefix}.mq", "i8", (nb, b)),
+        (f"{prefix}.ms", "f32", (nb,)),
+        (f"{prefix}.vq", "u8", (nb, b)),
+        (f"{prefix}.vs", "f32", (nb,)),
+    ]
+
+
+def batch_specs(cfg: ModelConfig, batch: int) -> List[Spec]:
+    return [
+        ("tokens", "i32", (batch, cfg.max_seq_len)),
+        ("targets", "i32", (batch, cfg.max_seq_len)),
+    ]
+
+
+def fwd_bwd_fp_specs(cfg, batch):
+    ops = [(n, "f32", tuple(s)) for n, s in cfg.fp_shapes()]
+    ops += [(n, "f32", tuple(s)) for n, s in cfg.linear_shapes()]
+    return ops + batch_specs(cfg, batch)
+
+
+def fwd_bwd_q8_specs(cfg, batch):
+    ops = [(n, "f32", tuple(s)) for n, s in cfg.fp_shapes()]
+    for n, (out, inn) in cfg.linear_shapes():
+        ops += quant8_specs(n, out * inn)
+    return ops + batch_specs(cfg, batch)
+
+
+def lora_specs(cfg, batch, quantized_base):
+    ops = [(n, "f32", tuple(s)) for n, s in cfg.fp_shapes()]
+    for n, (out, inn) in cfg.linear_shapes():
+        if quantized_base:
+            ops += quant8_specs(n, out * inn)
+        else:
+            ops.append((n, "f32", (out, inn)))
+    for n, (out, inn) in cfg.linear_shapes():
+        ops += [
+            (f"{n}.lora_u", "f32", (out, cfg.rank)),
+            (f"{n}.lora_v", "f32", (cfg.rank, inn)),
+        ]
+    return ops + batch_specs(cfg, batch)
+
+
+def lowrank_specs(cfg, batch):
+    ops = [(n, "f32", tuple(s)) for n, s in cfg.fp_shapes()]
+    for n, (out, inn) in cfg.linear_shapes():
+        ops += [
+            (f"{n}.u", "f32", (out, cfg.rank)),
+            (f"{n}.v", "f32", (cfg.rank, inn)),
+        ]
+    return ops + batch_specs(cfg, batch)
+
+
+def scalar_specs():
+    return [("c", "f32", (2,)), ("lr", "f32", (1,))]
+
+
+def qgalore_update_specs(m, n, r, sr=True):
+    ops = [("g", "f32", (m, n))]
+    ops += quant4_specs("p", m * r)
+    ops += adam8_state_specs("opt", r * n)
+    ops += quant8_specs("w", m * n)
+    ops += scalar_specs()
+    if sr:
+        # SR noise operand, generated by the rust coordinator's PCG (§Perf)
+        ops.append(("u", "f32", (m, n)))
+    return ops
+
+
+def galore_update_specs(m, n, r):
+    return [
+        ("g", "f32", (m, n)),
+        ("p", "f32", (m, r)),
+        ("m", "f32", (r, n)),
+        ("v", "f32", (r, n)),
+        ("w", "f32", (m, n)),
+    ] + scalar_specs()
+
+
+def galore8bit_update_specs(m, n, r):
+    ops = [("g", "f32", (m, n)), ("p", "f32", (m, r))]
+    ops += adam8_state_specs("opt", r * n)
+    ops.append(("w", "f32", (m, n)))
+    return ops + scalar_specs()
+
+
+def adam_step_specs(numel):
+    return [
+        ("g", "f32", (numel,)),
+        ("m", "f32", (numel,)),
+        ("v", "f32", (numel,)),
+        ("w", "f32", (numel,)),
+    ] + scalar_specs()
+
+
+def adam8bit_step_specs(numel):
+    ops = [("g", "f32", (numel,))]
+    ops += adam8_state_specs("opt", numel)
+    ops.append(("w", "f32", (numel,)))
+    return ops + scalar_specs()
+
+
+# ---------------------------------------------------------------------------
+# Build plans
+# ---------------------------------------------------------------------------
+
+def model_artifacts(cfg: ModelConfig, batch: int):
+    """(name, fn, operand_specs) for every model-level entry point."""
+    return [
+        ("fwd_bwd_fp", M.make_fwd_bwd_fp(cfg), fwd_bwd_fp_specs(cfg, batch)),
+        ("fwd_bwd_q8", M.make_fwd_bwd_q8(cfg), fwd_bwd_q8_specs(cfg, batch)),
+        ("eval_fwd_fp", M.make_eval_fwd_fp(cfg), fwd_bwd_fp_specs(cfg, batch)),
+        ("eval_rows_fp", M.make_eval_rows_fp(cfg), fwd_bwd_fp_specs(cfg, batch)),
+        ("eval_fwd_q8", M.make_eval_fwd_q8(cfg), fwd_bwd_q8_specs(cfg, batch)),
+        ("lora_fwd_bwd", M.make_lora_fwd_bwd(cfg, False), lora_specs(cfg, batch, False)),
+        ("qlora_fwd_bwd", M.make_lora_fwd_bwd(cfg, True), lora_specs(cfg, batch, True)),
+        ("lowrank_fwd_bwd", M.make_lowrank_fwd_bwd(cfg), lowrank_specs(cfg, batch)),
+    ]
+
+
+def update_artifacts(cfg: ModelConfig):
+    """(name, fn, operand_specs) for per-shape update steps (dedup by key)."""
+    arts = {}
+    r = cfg.rank
+    for m, n in cfg.unique_linear_dims():
+        arts[f"qgalore_update_{m}x{n}_r{r}"] = (
+            U.make_qgalore_update(m, n, r), qgalore_update_specs(m, n, r))
+        arts[f"qgalore_rtn_update_{m}x{n}_r{r}"] = (
+            U.make_qgalore_update(m, n, r, sr=False),
+            qgalore_update_specs(m, n, r, sr=False))
+        arts[f"galore_update_{m}x{n}_r{r}"] = (
+            U.make_galore_update(m, n, r), galore_update_specs(m, n, r))
+        arts[f"galore8bit_update_{m}x{n}_r{r}"] = (
+            U.make_galore8bit_update(m, n, r), galore8bit_update_specs(m, n, r))
+    numels = set()
+    for _, s in cfg.fp_shapes():
+        numels.add(int(np.prod(s)))
+    for _, (m, n) in cfg.linear_shapes():
+        numels.add(m * n)            # Full / 8-bit Adam train linears directly
+        numels.add(m * cfg.rank)     # adapter / factor U
+        numels.add(cfg.rank * n)     # adapter / factor V
+    for ne in sorted(numels):
+        arts[f"adam_step_{ne}"] = (U.make_adam_step(ne), adam_step_specs(ne))
+        arts[f"adam8bit_step_{ne}"] = (
+            U.make_adam8bit_step(ne), adam8bit_step_specs(ne))
+    return arts
+
+
+def write_init_checkpoint(cfg: ModelConfig, path: str, seed: int = 0):
+    """Flat little-endian f32 of all params in ABI order (fp then linear)."""
+    fp, lin = M.init_params(cfg, seed=seed)
+    chunks = [np.asarray(fp[n]).ravel() for n, _ in cfg.fp_shapes()]
+    chunks += [np.asarray(lin[n]).ravel() for n, _ in cfg.linear_shapes()]
+    flat = np.concatenate(chunks).astype("<f4")
+    flat.tofile(path)
+    return flat.size
+
+
+def spec_json(specs: Sequence[Spec]):
+    return [{"name": n, "dtype": d, "shape": list(s)} for n, d, s in specs]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="llama-tiny")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    # legacy Makefile compat: --out <file> implies out-dir = dirname
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "block": QUANT_BLOCK,
+        "galore_scale": U.GALORE_SCALE,
+        "beta1": U.BETA1,
+        "beta2": U.BETA2,
+        "eps": U.EPS,
+        "lora_alpha": M.LORA_ALPHA,
+        "batch": args.batch,
+        "configs": {},
+        "updates": {},
+        "paper_configs": {
+            name: {
+                "dim": c.dim, "n_layers": c.n_layers, "n_heads": c.n_heads,
+                "ffn_dim": c.ffn_dim, "vocab_size": c.vocab_size,
+                "max_seq_len": c.max_seq_len, "rank": c.rank,
+            }
+            for name, c in PAPER_CONFIGS.items()
+        },
+    }
+
+    for cfg_name in args.configs.split(","):
+        cfg = CONFIGS[cfg_name.strip()]
+        centry = {
+            "dim": cfg.dim, "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "ffn_dim": cfg.ffn_dim, "vocab_size": cfg.vocab_size,
+            "max_seq_len": cfg.max_seq_len, "rank": cfg.rank,
+            "fp_params": [{"name": n, "shape": list(s)} for n, s in cfg.fp_shapes()],
+            "linear_params": [
+                {"name": n, "shape": list(s)} for n, s in cfg.linear_shapes()
+            ],
+            "artifacts": {},
+        }
+        for name, fn, ops in model_artifacts(cfg, args.batch):
+            path = f"{name}_{cfg.name}.hlo.txt"
+            print(f"lowering {path} ...", flush=True)
+            lower_artifact(fn, ops, os.path.join(out_dir, path))
+            centry["artifacts"][name] = {
+                "path": path,
+                "operands": spec_json(ops),
+                "results": spec_json(result_specs(fn, ops)),
+            }
+        init_path = f"init_{cfg.name}.bin"
+        nfloats = write_init_checkpoint(
+            cfg, os.path.join(out_dir, init_path), seed=args.seed
+        )
+        centry["init"] = {"path": init_path, "numel": nfloats}
+        manifest["configs"][cfg.name] = centry
+
+        for name, (fn, ops) in update_artifacts(cfg).items():
+            if name in manifest["updates"]:
+                continue
+            path = f"{name}.hlo.txt"
+            print(f"lowering {path} ...", flush=True)
+            lower_artifact(fn, ops, os.path.join(out_dir, path))
+            manifest["updates"][name] = {
+                "path": path,
+                "operands": spec_json(ops),
+                "results": spec_json(result_specs(fn, ops)),
+            }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {out_dir}/manifest.json "
+          f"({sum(len(c['artifacts']) for c in manifest['configs'].values())} model "
+          f"+ {len(manifest['updates'])} update artifacts)")
+
+
+if __name__ == "__main__":
+    main()

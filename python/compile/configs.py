@@ -1,0 +1,132 @@
+"""Model configurations for the Q-GaLore reproduction.
+
+The paper trains LLaMA-style models from 60M to 7B parameters.  On this
+testbed (CPU PJRT, interpret-mode Pallas) we train architecturally identical
+but scaled-down configs; the analytic memory model on the rust side evaluates
+the paper's exact scales.  Shapes are kept powers of two so the Pallas tiling
+divides evenly and the MXU-alignment story holds on real hardware.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+# Block size for block-wise uniform quantization (paper §3.1: "We default to
+# use block size of 256 in all implementations").
+QUANT_BLOCK = 256
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    dim: int
+    n_layers: int
+    n_heads: int
+    ffn_dim: int
+    max_seq_len: int
+    # GaLore rank: the paper uses a quarter of the hidden dimension.
+    rank: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+    def linear_shapes(self) -> List[Tuple[str, Tuple[int, int]]]:
+        """Ordered (name, (out_dim, in_dim)) for every GaLore-eligible linear.
+
+        Weight convention: y = x @ W.T with W of shape (out, in) — matches
+        torch.nn.Linear and the paper's appendix pseudocode.
+        """
+        shapes = []
+        for i in range(self.n_layers):
+            p = f"layers.{i}."
+            shapes += [
+                (p + "attn.wq", (self.dim, self.dim)),
+                (p + "attn.wk", (self.dim, self.dim)),
+                (p + "attn.wv", (self.dim, self.dim)),
+                (p + "attn.wo", (self.dim, self.dim)),
+                (p + "mlp.w1", (self.ffn_dim, self.dim)),
+                (p + "mlp.w3", (self.ffn_dim, self.dim)),
+                (p + "mlp.w2", (self.dim, self.ffn_dim)),
+            ]
+        return shapes
+
+    def fp_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Full-precision (non-GaLore-eligible) parameters: embeddings, norms.
+
+        The output head is tied to the token embedding.
+        """
+        shapes: List[Tuple[str, Tuple[int, ...]]] = [
+            ("tok_embedding", (self.vocab_size, self.dim)),
+        ]
+        for i in range(self.n_layers):
+            p = f"layers.{i}."
+            shapes += [
+                (p + "attn_norm", (self.dim,)),
+                (p + "mlp_norm", (self.dim,)),
+            ]
+        shapes.append(("final_norm", (self.dim,)))
+        return shapes
+
+    def unique_linear_dims(self) -> List[Tuple[int, int]]:
+        seen, out = set(), []
+        for _, s in self.linear_shapes():
+            if s not in seen:
+                seen.add(s)
+                out.append(s)
+        return out
+
+    def n_params(self) -> int:
+        n = sum(a * b for _, (a, b) in self.linear_shapes())
+        n += sum(
+            int(__import__("numpy").prod(s)) for _, s in self.fp_shapes()
+        )
+        return n
+
+
+def _cfg(name, vocab, dim, layers, heads, ffn, seq, rank=None) -> ModelConfig:
+    return ModelConfig(
+        name=name,
+        vocab_size=vocab,
+        dim=dim,
+        n_layers=layers,
+        n_heads=heads,
+        ffn_dim=ffn,
+        max_seq_len=seq,
+        rank=rank if rank is not None else max(dim // 4, 4),
+    )
+
+
+# Trainable-on-CPU configs. `llama-tiny` is the default artifact target: small
+# enough that interpret-mode Pallas fwd/bwd steps run in tens of ms, large
+# enough that every quant block, tile and head path is exercised.
+CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        _cfg("llama-micro", vocab=512, dim=32, layers=1, heads=2, ffn=64, seq=32),
+        _cfg("llama-tiny", vocab=512, dim=64, layers=2, heads=4, ffn=128, seq=64),
+        _cfg("llama-nano", vocab=1024, dim=128, layers=2, heads=4, ffn=256, seq=64),
+        _cfg("llama-small", vocab=2048, dim=256, layers=4, heads=8, ffn=512, seq=128),
+    ]
+}
+
+# Paper-scale configs — never trained here, only used by the analytic memory
+# model (mirrored in rust/src/memory) and to size artifacts' metadata tables.
+PAPER_CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        _cfg("llama-60m", 32000, 512, 8, 8, 1376, 1024, rank=128),
+        _cfg("llama-130m", 32000, 768, 12, 12, 2048, 1024, rank=256),
+        _cfg("llama-350m", 32000, 1024, 24, 16, 2736, 1024, rank=256),
+        _cfg("llama-1b", 32000, 2048, 24, 32, 5461, 1024, rank=512),
+        _cfg("llama-7b", 32000, 4096, 32, 32, 11008, 2048, rank=1024),
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name in CONFIGS:
+        return CONFIGS[name]
+    if name in PAPER_CONFIGS:
+        return PAPER_CONFIGS[name]
+    raise KeyError(f"unknown model config: {name!r}")

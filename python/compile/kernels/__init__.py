@@ -1,0 +1,43 @@
+"""L1 Pallas kernels for Q-GaLore.
+
+Public surface (all interpret=True, see module docstrings):
+
+quant:    quantize_blockwise, dequantize_blockwise, sr_quantize_blockwise,
+          pack_int4, quantize_int4_packed, dequantize_int4_packed
+project:  project (P^T G), project_back (P U), matmul, matmul_at
+adam8:    adam8bit_update, adam_update
+linear8:  linear8 (fused dequant+matmul eval path)
+ref:      pure-jnp oracles for all of the above
+"""
+
+from .quant import (
+    BLOCK,
+    quantize_blockwise,
+    dequantize_blockwise,
+    sr_quantize_blockwise,
+    pack_int4,
+    quantize_int4_packed,
+    dequantize_int4_packed,
+)
+from .projection import project, project_back, matmul, matmul_at
+from .adam8 import adam8bit_update, adam_update
+from .linear8_kernel import linear8
+from . import ref
+
+__all__ = [
+    "BLOCK",
+    "quantize_blockwise",
+    "dequantize_blockwise",
+    "sr_quantize_blockwise",
+    "pack_int4",
+    "quantize_int4_packed",
+    "dequantize_int4_packed",
+    "project",
+    "project_back",
+    "matmul",
+    "matmul_at",
+    "adam8bit_update",
+    "adam_update",
+    "linear8",
+    "ref",
+]

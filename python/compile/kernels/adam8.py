@@ -1,0 +1,128 @@
+"""Block-wise 8-bit Adam update Pallas kernel (L1).
+
+The paper uses 8-bit Adam [18] as the inner optimizer: both moments live in
+8-bit codes with one dynamic scale per 256-element block.  One kernel
+invocation performs, per block row, entirely inside VMEM:
+
+    m, v   <- dequant(m8), dequant(v8)
+    m      <- b1*m + (1-b1)*g
+    v      <- b2*v + (1-b2)*g^2
+    update <- (m*c1) / (sqrt(v*c2) + eps)
+    m8, v8 <- requant(m), requant(v)
+
+c1 = 1/(1-b1^t) and c2 = 1/(1-b2^t) are step-dependent bias corrections,
+passed as (1,) operands so one compiled executable serves every step.
+
+m is symmetric int8 (scale = absmax/127); v is non-negative uint8
+(scale = max/255) — matching `ref.adam8bit_update_ref` and the rust
+`quant::adam8` mirror.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant import BLOCK, EPS, _rows, _row_spec, _vec_spec
+from .ref import UPDATE_CLIP
+
+
+# v uses the sqrt code map (see ref.adam8bit_update_ref): linear u8 codes
+# underflow for small v and blow the update up to m/eps.
+def _adam8_kernel(g_ref, mq_ref, ms_ref, vq_ref, vs_ref, c_ref,
+                  up_ref, mq_o, ms_o, vq_o, vs_o, *, beta1, beta2, eps):
+    g = g_ref[...]
+    m = mq_ref[...].astype(jnp.float32) * ms_ref[...][:, None]
+    v = (vq_ref[...].astype(jnp.float32) * vs_ref[...][:, None]) ** 2
+    c1 = c_ref[0]
+    c2 = c_ref[1]
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    up = (m * c1) / (jnp.sqrt(v * c2) + eps)
+    up_ref[...] = jnp.clip(up, -UPDATE_CLIP, UPDATE_CLIP)
+    m_scale = jnp.maximum(jnp.max(jnp.abs(m), axis=-1), EPS) / 127.0
+    v_scale = jnp.sqrt(jnp.maximum(jnp.max(v, axis=-1), EPS)) / 255.0
+    mq_o[...] = jnp.clip(jnp.round(m / m_scale[:, None]), -127, 127).astype(jnp.int8)
+    vq_o[...] = jnp.clip(
+        jnp.round(jnp.sqrt(v) / v_scale[:, None]), 0, 255
+    ).astype(jnp.uint8)
+    ms_o[...] = m_scale
+    vs_o[...] = v_scale
+
+
+def adam8bit_update(g, m_q, m_scale, v_q, v_scale, c,
+                    beta1=0.9, beta2=0.999, eps=1e-8, block: int = BLOCK):
+    """One blockwise 8-bit Adam step.
+
+    g: gradient, any shape with size % block == 0 (flattened internally).
+    c: (2,) f32 = [1/(1-b1^t), 1/(1-b2^t)].
+    -> (update f32 shape-of-g, m_q', m_scale', v_q', v_scale')
+    """
+    gb = g.reshape(-1, block).astype(jnp.float32)
+    nb = gb.shape[0]
+    rows = _rows(nb)
+    scalar_spec = pl.BlockSpec((2,), lambda i: (0,))
+    out = pl.pallas_call(
+        functools.partial(_adam8_kernel, beta1=beta1, beta2=beta2, eps=eps),
+        grid=(nb // rows,),
+        in_specs=[
+            _row_spec(rows, block),            # g
+            _row_spec(rows, block),            # m_q
+            _vec_spec(rows),                   # m_scale
+            _row_spec(rows, block),            # v_q
+            _vec_spec(rows),                   # v_scale
+            scalar_spec,                       # c = [c1, c2]
+        ],
+        out_specs=[
+            _row_spec(rows, block),
+            _row_spec(rows, block),
+            _vec_spec(rows),
+            _row_spec(rows, block),
+            _vec_spec(rows),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.float32),
+            jax.ShapeDtypeStruct((nb, block), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb, block), jnp.uint8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=True,
+    )(gb, m_q, m_scale, v_q, v_scale, c)
+    update, mq, ms, vq, vs = out
+    return update.reshape(g.shape), mq, ms, vq, vs
+
+
+def _adam_kernel(g_ref, m_ref, v_ref, c_ref, up_ref, m_o, v_o,
+                 *, beta1, beta2, eps):
+    g = g_ref[...]
+    c1 = c_ref[0]
+    c2 = c_ref[1]
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    up_ref[...] = (m * c1) / (jnp.sqrt(v * c2) + eps)
+    m_o[...] = m
+    v_o[...] = v
+
+
+def adam_update(g, m, v, c, beta1=0.9, beta2=0.999, eps=1e-8,
+                block: int = BLOCK):
+    """Full-precision Adam step (baseline `Full` method and fp states)."""
+    gb = g.reshape(-1, block).astype(jnp.float32)
+    mb = m.reshape(-1, block)
+    vb = v.reshape(-1, block)
+    nb = gb.shape[0]
+    rows = _rows(nb)
+    scalar_spec = pl.BlockSpec((2,), lambda i: (0,))
+    out = pl.pallas_call(
+        functools.partial(_adam_kernel, beta1=beta1, beta2=beta2, eps=eps),
+        grid=(nb // rows,),
+        in_specs=[_row_spec(rows, block)] * 3 + [scalar_spec],
+        out_specs=[_row_spec(rows, block)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.float32)] * 3,
+        interpret=True,
+    )(gb, mb, vb, c)
+    update, m_n, v_n = out
+    return (update.reshape(g.shape), m_n.reshape(m.shape),
+            v_n.reshape(v.shape))

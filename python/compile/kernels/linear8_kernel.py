@@ -1,0 +1,82 @@
+"""Fused INT8-linear Pallas kernel (L1): dequantize + matmul in one pass.
+
+Implements the paper's appendix-A `INT8Linear` forward on the eval path:
+
+    y = x @ dequant(W8).T
+
+The fusion point is the paper's key memory trick translated to TPU: the INT8
+weight tile is expanded to f32 *inside VMEM*, feeds the MXU, and is dropped —
+the full-precision W never round-trips HBM.  The 256-element quant blocks of
+the flattened row-major W land contiguously inside each (bo, in) weight tile,
+so each grid step also reads exactly its slice of scales/zeros.
+
+Constraint: (bo * in) % 256 == 0 for the chosen output tile bo — always
+satisfiable for power-of-two dims.
+
+The *training* forward uses dequant + plain jnp matmul instead (autodiff has
+no VJP through pallas_call); both lower into the same artifact family and are
+cross-checked in pytest.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant import BLOCK
+
+
+def _out_tile(out_dim: int, in_dim: int, block: int) -> int:
+    """Largest bo <= 128 dividing out_dim with (bo*in) % block == 0."""
+    need = block // math.gcd(in_dim, block)  # minimal bo multiple
+    bo = min(out_dim, 128)
+    while bo >= need:
+        if out_dim % bo == 0 and (bo * in_dim) % block == 0 and bo % need == 0:
+            return bo
+        bo -= 1
+    assert out_dim % need == 0, (out_dim, in_dim, block)
+    return need
+
+
+def _linear8_kernel(x_ref, wq_ref, s_ref, z_ref, y_ref, *, block):
+    wq = wq_ref[...]          # (bo, in) int8 tile
+    bo, din = wq.shape
+    nb = (bo * din) // block
+    # Dequantize in the canonical flattened-block layout, then view as (bo, in).
+    w = wq.reshape(nb, block).astype(jnp.float32)
+    w = (w - z_ref[...][:, None]) * s_ref[...][:, None]
+    w = w.reshape(bo, din)
+    y_ref[...] = jnp.dot(
+        x_ref[...], w.T, preferred_element_type=jnp.float32
+    )
+
+
+def linear8(x, w_q, w_scale, w_zero, out_dim: int, in_dim: int,
+            block: int = BLOCK):
+    """Fused int8 linear: x (T, in) @ dequant(W (out, in)).T -> (T, out).
+
+    w_q: (nblocks, block) int8 codes of the row-major flattened W.
+    """
+    t = x.shape[0]
+    assert x.shape[1] == in_dim
+    bo = _out_tile(out_dim, in_dim, block)
+    bt = min(t, 128)
+    while t % bt:
+        bt -= 1
+    blocks_per_tile = (bo * in_dim) // block
+    wq2 = w_q.reshape(out_dim, in_dim)
+    return pl.pallas_call(
+        functools.partial(_linear8_kernel, block=block),
+        grid=(t // bt, out_dim // bo),
+        in_specs=[
+            pl.BlockSpec((bt, in_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((bo, in_dim), lambda i, j: (j, 0)),
+            pl.BlockSpec((blocks_per_tile,), lambda i, j: (j,)),
+            pl.BlockSpec((blocks_per_tile,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bt, bo), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, out_dim), jnp.float32),
+        interpret=True,
+    )(x, wq2, w_scale, w_zero)

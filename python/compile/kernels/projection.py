@@ -1,0 +1,98 @@
+"""Low-rank gradient projection Pallas kernels (L1).
+
+GaLore's hot matmuls:
+
+    project:       R  = P^T @ G      (m,r),(m,n) -> (r,n)
+    project_back:  dW = P   @ U      (m,r),(r,n) -> (m,n)
+
+Both are tiled matmuls with a K-reduction carried across the innermost grid
+dimension — the classic Pallas MXU pattern: each (bm, bn) output tile stays
+resident in VMEM while (bk,) slabs of the operands stream through.  Tile
+sizes are capped at 128 (MXU systolic width) and required to divide the
+operand dims (all our dims are powers of two).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile(n: int, cap: int = 128) -> int:
+    t = min(n, cap)
+    while n % t:
+        t -= 1
+    return t
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    # K-reduction: accumulate into the output tile; zero it on first k step.
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(a, b):
+    """Tiled (M,K)@(K,N) Pallas matmul."""
+    (m, k), (k2, n) = a.shape, b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = _tile(m), _tile(n), _tile(k)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _mm_at_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # a tile is (bk, bm): contract its leading axis — A^T @ B without ever
+    # materializing the transpose in memory (P stays in natural layout).
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matmul_at(a, b):
+    """Tiled A^T @ B: a is (K, M), b is (K, N) -> (M, N)."""
+    (k, m), (k2, n) = a.shape, b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = _tile(m), _tile(n), _tile(k)
+    return pl.pallas_call(
+        _mm_at_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def project(p, g):
+    """R = P^T @ G.  p: (m, r) orthonormal basis, g: (m, n) gradient."""
+    return matmul_at(p, g)
+
+
+def project_back(p, u):
+    """dW = P @ U.  p: (m, r), u: (r, n) low-rank optimizer update."""
+    return matmul(p, u)

@@ -1,0 +1,188 @@
+"""Block-wise quantization Pallas kernels (L1).
+
+All kernels operate on the canonical block view `(nblocks, BLOCK)` of a
+flattened tensor (BLOCK = 256, paper §3.1).  On TPU the BlockSpec below
+carves the tensor into `(ROWS, 256)` VMEM tiles — the per-256-element quant
+statistics (scale, zero) are computed inside the tile, so the HBM↔VMEM
+traffic is one read of x plus one write of q/scale/zero (the role the CUDA
+threadblock tiling plays in the paper's bitsandbytes-style kernels).
+
+Kernels here run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); the structure — tile shapes, accumulation order, nibble
+packing — is what would lower to TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+EPS = 1e-8
+
+# Rows of 256-element blocks processed per grid step.  8*256*4B = 8 KiB per
+# f32 operand tile — far inside the ~16 MiB VMEM budget even with the five
+# operands of the adam8 kernel resident at once.
+ROWS = 8
+
+
+def _rows(nblocks: int) -> int:
+    r = min(ROWS, nblocks)
+    while nblocks % r:
+        r -= 1
+    return r
+
+
+def _row_spec(rows, cols):
+    return pl.BlockSpec((rows, cols), lambda i: (i, 0))
+
+
+def _vec_spec(rows):
+    return pl.BlockSpec((rows,), lambda i: (i,))
+
+
+def _stats(xb, bits):
+    qmin = -(2 ** (bits - 1))
+    qmax = 2 ** (bits - 1) - 1
+    mn = jnp.min(xb, axis=-1)
+    mx = jnp.max(xb, axis=-1)
+    scale = jnp.maximum((mx - mn) / (qmax - qmin), EPS)
+    zero = qmin - jnp.round(mn / scale)
+    return scale.astype(jnp.float32), zero.astype(jnp.float32), qmin, qmax
+
+
+def _quantize_kernel(x_ref, q_ref, s_ref, z_ref, *, bits):
+    xb = x_ref[...]
+    scale, zero, qmin, qmax = _stats(xb, bits)
+    q = jnp.round(xb / scale[:, None]) + zero[:, None]
+    q_ref[...] = jnp.clip(q, qmin, qmax).astype(jnp.int8)
+    s_ref[...] = scale
+    z_ref[...] = zero
+
+
+def quantize_blockwise(x, bits: int = 8, block: int = BLOCK):
+    """Pallas block-wise uniform quantization.
+
+    x: any shape with size % block == 0.
+    -> (q int8 (nblocks, block), scale f32 (nblocks,), zero f32 (nblocks,))
+    """
+    xb = x.reshape(-1, block)
+    nb = xb.shape[0]
+    rows = _rows(nb)
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, bits=bits),
+        grid=(nb // rows,),
+        in_specs=[_row_spec(rows, block)],
+        out_specs=[_row_spec(rows, block), _vec_spec(rows), _vec_spec(rows)],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=True,
+    )(xb)
+
+
+def _sr_quantize_kernel(x_ref, u_ref, q_ref, s_ref, z_ref, *, bits):
+    xb = x_ref[...]
+    ub = u_ref[...]
+    scale, zero, qmin, qmax = _stats(xb, bits)
+    v = xb / scale[:, None] + zero[:, None]
+    q = jnp.floor(v + ub)
+    q_ref[...] = jnp.clip(q, qmin, qmax).astype(jnp.int8)
+    s_ref[...] = scale
+    z_ref[...] = zero
+
+
+def sr_quantize_blockwise(x, u, bits: int = 8, block: int = BLOCK):
+    """Stochastic-rounding quantization: u is U[0,1) noise, shape of x."""
+    xb = x.reshape(-1, block)
+    ub = u.reshape(-1, block)
+    nb = xb.shape[0]
+    rows = _rows(nb)
+    return pl.pallas_call(
+        functools.partial(_sr_quantize_kernel, bits=bits),
+        grid=(nb // rows,),
+        in_specs=[_row_spec(rows, block), _row_spec(rows, block)],
+        out_specs=[_row_spec(rows, block), _vec_spec(rows), _vec_spec(rows)],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=True,
+    )(xb, ub)
+
+
+def _dequantize_kernel(q_ref, s_ref, z_ref, x_ref):
+    q = q_ref[...].astype(jnp.float32)
+    x_ref[...] = (q - z_ref[...][:, None]) * s_ref[...][:, None]
+
+
+def dequantize_blockwise(q, scale, zero, shape, block: int = BLOCK):
+    """Inverse of quantize_blockwise: -> f32 tensor of `shape`."""
+    nb = q.shape[0]
+    rows = _rows(nb)
+    out = pl.pallas_call(
+        _dequantize_kernel,
+        grid=(nb // rows,),
+        in_specs=[_row_spec(rows, block), _vec_spec(rows), _vec_spec(rows)],
+        out_specs=_row_spec(rows, block),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=True,
+    )(q, scale, zero)
+    return out.reshape(shape)
+
+
+def _pack_int4_kernel(q_ref, p_ref):
+    q = q_ref[...].astype(jnp.int32) + 8  # offset-binary [0,15]
+    rows, cols = q.shape
+    q = q.reshape(rows, cols // 2, 2)
+    lo = q[..., 0]
+    hi = q[..., 1]
+    p_ref[...] = (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def pack_int4(q, block: int = BLOCK):
+    """Pack int4 codes (int8 in [-8,7]) into bytes, two per byte."""
+    nb = q.shape[0]
+    rows = _rows(nb)
+    return pl.pallas_call(
+        _pack_int4_kernel,
+        grid=(nb // rows,),
+        in_specs=[_row_spec(rows, block)],
+        out_specs=_row_spec(rows, block // 2),
+        out_shape=jax.ShapeDtypeStruct((nb, block // 2), jnp.uint8),
+        interpret=True,
+    )(q)
+
+
+def _dequantize_int4_kernel(p_ref, s_ref, z_ref, x_ref):
+    p = p_ref[...]
+    lo = (p & 0xF).astype(jnp.int32) - 8
+    hi = ((p >> 4) & 0xF).astype(jnp.int32) - 8
+    q = jnp.stack([lo, hi], axis=-1).reshape(p.shape[0], p.shape[1] * 2)
+    x_ref[...] = (q.astype(jnp.float32) - z_ref[...][:, None]) * s_ref[...][:, None]
+
+
+def dequantize_int4_packed(p, scale, zero, shape, block: int = BLOCK):
+    """Unpack nibble-packed int4 codes and dequantize to f32 `shape`."""
+    nb = p.shape[0]
+    rows = _rows(nb)
+    out = pl.pallas_call(
+        _dequantize_int4_kernel,
+        grid=(nb // rows,),
+        in_specs=[_row_spec(rows, block // 2), _vec_spec(rows), _vec_spec(rows)],
+        out_specs=_row_spec(rows, block),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=True,
+    )(p, scale, zero)
+    return out.reshape(shape)
+
+
+def quantize_int4_packed(x, bits: int = 4, block: int = BLOCK):
+    """Quantize to int4 and pack: -> (packed u8 (nb, block//2), scale, zero)."""
+    assert bits == 4
+    q, scale, zero = quantize_blockwise(x, bits=4, block=block)
+    return pack_int4(q, block=block), scale, zero

@@ -1,0 +1,161 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest asserts each Pallas kernel
+(interpret=True) matches its oracle bit-for-bit (integer outputs) or to tight
+float tolerance.  The rust `quant` module mirrors the same arithmetic and is
+property-tested against vectors generated from these functions.
+
+Quantization scheme (paper §3.1, block-wise uniform, block = 256):
+
+    s   = (max - min) / (2^n - 1)          per block, s >= EPS
+    z   = qmin - round(min / s)            (float "zero point")
+    q   = clamp(round(x / s) + z, qmin, qmax)
+    x^  = (q - z) * s
+
+Stochastic rounding (paper §3.4) replaces `round` with `floor(v + u)`,
+u ~ U[0,1): floor(v+u) equals ceil(v) with probability frac(v), floor(v)
+otherwise — an unbiased estimator of v.
+"""
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def _qrange(bits: int):
+    qmin = -(2 ** (bits - 1))
+    qmax = 2 ** (bits - 1) - 1
+    return qmin, qmax
+
+
+def block_stats(x_blocks: jnp.ndarray, bits: int):
+    """Per-block scale and zero point. x_blocks: (nblocks, block) f32."""
+    qmin, qmax = _qrange(bits)
+    mn = jnp.min(x_blocks, axis=-1)
+    mx = jnp.max(x_blocks, axis=-1)
+    scale = jnp.maximum((mx - mn) / (qmax - qmin), EPS)
+    zero = qmin - jnp.round(mn / scale)
+    return scale.astype(jnp.float32), zero.astype(jnp.float32)
+
+
+def as_blocks(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    flat = x.reshape(-1)
+    assert flat.shape[0] % block == 0, (x.shape, block)
+    return flat.reshape(-1, block)
+
+
+def quantize_blockwise_ref(x, bits: int, block: int = 256):
+    """-> (q int8 (nblocks, block), scale f32 (nblocks,), zero f32)."""
+    qmin, qmax = _qrange(bits)
+    xb = as_blocks(x, block)
+    scale, zero = block_stats(xb, bits)
+    q = jnp.round(xb / scale[:, None]) + zero[:, None]
+    q = jnp.clip(q, qmin, qmax).astype(jnp.int8)
+    return q, scale, zero
+
+
+def dequantize_blockwise_ref(q, scale, zero, shape):
+    xb = (q.astype(jnp.float32) - zero[:, None]) * scale[:, None]
+    return xb.reshape(shape)
+
+
+def sr_quantize_blockwise_ref(x, u, bits: int, block: int = 256):
+    """Stochastic-rounding block-wise quantization.
+
+    u: uniform [0,1) noise, same shape as x (flattened to blocks).
+    """
+    qmin, qmax = _qrange(bits)
+    xb = as_blocks(x, block)
+    ub = as_blocks(u, block)
+    scale, zero = block_stats(xb, bits)
+    v = xb / scale[:, None] + zero[:, None]
+    q = jnp.floor(v + ub)
+    q = jnp.clip(q, qmin, qmax).astype(jnp.int8)
+    return q, scale, zero
+
+
+def pack_int4_ref(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4 values (int8 in [-8,7], (nblocks, block)) into u8, two per
+    byte: even index -> low nibble, odd index -> high nibble (offset-binary)."""
+    u = (q.astype(jnp.int32) + 8).astype(jnp.uint8)  # [0,15]
+    lo = u[..., 0::2]
+    hi = u[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4_ref(p: jnp.ndarray) -> jnp.ndarray:
+    lo = (p & 0xF).astype(jnp.int8) - 8
+    hi = ((p >> 4) & 0xF).astype(jnp.int8) - 8
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * 2).astype(jnp.int8)
+
+
+def dequantize_int4_packed_ref(p, scale, zero, shape):
+    q = unpack_int4_ref(p)
+    return dequantize_blockwise_ref(q, scale, zero, shape)
+
+
+def project_ref(p: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Low-rank gradient projection R = P^T @ G.  p: (m, r), g: (m, n)."""
+    return p.T @ g
+
+
+def project_back_ref(p: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Project the low-rank update back to full rank: P @ U. u: (r, n)."""
+    return p @ u
+
+
+# Linear 8-bit codes for the second moment underflow catastrophically: an
+# element whose v rounds to code 0 while its m stays nonzero yields
+# update ~ m/eps.  bitsandbytes solves this with a nonlinear "dynamic"
+# code map; we use the sqrt map (code ∝ sqrt(v)), which squares the
+# resolution near zero, plus a safety clip on the update magnitude.
+UPDATE_CLIP = 10.0
+
+
+def adam8bit_update_ref(g, m_q, m_scale, v_q, v_scale, c1, c2,
+                        beta1=0.9, beta2=0.999, eps=1e-8, block: int = 256):
+    """One blockwise 8-bit Adam step (bitsandbytes-style dynamic quant).
+
+    m is stored symmetric int8 (scale = absmax/127); v non-negative uint8
+    under the sqrt code map: v = (v_q * v_scale)^2 with
+    v_scale = sqrt(v_max)/255.  c1 = 1/(1-beta1^t), c2 = 1/(1-beta2^t).
+
+    Returns (update f32 (same shape as g), m_q', m_scale', v_q', v_scale').
+    The caller applies `w -= lr * update`.
+    """
+    gb = as_blocks(g, block)
+    m = m_q.astype(jnp.float32) * m_scale[:, None]
+    v = (v_q.astype(jnp.float32) * v_scale[:, None]) ** 2
+    m = beta1 * m + (1.0 - beta1) * gb
+    v = beta2 * v + (1.0 - beta2) * gb * gb
+    update = (m * c1) / (jnp.sqrt(v * c2) + eps)
+    update = jnp.clip(update, -UPDATE_CLIP, UPDATE_CLIP)
+    # Re-quantize the states.
+    m_absmax = jnp.maximum(jnp.max(jnp.abs(m), axis=-1), EPS)
+    m_scale_n = m_absmax / 127.0
+    m_q_n = jnp.clip(jnp.round(m / m_scale_n[:, None]), -127, 127).astype(jnp.int8)
+    v_max = jnp.maximum(jnp.max(v, axis=-1), EPS)
+    v_scale_n = jnp.sqrt(v_max) / 255.0
+    v_q_n = jnp.clip(
+        jnp.round(jnp.sqrt(v) / v_scale_n[:, None]), 0, 255
+    ).astype(jnp.uint8)
+    return update.reshape(g.shape), m_q_n, m_scale_n, v_q_n, v_scale_n
+
+
+def adam_update_ref(g, m, v, c1, c2, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Full-precision Adam step: returns (update, m', v')."""
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    update = (m * c1) / (jnp.sqrt(v * c2) + eps)
+    return update, m, v
+
+
+def linear8_ref(x, w_q, w_scale, w_zero, out_shape):
+    """INT8 linear forward: y = x @ dequant(W).T  (paper appendix A).
+
+    x: (..., in), w_q blocks for W of shape (out, in).
+    """
+    w = dequantize_blockwise_ref(w_q, w_scale, w_zero, out_shape)
+    return x @ w.T

@@ -1,0 +1,389 @@
+"""L2: LLaMA-style transformer in JAX, calling the L1 Pallas kernels.
+
+The architecture mirrors the paper's pre-training target (LLaMA family):
+RMSNorm -> RoPE multi-head attention -> RMSNorm -> SwiGLU MLP, tied
+input/output embedding.  Forward/backward variants:
+
+  fwd_bwd_fp   : f32 linear weights         (Full / 8-bit Adam / GaLore)
+  fwd_bwd_q8   : INT8 linear weights        (Q-GaLore — the paper's setting);
+                 gradients are taken w.r.t. the *dequantized* weights, which
+                 is exactly the "high-precision gradient of low-precision
+                 weights" object Q-GaLore projects (paper Fig. 4)
+  eval_fwd_q8  : eval loss with the fused dequant+matmul Pallas kernel
+  lora / qlora : frozen base (f32 / INT8) + trainable rank-r adapters
+  lowrank      : W = U V factorization trained directly (paper's "Low-Rank")
+
+Autodiff note: pallas_call has no VJP rule, so Pallas kernels sit *outside*
+the differentiated region (dequantization of weights, the whole update step);
+inside the vjp everything is jnp and lowers to the same fused HLO.
+"""
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig, QUANT_BLOCK
+from .kernels import dequantize_blockwise, linear8
+from .kernels import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (shared by python tests and exported checkpoints).
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Tuple[Dict, Dict]:
+    """-> (fp_params {name: f32}, lin_params {name: f32 (out,in)})."""
+    rng = np.random.default_rng(seed)
+    fp = {}
+    for name, shape in cfg.fp_shapes():
+        if name.endswith("norm"):
+            fp[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fp[name] = jnp.asarray(
+                rng.normal(0, 0.02, size=shape).astype(np.float32)
+            )
+    lin = {}
+    for name, (out, inn) in cfg.linear_shapes():
+        std = 0.02 if "wo" not in name and "w2" not in name else 0.02 / np.sqrt(
+            2 * cfg.n_layers
+        )
+        lin[name] = jnp.asarray(
+            rng.normal(0, std, size=(out, inn)).astype(np.float32)
+        )
+    return fp, lin
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks (pure jnp: differentiated region).
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_angles(seq: int, head_dim: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = pos * inv[None, :]  # (S, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    # x: (B, S, H, hd) — rotate pairs (even, odd).
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    r1 = x1 * c - x2 * s
+    r2 = x1 * s + x2 * c
+    out = jnp.stack([r1, r2], axis=-1)
+    return out.reshape(x.shape)
+
+
+def attention(x, wq, wk, wv, wo, cfg: ModelConfig):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ wq.T).reshape(b, s, h, hd)
+    k = (x @ wk.T).reshape(b, s, h, hd)
+    v = (x @ wv.T).reshape(b, s, h, hd)
+    cos, sin = rope_angles(s, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, d)
+    return out @ wo.T
+
+
+def mlp(x, w1, w2, w3):
+    return (jax.nn.silu(x @ w1.T) * (x @ w3.T)) @ w2.T
+
+
+def forward(fp: Dict, lin: Dict, tokens, cfg: ModelConfig):
+    """Token ids (B, S) -> logits (B, S, vocab). Pure jnp."""
+    x = fp["tok_embedding"][tokens]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        h = rms_norm(x, fp[p + "attn_norm"])
+        x = x + attention(
+            h, lin[p + "attn.wq"], lin[p + "attn.wk"],
+            lin[p + "attn.wv"], lin[p + "attn.wo"], cfg,
+        )
+        h = rms_norm(x, fp[p + "mlp_norm"])
+        x = x + mlp(h, lin[p + "mlp.w1"], lin[p + "mlp.w2"], lin[p + "mlp.w3"])
+    x = rms_norm(x, fp["final_norm"])
+    return x @ fp["tok_embedding"].T  # tied head
+
+
+def xent_loss(logits, targets):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def loss_fn(fp, lin, tokens, targets, cfg):
+    return xent_loss(forward(fp, lin, tokens, cfg), targets)
+
+
+# ---------------------------------------------------------------------------
+# Operand flattening order — the AOT ABI shared with rust/src/model.
+#   fp params in cfg.fp_shapes() order, then linear weights in
+#   cfg.linear_shapes() order; quantized linears expand to (q, scale, zero).
+# ---------------------------------------------------------------------------
+
+def nblocks(numel: int, block: int = QUANT_BLOCK) -> int:
+    b = min(block, numel)
+    assert numel % b == 0, numel
+    return numel // b
+
+
+def quant_operand_shapes(out: int, inn: int, block: int = QUANT_BLOCK):
+    nb = nblocks(out * inn, block)
+    b = min(block, out * inn)
+    return [((nb, b), jnp.int8), ((nb,), jnp.float32), ((nb,), jnp.float32)]
+
+
+# ---------------------------------------------------------------------------
+# fwd/bwd entry points (each is the body of one AOT artifact).
+# ---------------------------------------------------------------------------
+
+def make_fwd_bwd_fp(cfg: ModelConfig):
+    fp_names = [n for n, _ in cfg.fp_shapes()]
+    lin_names = [n for n, _ in cfg.linear_shapes()]
+
+    def fn(*ops):
+        i = 0
+        fp = {n: ops[i + j] for j, n in enumerate(fp_names)}
+        i += len(fp_names)
+        lin = {n: ops[i + j] for j, n in enumerate(lin_names)}
+        i += len(lin_names)
+        tokens, targets = ops[i], ops[i + 1]
+        loss, vjp = jax.vjp(
+            lambda fp_, lin_: loss_fn(fp_, lin_, tokens, targets, cfg), fp, lin
+        )
+        gfp, glin = vjp(jnp.float32(1.0))
+        return (loss, *[gfp[n] for n in fp_names], *[glin[n] for n in lin_names])
+
+    return fn
+
+
+def make_fwd_bwd_q8(cfg: ModelConfig):
+    """Q-GaLore forward/backward: INT8 linear weights, fp embedding/norms.
+
+    Dequantization runs through the L1 Pallas kernel (outside the vjp); the
+    returned linear-weight gradients are w.r.t. the dequantized f32 weights.
+    """
+    fp_names = [n for n, _ in cfg.fp_shapes()]
+    lin_shapes = cfg.linear_shapes()
+
+    def fn(*ops):
+        i = 0
+        fp = {n: ops[i + j] for j, n in enumerate(fp_names)}
+        i += len(fp_names)
+        lin = {}
+        for name, (out, inn) in lin_shapes:
+            q, s, z = ops[i], ops[i + 1], ops[i + 2]
+            i += 3
+            lin[name] = dequantize_blockwise(q, s, z, (out, inn))
+        tokens, targets = ops[i], ops[i + 1]
+        loss, vjp = jax.vjp(
+            lambda fp_, lin_: loss_fn(fp_, lin_, tokens, targets, cfg), fp, lin
+        )
+        gfp, glin = vjp(jnp.float32(1.0))
+        return (
+            loss,
+            *[gfp[n] for n in fp_names],
+            *[glin[n] for n, _ in lin_shapes],
+        )
+
+    return fn
+
+
+def forward_q8_fused(fp, lin_q, tokens, cfg: ModelConfig):
+    """Eval forward using the fused linear8 Pallas kernel for every linear."""
+    b, s = tokens.shape
+    d = cfg.dim
+
+    def lin8(x2d, name, out, inn):
+        q, sc, z = lin_q[name]
+        return linear8(x2d, q, sc, z, out, inn)
+
+    x = fp["tok_embedding"][tokens]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        h = rms_norm(x, fp[p + "attn_norm"]).reshape(b * s, d)
+        q = lin8(h, p + "attn.wq", d, d).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = lin8(h, p + "attn.wk", d, d).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        v = lin8(h, p + "attn.wv", d, d).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        cos, sin = rope_angles(s, cfg.head_dim)
+        qr = apply_rope(q, cos, sin)
+        kr = apply_rope(k, cos, sin)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qr, kr) / jnp.sqrt(float(cfg.head_dim))
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b * s, d)
+        x = x + lin8(att, p + "attn.wo", d, d).reshape(b, s, d)
+        h = rms_norm(x, fp[p + "mlp_norm"]).reshape(b * s, d)
+        g1 = lin8(h, p + "mlp.w1", cfg.ffn_dim, d)
+        g3 = lin8(h, p + "mlp.w3", cfg.ffn_dim, d)
+        x = x + lin8(
+            jax.nn.silu(g1) * g3, p + "mlp.w2", d, cfg.ffn_dim
+        ).reshape(b, s, d)
+    x = rms_norm(x, fp["final_norm"])
+    return x @ fp["tok_embedding"].T
+
+
+def make_eval_fwd_q8(cfg: ModelConfig):
+    fp_names = [n for n, _ in cfg.fp_shapes()]
+    lin_shapes = cfg.linear_shapes()
+
+    def fn(*ops):
+        i = 0
+        fp = {n: ops[i + j] for j, n in enumerate(fp_names)}
+        i += len(fp_names)
+        lin_q = {}
+        for name, _ in lin_shapes:
+            lin_q[name] = (ops[i], ops[i + 1], ops[i + 2])
+            i += 3
+        tokens, targets = ops[i], ops[i + 1]
+        logits = forward_q8_fused(fp, lin_q, tokens, cfg)
+        return (xent_loss(logits, targets),)
+
+    return fn
+
+
+def xent_loss_per_row(logits, targets):
+    """Mean next-token loss per batch row: (B, S, V), (B, S) -> (B,)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll, axis=-1)
+
+
+def make_eval_rows_fp(cfg: ModelConfig):
+    """Per-row eval loss over fp weights.
+
+    Used by the fine-tuning driver's label-prefix scoring: a batch holds the
+    same content under different label prefixes, and the coordinator argmins
+    the per-row losses (classification accuracy, the GLUE/MMLU substitute).
+    """
+    fp_names = [n for n, _ in cfg.fp_shapes()]
+    lin_names = [n for n, _ in cfg.linear_shapes()]
+
+    def fn(*ops):
+        i = 0
+        fp = {n: ops[i + j] for j, n in enumerate(fp_names)}
+        i += len(fp_names)
+        lin = {n: ops[i + j] for j, n in enumerate(lin_names)}
+        i += len(lin_names)
+        tokens, targets = ops[i], ops[i + 1]
+        logits = forward(fp, lin, tokens, cfg)
+        return (xent_loss_per_row(logits, targets),)
+
+    return fn
+
+
+def make_eval_fwd_fp(cfg: ModelConfig):
+    fp_names = [n for n, _ in cfg.fp_shapes()]
+    lin_names = [n for n, _ in cfg.linear_shapes()]
+
+    def fn(*ops):
+        i = 0
+        fp = {n: ops[i + j] for j, n in enumerate(fp_names)}
+        i += len(fp_names)
+        lin = {n: ops[i + j] for j, n in enumerate(lin_names)}
+        i += len(lin_names)
+        tokens, targets = ops[i], ops[i + 1]
+        return (loss_fn(fp, lin, tokens, targets, cfg),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Adapter / factorized variants for the baseline methods.
+# ---------------------------------------------------------------------------
+
+LORA_ALPHA = 32.0
+
+
+def lora_forward(fp, base, adapters, tokens, cfg: ModelConfig, rank: int):
+    """base: {name: f32 W0}; adapters: {name: (U (out,r), V (r,in))}."""
+    scale = LORA_ALPHA / rank
+    lin = {
+        n: base[n] + scale * (adapters[n][0] @ adapters[n][1]) for n in base
+    }
+    return forward(fp, lin, tokens, cfg)
+
+
+def make_lora_fwd_bwd(cfg: ModelConfig, quantized_base: bool):
+    """LoRA (f32 base) / QLoRA (INT8 base) fwd/bwd: grads for adapters only."""
+    fp_names = [n for n, _ in cfg.fp_shapes()]
+    lin_shapes = cfg.linear_shapes()
+    r = cfg.rank
+
+    def fn(*ops):
+        i = 0
+        fp = {n: ops[i + j] for j, n in enumerate(fp_names)}
+        i += len(fp_names)
+        base = {}
+        for name, (out, inn) in lin_shapes:
+            if quantized_base:
+                q, s, z = ops[i], ops[i + 1], ops[i + 2]
+                i += 3
+                base[name] = dequantize_blockwise(q, s, z, (out, inn))
+            else:
+                base[name] = ops[i]
+                i += 1
+        adapters = {}
+        for name, _ in lin_shapes:
+            adapters[name] = (ops[i], ops[i + 1])
+            i += 2
+        tokens, targets = ops[i], ops[i + 1]
+
+        def lfun(ad):
+            logits = lora_forward(fp, base, ad, tokens, cfg, r)
+            return xent_loss(logits, targets)
+
+        loss, vjp = jax.vjp(lfun, adapters)
+        (gad,) = vjp(jnp.float32(1.0))
+        outs = [loss]
+        for name, _ in lin_shapes:
+            outs += [gad[name][0], gad[name][1]]
+        return tuple(outs)
+
+    return fn
+
+
+def make_lowrank_fwd_bwd(cfg: ModelConfig):
+    """Paper's 'Low-Rank' baseline: W = U V trained directly (plus fp params)."""
+    fp_names = [n for n, _ in cfg.fp_shapes()]
+    lin_shapes = cfg.linear_shapes()
+
+    def fn(*ops):
+        i = 0
+        fp = {n: ops[i + j] for j, n in enumerate(fp_names)}
+        i += len(fp_names)
+        factors = {}
+        for name, _ in lin_shapes:
+            factors[name] = (ops[i], ops[i + 1])
+            i += 2
+        tokens, targets = ops[i], ops[i + 1]
+
+        def lfun(fp_, fac):
+            lin = {n: fac[n][0] @ fac[n][1] for n in fac}
+            return loss_fn(fp_, lin, tokens, targets, cfg)
+
+        loss, vjp = jax.vjp(lfun, fp, factors)
+        gfp, gfac = vjp(jnp.float32(1.0))
+        outs = [loss, *[gfp[n] for n in fp_names]]
+        for name, _ in lin_shapes:
+            outs += [gfac[name][0], gfac[name][1]]
+        return tuple(outs)
+
+    return fn

@@ -1,0 +1,36 @@
+"""Fused INT8-linear kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import linear8_kernel as linear8
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize(
+    "t,din,dout",
+    [(8, 64, 64), (32, 64, 128), (16, 128, 64), (64, 256, 512), (4, 64, 192)],
+)
+def test_linear8_matches_ref(t, din, dout):
+    rng = np.random.default_rng(t + din + dout)
+    w = jnp.asarray(rng.normal(0, 0.05, size=(dout, din)).astype(np.float32))
+    x = jnp.asarray(rng.normal(0, 1, size=(t, din)).astype(np.float32))
+    wq, ws, wz = ref.quantize_blockwise_ref(w, bits=8)
+    got = linear8.linear8(x, wq, ws, wz, dout, din)
+    want = ref.linear8_ref(x, wq, ws, wz, (dout, din))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_linear8_close_to_fp():
+    """Fused int8 forward approximates the fp32 linear within quant error."""
+    rng = np.random.default_rng(9)
+    t, din, dout = 16, 128, 128
+    w = jnp.asarray(rng.normal(0, 0.05, size=(dout, din)).astype(np.float32))
+    x = jnp.asarray(rng.normal(0, 1, size=(t, din)).astype(np.float32))
+    wq, ws, wz = ref.quantize_blockwise_ref(w, bits=8)
+    y8 = np.asarray(linear8.linear8(x, wq, ws, wz, dout, din))
+    yf = np.asarray(x @ w.T)
+    # int8 weight quant error is ~scale/2 per element; matmul accumulates sqrt(din)
+    rel = np.abs(y8 - yf).mean() / (np.abs(yf).mean() + 1e-9)
+    assert rel < 0.05, rel

@@ -1,0 +1,252 @@
+"""L2 model tests: shapes, loss sanity, gradient checks, quantized-vs-fp
+forward agreement, and a few steps of in-python Q-GaLore training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import update_step as U
+from compile.configs import CONFIGS
+from compile.kernels import ref as kref
+
+CFG = CONFIGS["llama-micro"]
+TINY = CONFIGS["llama-tiny"]
+
+
+def batch(cfg, b=2, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, size=(b, cfg.max_seq_len))
+    targs = rng.integers(0, cfg.vocab_size, size=(b, cfg.max_seq_len))
+    return jnp.asarray(toks, jnp.int32), jnp.asarray(targs, jnp.int32)
+
+
+def test_forward_shapes():
+    fp, lin = M.init_params(CFG)
+    toks, _ = batch(CFG)
+    logits = M.forward(fp, lin, toks, CFG)
+    assert logits.shape == (2, CFG.max_seq_len, CFG.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_initial_loss_near_uniform():
+    """Random init -> loss ~ log(vocab)."""
+    fp, lin = M.init_params(CFG)
+    toks, targs = batch(CFG)
+    loss = float(M.loss_fn(fp, lin, toks, targs, CFG))
+    assert abs(loss - np.log(CFG.vocab_size)) < 0.5, loss
+
+
+def test_fwd_bwd_fp_grads_match_jax_grad():
+    fn = M.make_fwd_bwd_fp(CFG)
+    fp, lin = M.init_params(CFG)
+    toks, targs = batch(CFG)
+    ops = (
+        [fp[n] for n, _ in CFG.fp_shapes()]
+        + [lin[n] for n, _ in CFG.linear_shapes()]
+        + [toks, targs]
+    )
+    outs = fn(*ops)
+    loss = outs[0]
+    gref = jax.grad(lambda l: M.loss_fn(fp, l, toks, targs, CFG))(lin)
+    # first linear grad in ABI order
+    got = outs[1 + len(CFG.fp_shapes())]
+    want = gref[CFG.linear_shapes()[0][0]]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+    assert float(loss) > 0
+
+
+def test_fwd_bwd_q8_close_to_fp():
+    """INT8-weight loss/grads approximate the fp path within quant error."""
+    fp, lin = M.init_params(CFG)
+    toks, targs = batch(CFG)
+    fp_ops = [fp[n] for n, _ in CFG.fp_shapes()]
+    loss_fp = M.make_fwd_bwd_fp(CFG)(
+        *fp_ops, *[lin[n] for n, _ in CFG.linear_shapes()], toks, targs
+    )[0]
+    q_ops = list(fp_ops)
+    deq = {}
+    for n, (out, inn) in CFG.linear_shapes():
+        blk = min(256, out * inn)
+        q, s, z = kref.quantize_blockwise_ref(lin[n], bits=8, block=blk)
+        deq[n] = kref.dequantize_blockwise_ref(q, s, z, (out, inn))
+        q_ops += [q, s, z]
+    q_ops += [toks, targs]
+    outs = M.make_fwd_bwd_q8(CFG)(*q_ops)
+    loss_q8 = outs[0]
+    # loss under int8 weights should be close to loss under fp weights
+    assert abs(float(loss_q8) - float(loss_fp)) / float(loss_fp) < 0.05
+    # and the returned grads must be grads of the dequantized weights
+    gref = jax.grad(lambda l: M.loss_fn(fp, l, toks, targs, CFG))(deq)
+    got = outs[1 + len(CFG.fp_shapes())]
+    want = gref[CFG.linear_shapes()[0][0]]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+def test_eval_fwd_q8_matches_dequant_forward():
+    fp, lin = M.init_params(CFG, seed=3)
+    toks, targs = batch(CFG, seed=3)
+    q_ops = [fp[n] for n, _ in CFG.fp_shapes()]
+    deq = {}
+    for n, (out, inn) in CFG.linear_shapes():
+        blk = min(256, out * inn)
+        q, s, z = kref.quantize_blockwise_ref(lin[n], bits=8, block=blk)
+        deq[n] = kref.dequantize_blockwise_ref(q, s, z, (out, inn))
+        q_ops += [q, s, z]
+    q_ops += [toks, targs]
+    (loss_fused,) = M.make_eval_fwd_q8(CFG)(*q_ops)
+    loss_ref = M.loss_fn(fp, deq, toks, targs, CFG)
+    np.testing.assert_allclose(float(loss_fused), float(loss_ref), rtol=1e-4)
+
+
+def test_lora_grads_only_adapters():
+    fn = M.make_lora_fwd_bwd(CFG, quantized_base=False)
+    fp, lin = M.init_params(CFG)
+    toks, targs = batch(CFG)
+    rng = np.random.default_rng(0)
+    ops = [fp[n] for n, _ in CFG.fp_shapes()]
+    ops += [lin[n] for n, _ in CFG.linear_shapes()]
+    for n, (out, inn) in CFG.linear_shapes():
+        ops.append(jnp.asarray(rng.normal(0, 0.01, (out, CFG.rank)).astype(np.float32)))
+        ops.append(jnp.zeros((CFG.rank, inn), jnp.float32))
+    ops += [toks, targs]
+    outs = fn(*ops)
+    nlin = len(CFG.linear_shapes())
+    assert len(outs) == 1 + 2 * nlin
+    # V is zero -> dU must be zero; dV generally nonzero.
+    du, dv = outs[1], outs[2]
+    assert float(jnp.abs(du).max()) == 0.0
+    assert float(jnp.abs(dv).max()) > 0.0
+
+
+def test_lowrank_fwd_bwd_shapes():
+    fn = M.make_lowrank_fwd_bwd(CFG)
+    fp, _ = M.init_params(CFG)
+    toks, targs = batch(CFG)
+    rng = np.random.default_rng(1)
+    ops = [fp[n] for n, _ in CFG.fp_shapes()]
+    for n, (out, inn) in CFG.linear_shapes():
+        ops.append(jnp.asarray(rng.normal(0, 0.05, (out, CFG.rank)).astype(np.float32)))
+        ops.append(jnp.asarray(rng.normal(0, 0.05, (CFG.rank, inn)).astype(np.float32)))
+    ops += [toks, targs]
+    outs = fn(*ops)
+    assert len(outs) == 1 + len(CFG.fp_shapes()) + 2 * len(CFG.linear_shapes())
+    assert np.isfinite(float(outs[0]))
+
+
+def _qgalore_layer_state(w, r, seed=0):
+    """Quantize one layer into full Q-GaLore state (helpers for tests)."""
+    m, n = w.shape
+    rng = np.random.default_rng(seed)
+    pm = np.linalg.qr(rng.normal(size=(m, r)))[0].astype(np.float32)
+    pblk = min(256, m * r)
+    q4, ps, pz = kref.quantize_blockwise_ref(jnp.asarray(pm), bits=4, block=pblk)
+    p_packed = kref.pack_int4_ref(q4)
+    sblk = min(256, r * n)
+    nbs = (r * n) // sblk
+    mq = jnp.zeros((nbs, sblk), jnp.int8)
+    ms = jnp.full((nbs,), 1e-8 / 127.0, jnp.float32)
+    vq = jnp.zeros((nbs, sblk), jnp.uint8)
+    vs = jnp.full((nbs,), 1e-8 / 255.0, jnp.float32)
+    wblk = min(256, m * n)
+    wq, ws, wz = kref.quantize_blockwise_ref(w, bits=8, block=wblk)
+    return p_packed, ps, pz, mq, ms, vq, vs, wq, ws, wz
+
+
+def test_qgalore_update_moves_weights_toward_negative_gradient():
+    m, n, r = 32, 64, 8
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(0, 0.5, (m, n)).astype(np.float32))
+    state = _qgalore_layer_state(w, r)
+    g = jnp.asarray(rng.normal(0, 1.0, (m, n)).astype(np.float32))
+    fn = U.make_qgalore_update(m, n, r)
+    c = jnp.asarray([10.0, 1000.0], jnp.float32)  # t=1 corrections
+    lr = jnp.asarray([0.5], jnp.float32)
+    u = jnp.asarray(rng.uniform(0, 1, (m, n)).astype(np.float32))
+    wq2, ws2, wz2, mq2, ms2, vq2, vs2 = fn(g, *state[:3], *state[3:7],
+                                           *state[7:], c, lr, u)
+    w_new = kref.dequantize_blockwise_ref(wq2, ws2, wz2, (m, n))
+    # projected gradient direction: dW ~ P P^T sign-ish of g; check descent
+    # along the applied update: <w_new - w, P P^T g> < 0.
+    pblk = min(256, m * r)
+    p = kref.dequantize_int4_packed_ref(state[0], state[1], state[2], (m, r))
+    proj_g = np.asarray(p @ (p.T @ np.asarray(g)))
+    delta = np.asarray(w_new) - np.asarray(w)
+    assert float((delta * proj_g).sum()) < 0.0
+    # states changed
+    assert np.asarray(mq2).any()
+
+
+def test_qgalore_update_deterministic_given_noise():
+    m, n, r = 32, 64, 8
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(0, 0.5, (m, n)).astype(np.float32))
+    state = _qgalore_layer_state(w, r)
+    g = jnp.asarray(rng.normal(0, 1.0, (m, n)).astype(np.float32))
+    fn = U.make_qgalore_update(m, n, r)
+    c = jnp.asarray([10.0, 1000.0], jnp.float32)
+    lr = jnp.asarray([0.1], jnp.float32)
+    u1 = jnp.asarray(rng.uniform(0, 1, (m, n)).astype(np.float32))
+    u2 = jnp.asarray(rng.uniform(0, 1, (m, n)).astype(np.float32))
+    a = fn(g, *state[:3], *state[3:7], *state[7:], c, lr, u1)
+    b = fn(g, *state[:3], *state[3:7], *state[7:], c, lr, u1)
+    d = fn(g, *state[:3], *state[3:7], *state[7:], c, lr, u2)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    assert (np.asarray(a[0]) != np.asarray(d[0])).any()  # different SR draw
+
+
+def test_galore_update_matches_manual():
+    m, n, r = 16, 32, 4
+    rng = np.random.default_rng(4)
+    g = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    p = jnp.asarray(np.linalg.qr(rng.normal(size=(m, r)))[0].astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    mm = jnp.zeros((r, n), jnp.float32)
+    vv = jnp.zeros((r, n), jnp.float32)
+    c = jnp.asarray([10.0, 1000.0], jnp.float32)
+    lr = jnp.asarray([0.01], jnp.float32)
+    w2, m2, v2 = U.make_galore_update(m, n, r)(g, p, mm, vv, w, c, lr)
+    low = np.asarray(p).T @ np.asarray(g)
+    up, m_r, v_r = kref.adam_update_ref(jnp.asarray(low), mm, vv, 10.0, 1000.0)
+    w_ref = np.asarray(w) - 0.01 * U.GALORE_SCALE * (np.asarray(p) @ np.asarray(up))
+    np.testing.assert_allclose(np.asarray(w2), w_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_training_reduces_loss_python_galore():
+    """A few GaLore steps in python reduce loss on a fixed batch — the
+    same loop the rust coordinator runs against the artifacts."""
+    cfg = CFG
+    fp, lin = M.init_params(cfg, seed=7)
+    toks, targs = batch(cfg, b=2, seed=7)
+    fwd = M.make_fwd_bwd_fp(cfg)
+    fp_names = [n for n, _ in cfg.fp_shapes()]
+    lin_names = [n for n, _ in cfg.linear_shapes()]
+    r = cfg.rank
+    projs = {}
+    states = {n: (jnp.zeros((r,) + (lin[n].shape[1],)), jnp.zeros((r,) + (lin[n].shape[1],)))
+              for n in lin_names}
+    fp_states = {n: (jnp.zeros(fp[n].shape), jnp.zeros(fp[n].shape)) for n in fp_names}
+    losses = []
+    for t in range(1, 9):
+        ops = [fp[n] for n in fp_names] + [lin[n] for n in lin_names] + [toks, targs]
+        outs = fwd(*ops)
+        losses.append(float(outs[0]))
+        grads = list(outs[1:])
+        gfp = dict(zip(fp_names, grads[: len(fp_names)]))
+        glin = dict(zip(lin_names, grads[len(fp_names):]))
+        c1, c2 = 1 / (1 - 0.9**t), 1 / (1 - 0.999**t)
+        for n in fp_names:
+            up, m2, v2 = kref.adam_update_ref(gfp[n], *fp_states[n], c1, c2)
+            fp_states[n] = (m2, v2)
+            fp[n] = fp[n] - 0.01 * up
+        for n in lin_names:
+            if n not in projs:
+                uu, ss, _ = np.linalg.svd(np.asarray(glin[n]), full_matrices=False)
+                projs[n] = jnp.asarray(uu[:, :r])
+            p = projs[n]
+            low = p.T @ glin[n]
+            up, m2, v2 = kref.adam_update_ref(low, *states[n], c1, c2)
+            states[n] = (m2, v2)
+            lin[n] = lin[n] - 0.01 * U.GALORE_SCALE * (p @ up)
+    assert losses[-1] < losses[0] - 0.1, losses

@@ -1,0 +1,77 @@
+"""Tiled Pallas matmul / projection kernels vs jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import projection as pk
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 1, size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(16, 16, 16), (64, 32, 64), (128, 16, 256), (256, 64, 128), (32, 160, 48)],
+)
+def test_matmul_matches_jnp(m, k, n):
+    a, b = rand((m, k), 1), rand((k, n), 2)
+    np.testing.assert_allclose(
+        np.asarray(pk.matmul(a, b)), np.asarray(a @ b), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize(
+    "k,m,n", [(16, 16, 16), (64, 16, 64), (128, 32, 256), (160, 24, 48)]
+)
+def test_matmul_at_matches_jnp(k, m, n):
+    a, b = rand((k, m), 3), rand((k, n), 4)
+    np.testing.assert_allclose(
+        np.asarray(pk.matmul_at(a, b)), np.asarray(a.T @ b), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_project_and_back_roundtrip_low_rank():
+    """For a gradient already inside span(P), project->project_back is lossless
+    when P is orthonormal — the invariant GaLore's update relies on."""
+    m, r, n = 64, 16, 96
+    rng = np.random.default_rng(5)
+    a = rng.normal(size=(m, r)).astype(np.float32)
+    p, _ = np.linalg.qr(a)  # orthonormal (m, r)
+    u_true = rng.normal(size=(r, n)).astype(np.float32)
+    g = jnp.asarray(p @ u_true)  # rank-r gradient
+    p = jnp.asarray(p)
+    low = pk.project(p, g)
+    np.testing.assert_allclose(np.asarray(low), u_true, rtol=1e-4, atol=1e-4)
+    back = pk.project_back(p, low)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(g), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([16, 32, 64, 96]),
+    r=st.sampled_from([8, 16, 32]),
+    n=st.sampled_from([16, 64, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_project_hypothesis(m, r, n, seed):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.normal(size=(m, r)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(pk.project(p, g)),
+        np.asarray(ref.project_ref(p, g)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+    u = jnp.asarray(rng.normal(size=(r, n)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(pk.project_back(p, u)),
+        np.asarray(ref.project_back_ref(p, u)),
+        rtol=1e-4,
+        atol=1e-4,
+    )

@@ -1,0 +1,162 @@
+"""Pallas quantization kernels vs pure-jnp oracles.
+
+Integer outputs must match bit-for-bit; float outputs to tight tolerance.
+Hypothesis sweeps shapes and value distributions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+
+jax.config.update("jax_enable_x64", False)
+
+SHAPES = [(256,), (2, 256), (512,), (4, 4, 64), (16, 64), (8, 256), (1024,)]
+
+
+def rand(shape, seed=0, scale=3.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_quantize_matches_ref(shape, bits):
+    x = rand(shape, seed=hash((shape, bits)) % 2**31)
+    q, s, z = quant.quantize_blockwise(x, bits=bits)
+    q_r, s_r, z_r = ref.quantize_blockwise_ref(x, bits=bits)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(z_r))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_dequantize_matches_ref(shape):
+    x = rand(shape, seed=1)
+    q, s, z = ref.quantize_blockwise_ref(x, bits=8)
+    got = quant.dequantize_blockwise(q, s, z, shape)
+    want = ref.dequantize_blockwise_ref(q, s, z, shape)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_roundtrip_error_bounded(bits):
+    """|x - dequant(quant(x))| <= scale/2 elementwise (round-to-nearest)."""
+    x = rand((4, 256), seed=2)
+    q, s, z = quant.quantize_blockwise(x, bits=bits)
+    xhat = quant.dequantize_blockwise(q, s, z, x.shape)
+    err = np.abs(np.asarray(x - xhat)).reshape(-1, 256)
+    bound = np.asarray(s)[:, None] * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_sr_quantize_matches_ref():
+    x = rand((8, 256), seed=3)
+    u = jnp.asarray(
+        np.random.default_rng(4).uniform(0, 1, size=x.shape).astype(np.float32)
+    )
+    q, s, z = quant.sr_quantize_blockwise(x, u, bits=8)
+    q_r, s_r, z_r = ref.sr_quantize_blockwise_ref(x, u, bits=8)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), rtol=1e-6)
+
+
+def test_sr_unbiased():
+    """E[dequant(SR(x))] -> x: mean over many independent noise draws."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(0, 1, size=(256,)).astype(np.float32))
+    trials = 200
+    acc = np.zeros((256,), dtype=np.float64)
+    for i in range(trials):
+        u = jnp.asarray(rng.uniform(0, 1, size=(256,)).astype(np.float32))
+        q, s, z = ref.sr_quantize_blockwise_ref(x, u, bits=8)
+        acc += np.asarray(ref.dequantize_blockwise_ref(q, s, z, (256,)))
+    mean = acc / trials
+    scale = float(np.asarray(s)[0])
+    # standard error of SR noise is < scale; 5-sigma-ish bound
+    np.testing.assert_allclose(mean, np.asarray(x), atol=scale * 0.5)
+
+
+def test_sr_beats_rtn_for_small_updates():
+    """The paper's core SR claim: with updates far below one quantization
+    step, round-to-nearest loses them entirely while SR accumulates them."""
+    rng = np.random.default_rng(6)
+    w = jnp.asarray(rng.normal(0, 1, size=(256,)).astype(np.float32))
+    q, s, z = ref.quantize_blockwise_ref(w, bits=8)
+    delta = 0.05 * float(s[0])  # 5% of one quant step
+    steps = 100
+
+    # RTN: dequant -> add tiny delta -> requant with same stats each step.
+    q_rtn = q
+    for _ in range(steps):
+        wf = ref.dequantize_blockwise_ref(q_rtn, s, z, (256,))
+        v = (wf + delta) / s[:, None].reshape(1, -1)[0, 0] + z[0]
+        q_rtn = jnp.clip(jnp.round(v), -128, 127).astype(jnp.int8).reshape(1, 256)
+    drift_rtn = float(
+        np.mean(np.asarray(ref.dequantize_blockwise_ref(q_rtn, s, z, (256,)) - w))
+    )
+
+    # SR: same protocol with stochastic rounding.
+    q_sr = q
+    for i in range(steps):
+        wf = ref.dequantize_blockwise_ref(q_sr, s, z, (256,))
+        u = jnp.asarray(rng.uniform(0, 1, size=(1, 256)).astype(np.float32))
+        v = (wf + delta) / float(s[0]) + float(z[0])
+        q_sr = jnp.clip(jnp.floor(v.reshape(1, 256) + u), -128, 127).astype(jnp.int8)
+    drift_sr = float(
+        np.mean(np.asarray(ref.dequantize_blockwise_ref(q_sr, s, z, (256,)) - w))
+    )
+
+    want = delta * steps
+    assert abs(drift_rtn) < 0.05 * want  # RTN swallowed the updates
+    assert drift_sr > 0.5 * want  # SR accumulated most of them
+
+
+@pytest.mark.parametrize("nb", [1, 2, 8])
+def test_int4_pack_unpack_roundtrip(nb):
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.integers(-8, 8, size=(nb, 256)).astype(np.int8))
+    p = quant.pack_int4(q)
+    p_r = ref.pack_int4_ref(q)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_r))
+    np.testing.assert_array_equal(np.asarray(ref.unpack_int4_ref(p)), np.asarray(q))
+
+
+def test_int4_packed_dequant_matches_ref():
+    x = rand((4, 256), seed=8)
+    p, s, z = quant.quantize_int4_packed(x)
+    got = quant.dequantize_int4_packed(p, s, z, x.shape)
+    want = ref.dequantize_int4_packed_ref(p, s, z, x.shape)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nblocks=st.integers(min_value=1, max_value=6),
+    bits=st.sampled_from([8, 4, 2]),
+    loc=st.floats(min_value=-10, max_value=10),
+    scale=st.floats(min_value=1e-3, max_value=100.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_quantize_hypothesis(nblocks, bits, loc, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(loc, scale, size=(nblocks * 256,)).astype(np.float32))
+    q, s, z = quant.quantize_blockwise(x, bits=bits)
+    q_r, s_r, z_r = ref.quantize_blockwise_ref(x, bits=bits)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_r))
+    # codes must be in range for the bit width
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    assert int(np.asarray(q).min()) >= qmin
+    assert int(np.asarray(q).max()) <= qmax
+
+
+def test_constant_block_is_stable():
+    """A constant block must round-trip exactly (scale floor, no NaN)."""
+    x = jnp.full((256,), 3.25, dtype=jnp.float32)
+    q, s, z = quant.quantize_blockwise(x, bits=8)
+    xhat = quant.dequantize_blockwise(q, s, z, x.shape)
+    assert np.isfinite(np.asarray(xhat)).all()
+    np.testing.assert_allclose(np.asarray(xhat), np.asarray(x), atol=1e-5)

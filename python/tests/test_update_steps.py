@@ -1,0 +1,256 @@
+"""Fused update-step functions (L2) vs compositions of the ref oracles.
+
+Each `make_*` function is the body of one AOT artifact; these tests pin the
+full pipelines (project -> adam -> project-back -> requantize) against
+step-by-step oracle compositions, for every method variant the rust
+coordinator drives.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import update_step as U
+from compile.kernels import ref
+
+
+def corrections(t, b1=U.BETA1, b2=U.BETA2):
+    return jnp.asarray([1 / (1 - b1**t), 1 / (1 - b2**t)], jnp.float32)
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, size=shape).astype(np.float32))
+
+
+def orth(m, r, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(np.linalg.qr(rng.normal(size=(m, r)))[0].astype(np.float32))
+
+
+class TestGaloreUpdate:
+    M, N, R = 32, 64, 8
+
+    def test_matches_oracle_composition(self):
+        m, n, r = self.M, self.N, self.R
+        g, w = rand((m, n), 1), rand((m, n), 2)
+        p = orth(m, r, 3)
+        mm = rand((r, n), 4, 0.01)
+        vv = jnp.abs(rand((r, n), 5, 0.001))
+        c = corrections(3)
+        lr = jnp.asarray([0.02], jnp.float32)
+        w2, m2, v2 = U.make_galore_update(m, n, r)(g, p, mm, vv, w, c, lr)
+        low = ref.project_ref(p, g)
+        up, m_r, v_r = ref.adam_update_ref(
+            low, mm, vv, float(c[0]), float(c[1]), U.BETA1, U.BETA2, U.EPS
+        )
+        w_ref = np.asarray(w) - 0.02 * U.GALORE_SCALE * np.asarray(
+            ref.project_back_ref(p, up)
+        )
+        np.testing.assert_allclose(np.asarray(w2), w_ref, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(m_r), rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(v2), np.asarray(v_r), rtol=1e-4, atol=1e-7)
+
+    def test_zero_lr_is_identity(self):
+        m, n, r = self.M, self.N, self.R
+        g, w = rand((m, n), 6), rand((m, n), 7)
+        p = orth(m, r, 8)
+        w2, _, _ = U.make_galore_update(m, n, r)(
+            g, p, jnp.zeros((r, n)), jnp.zeros((r, n)), w, corrections(1),
+            jnp.asarray([0.0], jnp.float32),
+        )
+        np.testing.assert_array_equal(np.asarray(w2), np.asarray(w))
+
+    def test_update_confined_to_subspace(self):
+        """dW must lie in span(P): (I - P P^T) dW = 0."""
+        m, n, r = self.M, self.N, self.R
+        g, w = rand((m, n), 9), rand((m, n), 10)
+        p = orth(m, r, 11)
+        w2, _, _ = U.make_galore_update(m, n, r)(
+            g, p, jnp.zeros((r, n)), jnp.zeros((r, n)), w, corrections(1),
+            jnp.asarray([0.1], jnp.float32),
+        )
+        dw = np.asarray(w2) - np.asarray(w)
+        pm = np.asarray(p)
+        residual = dw - pm @ (pm.T @ dw)
+        assert np.abs(residual).max() < 1e-5
+
+
+class TestGalore8bitUpdate:
+    M, N, R = 32, 64, 8
+
+    def _states(self):
+        r, n = self.R, self.N
+        blk = min(256, r * n)
+        nb = (r * n) // blk
+        return (
+            jnp.zeros((nb, blk), jnp.int8),
+            jnp.full((nb,), ref.EPS / 127.0, jnp.float32),
+            jnp.zeros((nb, blk), jnp.uint8),
+            jnp.full((nb,), ref.EPS / 255.0, jnp.float32),
+        )
+
+    def test_matches_oracle_composition(self):
+        m, n, r = self.M, self.N, self.R
+        g, w = rand((m, n), 12), rand((m, n), 13)
+        p = orth(m, r, 14)
+        mq, ms, vq, vs = self._states()
+        c = corrections(1)
+        lr = jnp.asarray([0.05], jnp.float32)
+        w2, mq2, ms2, vq2, vs2 = U.make_galore8bit_update(m, n, r)(
+            g, p, mq, ms, vq, vs, w, c, lr
+        )
+        low = ref.project_ref(p, g)
+        up, mq_r, ms_r, vq_r, vs_r = ref.adam8bit_update_ref(
+            low, mq, ms, vq, vs, float(c[0]), float(c[1]),
+            U.BETA1, U.BETA2, U.EPS, block=min(256, r * n),
+        )
+        w_ref = np.asarray(w) - 0.05 * U.GALORE_SCALE * np.asarray(
+            ref.project_back_ref(p, up)
+        )
+        np.testing.assert_allclose(np.asarray(w2), w_ref, rtol=1e-4, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(mq2), np.asarray(mq_r))
+        dv = np.abs(np.asarray(vq2).astype(int) - np.asarray(vq_r).astype(int))
+        assert dv.max() <= 1
+
+
+class TestAdamSteps:
+    def test_adam_step_matches_oracle(self):
+        numel = 512
+        g, w = rand((numel,), 15), rand((numel,), 16)
+        mm = rand((numel,), 17, 0.01)
+        vv = jnp.abs(rand((numel,), 18, 0.001))
+        c = corrections(7)
+        lr = jnp.asarray([0.01], jnp.float32)
+        w2, m2, v2 = U.make_adam_step(numel)(g, mm, vv, w, c, lr)
+        up, m_r, v_r = ref.adam_update_ref(
+            g, mm, vv, float(c[0]), float(c[1]), U.BETA1, U.BETA2, U.EPS
+        )
+        np.testing.assert_allclose(
+            np.asarray(w2), np.asarray(w) - 0.01 * np.asarray(up), rtol=1e-5, atol=1e-6
+        )
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(m_r), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(v2), np.asarray(v_r), rtol=1e-5)
+
+    def test_adam_step_small_tensor_single_block(self):
+        """Tensors under one quant block (e.g. dim-64 norms) still work."""
+        numel = 64
+        g, w = rand((numel,), 19), rand((numel,), 20)
+        w2, m2, v2 = U.make_adam_step(numel)(
+            g, jnp.zeros(numel), jnp.zeros(numel), w, corrections(1),
+            jnp.asarray([0.01], jnp.float32),
+        )
+        assert np.isfinite(np.asarray(w2)).all()
+        assert (np.asarray(w2) != np.asarray(w)).any()
+
+    def test_adam8bit_step_matches_oracle(self):
+        numel = 512
+        blk = min(256, numel)
+        nb = numel // blk
+        g, w = rand((numel,), 21, 0.3), rand((numel,), 22)
+        mq = jnp.zeros((nb, blk), jnp.int8)
+        ms = jnp.full((nb,), ref.EPS / 127.0, jnp.float32)
+        vq = jnp.zeros((nb, blk), jnp.uint8)
+        vs = jnp.full((nb,), ref.EPS / 255.0, jnp.float32)
+        c = corrections(2)
+        lr = jnp.asarray([0.01], jnp.float32)
+        w2, mq2, ms2, vq2, vs2 = U.make_adam8bit_step(numel)(
+            g, mq, ms, vq, vs, w, c, lr
+        )
+        up, mq_r, *_ = ref.adam8bit_update_ref(
+            g, mq, ms, vq, vs, float(c[0]), float(c[1]),
+            U.BETA1, U.BETA2, U.EPS, block=blk,
+        )
+        np.testing.assert_allclose(
+            np.asarray(w2),
+            np.asarray(w) - 0.01 * np.asarray(up).reshape(-1),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+        np.testing.assert_array_equal(np.asarray(mq2), np.asarray(mq_r))
+
+
+class TestQGaloreVariants:
+    def test_rtn_variant_has_no_noise_arg_and_differs_from_sr(self):
+        m, n, r = 32, 64, 8
+        rng = np.random.default_rng(23)
+        w = rand((m, n), 23, 0.5)
+        wq, ws, wz = ref.quantize_blockwise_ref(w, bits=8, block=min(256, m * n))
+        p = orth(m, r, 24)
+        pq, psc, pz = ref.quantize_blockwise_ref(p, bits=4, block=min(256, m * r))
+        p4 = ref.pack_int4_ref(pq)
+        blk = min(256, r * n)
+        nb = (r * n) // blk
+        states = (
+            jnp.zeros((nb, blk), jnp.int8),
+            jnp.full((nb,), ref.EPS / 127.0, jnp.float32),
+            jnp.zeros((nb, blk), jnp.uint8),
+            jnp.full((nb,), ref.EPS / 255.0, jnp.float32),
+        )
+        g = rand((m, n), 25)
+        c = corrections(1)
+        lr = jnp.asarray([0.3], jnp.float32)
+        u = jnp.asarray(rng.uniform(0, 1, (m, n)).astype(np.float32))
+        sr_out = U.make_qgalore_update(m, n, r, sr=True)(
+            g, p4, psc, pz, *states, wq, ws, wz, c, lr, u
+        )
+        rtn_out = U.make_qgalore_update(m, n, r, sr=False)(
+            g, p4, psc, pz, *states, wq, ws, wz, c, lr
+        )
+        # same quant stats, different codes (stochastic vs deterministic)
+        np.testing.assert_allclose(np.asarray(sr_out[1]), np.asarray(rtn_out[1]), rtol=1e-5)
+        assert (np.asarray(sr_out[0]) != np.asarray(rtn_out[0])).any()
+        # both dequantize close to each other (within one quant step)
+        d_sr = ref.dequantize_blockwise_ref(sr_out[0], sr_out[1], sr_out[2], (m, n))
+        d_rtn = ref.dequantize_blockwise_ref(rtn_out[0], rtn_out[1], rtn_out[2], (m, n))
+        step = float(np.asarray(sr_out[1]).max())
+        assert float(np.abs(np.asarray(d_sr) - np.asarray(d_rtn)).max()) <= step * 1.01
+
+    def test_sr_expectation_tracks_rtn(self):
+        """Averaged over noise draws, the SR weight equals the fp target
+        (the unbiasedness that makes INT8 masters trainable, §3.4)."""
+        m, n, r = 16, 64, 4
+        rng = np.random.default_rng(26)
+        w = rand((m, n), 27, 0.5)
+        wq, ws, wz = ref.quantize_blockwise_ref(w, bits=8, block=min(256, m * n))
+        p = orth(m, r, 28)
+        pq, psc, pz = ref.quantize_blockwise_ref(p, bits=4, block=min(256, m * r))
+        p4 = ref.pack_int4_ref(pq)
+        blk = min(256, r * n)
+        nb = (r * n) // blk
+        states = (
+            jnp.zeros((nb, blk), jnp.int8),
+            jnp.full((nb,), ref.EPS / 127.0, jnp.float32),
+            jnp.zeros((nb, blk), jnp.uint8),
+            jnp.full((nb,), ref.EPS / 255.0, jnp.float32),
+        )
+        g = rand((m, n), 29)
+        c = corrections(1)
+        lr = jnp.asarray([0.2], jnp.float32)
+        fn = U.make_qgalore_update(m, n, r, sr=True)
+        acc = np.zeros((m, n), dtype=np.float64)
+        trials = 60
+        for _ in range(trials):
+            u = jnp.asarray(rng.uniform(0, 1, (m, n)).astype(np.float32))
+            out = fn(g, p4, psc, pz, *states, wq, ws, wz, c, lr, u)
+            acc += np.asarray(
+                ref.dequantize_blockwise_ref(out[0], out[1], out[2], (m, n))
+            )
+        mean = acc / trials
+        # target: the fp update applied to the dequantized weight
+        low = ref.project_ref(
+            ref.dequantize_int4_packed_ref(p4, psc, pz, (m, r)), g
+        )
+        up, *_ = ref.adam8bit_update_ref(
+            low, *states, float(c[0]), float(c[1]), U.BETA1, U.BETA2, U.EPS,
+            block=blk,
+        )
+        target = np.asarray(
+            ref.dequantize_blockwise_ref(wq, ws, wz, (m, n))
+        ) - 0.2 * U.GALORE_SCALE * np.asarray(
+            ref.project_back_ref(
+                ref.dequantize_int4_packed_ref(p4, psc, pz, (m, r)), up
+            )
+        )
+        scale = float(np.asarray(ws).max())
+        np.testing.assert_allclose(mean, target, atol=scale * 0.5)

@@ -1,0 +1,46 @@
+#![allow(dead_code)]
+//! Tiny manual bench harness (the offline dependency budget has no
+//! criterion): warms up, runs timed iterations, reports mean / p50 / min.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub min_ms: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        p50_ms: samples[samples.len() / 2],
+        min_ms: samples[0],
+    };
+    println!(
+        "{:<44} {:>5} iters | mean {:>9.3} ms | p50 {:>9.3} ms | min {:>9.3} ms",
+        r.name, r.iters, r.mean_ms, r.p50_ms, r.min_ms
+    );
+    r
+}
+
+/// Throughput helper: element count / mean time.
+pub fn report_throughput(r: &BenchResult, elems: usize, unit: &str) {
+    let per_s = elems as f64 / (r.mean_ms / 1e3);
+    println!("    -> {:.2} M{unit}/s", per_s / 1e6);
+}

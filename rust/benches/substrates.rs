@@ -1,0 +1,83 @@
+//! Substrate micro-benchmarks: quantization, linalg, data pipeline.
+//!
+//! These are the rust control-path costs; the training hot path itself is
+//! measured by `benches/throughput.rs` against the HLO artifacts.
+//!
+//! Run: `cargo bench --bench substrates`
+
+mod bench_harness;
+
+use bench_harness::{bench, report_throughput};
+use qgalore::data::{CorpusGenerator, Tokenizer};
+use qgalore::linalg::{left_subspace, qr_orthonormal, Mat};
+use qgalore::quant;
+use qgalore::util::Pcg32;
+
+fn main() {
+    println!("== quantization (host mirrors of the L1 kernels) ==");
+    let mut rng = Pcg32::seeded(0);
+    let x = rng.normal_vec(1 << 20, 0.0, 1.0); // 1M elements
+    let r = bench("quantize int8 (1M f32)", 2, 10, || {
+        std::hint::black_box(quant::quantize(&x, 8));
+    });
+    report_throughput(&r, 1 << 20, "elem");
+    let t8 = quant::quantize(&x, 8);
+    let r = bench("dequantize int8 (1M)", 2, 10, || {
+        std::hint::black_box(quant::dequantize(&t8));
+    });
+    report_throughput(&r, 1 << 20, "elem");
+    let r = bench("sr_quantize int8 (1M)", 2, 10, || {
+        let mut rng = Pcg32::seeded(1);
+        std::hint::black_box(quant::sr_quantize(&x, 8, &mut rng));
+    });
+    report_throughput(&r, 1 << 20, "elem");
+    let r = bench("quantize4 + pack (1M)", 2, 10, || {
+        std::hint::black_box(quant::quantize4(&x));
+    });
+    report_throughput(&r, 1 << 20, "elem");
+
+    println!("\n== linalg (subspace refresh control path) ==");
+    // the largest layer shape of llama-tiny and a 10x stress shape
+    for (m, n, rank) in [(128usize, 64usize, 16usize), (512, 512, 128)] {
+        let g = Mat::randn(m, n, &mut rng);
+        bench(
+            &format!("left_subspace {m}x{n} r={rank} (2 iters)"),
+            1,
+            8,
+            || {
+                let mut r2 = Pcg32::seeded(2);
+                std::hint::black_box(left_subspace(&g, rank, 2, &mut r2));
+            },
+        );
+        let a = Mat::randn(m, rank, &mut rng);
+        bench(&format!("qr_orthonormal {m}x{rank}"), 1, 10, || {
+            std::hint::black_box(qr_orthonormal(&a));
+        });
+    }
+    let a = Mat::randn(256, 256, &mut rng);
+    let b = Mat::randn(256, 256, &mut rng);
+    let r = bench("matmul 256x256x256", 1, 10, || {
+        std::hint::black_box(a.matmul(&b));
+    });
+    report_throughput(&r, 2 * 256 * 256 * 256, "flop");
+
+    println!("\n== data pipeline ==");
+    let gen = CorpusGenerator::new(0);
+    let r = bench("corpus: 100 documents", 1, 10, || {
+        let mut r2 = Pcg32::seeded(3);
+        for _ in 0..100 {
+            std::hint::black_box(gen.document(&mut r2));
+        }
+    });
+    let mut r2 = Pcg32::seeded(3);
+    let docs: Vec<String> = (0..200).map(|_| gen.document(&mut r2)).collect();
+    let total_bytes: usize = docs.iter().map(|d| d.len()).sum();
+    report_throughput(&r, total_bytes / 2, "byte");
+    let tok = Tokenizer::train(&docs, 512);
+    let r = bench("tokenizer: encode 200 documents", 1, 10, || {
+        for d in &docs {
+            std::hint::black_box(tok.encode(d));
+        }
+    });
+    report_throughput(&r, total_bytes, "byte");
+}

@@ -1,0 +1,180 @@
+//! End-to-end throughput benchmarks against the AOT artifacts — the §4.3
+//! measurement: what does Q-GaLore's quantize/dequantize traffic cost per
+//! step relative to GaLore?  (The paper reports a 14.64% throughput
+//! overhead on GPU.)
+//!
+//! Run: `make artifacts && cargo bench --bench throughput`
+
+mod bench_harness;
+
+use bench_harness::bench;
+use qgalore::coordinator::trainer::{Trainer, TrainConfig};
+use qgalore::manifest::Manifest;
+use qgalore::optim::{BuildOptions, Method};
+use qgalore::quant;
+use qgalore::runtime::{HostTensor, Runtime};
+use qgalore::scheduler::SchedulerConfig;
+use qgalore::util::Pcg32;
+
+const CFG: &str = "llama-tiny";
+
+fn main() {
+    let man = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP benches (run `make artifacts` first): {e}");
+            return;
+        }
+    };
+
+    println!("== model fwd/bwd artifacts ==");
+    let entry = man.config(CFG).unwrap().clone();
+    let init = man.load_init(CFG).unwrap();
+    let mut rt = Runtime::new().unwrap();
+    let mut rng = Pcg32::seeded(0);
+    let b = man.batch;
+    let s = entry.model.max_seq_len;
+    let toks: Vec<i32> =
+        (0..b * s).map(|_| rng.below(entry.model.vocab_size) as i32).collect();
+
+    // fp operands
+    let mut fp_ops = Vec::new();
+    let mut off = 0;
+    for (_, shape) in entry.fp_params.iter().chain(entry.linear_params.iter()) {
+        let n: usize = shape.iter().product();
+        fp_ops.push(HostTensor::F32(init[off..off + n].to_vec()));
+        off += n;
+    }
+    fp_ops.push(HostTensor::I32(toks.clone()));
+    fp_ops.push(HostTensor::I32(toks.clone()));
+
+    // q8 operands (int8 linears)
+    let mut q8_ops = Vec::new();
+    let mut off = 0;
+    for (_, shape) in &entry.fp_params {
+        let n: usize = shape.iter().product();
+        q8_ops.push(HostTensor::F32(init[off..off + n].to_vec()));
+        off += n;
+    }
+    for (_, shape) in &entry.linear_params {
+        let n: usize = shape.iter().product();
+        let q = quant::quantize(&init[off..off + n], 8);
+        off += n;
+        q8_ops.push(HostTensor::I8(q.q));
+        q8_ops.push(HostTensor::F32(q.scale));
+        q8_ops.push(HostTensor::F32(q.zero));
+    }
+    q8_ops.push(HostTensor::I32(toks.clone()));
+    q8_ops.push(HostTensor::I32(toks.clone()));
+
+    let fwd_fp = entry.artifacts.get("fwd_bwd_fp").unwrap().clone();
+    let fwd_q8 = entry.artifacts.get("fwd_bwd_q8").unwrap().clone();
+    let r_fp = bench("fwd_bwd_fp (batch 4 x seq 64)", 3, 20, || {
+        std::hint::black_box(rt.execute(&fwd_fp, &fp_ops).unwrap());
+    });
+    let r_q8 = bench("fwd_bwd_q8 (int8 weights)", 3, 20, || {
+        std::hint::black_box(rt.execute(&fwd_q8, &q8_ops).unwrap());
+    });
+    println!(
+        "    -> int8-weight fwd/bwd overhead vs fp: {:+.1}%",
+        (r_q8.mean_ms / r_fp.mean_ms - 1.0) * 100.0
+    );
+
+    println!("\n== per-layer update artifacts (the §4.3 comparison) ==");
+    let model = &entry.model;
+    let (m, n, rank) = (model.dim, model.dim, model.rank);
+    let mut rng = Pcg32::seeded(1);
+    let g = rng.normal_vec(m * n, 0.0, 0.5);
+    let w = rng.normal_vec(m * n, 0.0, 0.5);
+    let p = rng.normal_vec(m * rank, 0.0, 0.1);
+    let c = HostTensor::F32(vec![10.0, 1000.0]);
+    let lr = HostTensor::F32(vec![0.01]);
+
+    let galore_spec = man.update(&format!("galore_update_{m}x{n}_r{rank}")).unwrap().clone();
+    let galore_ops = vec![
+        HostTensor::F32(g.clone()),
+        HostTensor::F32(p.clone()),
+        HostTensor::F32(vec![0.0; rank * n]),
+        HostTensor::F32(vec![0.0; rank * n]),
+        HostTensor::F32(w.clone()),
+        c.clone(),
+        lr.clone(),
+    ];
+    let r_galore = bench(&format!("galore_update {m}x{n} r{rank}"), 3, 30, || {
+        std::hint::black_box(rt.execute(&galore_spec, &galore_ops).unwrap());
+    });
+
+    let q4 = quant::quantize4(&p);
+    let wq = quant::quantize(&w, 8);
+    let st = quant::Adam8State::zeros(rank * n);
+    let qgalore_spec = man.update(&format!("qgalore_update_{m}x{n}_r{rank}")).unwrap().clone();
+    let qgalore_ops = vec![
+        HostTensor::F32(g.clone()),
+        HostTensor::U8(q4.packed.clone()),
+        HostTensor::F32(q4.scale.clone()),
+        HostTensor::F32(q4.zero.clone()),
+        HostTensor::I8(st.mq.clone()),
+        HostTensor::F32(st.ms.clone()),
+        HostTensor::U8(st.vq.clone()),
+        HostTensor::F32(st.vs.clone()),
+        HostTensor::I8(wq.q.clone()),
+        HostTensor::F32(wq.scale.clone()),
+        HostTensor::F32(wq.zero.clone()),
+        c.clone(),
+        lr.clone(),
+        HostTensor::F32({
+            let mut nr = Pcg32::seeded(7);
+            (0..m * n).map(|_| nr.next_f32()).collect()
+        }),
+    ];
+    let r_qgalore = bench(&format!("qgalore_update {m}x{n} r{rank}"), 3, 30, || {
+        std::hint::black_box(rt.execute(&qgalore_spec, &qgalore_ops).unwrap());
+    });
+    println!(
+        "    -> Q-GaLore update overhead vs GaLore (quant/dequant+SR traffic): {:+.1}% (paper: +14.6%)",
+        (r_qgalore.mean_ms / r_galore.mean_ms - 1.0) * 100.0
+    );
+    // RTN variant isolates the threefry RNG cost from the quant/dequant cost
+    let rtn_spec = man
+        .update(&format!("qgalore_rtn_update_{m}x{n}_r{rank}"))
+        .unwrap()
+        .clone();
+    let rtn_ops = &qgalore_ops[..qgalore_ops.len() - 1]; // no noise operand
+    let r_rtn = bench(&format!("qgalore_rtn_update {m}x{n} r{rank}"), 3, 30, || {
+        std::hint::black_box(rt.execute(&rtn_spec, rtn_ops).unwrap());
+    });
+    println!(
+        "    -> of which SR noise generation: {:+.1}% points",
+        (r_qgalore.mean_ms - r_rtn.mean_ms) / r_galore.mean_ms * 100.0
+    );
+
+    println!("\n== end-to-end training step per method ==");
+    for method in [Method::Full, Method::Adam8bit, Method::LoRa, Method::GaLore, Method::QGaLore] {
+        let cfg = TrainConfig {
+            cfg_name: CFG.into(),
+            method,
+            steps: 1000, // not actually run; just sizing the lr schedule
+            lr_max: 0.005,
+            warmup: 10,
+            eval_every: 0,
+            eval_batches: 2,
+            n_documents: 256,
+            seed: 3,
+            opts: BuildOptions {
+                seed: 3,
+                sched: SchedulerConfig { base_interval: 10_000, ..Default::default() },
+                ..Default::default()
+            },
+            log_every: u64::MAX,
+            quiet: true,
+        };
+        let mut trainer = Trainer::new(&man, cfg).unwrap();
+        // prime compile caches + first subspace refresh outside the timing
+        trainer.step(0).unwrap();
+        let mut step = 1u64;
+        bench(&format!("train step [{method}]"), 2, 15, || {
+            trainer.step(step).unwrap();
+            step += 1;
+        });
+    }
+}

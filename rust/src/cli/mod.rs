@@ -1,0 +1,148 @@
+//! Minimal CLI argument parser (the dependency budget has no clap: this
+//! workspace builds fully offline).
+//!
+//! Grammar: `qgalore [--global value]* <subcommand> [positional] [--flag
+//! [value]]*`.  Boolean flags take no value; every other flag takes exactly
+//! one.  Unknown flags are hard errors so typos cannot silently fall back to
+//! defaults.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    /// flags consumed so far (for unknown-flag detection)
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse raw argv (after the subcommand).  `bool_flags` lists flags that
+    /// take no value.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if bool_flags.contains(&name) {
+                    a.bools.push(name.to_string());
+                    i += 1;
+                } else {
+                    let val = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    a.flags.insert(name.to_string(), val.clone());
+                    i += 2;
+                }
+            } else {
+                a.positional.push(tok.clone());
+                i += 1;
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.seen.borrow_mut().push(name.to_string());
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(name, default as u64)? as usize)
+    }
+
+    pub fn u32_or(&self, name: &str, default: u32) -> Result<u32> {
+        Ok(self.u64_or(name, default as u64)? as u32)
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad float {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        self.seen.borrow_mut().push(name.to_string());
+        self.bools.iter().any(|b| b == name)
+    }
+
+    /// Error if any provided flag was never queried (unknown flag).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                return Err(anyhow!("unknown flag --{k}"));
+            }
+        }
+        for k in &self.bools {
+            if !seen.iter().any(|s| s == k) {
+                return Err(anyhow!("unknown flag --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(
+            &argv(&["table1", "--steps", "50", "--verbose"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["table1"]);
+        assert_eq!(a.u64_or("steps", 0).unwrap(), 50);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv(&["--steps"]), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = Args::parse(&argv(&["--nope", "1"]), &[]).unwrap();
+        let _ = a.u64_or("steps", 0);
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&argv(&["--steps", "abc"]), &[]).unwrap();
+        assert!(a.u64_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&[]), &[]).unwrap();
+        assert_eq!(a.str_or("config", "llama-tiny"), "llama-tiny");
+        assert_eq!(a.f32_or("lr", 0.01).unwrap(), 0.01);
+    }
+}

@@ -1,0 +1,107 @@
+//! Checkpoint IO: flat little-endian f32 params (ABI order, the
+//! `Optimizer::export_flat` format) plus a JSON sidecar with metadata.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::jsonx::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointMeta {
+    pub cfg_name: String,
+    pub method: String,
+    pub step: u64,
+    pub val_loss: f32,
+}
+
+pub fn save(
+    path: impl AsRef<Path>,
+    params: &[f32],
+    meta: &CheckpointMeta,
+) -> Result<()> {
+    let path = path.as_ref();
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    std::fs::write(path, &bytes)
+        .with_context(|| format!("writing {}", path.display()))?;
+    let mut obj = BTreeMap::new();
+    obj.insert("cfg_name".into(), Json::Str(meta.cfg_name.clone()));
+    obj.insert("method".into(), Json::Str(meta.method.clone()));
+    obj.insert("step".into(), Json::Num(meta.step as f64));
+    obj.insert("val_loss".into(), Json::Num(meta.val_loss as f64));
+    obj.insert("numel".into(), Json::Num(params.len() as f64));
+    std::fs::write(sidecar(path), Json::Obj(obj).dump())?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<(Vec<f32>, CheckpointMeta)> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        return Err(anyhow!("checkpoint {} has odd byte length", path.display()));
+    }
+    let params: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let meta_raw = std::fs::read_to_string(sidecar(path))?;
+    let j = Json::parse(&meta_raw).map_err(|e| anyhow!("{e}"))?;
+    let numel = j.get("numel").and_then(Json::as_usize).unwrap_or(params.len());
+    if numel != params.len() {
+        return Err(anyhow!("checkpoint numel mismatch: {} vs {}", numel, params.len()));
+    }
+    let meta = CheckpointMeta {
+        cfg_name: j
+            .get("cfg_name")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        method: j.get("method").and_then(Json::as_str).unwrap_or_default().to_string(),
+        step: j.get("step").and_then(Json::as_usize).unwrap_or(0) as u64,
+        val_loss: j.get("val_loss").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+    };
+    Ok((params, meta))
+}
+
+fn sidecar(path: &Path) -> std::path::PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".json");
+    std::path::PathBuf::from(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("qgalore_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("test.ckpt");
+        let params: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        let meta = CheckpointMeta {
+            cfg_name: "llama-tiny".into(),
+            method: "Q-GaLore".into(),
+            step: 123,
+            val_loss: 4.5,
+        };
+        save(&p, &params, &meta).unwrap();
+        let (got, gmeta) = load(&p).unwrap();
+        assert_eq!(got, params);
+        assert_eq!(gmeta, meta);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("qgalore_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.ckpt");
+        std::fs::write(&p, [0u8; 7]).unwrap();
+        assert!(load(&p).is_err());
+    }
+}

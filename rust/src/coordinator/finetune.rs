@@ -1,0 +1,283 @@
+//! Fine-tuning driver — the GLUE / MMLU substitute.
+//!
+//! Real downstream suites are unavailable offline, so we build synthetic
+//! classification tasks that exercise the identical code path (DESIGN.md §3):
+//! each "subject" (label) has its own corpus distribution (distinct Markov
+//! affinity salt); a training window is `[label_token, subject text ...]`;
+//! accuracy is label-prefix scoring — a held-out text is given once under
+//! every label prefix and the model must assign the true label the lowest
+//! per-row loss (executed through the `eval_rows_fp` artifact).
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{tokenizer::BYTE_BASE, CorpusGenerator, Tokenizer};
+use crate::manifest::Manifest;
+use crate::optim::{self, BuildOptions, Method, StepCtx};
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct FinetuneConfig {
+    pub cfg_name: String,
+    pub method: Method,
+    /// number of subjects/classes (<= manifest batch size)
+    pub n_labels: usize,
+    pub steps: u64,
+    pub lr: f32,
+    pub seed: u64,
+    /// distinguishes tasks (GLUE's 8 tasks = 8 salts)
+    pub task_salt: u64,
+    pub n_eval_examples: usize,
+    pub opts: BuildOptions,
+    pub quiet: bool,
+}
+
+impl Default for FinetuneConfig {
+    fn default() -> Self {
+        FinetuneConfig {
+            cfg_name: "llama-tiny".into(),
+            method: Method::QGaLore,
+            n_labels: 4,
+            steps: 60,
+            lr: 0.003,
+            seed: 0,
+            task_salt: 17,
+            n_eval_examples: 32,
+            opts: BuildOptions::default(),
+            quiet: true,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct FinetuneResult {
+    pub method: Method,
+    pub accuracy: f32,
+    pub per_label_accuracy: Vec<f32>,
+    pub train_losses: Vec<(u64, f32)>,
+    pub live_bytes: u64,
+}
+
+/// Label prefix token for class `l` (byte-fallback range: always in vocab).
+fn label_token(l: usize) -> i32 {
+    (BYTE_BASE as usize + 1 + l) as i32
+}
+
+/// Training window: every sentence is followed by its label token
+/// (`s1 L s2 L ...`), so each window carries ~6 supervised "answer" signals
+/// with short attention distance to the signature words — the dense version
+/// of the answer-token protocol.  Returns (tokens, targets) of length seq.
+fn train_window(
+    gen: &CorpusGenerator,
+    tok: &Tokenizer,
+    rng: &mut Pcg32,
+    label: usize,
+    seq: usize,
+) -> (Vec<i32>, Vec<i32>) {
+    let mut ids: Vec<i32> = Vec::with_capacity(2 * seq);
+    while ids.len() < seq + 1 {
+        let s = gen.labeled_example(rng, label);
+        ids.extend(tok.encode(&s).into_iter().map(|t| t as i32));
+        ids.push(label_token(label));
+    }
+    let ids: Vec<i32> = ids.split_off(ids.len() - (seq + 1));
+    (ids[..seq].to_vec(), ids[1..].to_vec())
+}
+
+/// Eval window: label-free content with a single answer slot at the end
+/// (`[subject text ..., label_tok]`).
+///
+/// The label sits at the *end*, so training teaches p(label | content) and
+/// the per-row eval loss between candidate labels differs only at the
+/// answer position — the MMLU answer-letter protocol.  Returns
+/// `(tokens, targets)` of length `seq` each: tokens = [c_0..c_{S-2}, label],
+/// targets = [c_1..c_{S-2}, label, EOS].
+fn label_window(
+    gen: &CorpusGenerator,
+    tok: &Tokenizer,
+    rng: &mut Pcg32,
+    label: usize,
+    seq: usize,
+) -> (Vec<i32>, Vec<i32>) {
+    let mut content: Vec<i32> = Vec::with_capacity(2 * seq);
+    while content.len() < seq - 1 {
+        let s = gen.labeled_example(rng, label);
+        content.extend(tok.encode(&s).into_iter().map(|t| t as i32));
+    }
+    // keep the *tail* so the window always ends on a complete sentence —
+    // the label-signature clause sits immediately before the answer slot
+    let content: Vec<i32> = content.split_off(content.len() - (seq - 1));
+    let mut tokens = content.clone();
+    tokens.push(label_token(label));
+    let mut targets = content[1..].to_vec();
+    targets.push(label_token(label));
+    targets.push(crate::data::tokenizer::EOS as i32);
+    (tokens, targets)
+}
+
+pub fn finetune(
+    man: &Manifest,
+    cfg: FinetuneConfig,
+    pretrained: &[f32],
+) -> Result<FinetuneResult> {
+    let entry = man.config(&cfg.cfg_name)?;
+    let model = entry.model.clone();
+    let batch = man.batch;
+    if cfg.n_labels > batch {
+        return Err(anyhow!("n_labels {} exceeds artifact batch {batch}", cfg.n_labels));
+    }
+    let seq = model.max_seq_len;
+
+    // Tokenizer vocabulary from a mixed corpus of all labels.
+    let gen = CorpusGenerator::new(cfg.task_salt);
+    let mut rng = Pcg32::new(cfg.seed, cfg.task_salt);
+    let mut docs = Vec::new();
+    for _ in 0..64 {
+        for l in 0..cfg.n_labels {
+            docs.push(gen.labeled_example(&mut rng, l));
+        }
+    }
+    let tok = Tokenizer::train(&docs, model.vocab_size);
+
+    // Classification-head init: label tokens are byte-fallback ids that
+    // never occur in the pre-training corpus, so their (tied) embedding
+    // rows are untrained noise.  Give them distinct, well-scaled directions
+    // before fine-tuning — the standard "init the answer head" step, applied
+    // identically for every method (critical for LoRA/QLoRA, whose frozen
+    // base could otherwise never separate the answer logits).
+    let mut init = pretrained.to_vec();
+    {
+        let dim = model.dim;
+        // mean row norm of the trained embedding = target scale
+        let emb = &pretrained[..model.vocab_size * dim];
+        let mean_norm: f32 = emb
+            .chunks(dim)
+            .map(|r| r.iter().map(|x| x * x).sum::<f32>().sqrt())
+            .sum::<f32>()
+            / model.vocab_size as f32;
+        let mut hrng = Pcg32::new(cfg.task_salt ^ 0x4ead, 7);
+        for l in 0..cfg.n_labels {
+            let row = label_token(l) as usize;
+            let v = hrng.normal_vec(dim, 0.0, 1.0);
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+            for (j, x) in v.iter().enumerate() {
+                init[row * dim + j] = x / norm * mean_norm;
+            }
+        }
+    }
+    let mut opt =
+        optim::build_with_init(cfg.method, man, &cfg.cfg_name, &init, cfg.opts)?;
+    let mut rt = Runtime::new()?;
+    let fwd = entry
+        .artifacts
+        .get(opt.fwd_artifact())
+        .ok_or_else(|| anyhow!("missing artifact {}", opt.fwd_artifact()))?
+        .clone();
+
+    // ---- fine-tune loop ----
+    let mut train_losses = Vec::new();
+    for step in 0..cfg.steps {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for bi in 0..batch {
+            let label = bi % cfg.n_labels;
+            let (t, g) = train_window(&gen, &tok, &mut rng, label, seq);
+            tokens.extend(t);
+            targets.extend(g);
+        }
+        let mut ops = opt.forward_operands();
+        ops.push(HostTensor::I32(tokens));
+        ops.push(HostTensor::I32(targets));
+        let mut outs = rt.execute(&fwd, &ops)?;
+        let grads = outs.split_off(1);
+        let loss = outs.pop().unwrap().scalar_f32()?;
+        if step % 10 == 0 || step + 1 == cfg.steps {
+            train_losses.push((step, loss));
+            if !cfg.quiet {
+                println!("[ft {:>8}] step {step:>4} loss {loss:.4}", cfg.method.to_string());
+            }
+        }
+        let mut ctx = StepCtx { rt: &mut rt, man, step: step + 1, lr: cfg.lr };
+        opt.apply_update(&mut ctx, grads)?;
+        opt.on_step_end(&mut ctx)?;
+    }
+
+    // ---- accuracy eval: label-prefix scoring over exported params ----
+    let flat = opt.export_flat()?;
+    let rows = entry
+        .artifacts
+        .get("eval_rows_fp")
+        .ok_or_else(|| anyhow!("missing eval_rows_fp artifact"))?
+        .clone();
+    // split flat into ABI operand list for the fp artifact
+    let mut param_ops = Vec::new();
+    {
+        let mut off = 0usize;
+        for (_, shape) in entry.fp_params.iter().chain(entry.linear_params.iter()) {
+            let n: usize = shape.iter().product();
+            param_ops.push(HostTensor::F32(flat[off..off + n].to_vec()));
+            off += n;
+        }
+        assert_eq!(off, flat.len());
+    }
+
+    let mut eval_rng = Pcg32::new(cfg.seed ^ 0xea71u64, cfg.task_salt);
+    let mut correct = vec![0usize; cfg.n_labels];
+    let mut total = vec![0usize; cfg.n_labels];
+    for ex in 0..cfg.n_eval_examples {
+        let true_label = ex % cfg.n_labels;
+        // held-out content generated under the true label
+        let (content_tokens, content_targets) =
+            label_window(&gen, &tok, &mut eval_rng, true_label, seq);
+        // batch: identical content, each row scored under candidate label j
+        // (tokens/targets differ only at the answer slot, so argmin of the
+        // per-row loss is argmax p(label_j | content))
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for bi in 0..batch {
+            let cand = label_token(bi % cfg.n_labels);
+            let mut t = content_tokens.clone();
+            *t.last_mut().unwrap() = cand;
+            let mut g = content_targets.clone();
+            g[seq - 2] = cand;
+            tokens.extend(t);
+            targets.extend(g);
+        }
+        let mut ops = param_ops.clone();
+        ops.push(HostTensor::I32(tokens));
+        ops.push(HostTensor::I32(targets));
+        let outs = rt.execute(&rows, &ops)?;
+        let losses = outs[0].as_f32()?.to_vec();
+        if !cfg.quiet && ex < 6 {
+            println!(
+                "[ft eval] ex {ex} true {true_label} row losses {:?}",
+                &losses[..cfg.n_labels]
+            );
+        }
+        let pred = losses[..cfg.n_labels]
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        total[true_label] += 1;
+        if pred == true_label {
+            correct[true_label] += 1;
+        }
+    }
+    let per_label: Vec<f32> = correct
+        .iter()
+        .zip(&total)
+        .map(|(&c, &t)| if t == 0 { 0.0 } else { c as f32 / t as f32 })
+        .collect();
+    let accuracy = correct.iter().sum::<usize>() as f32
+        / total.iter().sum::<usize>().max(1) as f32;
+
+    Ok(FinetuneResult {
+        method: cfg.method,
+        accuracy,
+        per_label_accuracy: per_label,
+        train_losses,
+        live_bytes: opt.live_bytes(),
+    })
+}

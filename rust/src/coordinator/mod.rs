@@ -1,0 +1,15 @@
+//! Training coordinator: the paper's end-to-end loops.
+//!
+//! * [`trainer`] — pre-training loop: data -> fwd/bwd artifact -> per-tensor
+//!   update artifacts (fused-backward discipline), LR schedule, periodic
+//!   validation, metrics.
+//! * [`finetune`] — synthetic classification fine-tuning (the GLUE/MMLU
+//!   substitute): label-conditioned corpora, label-prefix scoring accuracy.
+//! * [`checkpoint`] — flat-f32 checkpoint save/load with JSON sidecar.
+
+pub mod checkpoint;
+pub mod finetune;
+pub mod trainer;
+
+pub use finetune::{finetune, FinetuneConfig, FinetuneResult};
+pub use trainer::{pretrain, TrainConfig, TrainResult};

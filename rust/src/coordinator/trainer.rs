@@ -1,0 +1,246 @@
+//! Pre-training loop.
+//!
+//! One step = execute the method's fwd/bwd artifact, then hand the gradient
+//! list to the optimizer, which walks it tensor-by-tensor, running each
+//! tensor's fused update artifact and dropping the gradient immediately —
+//! the rust-side realization of the paper's fused-backward memory
+//! discipline (§3.5).  Subspace refreshes happen inside the galore-family
+//! optimizers under the lazy scheduler.
+
+use anyhow::{anyhow, Result};
+
+use crate::data;
+use crate::manifest::Manifest;
+use crate::optim::{self, BuildOptions, Method, Optimizer, StepCtx};
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub cfg_name: String,
+    pub method: Method,
+    pub steps: u64,
+    pub lr_max: f32,
+    pub warmup: u64,
+    pub eval_every: u64,
+    /// max validation batches per eval (0 = all)
+    pub eval_batches: usize,
+    pub n_documents: usize,
+    pub seed: u64,
+    pub opts: BuildOptions,
+    pub log_every: u64,
+    pub quiet: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            cfg_name: "llama-tiny".into(),
+            method: Method::QGaLore,
+            steps: 200,
+            lr_max: 0.01,
+            warmup: 20,
+            eval_every: 50,
+            eval_batches: 8,
+            n_documents: 512,
+            seed: 0,
+            opts: BuildOptions::default(),
+            log_every: 25,
+            quiet: false,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub method: Method,
+    pub train_losses: Vec<(u64, f32)>,
+    pub val_losses: Vec<(u64, f32)>,
+    pub final_val_loss: f32,
+    pub final_ppl: f32,
+    pub live_bytes: u64,
+    pub svd_count: u64,
+    pub svd_fraction: f64,
+    pub steps_per_sec: f64,
+    pub sim_history: Vec<(String, Vec<f32>)>,
+    /// exported flat f32 params (ABI order) — the checkpoint
+    pub final_params: Vec<f32>,
+}
+
+/// Linear warmup then cosine decay to 10% of peak.
+pub fn lr_at(step: u64, total: u64, warmup: u64, lr_max: f32) -> f32 {
+    if step < warmup.max(1) {
+        return lr_max * (step as f32 + 1.0) / warmup.max(1) as f32;
+    }
+    let progress = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+    let cosine = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+    lr_max * (0.1 + 0.9 * cosine)
+}
+
+pub struct Trainer<'m> {
+    pub man: &'m Manifest,
+    pub rt: Runtime,
+    pub opt: Box<dyn Optimizer>,
+    pub cfg: TrainConfig,
+    train_batcher: data::Batcher,
+    val_batches: Vec<data::Batch>,
+}
+
+impl<'m> Trainer<'m> {
+    pub fn new(man: &'m Manifest, cfg: TrainConfig) -> Result<Self> {
+        let entry = man.config(&cfg.cfg_name)?;
+        let model = &entry.model;
+        let (_tok, train_ids, val_ids) =
+            data::build_dataset(model.vocab_size, cfg.n_documents, cfg.seed);
+        let train_batcher =
+            data::Batcher::new(train_ids, man.batch, model.max_seq_len, cfg.seed);
+        let val_batcher =
+            data::Batcher::new(val_ids, man.batch, model.max_seq_len, cfg.seed);
+        let mut val_batches = val_batcher.sequential_batches();
+        if cfg.eval_batches > 0 {
+            val_batches.truncate(cfg.eval_batches);
+        }
+        if val_batches.is_empty() {
+            return Err(anyhow!("validation split produced no batches; raise n_documents"));
+        }
+        let opt = optim::build(cfg.method, man, &cfg.cfg_name, cfg.opts)?;
+        Ok(Trainer {
+            man,
+            rt: Runtime::new()?,
+            opt,
+            cfg,
+            train_batcher,
+            val_batches,
+        })
+    }
+
+    /// Construct with an explicit initial checkpoint (fine-tuning path).
+    pub fn with_optimizer(
+        man: &'m Manifest,
+        cfg: TrainConfig,
+        opt: Box<dyn Optimizer>,
+        train_ids: Vec<u32>,
+        val_ids: Vec<u32>,
+    ) -> Result<Self> {
+        let entry = man.config(&cfg.cfg_name)?;
+        let model = &entry.model;
+        let train_batcher =
+            data::Batcher::new(train_ids, man.batch, model.max_seq_len, cfg.seed);
+        let val_batcher =
+            data::Batcher::new(val_ids, man.batch, model.max_seq_len, cfg.seed);
+        let mut val_batches = val_batcher.sequential_batches();
+        if cfg.eval_batches > 0 {
+            val_batches.truncate(cfg.eval_batches);
+        }
+        Ok(Trainer {
+            man,
+            rt: Runtime::new()?,
+            opt,
+            cfg,
+            train_batcher,
+            val_batches,
+        })
+    }
+
+    /// One optimization step on the next batch; returns training loss.
+    pub fn step(&mut self, step: u64) -> Result<f32> {
+        let batch = self.train_batcher.next();
+        let entry = self.man.config(&self.cfg.cfg_name)?;
+        let fwd = entry
+            .artifacts
+            .get(self.opt.fwd_artifact())
+            .ok_or_else(|| anyhow!("missing artifact {}", self.opt.fwd_artifact()))?
+            .clone();
+        let mut ops = self.opt.forward_operands();
+        ops.push(HostTensor::I32(batch.tokens));
+        ops.push(HostTensor::I32(batch.targets));
+        let mut outs = self.rt.execute(&fwd, &ops)?;
+        let grads = outs.split_off(1);
+        let loss = outs.pop().unwrap().scalar_f32()?;
+        if !loss.is_finite() {
+            return Err(anyhow!("non-finite training loss at step {step}"));
+        }
+        let lr = lr_at(step, self.cfg.steps, self.cfg.warmup, self.cfg.lr_max);
+        let mut ctx = StepCtx { rt: &mut self.rt, man: self.man, step: step + 1, lr };
+        self.opt.apply_update(&mut ctx, grads)?;
+        self.opt.on_step_end(&mut ctx)?;
+        Ok(loss)
+    }
+
+    /// Mean validation loss over the held-out batches.
+    pub fn evaluate(&mut self) -> Result<f32> {
+        let entry = self.man.config(&self.cfg.cfg_name)?;
+        let eval = entry
+            .artifacts
+            .get(self.opt.eval_artifact())
+            .ok_or_else(|| anyhow!("missing artifact {}", self.opt.eval_artifact()))?
+            .clone();
+        let params = self.opt.forward_operands();
+        let mut total = 0f64;
+        for b in &self.val_batches {
+            let mut ops = params.clone();
+            ops.push(HostTensor::I32(b.tokens.clone()));
+            ops.push(HostTensor::I32(b.targets.clone()));
+            let outs = self.rt.execute(&eval, &ops)?;
+            total += outs[0].scalar_f32()? as f64;
+        }
+        Ok((total / self.val_batches.len() as f64) as f32)
+    }
+
+    pub fn run(mut self) -> Result<TrainResult> {
+        let sw = Stopwatch::start();
+        let mut train_losses = Vec::new();
+        let mut val_losses = Vec::new();
+        for step in 0..self.cfg.steps {
+            let loss = self.step(step)?;
+            if step % self.cfg.log_every == 0 || step + 1 == self.cfg.steps {
+                train_losses.push((step, loss));
+                if !self.cfg.quiet {
+                    println!(
+                        "[{:>8}] step {step:>6} loss {loss:.4} lr {:.5}",
+                        self.opt.method().to_string(),
+                        lr_at(step, self.cfg.steps, self.cfg.warmup, self.cfg.lr_max)
+                    );
+                }
+            }
+            if self.cfg.eval_every > 0
+                && (step + 1) % self.cfg.eval_every == 0
+                && step + 1 != self.cfg.steps
+            {
+                let vl = self.evaluate()?;
+                val_losses.push((step + 1, vl));
+                if !self.cfg.quiet {
+                    println!(
+                        "[{:>8}] step {:>6} val_loss {vl:.4} ppl {:.2}",
+                        self.opt.method().to_string(),
+                        step + 1,
+                        vl.exp()
+                    );
+                }
+            }
+        }
+        let final_val = self.evaluate()?;
+        val_losses.push((self.cfg.steps, final_val));
+        let elapsed = sw.elapsed_s();
+        let (svd_count, svd_fraction) =
+            self.opt.svd_stats(self.cfg.steps).unwrap_or((0, 0.0));
+        Ok(TrainResult {
+            method: self.opt.method(),
+            train_losses,
+            val_losses,
+            final_val_loss: final_val,
+            final_ppl: final_val.exp(),
+            live_bytes: self.opt.live_bytes(),
+            svd_count,
+            svd_fraction,
+            steps_per_sec: self.cfg.steps as f64 / elapsed.max(1e-9),
+            sim_history: self.opt.similarity_history().unwrap_or_default(),
+            final_params: self.opt.export_flat()?,
+        })
+    }
+}
+
+/// Convenience wrapper: build a trainer from defaults and run it.
+pub fn pretrain(man: &Manifest, cfg: TrainConfig) -> Result<TrainResult> {
+    Trainer::new(man, cfg)?.run()
+}

@@ -1,0 +1,162 @@
+//! Sequence packer + deterministic shuffled batcher.
+//!
+//! The token stream is cut into non-overlapping windows of `seq_len + 1`;
+//! each window yields `tokens = w[..S]`, `targets = w[1..]` (next-token
+//! prediction).  Window order is shuffled once per epoch with a seeded
+//! Fisher–Yates, so training is reproducible and epoch boundaries are
+//! explicit — mirroring the "no data repetition within budget" setup the
+//! paper uses for C4.
+
+use crate::util::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,  // (batch, seq) row-major
+    pub targets: Vec<i32>, // (batch, seq)
+    pub batch: usize,
+    pub seq: usize,
+}
+
+pub struct Batcher {
+    windows: Vec<usize>, // start offsets into `ids`
+    ids: Vec<u32>,
+    pub batch: usize,
+    pub seq: usize,
+    cursor: usize,
+    epoch: u64,
+    seed: u64,
+}
+
+impl Batcher {
+    pub fn new(ids: Vec<u32>, batch: usize, seq: usize, seed: u64) -> Self {
+        let stride = seq + 1;
+        let n = if ids.len() >= stride { (ids.len() - 1) / seq } else { 0 };
+        // non-overlapping windows at stride `seq` (the +1 target overlaps)
+        let windows: Vec<usize> =
+            (0..n).map(|i| i * seq).filter(|&s| s + stride <= ids.len()).collect();
+        let mut b = Batcher { windows, ids, batch, seq, cursor: 0, epoch: 0, seed };
+        b.reshuffle();
+        b
+    }
+
+    pub fn n_windows(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn reshuffle(&mut self) {
+        let mut rng = Pcg32::new(self.seed, self.epoch.wrapping_add(1));
+        rng.shuffle(&mut self.windows);
+        self.cursor = 0;
+    }
+
+    /// Next batch; wraps to a new shuffled epoch when exhausted.
+    pub fn next(&mut self) -> Batch {
+        assert!(
+            self.windows.len() >= self.batch,
+            "need >= {} windows, have {}",
+            self.batch,
+            self.windows.len()
+        );
+        if self.cursor + self.batch > self.windows.len() {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut targets = Vec::with_capacity(self.batch * self.seq);
+        for bi in 0..self.batch {
+            let start = self.windows[self.cursor + bi];
+            let w = &self.ids[start..start + self.seq + 1];
+            tokens.extend(w[..self.seq].iter().map(|&t| t as i32));
+            targets.extend(w[1..].iter().map(|&t| t as i32));
+        }
+        self.cursor += self.batch;
+        Batch { tokens, targets, batch: self.batch, seq: self.seq }
+    }
+
+    /// All validation batches (no shuffle, in order, drop remainder).
+    pub fn sequential_batches(&self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let mut sorted = self.windows.clone();
+        sorted.sort_unstable();
+        for chunk in sorted.chunks(self.batch) {
+            if chunk.len() < self.batch {
+                break;
+            }
+            let mut tokens = Vec::with_capacity(self.batch * self.seq);
+            let mut targets = Vec::with_capacity(self.batch * self.seq);
+            for &start in chunk {
+                let w = &self.ids[start..start + self.seq + 1];
+                tokens.extend(w[..self.seq].iter().map(|&t| t as i32));
+                targets.extend(w[1..].iter().map(|&t| t as i32));
+            }
+            out.push(Batch { tokens, targets, batch: self.batch, seq: self.seq });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(n: usize) -> Vec<u32> {
+        (0..n as u32).collect()
+    }
+
+    #[test]
+    fn targets_shift_tokens_by_one() {
+        let mut b = Batcher::new(ids(1000), 2, 16, 1);
+        let batch = b.next();
+        for row in 0..2 {
+            for i in 0..15 {
+                assert_eq!(
+                    batch.tokens[row * 16 + i + 1],
+                    batch.targets[row * 16 + i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn epochs_cover_all_windows_once() {
+        let mut b = Batcher::new(ids(16 * 10 + 1), 2, 16, 2);
+        let n = b.n_windows();
+        assert_eq!(n, 10);
+        let mut starts = Vec::new();
+        for _ in 0..5 {
+            let batch = b.next();
+            for row in 0..2 {
+                starts.push(batch.tokens[row * 16] as usize);
+            }
+        }
+        starts.sort_unstable();
+        assert_eq!(starts, (0..10).map(|i| i * 16).collect::<Vec<_>>());
+        assert_eq!(b.epoch(), 0);
+        b.next();
+        assert_eq!(b.epoch(), 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Batcher::new(ids(2000), 4, 32, 3);
+        let mut b = Batcher::new(ids(2000), 4, 32, 3);
+        for _ in 0..10 {
+            assert_eq!(a.next().tokens, b.next().tokens);
+        }
+        let mut c = Batcher::new(ids(2000), 4, 32, 4);
+        assert_ne!(a.next().tokens, c.next().tokens);
+    }
+
+    #[test]
+    fn sequential_batches_ordered() {
+        let b = Batcher::new(ids(16 * 6 + 1), 2, 16, 5);
+        let seq = b.sequential_batches();
+        assert_eq!(seq.len(), 3);
+        assert_eq!(seq[0].tokens[0], 0);
+        assert_eq!(seq[1].tokens[0], 32 as i32);
+    }
+}

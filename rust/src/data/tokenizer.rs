@@ -1,0 +1,180 @@
+//! Word-level tokenizer with byte fallback.
+//!
+//! Vocabulary is learned from the corpus by frequency: the top
+//! `vocab_size - 256 - N_SPECIAL` words become single tokens; anything else
+//! falls back to byte tokens, so *every* string round-trips losslessly
+//! (the property real LLM tokenizers guarantee, and the property our
+//! proptests pin down).
+
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const N_SPECIAL: u32 = 3;
+
+/// First byte-fallback token id; bytes occupy [BYTE_BASE, BYTE_BASE+256).
+pub const BYTE_BASE: u32 = N_SPECIAL;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    word_to_id: HashMap<String, u32>,
+    id_to_word: Vec<String>, // indexed from WORD_BASE
+    vocab_size: usize,
+}
+
+const WORD_BASE: u32 = BYTE_BASE + 256;
+
+impl Tokenizer {
+    /// Learn a vocabulary from documents. `vocab_size` caps total ids
+    /// (specials + 256 bytes + words).
+    pub fn train(docs: &[String], vocab_size: usize) -> Self {
+        assert!(
+            vocab_size > (WORD_BASE as usize),
+            "vocab_size {vocab_size} must exceed byte+special base {WORD_BASE}"
+        );
+        let mut freq: HashMap<&str, usize> = HashMap::new();
+        for d in docs {
+            for w in d.split_whitespace() {
+                *freq.entry(w).or_default() += 1;
+            }
+        }
+        let mut by_freq: Vec<(&str, usize)> = freq.into_iter().collect();
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let n_words = vocab_size - WORD_BASE as usize;
+        let mut word_to_id = HashMap::new();
+        let mut id_to_word = Vec::new();
+        for (i, (w, _)) in by_freq.into_iter().take(n_words).enumerate() {
+            word_to_id.insert(w.to_string(), WORD_BASE + i as u32);
+            id_to_word.push(w.to_string());
+        }
+        Tokenizer { word_to_id, id_to_word, vocab_size }
+    }
+
+    pub fn vocab_len(&self) -> usize {
+        (WORD_BASE as usize) + self.id_to_word.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.vocab_size
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids = vec![BOS];
+        let mut prev_was_bytes = false;
+        for w in text.split_whitespace() {
+            match self.word_to_id.get(w) {
+                Some(&id) => {
+                    ids.push(id);
+                    prev_was_bytes = false;
+                }
+                None => {
+                    // adjacent byte-fallback words need an explicit space
+                    // byte so decode can recover the boundary
+                    if prev_was_bytes {
+                        ids.push(BYTE_BASE + b' ' as u32);
+                    }
+                    for b in w.bytes() {
+                        ids.push(BYTE_BASE + b as u32);
+                    }
+                    prev_was_bytes = true;
+                }
+            }
+        }
+        ids.push(EOS);
+        ids
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut out = String::new();
+        let mut bytes: Vec<u8> = Vec::new();
+        let mut first = true;
+        let flush =
+            |bytes: &mut Vec<u8>, out: &mut String, first: &mut bool| {
+                if !bytes.is_empty() {
+                    if !*first {
+                        out.push(' ');
+                    }
+                    out.push_str(&String::from_utf8_lossy(bytes));
+                    bytes.clear();
+                    *first = false;
+                }
+            };
+        for &id in ids {
+            if id == PAD || id == BOS || id == EOS {
+                flush(&mut bytes, &mut out, &mut first);
+                continue;
+            }
+            if id >= WORD_BASE {
+                flush(&mut bytes, &mut out, &mut first);
+                let w = &self.id_to_word[(id - WORD_BASE) as usize];
+                if !first {
+                    out.push(' ');
+                }
+                out.push_str(w);
+                first = false;
+            } else {
+                // contiguous byte tokens build one word
+                bytes.push((id - BYTE_BASE) as u8);
+            }
+        }
+        flush(&mut bytes, &mut out, &mut first);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn docs() -> Vec<String> {
+        vec![
+            "the quick brown fox jumps over the lazy dog.".to_string(),
+            "the dog sleeps. the fox runs.".to_string(),
+        ]
+    }
+
+    #[test]
+    fn frequent_words_get_ids() {
+        let t = Tokenizer::train(&docs(), 512);
+        let ids = t.encode("the fox");
+        assert_eq!(ids.len(), 4); // BOS the fox EOS
+        assert!(ids[1] >= WORD_BASE && ids[2] >= WORD_BASE);
+    }
+
+    #[test]
+    fn unknown_words_fall_back_to_bytes() {
+        let t = Tokenizer::train(&docs(), 512);
+        let ids = t.encode("zzz");
+        assert_eq!(ids.len(), 2 + 3);
+        assert!(ids[1..4].iter().all(|&i| (BYTE_BASE..WORD_BASE).contains(&i)));
+    }
+
+    #[test]
+    fn roundtrip_lossless() {
+        let t = Tokenizer::train(&docs(), 512);
+        for s in [
+            "the quick brown fox",
+            "completely unseen wörds — here",
+            "mixed the known zzz unknown dog",
+        ] {
+            assert_eq!(t.decode(&t.encode(s)), s);
+        }
+    }
+
+    #[test]
+    fn vocab_capped() {
+        let many: Vec<String> =
+            (0..2000).map(|i| format!("word{i} appears here")).collect();
+        let t = Tokenizer::train(&many, 300);
+        assert!(t.vocab_len() <= 300);
+    }
+
+    #[test]
+    fn ids_below_capacity() {
+        let t = Tokenizer::train(&docs(), 400);
+        for id in t.encode("the quick brown unknownzz") {
+            assert!((id as usize) < t.capacity());
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! # Q-GaLore — rust coordinator
+//!
+//! Reproduction of *"Q-GaLore: Quantized GaLore with INT4 Projection and
+//! Layer-Adaptive Low-Rank Gradients"* as a three-layer system:
+//!
+//! * **L1** — Pallas kernels (block-wise quantization, stochastic rounding,
+//!   low-rank projection, 8-bit Adam), authored in `python/compile/kernels/`.
+//! * **L2** — JAX LLaMA-style model forward/backward and fused per-layer
+//!   update steps, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **L3** — this crate: the training coordinator.  It owns the data
+//!   pipeline, all parameter/optimizer buffers (in their quantized storage
+//!   formats), the **lazy layer-adaptive subspace scheduler** (the paper's
+//!   coordination contribution), and drives the AOT executables through the
+//!   PJRT CPU client.  Python never runs on the training path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! | module        | role |
+//! |---------------|------|
+//! | [`jsonx`]     | minimal JSON parser/serializer (manifest, configs, logs) |
+//! | [`util`]      | PCG RNG, timing, small helpers |
+//! | [`linalg`]    | dense matrices, Householder QR, randomized subspace iteration (the SVD substrate) |
+//! | [`quant`]     | block-wise INT8/INT4 quantization + stochastic rounding (host mirror of the L1 kernels) |
+//! | [`data`]      | synthetic-C4 corpus, tokenizer, sequence packer/batcher |
+//! | [`model`]     | model topology metadata + AOT ABI (mirrors `python/compile/configs.py`) |
+//! | [`manifest`]  | typed view of `artifacts/manifest.json` |
+//! | [`memory`]    | analytic memory model (paper Tables 1–4, Figure 5) |
+//! | [`runtime`]   | PJRT client wrapper: load/compile/execute HLO-text artifacts |
+//! | [`optim`]     | optimizer zoo: Full, 8-bit Adam, Low-Rank, LoRA, ReLoRA, QLoRA, GaLore, 8-bit GaLore, Q-GaLore |
+//! | [`scheduler`] | lazy layer-wise subspace update scheduler |
+//! | [`coordinator`] | trainer: step loop, eval, fine-tune driver, metrics, checkpoints |
+//! | [`report`]    | markdown/CSV renderers for the repro harness |
+//! | [`repro`]     | regenerates every table and figure of the paper |
+
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod jsonx;
+pub mod linalg;
+pub mod manifest;
+pub mod memory;
+pub mod model;
+pub mod optim;
+pub mod report;
+pub mod repro;
+pub mod runtime;
+pub mod scheduler;
+pub mod quant;
+pub mod util;
+
+pub use anyhow::{anyhow, Result};

@@ -1,0 +1,466 @@
+//! Dense linear algebra substrate.
+//!
+//! GaLore's subspace refresh needs the top-r *left singular subspace* of the
+//! gradient matrix.  The paper uses cuSOLVER SVD; we build the equivalent
+//! from scratch: Householder QR + randomized subspace iteration (Halko,
+//! Martinsson & Tropp 2011).  Subspace iteration converges to the dominant
+//! invariant subspace, which is all GaLore consumes — the singular values
+//! themselves are discarded.
+//!
+//! This runs on the *control path* (every `interval` steps per layer), so a
+//! straightforward cache-friendly implementation is sufficient; the training
+//! hot path never enters this module.
+
+use crate::util::Pcg32;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg32) -> Self {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols, 0.0, 1.0) }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *t.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        t
+    }
+
+    /// self (m,k) @ other (k,n) -> (m,n). ikj loop order for locality.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.at(i, kk);
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// self^T (k,m)^T @ other (k,n) -> (m,n) without materializing the
+    /// transpose (the projection step R = P^T G).
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for kk in 0..k {
+            let arow = &self.data[kk * m..(kk + 1) * m];
+            let brow = &other.data[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+}
+
+/// Thin QR via modified Gram–Schmidt with re-orthogonalization.
+///
+/// For the (m, r) panels of subspace iteration (r << m) MGS with a second
+/// pass is numerically adequate and ~2x cheaper than Householder on panels;
+/// re-orthogonalization keeps `Q^T Q - I` at f32 roundoff even for highly
+/// correlated columns ("twice is enough", Giraud et al. 2005).
+pub fn qr_orthonormal(a: &Mat) -> Mat {
+    let (m, r) = (a.rows, a.cols);
+    let mut q = a.clone();
+    for j in 0..r {
+        // two orthogonalization passes against previous columns
+        for _pass in 0..2 {
+            for p in 0..j {
+                let mut dot = 0f32;
+                for i in 0..m {
+                    dot += q.at(i, p) * q.at(i, j);
+                }
+                for i in 0..m {
+                    let v = q.at(i, p);
+                    *q.at_mut(i, j) -= dot * v;
+                }
+            }
+        }
+        let mut norm = 0f32;
+        for i in 0..m {
+            norm += q.at(i, j) * q.at(i, j);
+        }
+        let norm = norm.sqrt();
+        if norm > 1e-12 {
+            for i in 0..m {
+                *q.at_mut(i, j) /= norm;
+            }
+        } else {
+            // degenerate column: replace with a fresh deterministic direction
+            for i in 0..m {
+                *q.at_mut(i, j) = if i % (j + 2) == 0 { 1.0 } else { 0.0 };
+            }
+            let mut n2 = 0f32;
+            for i in 0..m {
+                n2 += q.at(i, j) * q.at(i, j);
+            }
+            let n2 = n2.sqrt();
+            for i in 0..m {
+                *q.at_mut(i, j) /= n2;
+            }
+        }
+    }
+    q
+}
+
+/// Eigendecomposition of a small symmetric matrix via cyclic Jacobi
+/// rotations.  Returns (eigenvalues desc, eigenvector columns, same order).
+/// Used to canonicalize the randomized subspace (r <= a few hundred).
+pub fn symmetric_eig(a: &Mat) -> (Vec<f32>, Mat) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::zeros(n, n);
+    for i in 0..n {
+        *v.at_mut(i, i) = 1.0;
+    }
+    let max_sweeps = 30;
+    for _ in 0..max_sweeps {
+        let mut off = 0f32;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m.at(p, q) * m.at(p, q);
+            }
+        }
+        if off < 1e-12 * (1.0 + m.frobenius()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.at(p, q);
+                if apq.abs() < 1e-12 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..n {
+                    let mkp = m.at(k, p);
+                    let mkq = m.at(k, q);
+                    *m.at_mut(k, p) = c * mkp - s * mkq;
+                    *m.at_mut(k, q) = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m.at(p, k);
+                    let mqk = m.at(q, k);
+                    *m.at_mut(p, k) = c * mpk - s * mqk;
+                    *m.at_mut(q, k) = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    *v.at_mut(k, p) = c * vkp - s * vkq;
+                    *v.at_mut(k, q) = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // sort descending by eigenvalue
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| m.at(j, j).partial_cmp(&m.at(i, i)).unwrap());
+    let vals: Vec<f32> = idx.iter().map(|&i| m.at(i, i)).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (new_c, &old_c) in idx.iter().enumerate() {
+        for k in 0..n {
+            *vecs.at_mut(k, new_c) = v.at(k, old_c);
+        }
+    }
+    (vals, vecs)
+}
+
+/// Top-r left singular subspace of `g` (m, n) via randomized subspace
+/// iteration (Y = (G G^T)^q G Omega, Q = qr(Y); 2 power steps suffice for
+/// GaLore), *canonicalized* to the singular-vector basis: the columns of the
+/// result are ordered by singular value, like a truncated SVD — required so
+/// that the paper's Figure-2 column-cosine similarity between successive
+/// projections is well defined (a raw randomized basis is arbitrarily
+/// rotated within the subspace).
+pub fn left_subspace(g: &Mat, r: usize, iters: usize, rng: &mut Pcg32) -> Mat {
+    let r = r.min(g.rows).min(g.cols);
+    let omega = Mat::randn(g.cols, r, rng);
+    let mut y = g.matmul(&omega); // (m, r)
+    let mut q = qr_orthonormal(&y);
+    for _ in 0..iters {
+        // Z = G^T Q (n, r); Y = G Z (m, r)
+        let z = g.t_matmul(&q);
+        y = g.matmul(&z);
+        q = qr_orthonormal(&y);
+    }
+    // canonicalize: Z = Q^T G; C = Z Z^T; Q <- Q * eigvecs(C)
+    let z = q.t_matmul(g); // (r, n)
+    let c = z.matmul(&z.transpose()); // (r, r)
+    let (_vals, vecs) = symmetric_eig(&c);
+    q.matmul(&vecs)
+}
+
+/// Cosine similarity between two orthonormal bases of the same shape, as the
+/// paper's Figure 2 uses it: mean |cos| between corresponding columns.
+pub fn subspace_cosine(a: &Mat, b: &Mat) -> f32 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut acc = 0f32;
+    for j in 0..a.cols {
+        let mut dot = 0f32;
+        let mut na = 0f32;
+        let mut nb = 0f32;
+        for i in 0..a.rows {
+            dot += a.at(i, j) * b.at(i, j);
+            na += a.at(i, j) * a.at(i, j);
+            nb += b.at(i, j) * b.at(i, j);
+        }
+        acc += dot.abs() / (na.sqrt() * nb.sqrt()).max(1e-12);
+    }
+    acc / a.cols as f32
+}
+
+/// Projection-invariant similarity: ||A^T B||_F^2 / r in [0, 1].  Robust to
+/// column permutation/sign — used by tests to check subspace *recovery*.
+pub fn subspace_overlap(a: &Mat, b: &Mat) -> f32 {
+    let prod = a.t_matmul(b); // (ra, rb)
+    let f = prod.frobenius();
+    f * f / a.cols.min(b.cols) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn t_matmul_matches_transpose_matmul() {
+        let mut rng = Pcg32::seeded(1);
+        let a = Mat::randn(17, 5, &mut rng);
+        let b = Mat::randn(17, 9, &mut rng);
+        let got = a.t_matmul(&b);
+        let want = a.transpose().matmul(&b);
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn qr_produces_orthonormal_columns() {
+        let mut rng = Pcg32::seeded(2);
+        let a = Mat::randn(64, 16, &mut rng);
+        let q = qr_orthonormal(&a);
+        let gram = q.t_matmul(&q);
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (gram.at(i, j) - want).abs() < 1e-4,
+                    "gram[{i},{j}] = {}",
+                    gram.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qr_spans_input() {
+        // span(Q) == span(A): projecting A onto Q reproduces A.
+        let mut rng = Pcg32::seeded(3);
+        let a = Mat::randn(32, 8, &mut rng);
+        let q = qr_orthonormal(&a);
+        let proj = q.matmul(&q.t_matmul(&a));
+        let diff = proj.sub(&a).frobenius() / a.frobenius();
+        assert!(diff < 1e-4, "residual {diff}");
+    }
+
+    #[test]
+    fn qr_handles_rank_deficient() {
+        let mut rng = Pcg32::seeded(4);
+        let mut a = Mat::randn(16, 4, &mut rng);
+        // duplicate column 0 into column 1
+        for i in 0..16 {
+            let v = a.at(i, 0);
+            *a.at_mut(i, 1) = v;
+        }
+        let q = qr_orthonormal(&a);
+        let gram = q.t_matmul(&q);
+        for i in 0..4 {
+            assert!((gram.at(i, i) - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn subspace_recovers_low_rank() {
+        // G = U_true @ V with rank 4 -> left_subspace must recover span(U_true).
+        let mut rng = Pcg32::seeded(5);
+        let u_true = qr_orthonormal(&Mat::randn(48, 4, &mut rng));
+        let v = Mat::randn(4, 96, &mut rng);
+        let g = u_true.matmul(&v);
+        let q = left_subspace(&g, 4, 2, &mut rng);
+        let overlap = subspace_overlap(&u_true, &q);
+        assert!(overlap > 0.999, "overlap {overlap}");
+    }
+
+    #[test]
+    fn subspace_dominant_directions_with_noise() {
+        let mut rng = Pcg32::seeded(6);
+        let u_true = qr_orthonormal(&Mat::randn(64, 4, &mut rng));
+        let v = Mat::randn(4, 80, &mut rng);
+        let strong = u_true.matmul(&v);
+        let mut g = strong.clone();
+        for x in g.data.iter_mut() {
+            *x = *x * 5.0 + rng.next_normal() * 0.1;
+        }
+        let q = left_subspace(&g, 4, 3, &mut rng);
+        let overlap = subspace_overlap(&u_true, &q);
+        assert!(overlap > 0.98, "overlap {overlap}");
+    }
+
+    #[test]
+    fn cosine_identical_is_one() {
+        let mut rng = Pcg32::seeded(7);
+        let q = qr_orthonormal(&Mat::randn(32, 8, &mut rng));
+        assert!((subspace_cosine(&q, &q) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cosine_sign_invariant() {
+        let mut rng = Pcg32::seeded(8);
+        let q = qr_orthonormal(&Mat::randn(32, 8, &mut rng));
+        let mut neg = q.clone();
+        for x in neg.data.iter_mut() {
+            *x = -*x;
+        }
+        assert!((subspace_cosine(&q, &neg) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cosine_random_is_small() {
+        let mut rng = Pcg32::seeded(9);
+        let a = qr_orthonormal(&Mat::randn(256, 8, &mut rng));
+        let b = qr_orthonormal(&Mat::randn(256, 8, &mut rng));
+        assert!(subspace_cosine(&a, &b) < 0.3);
+    }
+
+    #[test]
+    fn jacobi_eig_diagonalizes() {
+        let mut rng = Pcg32::seeded(21);
+        let b = Mat::randn(12, 12, &mut rng);
+        let a = b.matmul(&b.transpose()); // SPD
+        let (vals, vecs) = symmetric_eig(&a);
+        // descending, non-negative
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1] - 1e-3);
+        }
+        assert!(vals.iter().all(|&v| v > -1e-3));
+        // A v_i = lambda_i v_i
+        for i in 0..12 {
+            let vi = Mat::from_vec(12, 1, vecs.col(i));
+            let av = a.matmul(&vi);
+            for k in 0..12 {
+                assert!(
+                    (av.at(k, 0) - vals[i] * vi.at(k, 0)).abs()
+                        < 1e-2 * (1.0 + vals[0]),
+                    "eigpair {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_subspace_is_stable_across_rng() {
+        // two randomized runs over the same matrix must return (nearly) the
+        // same canonical basis — the property Figure 2 depends on.
+        let mut rng = Pcg32::seeded(22);
+        let u_true = qr_orthonormal(&Mat::randn(48, 6, &mut rng));
+        // distinct singular values so the canonical order is unambiguous
+        let mut v = Mat::randn(6, 96, &mut rng);
+        for j in 0..6 {
+            for k in 0..96 {
+                *v.at_mut(j, k) *= (6 - j) as f32;
+            }
+        }
+        let g = u_true.matmul(&v);
+        let mut r1 = Pcg32::seeded(100);
+        let mut r2 = Pcg32::seeded(200);
+        let q1 = left_subspace(&g, 4, 3, &mut r1);
+        let q2 = left_subspace(&g, 4, 3, &mut r2);
+        let sim = subspace_cosine(&q1, &q2);
+        assert!(sim > 0.99, "canonical bases disagree: {sim}");
+    }
+
+    #[test]
+    fn rank_clamped_to_dims() {
+        let mut rng = Pcg32::seeded(10);
+        let g = Mat::randn(8, 6, &mut rng);
+        let q = left_subspace(&g, 32, 2, &mut rng);
+        assert_eq!(q.cols, 6);
+        assert_eq!(q.rows, 8);
+    }
+}

@@ -1,0 +1,234 @@
+//! `qgalore` — leader binary / CLI launcher.
+//!
+//! The rust coordinator is self-contained once `make artifacts` has produced
+//! the AOT HLO modules: every subcommand below runs without python.
+
+use anyhow::{anyhow, Result};
+
+use qgalore::cli::Args;
+use qgalore::coordinator::{checkpoint, finetune, pretrain, FinetuneConfig, TrainConfig};
+use qgalore::manifest::Manifest;
+use qgalore::memory;
+use qgalore::model;
+use qgalore::optim::{BuildOptions, Method};
+use qgalore::repro::{self, ReproOptions};
+use qgalore::scheduler::SchedulerConfig;
+use qgalore::util::human_bytes;
+
+const USAGE: &str = "\
+qgalore — Q-GaLore: INT4-projection / INT8-weight low-rank LLM training
+
+USAGE: qgalore <command> [flags]   (global: --artifacts DIR, default `artifacts`)
+
+COMMANDS
+  train      pre-train from scratch
+             --method M --config C --steps N --lr F --seed N --interval N
+             --proj-bits N --no-adaptive --no-sr --save PATH
+  finetune   fine-tune a checkpoint on a synthetic classification task
+             --method M --config C --checkpoint PATH --steps N --labels N
+             --task-salt N --seed N
+  repro      regenerate a paper table/figure
+             <table1|table2|table3|table4|fig2|fig3|fig5|fig6|fig7|all>
+             --steps N --out DIR --config C --seed N --verbose
+  memory     analytic memory breakdown
+             --config C [--method M] --tokens N
+  inspect    summarize the artifact manifest
+
+METHODS: full adam8bit lowrank lora relora qlora galore galore8bit qgalore
+CONFIGS: llama-micro llama-tiny llama-nano llama-small (trainable);
+         llama-{60m,130m,350m,1b,7b}, llama3-8b, gemma-7b, mistral-7b,
+         roberta-base (memory model only)";
+
+fn parse_method(s: &str) -> Result<Method> {
+    Method::parse(s).ok_or_else(|| anyhow!("unknown method {s:?}\n{USAGE}"))
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..], &["no-adaptive", "no-sr", "verbose"])?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+
+    match cmd.as_str() {
+        "train" => {
+            let man = Manifest::load(&artifacts)?;
+            let method = parse_method(&args.str_or("method", "qgalore"))?;
+            let config = args.str_or("config", "llama-tiny");
+            let steps = args.u64_or("steps", 200)?;
+            let seed = args.u64_or("seed", 0)?;
+            let cfg = TrainConfig {
+                cfg_name: config.clone(),
+                method,
+                steps,
+                lr_max: args.f32_or("lr", 0.01)?,
+                warmup: steps / 10,
+                eval_every: (steps / 4).max(1),
+                eval_batches: 8,
+                n_documents: 512,
+                seed,
+                opts: BuildOptions {
+                    seed,
+                    sched: SchedulerConfig {
+                        base_interval: args.u64_or("interval", 20)?,
+                        adaptive: !args.bool("no-adaptive"),
+                        ..Default::default()
+                    },
+                    proj_bits: args.u32_or("proj-bits", 4)?,
+                    use_sr: !args.bool("no-sr"),
+                    relora_merge_every: steps / 3,
+                },
+                log_every: (steps / 20).max(1),
+                quiet: false,
+            };
+            let save = args.flag("save").map(|s| s.to_string());
+            args.reject_unknown()?;
+            let r = pretrain(&man, cfg)?;
+            println!(
+                "\nfinal: val_loss {:.4} ppl {:.2} | live {} | svd {} ({:.0}% of GaLore) | {:.2} steps/s",
+                r.final_val_loss,
+                r.final_ppl,
+                human_bytes(r.live_bytes),
+                r.svd_count,
+                r.svd_fraction * 100.0,
+                r.steps_per_sec
+            );
+            if let Some(path) = save {
+                checkpoint::save(
+                    &path,
+                    &r.final_params,
+                    &checkpoint::CheckpointMeta {
+                        cfg_name: config,
+                        method: method.to_string(),
+                        step: steps,
+                        val_loss: r.final_val_loss,
+                    },
+                )?;
+                println!("checkpoint saved to {path}");
+            }
+        }
+        "finetune" => {
+            let man = Manifest::load(&artifacts)?;
+            let method = parse_method(&args.str_or("method", "qgalore"))?;
+            let config = args.str_or("config", "llama-tiny");
+            let ckpt = args.flag("checkpoint").map(|s| s.to_string());
+            let seed = args.u64_or("seed", 0)?;
+            let fcfg = FinetuneConfig {
+                cfg_name: config.clone(),
+                method,
+                n_labels: args.usize_or("labels", 4)?,
+                steps: args.u64_or("steps", 60)?,
+                lr: args.f32_or("lr", 0.003)?,
+                seed,
+                task_salt: args.u64_or("task-salt", 17)?,
+                n_eval_examples: 40,
+                opts: BuildOptions { seed, ..Default::default() },
+                quiet: false,
+            };
+            args.reject_unknown()?;
+            let init = match ckpt {
+                Some(p) => checkpoint::load(&p)?.0,
+                None => man.load_init(&config)?,
+            };
+            let r = finetune(&man, fcfg, &init)?;
+            println!(
+                "\naccuracy {:.1}% (per label: {:?}) | live {}",
+                r.accuracy * 100.0,
+                r.per_label_accuracy
+                    .iter()
+                    .map(|a| format!("{:.0}%", a * 100.0))
+                    .collect::<Vec<_>>(),
+                human_bytes(r.live_bytes)
+            );
+        }
+        "repro" => {
+            let man = Manifest::load(&artifacts)?;
+            let target = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("repro needs a target\n{USAGE}"))?
+                .clone();
+            let o = ReproOptions {
+                steps: args.u64_or("steps", 150)?,
+                out_dir: args.str_or("out", "results"),
+                cfg_name: args.str_or("config", "llama-tiny"),
+                seed: args.u64_or("seed", 0)?,
+                quiet: !args.bool("verbose"),
+            };
+            args.reject_unknown()?;
+            match target.as_str() {
+                "table1" => repro::table1(&man, &o).map(|_| ())?,
+                "table2" => repro::table2(&man, &o).map(|_| ())?,
+                "table3" => repro::table3(&man, &o).map(|_| ())?,
+                "table4" => repro::table4(&man, &o).map(|_| ())?,
+                "fig2" => repro::fig2(&man, &o).map(|_| ())?,
+                "fig3" => repro::fig3(&man, &o).map(|_| ())?,
+                "fig5" => repro::fig5(&man, &o).map(|_| ())?,
+                "fig6" => repro::fig6(&man, &o).map(|_| ())?,
+                "fig7" => repro::fig7(&man, &o).map(|_| ())?,
+                "all" => repro::all(&man, &o).map(|_| ())?,
+                other => return Err(anyhow!("unknown repro target {other}\n{USAGE}")),
+            }
+        }
+        "memory" => {
+            let config = args.str_or("config", "llama-7b");
+            let method = args.flag("method").map(|s| s.to_string());
+            let tokens = args.usize_or("tokens", 2048)?;
+            args.reject_unknown()?;
+            let cfg = model::get_config(&config)
+                .ok_or_else(|| anyhow!("unknown config {config}"))?;
+            let methods: Vec<Method> = match method {
+                Some(m) => vec![parse_method(&m)?],
+                None => Method::ALL.to_vec(),
+            };
+            println!("{config}: {} params, rank {}\n", cfg.n_params(), cfg.rank);
+            for m in methods {
+                let b = memory::breakdown(&cfg, m, tokens);
+                println!(
+                    "{:<14} weights {:>9} | adapters {:>9} | m {:>9} | v {:>9} | proj {:>9} | grad {:>9} | act {:>9} | total {:>9}",
+                    m.to_string(),
+                    human_bytes(b.weights),
+                    human_bytes(b.adapters),
+                    human_bytes(b.optim_m),
+                    human_bytes(b.optim_v),
+                    human_bytes(b.projection),
+                    human_bytes(b.gradients),
+                    human_bytes(b.activations),
+                    human_bytes(b.total()),
+                );
+            }
+        }
+        "inspect" => {
+            args.reject_unknown()?;
+            let man = Manifest::load(&artifacts)?;
+            println!(
+                "manifest: block={} scale={} betas=({}, {}) batch={}",
+                man.block, man.galore_scale, man.beta1, man.beta2, man.batch
+            );
+            for (name, c) in &man.configs {
+                println!(
+                    "config {name}: dim={} layers={} vocab={} rank={} | {} model artifacts",
+                    c.model.dim,
+                    c.model.n_layers,
+                    c.model.vocab_size,
+                    c.model.rank,
+                    c.artifacts.len()
+                );
+                for (an, a) in &c.artifacts {
+                    println!(
+                        "  {an:<16} {:>3} operands -> {:>2} results ({})",
+                        a.operands.len(),
+                        a.results.len(),
+                        a.path.file_name().unwrap().to_string_lossy()
+                    );
+                }
+            }
+            println!("{} update artifacts", man.updates.len());
+        }
+        other => return Err(anyhow!("unknown command {other}\n{USAGE}")),
+    }
+    Ok(())
+}

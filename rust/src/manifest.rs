@@ -1,0 +1,275 @@
+//! Typed view of `artifacts/manifest.json` — the AOT ABI contract.
+//!
+//! The manifest is written by `python/compile/aot.py` and is the single
+//! source of truth for operand/result names, dtypes and shapes of every HLO
+//! artifact.  The rust side trusts it (and cross-checks it against
+//! `crate::model` expectations in integration tests).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::jsonx::Json;
+use crate::model::ModelConfig;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    U8,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i8" => DType::I8,
+            "u8" => DType::U8,
+            "i32" => DType::I32,
+            other => return Err(anyhow!("unknown dtype {other}")),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub operands: Vec<TensorSpec>,
+    pub results: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConfigEntry {
+    pub model: ModelConfig,
+    pub fp_params: Vec<(String, Vec<usize>)>,
+    pub linear_params: Vec<(String, Vec<usize>)>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub init_path: PathBuf,
+    pub init_numel: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub block: usize,
+    pub galore_scale: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub lora_alpha: f32,
+    pub batch: usize,
+    pub configs: BTreeMap<String, ConfigEntry>,
+    pub updates: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("spec list not an array"))?;
+    arr.iter()
+        .map(|e| {
+            Ok(TensorSpec {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("spec missing name"))?
+                    .to_string(),
+                dtype: DType::parse(
+                    e.get("dtype")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("spec missing dtype"))?,
+                )?,
+                shape: e
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("spec missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect()
+}
+
+fn parse_artifact(name: &str, j: &Json, dir: &Path) -> Result<ArtifactSpec> {
+    Ok(ArtifactSpec {
+        name: name.to_string(),
+        path: dir.join(
+            j.get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing path"))?,
+        ),
+        operands: parse_specs(
+            j.get("operands").ok_or_else(|| anyhow!("{name}: no operands"))?,
+        )?,
+        results: parse_specs(
+            j.get("results").ok_or_else(|| anyhow!("{name}: no results"))?,
+        )?,
+    })
+}
+
+fn parse_named_shapes(j: &Json) -> Result<Vec<(String, Vec<usize>)>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("param list not an array"))?
+        .iter()
+        .map(|e| {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("param missing name"))?
+                .to_string();
+            let shape = e
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("param missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<usize>>>()?;
+            Ok((name, shape))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let raw = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&raw).map_err(|e| anyhow!("{e}"))?;
+
+        let gf = |k: &str| -> Result<f64> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j
+            .get("configs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing configs"))?
+        {
+            let gi = |k: &str| -> Result<usize> {
+                cj.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("config {name} missing {k}"))
+            };
+            let model = ModelConfig {
+                name: name.clone(),
+                vocab_size: gi("vocab_size")?,
+                dim: gi("dim")?,
+                n_layers: gi("n_layers")?,
+                n_heads: gi("n_heads")?,
+                ffn_dim: gi("ffn_dim")?,
+                max_seq_len: gi("max_seq_len")?,
+                rank: gi("rank")?,
+                tied_head: true, // all trainable (artifact-bearing) configs tie the LM head
+            };
+            let mut artifacts = BTreeMap::new();
+            for (an, aj) in cj
+                .get("artifacts")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow!("config {name}: no artifacts"))?
+            {
+                artifacts.insert(an.clone(), parse_artifact(an, aj, &dir)?);
+            }
+            let init = cj.get("init").ok_or_else(|| anyhow!("config {name}: no init"))?;
+            configs.insert(
+                name.clone(),
+                ConfigEntry {
+                    model,
+                    fp_params: parse_named_shapes(
+                        cj.get("fp_params").ok_or_else(|| anyhow!("no fp_params"))?,
+                    )?,
+                    linear_params: parse_named_shapes(
+                        cj.get("linear_params").ok_or_else(|| anyhow!("no linear_params"))?,
+                    )?,
+                    artifacts,
+                    init_path: dir.join(
+                        init.get("path")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("init missing path"))?,
+                    ),
+                    init_numel: init
+                        .get("numel")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("init missing numel"))?,
+                },
+            );
+        }
+
+        let mut updates = BTreeMap::new();
+        for (an, aj) in j
+            .get("updates")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing updates"))?
+        {
+            updates.insert(an.clone(), parse_artifact(an, aj, &dir)?);
+        }
+
+        Ok(Manifest {
+            dir,
+            block: gf("block")? as usize,
+            galore_scale: gf("galore_scale")? as f32,
+            beta1: gf("beta1")? as f32,
+            beta2: gf("beta2")? as f32,
+            eps: gf("eps")? as f32,
+            lora_alpha: gf("lora_alpha")? as f32,
+            batch: gf("batch")? as usize,
+            configs,
+            updates,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigEntry> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("config {name} not in manifest (have: {:?})",
+                self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn update(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.updates
+            .get(name)
+            .ok_or_else(|| anyhow!("update artifact {name} not in manifest"))
+    }
+
+    /// Load the flat f32 init checkpoint for a config.
+    pub fn load_init(&self, cfg: &str) -> Result<Vec<f32>> {
+        let entry = self.config(cfg)?;
+        let bytes = std::fs::read(&entry.init_path)
+            .with_context(|| format!("reading {}", entry.init_path.display()))?;
+        if bytes.len() != entry.init_numel * 4 {
+            return Err(anyhow!(
+                "init checkpoint size mismatch: {} bytes, expected {}",
+                bytes.len(),
+                entry.init_numel * 4
+            ));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}

@@ -1,0 +1,226 @@
+//! Model topology metadata — the rust mirror of `python/compile/configs.py`.
+//!
+//! The coordinator never re-derives tensor shapes from the HLO (the manifest
+//! is authoritative at runtime); this module exists so tests can cross-check
+//! the manifest against an independent statement of the ABI, and so the
+//! memory model can be evaluated at paper scales without artifacts.
+
+/// One trainable tensor in the flattening ABI.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// GaLore-eligible 2-D linear weight (projected + quantized in Q-GaLore).
+    pub galore_eligible: bool,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn_dim: usize,
+    pub max_seq_len: usize,
+    pub rank: usize,
+    /// tiny trainable configs tie the LM head to the embedding; the paper's
+    /// scales have a separate head (affects only the memory model)
+    pub tied_head: bool,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    /// fp (non-eligible) params in ABI order: embedding, per-layer norms,
+    /// final norm.  Matches `configs.ModelConfig.fp_shapes`.
+    pub fn fp_params(&self) -> Vec<ParamSpec> {
+        let mut out = vec![ParamSpec {
+            name: "tok_embedding".into(),
+            shape: vec![self.vocab_size, self.dim],
+            galore_eligible: false,
+        }];
+        for i in 0..self.n_layers {
+            for suffix in ["attn_norm", "mlp_norm"] {
+                out.push(ParamSpec {
+                    name: format!("layers.{i}.{suffix}"),
+                    shape: vec![self.dim],
+                    galore_eligible: false,
+                });
+            }
+        }
+        out.push(ParamSpec {
+            name: "final_norm".into(),
+            shape: vec![self.dim],
+            galore_eligible: false,
+        });
+        if !self.tied_head {
+            out.push(ParamSpec {
+                name: "lm_head".into(),
+                shape: vec![self.vocab_size, self.dim],
+                galore_eligible: false,
+            });
+        }
+        out
+    }
+
+    /// GaLore-eligible linear weights in ABI order.  Matches
+    /// `configs.ModelConfig.linear_shapes` (shape = [out, in]).
+    pub fn linear_params(&self) -> Vec<ParamSpec> {
+        let mut out = Vec::new();
+        for i in 0..self.n_layers {
+            let p = format!("layers.{i}.");
+            let mk = |name: String, o: usize, inn: usize| ParamSpec {
+                name,
+                shape: vec![o, inn],
+                galore_eligible: true,
+            };
+            out.push(mk(format!("{p}attn.wq"), self.dim, self.dim));
+            out.push(mk(format!("{p}attn.wk"), self.dim, self.dim));
+            out.push(mk(format!("{p}attn.wv"), self.dim, self.dim));
+            out.push(mk(format!("{p}attn.wo"), self.dim, self.dim));
+            out.push(mk(format!("{p}mlp.w1"), self.ffn_dim, self.dim));
+            out.push(mk(format!("{p}mlp.w3"), self.ffn_dim, self.dim));
+            out.push(mk(format!("{p}mlp.w2"), self.dim, self.ffn_dim));
+        }
+        out
+    }
+
+    pub fn all_params(&self) -> Vec<ParamSpec> {
+        let mut v = self.fp_params();
+        v.extend(self.linear_params());
+        v
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.all_params().iter().map(|p| p.numel()).sum()
+    }
+
+    /// Distinct (out, in) linear shapes, in first-appearance order.
+    pub fn unique_linear_dims(&self) -> Vec<(usize, usize)> {
+        let mut seen = Vec::new();
+        for p in self.linear_params() {
+            let d = (p.shape[0], p.shape[1]);
+            if !seen.contains(&d) {
+                seen.push(d);
+            }
+        }
+        seen
+    }
+}
+
+/// Paper-scale configs (memory model only — matches configs.PAPER_CONFIGS).
+pub fn paper_config(name: &str) -> Option<ModelConfig> {
+    let c = |name: &str, vocab, dim, layers, heads, ffn, seq, rank| ModelConfig {
+        name: name.into(),
+        vocab_size: vocab,
+        dim,
+        n_layers: layers,
+        n_heads: heads,
+        ffn_dim: ffn,
+        max_seq_len: seq,
+        rank,
+        tied_head: false,
+    };
+    match name {
+        "llama-60m" => Some(c("llama-60m", 32000, 512, 8, 8, 1376, 1024, 128)),
+        "llama-130m" => Some(c("llama-130m", 32000, 768, 12, 12, 2048, 1024, 256)),
+        "llama-350m" => Some(c("llama-350m", 32000, 1024, 24, 16, 2736, 1024, 256)),
+        "llama-1b" => Some(c("llama-1b", 32000, 2048, 24, 32, 5461, 1024, 512)),
+        "llama-7b" => Some(c("llama-7b", 32000, 4096, 32, 32, 11008, 2048, 1024)),
+        // fine-tuning targets (Tables 3–4 memory columns)
+        "llama3-8b" => Some(c("llama3-8b", 128256, 4096, 32, 32, 14336, 8192, 1024)),
+        "gemma-7b" => Some(c("gemma-7b", 256000, 3072, 28, 16, 24576, 8192, 768)),
+        "mistral-7b" => Some(c("mistral-7b", 32000, 4096, 32, 32, 14336, 8192, 1024)),
+        "roberta-base" => Some(c("roberta-base", 50265, 768, 12, 12, 3072, 512, 192)),
+        _ => None,
+    }
+}
+
+/// Trainable tiny configs (must match configs.CONFIGS in python).
+pub fn tiny_config(name: &str) -> Option<ModelConfig> {
+    let c = |name: &str, vocab, dim, layers, heads, ffn, seq| ModelConfig {
+        name: name.into(),
+        vocab_size: vocab,
+        dim,
+        n_layers: layers,
+        n_heads: heads,
+        ffn_dim: ffn,
+        max_seq_len: seq,
+        rank: (dim / 4).max(4),
+        tied_head: true,
+    };
+    match name {
+        "llama-micro" => Some(c("llama-micro", 512, 32, 1, 2, 64, 32)),
+        "llama-tiny" => Some(c("llama-tiny", 512, 64, 2, 4, 128, 64)),
+        "llama-nano" => Some(c("llama-nano", 1024, 128, 2, 4, 256, 64)),
+        "llama-small" => Some(c("llama-small", 2048, 256, 4, 8, 512, 128)),
+        _ => None,
+    }
+}
+
+pub fn get_config(name: &str) -> Option<ModelConfig> {
+    tiny_config(name).or_else(|| paper_config(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_scale() {
+        let tiny = tiny_config("llama-tiny").unwrap();
+        let n = tiny.n_params();
+        // emb 512*64 + 2*(2 norms)*64 + final 64 + per layer (4*64*64 + 3 mlp)
+        assert!(n > 100_000 && n < 500_000, "{n}");
+        let b7 = paper_config("llama-7b").unwrap();
+        let n7 = b7.n_params();
+        assert!(
+            (6.0e9..8.0e9).contains(&(n7 as f64)),
+            "7B param count {n7}"
+        );
+    }
+
+    #[test]
+    fn paper_60m_is_60m() {
+        let c = paper_config("llama-60m").unwrap();
+        let n = c.n_params() as f64;
+        assert!((40.0e6..80.0e6).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn linear_abi_order() {
+        let c = tiny_config("llama-tiny").unwrap();
+        let lins = c.linear_params();
+        assert_eq!(lins.len(), 7 * c.n_layers);
+        assert_eq!(lins[0].name, "layers.0.attn.wq");
+        assert_eq!(lins[6].name, "layers.0.mlp.w2");
+        assert_eq!(lins[6].shape, vec![64, 128]);
+    }
+
+    #[test]
+    fn unique_dims_dedup() {
+        let c = tiny_config("llama-tiny").unwrap();
+        assert_eq!(
+            c.unique_linear_dims(),
+            vec![(64, 64), (128, 64), (64, 128)]
+        );
+    }
+
+    #[test]
+    fn all_params_fp_first() {
+        let c = tiny_config("llama-micro").unwrap();
+        let all = c.all_params();
+        assert_eq!(all[0].name, "tok_embedding");
+        assert!(!all[0].galore_eligible);
+        assert!(all.last().unwrap().galore_eligible);
+    }
+}

@@ -1,0 +1,97 @@
+//! Construct an optimizer for any [`Method`] from the manifest + init
+//! checkpoint.
+
+use anyhow::Result;
+
+use crate::manifest::Manifest;
+use crate::scheduler::SchedulerConfig;
+
+use super::full::{Adam8bit, FullAdam};
+use super::galore::{Galore, GaloreKind};
+use super::lora::Lora;
+use super::lowrank::LowRank;
+use super::{Method, Optimizer};
+
+/// Knobs that vary per experiment (ablations).
+#[derive(Clone, Copy, Debug)]
+pub struct BuildOptions {
+    pub seed: u64,
+    /// subspace scheduler config for the galore family
+    pub sched: SchedulerConfig,
+    /// projection quantization bits for Q-GaLore (Figure 3 ablation)
+    pub proj_bits: u32,
+    /// stochastic rounding for Q-GaLore weight requantization (Figure 6
+    /// ablation; false = round-to-nearest)
+    pub use_sr: bool,
+    /// ReLoRA merge period (steps); 0 disables merging
+    pub relora_merge_every: u64,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        BuildOptions {
+            seed: 0,
+            sched: SchedulerConfig::default(),
+            proj_bits: 4,
+            use_sr: true,
+            relora_merge_every: 0,
+        }
+    }
+}
+
+/// Build from the manifest's init checkpoint (pre-training from scratch).
+pub fn build(
+    method: Method,
+    man: &Manifest,
+    cfg_name: &str,
+    opts: BuildOptions,
+) -> Result<Box<dyn Optimizer>> {
+    let init = man.load_init(cfg_name)?;
+    build_with_init(method, man, cfg_name, &init, opts)
+}
+
+/// Build from an explicit flat checkpoint (fine-tuning a pretrained model).
+pub fn build_with_init(
+    method: Method,
+    man: &Manifest,
+    cfg_name: &str,
+    init: &[f32],
+    opts: BuildOptions,
+) -> Result<Box<dyn Optimizer>> {
+    let entry = man.config(cfg_name)?;
+    let init = init.to_vec();
+    Ok(match method {
+        Method::Full => Box::new(FullAdam::new(entry, &init)),
+        Method::Adam8bit => Box::new(Adam8bit::new(entry, &init)),
+        Method::LowRank => Box::new(LowRank::new(entry, &init, opts.seed)),
+        Method::LoRa | Method::ReLoRa | Method::QLoRa => {
+            let mut l = Lora::new(method, entry, &init, man.lora_alpha, opts.seed);
+            if method == Method::ReLoRa {
+                l.merge_every = opts.relora_merge_every;
+            }
+            Box::new(l)
+        }
+        Method::GaLore => Box::new(Galore::new(
+            GaloreKind::Fp,
+            entry,
+            &init,
+            // plain GaLore uses the fixed schedule unless the caller
+            // explicitly enables adaptivity (Figure 7 ablation)
+            SchedulerConfig { adaptive: false, ..opts.sched },
+            opts.seed,
+        )),
+        Method::GaLore8bit => Box::new(Galore::new(
+            GaloreKind::Bit8,
+            entry,
+            &init,
+            SchedulerConfig { adaptive: false, ..opts.sched },
+            opts.seed,
+        )),
+        Method::QGaLore => {
+            let mut g = Galore::new(GaloreKind::Quantized, entry, &init, opts.sched, opts.seed);
+            g.proj_bits = opts.proj_bits;
+            g.use_sr = opts.use_sr;
+            Box::new(g)
+        }
+    })
+}

@@ -1,0 +1,160 @@
+//! Baselines "Full" (fp Adam) and "8-bit Adam": full-rank training, no
+//! projection, weights in full precision.
+
+use anyhow::Result;
+
+use crate::manifest::ConfigEntry;
+use crate::quant::Adam8State;
+use crate::runtime::HostTensor;
+
+use super::{
+    run_adam_8bit, run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer,
+    StepCtx,
+};
+
+pub struct FullAdam {
+    pub fp: Vec<FpTensor>,
+    pub lin: Vec<FpTensor>,
+    states: Vec<AdamFp>, // fp tensors then linear tensors
+}
+
+impl FullAdam {
+    pub fn new(entry: &ConfigEntry, init: &[f32]) -> Self {
+        let (fp, lin) = split_init(init, &entry.fp_params, &entry.linear_params);
+        let states = fp
+            .iter()
+            .chain(lin.iter())
+            .map(|t| AdamFp::zeros(t.numel()))
+            .collect();
+        FullAdam { fp, lin, states }
+    }
+}
+
+impl Optimizer for FullAdam {
+    fn method(&self) -> Method {
+        Method::Full
+    }
+
+    fn fwd_artifact(&self) -> &'static str {
+        "fwd_bwd_fp"
+    }
+
+    fn eval_artifact(&self) -> &'static str {
+        "eval_fwd_fp"
+    }
+
+    fn forward_operands(&self) -> Vec<HostTensor> {
+        self.fp
+            .iter()
+            .chain(self.lin.iter())
+            .map(|t| HostTensor::F32(t.data.clone()))
+            .collect()
+    }
+
+    fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()> {
+        let n_fp = self.fp.len();
+        assert_eq!(grads.len(), n_fp + self.lin.len());
+        for (i, g) in grads.into_iter().enumerate() {
+            let g = g.into_f32()?;
+            let (w, st) = if i < n_fp {
+                (&mut self.fp[i], &mut self.states[i])
+            } else {
+                (&mut self.lin[i - n_fp], &mut self.states[i])
+            };
+            run_adam_fp(ctx, w, st, &g)?;
+        }
+        Ok(())
+    }
+
+    fn live_bytes(&self) -> u64 {
+        let w: u64 = self
+            .fp
+            .iter()
+            .chain(self.lin.iter())
+            .map(|t| t.numel() as u64 * 4)
+            .sum();
+        let s: u64 = self.states.iter().map(|s| s.bytes()).sum();
+        w + s
+    }
+
+    fn export_flat(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for t in self.fp.iter().chain(self.lin.iter()) {
+            out.extend_from_slice(&t.data);
+        }
+        Ok(out)
+    }
+}
+
+pub struct Adam8bit {
+    pub fp: Vec<FpTensor>,
+    pub lin: Vec<FpTensor>,
+    states: Vec<Adam8State>,
+}
+
+impl Adam8bit {
+    pub fn new(entry: &ConfigEntry, init: &[f32]) -> Self {
+        let (fp, lin) = split_init(init, &entry.fp_params, &entry.linear_params);
+        let states = fp
+            .iter()
+            .chain(lin.iter())
+            .map(|t| Adam8State::zeros(t.numel()))
+            .collect();
+        Adam8bit { fp, lin, states }
+    }
+}
+
+impl Optimizer for Adam8bit {
+    fn method(&self) -> Method {
+        Method::Adam8bit
+    }
+
+    fn fwd_artifact(&self) -> &'static str {
+        "fwd_bwd_fp"
+    }
+
+    fn eval_artifact(&self) -> &'static str {
+        "eval_fwd_fp"
+    }
+
+    fn forward_operands(&self) -> Vec<HostTensor> {
+        self.fp
+            .iter()
+            .chain(self.lin.iter())
+            .map(|t| HostTensor::F32(t.data.clone()))
+            .collect()
+    }
+
+    fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()> {
+        let n_fp = self.fp.len();
+        for (i, g) in grads.into_iter().enumerate() {
+            let g = g.into_f32()?;
+            let (w, st) = if i < n_fp {
+                (&mut self.fp[i], &mut self.states[i])
+            } else {
+                (&mut self.lin[i - n_fp], &mut self.states[i])
+            };
+            run_adam_8bit(ctx, w, st, &g)?;
+        }
+        Ok(())
+    }
+
+    fn live_bytes(&self) -> u64 {
+        let w: u64 = self
+            .fp
+            .iter()
+            .chain(self.lin.iter())
+            .map(|t| t.numel() as u64 * 4)
+            .sum();
+        let s: u64 = self.states.iter().map(|s| s.storage_bytes() as u64).sum();
+        w + s
+    }
+
+    fn export_flat(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for t in self.fp.iter().chain(self.lin.iter()) {
+            out.extend_from_slice(&t.data);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,501 @@
+//! The GaLore family: GaLore (fp), 8-bit GaLore, and Q-GaLore.
+//!
+//! All three share the pipeline
+//!
+//!   grad (m,n) --P^T--> low-rank state (r,n) --Adam--> update --P--> dW
+//!
+//! and differ only in storage formats (paper Figure 1):
+//!
+//! | variant     | weights | projection | Adam states |
+//! |-------------|---------|------------|-------------|
+//! | GaLore      | fp      | fp         | fp          |
+//! | 8-bit GaLore| fp      | fp         | blockwise INT8 |
+//! | Q-GaLore    | INT8 + stochastic rounding | packed INT4 | blockwise INT8 |
+//!
+//! The subspace itself is recomputed on the *control path* by
+//! `linalg::left_subspace` under the lazy layer-adaptive scheduler
+//! (`crate::scheduler`); the per-step update runs through the fused
+//! `*_update_{m}x{n}_r{r}` HLO artifacts built from the L1 Pallas kernels.
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::{left_subspace, subspace_overlap, Mat};
+use crate::manifest::ConfigEntry;
+use crate::quant::{self, Adam8State, Quant4Tensor, QuantTensor};
+use crate::runtime::HostTensor;
+use crate::scheduler::{SchedulerConfig, SubspaceScheduler};
+use crate::util::Pcg32;
+
+use super::{
+    run_adam_8bit, run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer,
+    StepCtx,
+};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GaloreKind {
+    /// paper "GaLore": fp everything
+    Fp,
+    /// paper "8-bit GaLore": 8-bit Adam states
+    Bit8,
+    /// paper "Q-GaLore": INT8 weights + INT4 projection + 8-bit Adam
+    Quantized,
+}
+
+/// How many power-iteration steps `left_subspace` uses at refresh time.
+const SUBSPACE_ITERS: usize = 2;
+
+/// Gradients are accumulated over this many steps leading into each
+/// refresh, so the subspace is computed from a lower-variance estimate
+/// (the paper's large-batch gradients are naturally low-variance; our tiny
+/// testbed batches are not).  Control-path-only buffers: at most the layers
+/// within `ACCUM_WINDOW` of their refresh hold one f32 gradient copy.
+const ACCUM_WINDOW: u64 = 8;
+
+struct Layer {
+    name: String,
+    m: usize,
+    n: usize,
+    // weight storage (exactly one is Some, per kind)
+    w_fp: Option<FpTensor>,
+    w_q: Option<QuantTensor>,
+    // projection storage
+    p_fp: Option<Mat>,
+    p_q4: Option<Quant4Tensor>,
+    // low-rank Adam state storage
+    st_fp: Option<AdamFp>,
+    st_8: Option<Adam8State>,
+}
+
+impl Layer {
+    /// Current projection as an f32 matrix (dequantized for Q-GaLore),
+    /// None before the first refresh.
+    fn projection_f32(&self, rank: usize) -> Option<Mat> {
+        if let Some(p) = &self.p_fp {
+            return Some(p.clone());
+        }
+        self.p_q4
+            .as_ref()
+            .map(|q| Mat::from_vec(self.m, rank, quant::dequantize4(q)))
+    }
+}
+
+pub struct Galore {
+    kind: GaloreKind,
+    rank: usize,
+    /// whether the lazy adaptive scheduler is enabled (Q-GaLore: yes;
+    /// plain/8-bit GaLore baselines: fixed interval).  Exposed for the
+    /// Figure 7 ablation.
+    pub fp: Vec<FpTensor>,
+    fp_states_fp: Vec<AdamFp>,
+    fp_states_8: Vec<Adam8State>,
+    layers: Vec<Layer>,
+    pub sched: SubspaceScheduler,
+    /// per-layer gradient accumulator feeding the next subspace refresh
+    grad_accum: Vec<Option<(Vec<f32>, u32)>>,
+    sim_history: Vec<Vec<f32>>,
+    rng: Pcg32,
+    sr_seed: i32,
+    /// projection quantization bits for the Figure 3 ablation (Q-GaLore
+    /// default 4; set 8/16 to widen, 2 to stress).  16 = keep fp.
+    pub proj_bits: u32,
+    /// stochastic rounding (Q-GaLore default) vs round-to-nearest (Fig. 6)
+    pub use_sr: bool,
+}
+
+impl Galore {
+    pub fn new(
+        kind: GaloreKind,
+        entry: &ConfigEntry,
+        init: &[f32],
+        sched_cfg: SchedulerConfig,
+        seed: u64,
+    ) -> Self {
+        let (fp, lin) = split_init(init, &entry.fp_params, &entry.linear_params);
+        let rank = entry.model.rank;
+        let mut layers = Vec::new();
+        for t in lin {
+            let (m, n) = (t.shape[0], t.shape[1]);
+            let state_numel = rank * n;
+            let layer = match kind {
+                GaloreKind::Fp => Layer {
+                    name: t.name.clone(),
+                    m,
+                    n,
+                    w_fp: Some(t),
+                    w_q: None,
+                    p_fp: None,
+                    p_q4: None,
+                    st_fp: Some(AdamFp::zeros(state_numel)),
+                    st_8: None,
+                },
+                GaloreKind::Bit8 => Layer {
+                    name: t.name.clone(),
+                    m,
+                    n,
+                    w_fp: Some(t),
+                    w_q: None,
+                    p_fp: None,
+                    p_q4: None,
+                    st_fp: None,
+                    st_8: Some(Adam8State::zeros(state_numel)),
+                },
+                GaloreKind::Quantized => Layer {
+                    name: t.name.clone(),
+                    m,
+                    n,
+                    w_fp: None,
+                    w_q: Some(quant::quantize(&t.data, 8)),
+                    p_fp: None,
+                    p_q4: None,
+                    st_fp: None,
+                    st_8: Some(Adam8State::zeros(state_numel)),
+                },
+            };
+            layers.push(layer);
+        }
+        let (fp_states_fp, fp_states_8) = match kind {
+            GaloreKind::Fp => (
+                fp.iter().map(|t| AdamFp::zeros(t.numel())).collect(),
+                Vec::new(),
+            ),
+            _ => (
+                Vec::new(),
+                fp.iter().map(|t| Adam8State::zeros(t.numel())).collect(),
+            ),
+        };
+        let names: Vec<String> = layers.iter().map(|l| l.name.clone()).collect();
+        let n_layers = layers.len();
+        Galore {
+            kind,
+            rank,
+            fp,
+            fp_states_fp,
+            fp_states_8,
+            layers,
+            sched: SubspaceScheduler::new(&names, sched_cfg),
+            grad_accum: vec![None; n_layers],
+            sim_history: vec![Vec::new(); n_layers],
+            rng: Pcg32::new(seed, 0x5eed),
+            sr_seed: 1,
+            proj_bits: if kind == GaloreKind::Quantized { 4 } else { 16 },
+            use_sr: true,
+        }
+    }
+
+    fn update_artifact(&self, m: usize, n: usize) -> String {
+        let prefix = match self.kind {
+            GaloreKind::Fp => "galore_update",
+            GaloreKind::Bit8 => "galore8bit_update",
+            GaloreKind::Quantized if self.use_sr => "qgalore_update",
+            GaloreKind::Quantized => "qgalore_rtn_update",
+        };
+        format!("{prefix}_{m}x{n}_r{}", self.rank)
+    }
+
+    /// Refresh a layer's subspace from its current gradient; returns the
+    /// similarity to the outgoing projection (None on first refresh).
+    ///
+    /// Similarity is the rotation-invariant subspace overlap
+    /// ||P_old^T P_new||_F^2 / r in [0, 1] — the quantity the paper's
+    /// "cosine similarity between adjacent projection matrices" measures
+    /// modulo the within-subspace rotation that randomized solvers leave
+    /// free (column-wise cosine would under-read convergence for the nearly
+    /// degenerate trailing singular directions).
+    fn refresh_subspace(&mut self, idx: usize, grad: &Mat) -> Option<f32> {
+        let new_p = left_subspace(grad, self.rank, SUBSPACE_ITERS, &mut self.rng);
+        let old = self.layers[idx].projection_f32(self.rank);
+        let sim = old.as_ref().map(|o| subspace_overlap(o, &new_p));
+        let layer = &mut self.layers[idx];
+        match self.kind {
+            GaloreKind::Fp | GaloreKind::Bit8 => layer.p_fp = Some(new_p),
+            GaloreKind::Quantized => {
+                if self.proj_bits >= 16 {
+                    layer.p_fp = Some(new_p);
+                } else if self.proj_bits == 4 {
+                    layer.p_q4 = Some(quant::quantize4(&new_p.data));
+                } else {
+                    // Figure 3 ablation: other bit widths stored via the
+                    // generic QuantTensor path, dequantized on use.
+                    let q = quant::quantize(&new_p.data, self.proj_bits);
+                    layer.p_fp = Some(Mat::from_vec(layer.m, self.rank, quant::dequantize(&q)));
+                }
+            }
+        }
+        if let Some(s) = sim {
+            self.sim_history[idx].push(s);
+        }
+        sim
+    }
+
+    fn update_layer(&mut self, ctx: &mut StepCtx, idx: usize, g: Vec<f32>) -> Result<()> {
+        let (m, n) = (self.layers[idx].m, self.layers[idx].n);
+        // 1. lazy subspace refresh (control path): accumulate gradients over
+        //    the ACCUM_WINDOW steps leading into a refresh, then compute the
+        //    new basis from the low-variance mean gradient
+        if self.sched.steps_until_due(idx, ctx.step) < ACCUM_WINDOW {
+            match &mut self.grad_accum[idx] {
+                Some((acc, count)) => {
+                    for (a, x) in acc.iter_mut().zip(&g) {
+                        *a += x;
+                    }
+                    *count += 1;
+                }
+                slot => *slot = Some((g.clone(), 1)),
+            }
+        }
+        if self.sched.due(idx, ctx.step) {
+            let gm = match self.grad_accum[idx].take() {
+                Some((acc, count)) => Mat::from_vec(
+                    m,
+                    n,
+                    acc.into_iter().map(|x| x / count as f32).collect(),
+                ),
+                None => Mat::from_vec(m, n, g.clone()),
+            };
+            let sim = self.refresh_subspace(idx, &gm);
+            self.sched.record_refresh(idx, ctx.step, sim);
+        }
+        // 2. fused update step (hot path, HLO artifact)
+        let art = ctx.man.update(&self.update_artifact(m, n))?.clone();
+        let c = ctx.corrections();
+        let lr = ctx.lr_operand();
+        let layer = &mut self.layers[idx];
+        match self.kind {
+            GaloreKind::Fp => {
+                let p = layer.p_fp.as_ref().expect("refreshed above");
+                let st = layer.st_fp.as_mut().unwrap();
+                let w = layer.w_fp.as_mut().unwrap();
+                let outs = ctx.rt.execute(
+                    &art,
+                    &[
+                        HostTensor::F32(g),
+                        HostTensor::F32(p.data.clone()),
+                        HostTensor::F32(std::mem::take(&mut st.m)),
+                        HostTensor::F32(std::mem::take(&mut st.v)),
+                        HostTensor::F32(std::mem::take(&mut w.data)),
+                        c,
+                        lr,
+                    ],
+                )?;
+                let mut it = outs.into_iter();
+                w.data = it.next().unwrap().into_f32()?;
+                st.m = it.next().unwrap().into_f32()?;
+                st.v = it.next().unwrap().into_f32()?;
+            }
+            GaloreKind::Bit8 => {
+                let p = layer.p_fp.as_ref().expect("refreshed above");
+                let st = layer.st_8.as_mut().unwrap();
+                let w = layer.w_fp.as_mut().unwrap();
+                let outs = ctx.rt.execute(
+                    &art,
+                    &[
+                        HostTensor::F32(g),
+                        HostTensor::F32(p.data.clone()),
+                        HostTensor::I8(std::mem::take(&mut st.mq)),
+                        HostTensor::F32(std::mem::take(&mut st.ms)),
+                        HostTensor::U8(std::mem::take(&mut st.vq)),
+                        HostTensor::F32(std::mem::take(&mut st.vs)),
+                        HostTensor::F32(std::mem::take(&mut w.data)),
+                        c,
+                        lr,
+                    ],
+                )?;
+                let mut it = outs.into_iter();
+                w.data = it.next().unwrap().into_f32()?;
+                st.mq = match it.next().unwrap() {
+                    HostTensor::I8(v) => v,
+                    t => return Err(anyhow!("mq dtype {:?}", t.dtype())),
+                };
+                st.ms = it.next().unwrap().into_f32()?;
+                st.vq = match it.next().unwrap() {
+                    HostTensor::U8(v) => v,
+                    t => return Err(anyhow!("vq dtype {:?}", t.dtype())),
+                };
+                st.vs = it.next().unwrap().into_f32()?;
+            }
+            GaloreKind::Quantized => {
+                // Ablation bit-widths store the projection as f32; the INT4
+                // artifact path requires packed nibbles, so re-pack on the
+                // fly for those (hot path stays INT4 in the default config).
+                let (p4, ps, pz) = match (&layer.p_q4, &layer.p_fp) {
+                    (Some(q), _) => (q.packed.clone(), q.scale.clone(), q.zero.clone()),
+                    (None, Some(pf)) => {
+                        let q = quant::quantize4(&pf.data);
+                        (q.packed, q.scale, q.zero)
+                    }
+                    _ => return Err(anyhow!("layer {} has no projection", layer.name)),
+                };
+                let st = layer.st_8.as_mut().unwrap();
+                let w = layer.w_q.as_mut().unwrap();
+                let mut ops = vec![
+                    HostTensor::F32(g),
+                    HostTensor::U8(p4),
+                    HostTensor::F32(ps),
+                    HostTensor::F32(pz),
+                    HostTensor::I8(std::mem::take(&mut st.mq)),
+                    HostTensor::F32(std::mem::take(&mut st.ms)),
+                    HostTensor::U8(std::mem::take(&mut st.vq)),
+                    HostTensor::F32(std::mem::take(&mut st.vs)),
+                    HostTensor::I8(std::mem::take(&mut w.q)),
+                    HostTensor::F32(std::mem::take(&mut w.scale)),
+                    HostTensor::F32(std::mem::take(&mut w.zero)),
+                    c,
+                    lr,
+                ];
+                if self.use_sr {
+                    // SR noise is generated host-side (counter-based PCG
+                    // keeps runs replayable; generating it in-graph with
+                    // threefry cost ~1.7x the whole GaLore update on this
+                    // backend — EXPERIMENTS.md §Perf); the RTN ablation
+                    // artifact takes no noise operand.
+                    self.sr_seed = self.sr_seed.wrapping_add(1);
+                    let mut noise_rng = Pcg32::new(self.sr_seed as u64, 0x5e_ed);
+                    ops.push(HostTensor::F32(
+                        (0..m * n).map(|_| noise_rng.next_f32()).collect(),
+                    ));
+                }
+                let outs = ctx.rt.execute(&art, &ops)?;
+                let mut it = outs.into_iter();
+                w.q = match it.next().unwrap() {
+                    HostTensor::I8(v) => v,
+                    t => return Err(anyhow!("wq dtype {:?}", t.dtype())),
+                };
+                w.scale = it.next().unwrap().into_f32()?;
+                w.zero = it.next().unwrap().into_f32()?;
+                st.mq = match it.next().unwrap() {
+                    HostTensor::I8(v) => v,
+                    t => return Err(anyhow!("mq dtype {:?}", t.dtype())),
+                };
+                st.ms = it.next().unwrap().into_f32()?;
+                st.vq = match it.next().unwrap() {
+                    HostTensor::U8(v) => v,
+                    t => return Err(anyhow!("vq dtype {:?}", t.dtype())),
+                };
+                st.vs = it.next().unwrap().into_f32()?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Optimizer for Galore {
+    fn method(&self) -> Method {
+        match self.kind {
+            GaloreKind::Fp => Method::GaLore,
+            GaloreKind::Bit8 => Method::GaLore8bit,
+            GaloreKind::Quantized => Method::QGaLore,
+        }
+    }
+
+    fn fwd_artifact(&self) -> &'static str {
+        match self.kind {
+            GaloreKind::Quantized => "fwd_bwd_q8",
+            _ => "fwd_bwd_fp",
+        }
+    }
+
+    fn eval_artifact(&self) -> &'static str {
+        match self.kind {
+            GaloreKind::Quantized => "eval_fwd_q8",
+            _ => "eval_fwd_fp",
+        }
+    }
+
+    fn forward_operands(&self) -> Vec<HostTensor> {
+        let mut ops: Vec<HostTensor> =
+            self.fp.iter().map(|t| HostTensor::F32(t.data.clone())).collect();
+        for l in &self.layers {
+            match self.kind {
+                GaloreKind::Quantized => {
+                    let w = l.w_q.as_ref().unwrap();
+                    ops.push(HostTensor::I8(w.q.clone()));
+                    ops.push(HostTensor::F32(w.scale.clone()));
+                    ops.push(HostTensor::F32(w.zero.clone()));
+                }
+                _ => ops.push(HostTensor::F32(l.w_fp.as_ref().unwrap().data.clone())),
+            }
+        }
+        ops
+    }
+
+    fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()> {
+        let n_fp = self.fp.len();
+        assert_eq!(grads.len(), n_fp + self.layers.len());
+        // The fused-backward discipline: consume and drop each gradient
+        // right after its tensor's update (paper §3.5).
+        for (i, g) in grads.into_iter().enumerate() {
+            let g = g.into_f32()?;
+            if i < n_fp {
+                match self.kind {
+                    GaloreKind::Fp => {
+                        run_adam_fp(ctx, &mut self.fp[i], &mut self.fp_states_fp[i], &g)?
+                    }
+                    _ => run_adam_8bit(ctx, &mut self.fp[i], &mut self.fp_states_8[i], &g)?,
+                }
+            } else {
+                self.update_layer(ctx, i - n_fp, g)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn live_bytes(&self) -> u64 {
+        let mut b: u64 = self.fp.iter().map(|t| t.numel() as u64 * 4).sum();
+        b += self.fp_states_fp.iter().map(|s| s.bytes()).sum::<u64>();
+        b += self
+            .fp_states_8
+            .iter()
+            .map(|s| s.storage_bytes() as u64)
+            .sum::<u64>();
+        for l in &self.layers {
+            if let Some(w) = &l.w_fp {
+                b += w.numel() as u64 * 4;
+            }
+            if let Some(w) = &l.w_q {
+                b += w.storage_bytes() as u64;
+            }
+            if let Some(p) = &l.p_fp {
+                b += p.data.len() as u64 * 4;
+            }
+            if let Some(p) = &l.p_q4 {
+                b += p.storage_bytes() as u64;
+            }
+            if let Some(s) = &l.st_fp {
+                b += s.bytes();
+            }
+            if let Some(s) = &l.st_8 {
+                b += s.storage_bytes() as u64;
+            }
+        }
+        b
+    }
+
+    fn svd_stats(&self, step: u64) -> Option<(u64, f64)> {
+        Some((self.sched.total_svd_count(), self.sched.svd_fraction(step)))
+    }
+
+    fn similarity_history(&self) -> Option<Vec<(String, Vec<f32>)>> {
+        Some(
+            self.layers
+                .iter()
+                .zip(&self.sim_history)
+                .map(|(l, h)| (l.name.clone(), h.clone()))
+                .collect(),
+        )
+    }
+
+    fn export_flat(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for t in &self.fp {
+            out.extend_from_slice(&t.data);
+        }
+        for l in &self.layers {
+            if let Some(w) = &l.w_fp {
+                out.extend_from_slice(&w.data);
+            } else if let Some(w) = &l.w_q {
+                out.extend(quant::dequantize(w));
+            }
+        }
+        Ok(out)
+    }
+}

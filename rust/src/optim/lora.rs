@@ -1,0 +1,218 @@
+//! LoRA / ReLoRA / QLoRA baselines: frozen base weights + trainable rank-r
+//! adapter pairs (U (out,r), V (r,in)), optimized with fp Adam.
+//!
+//! * LoRA: base f32 (counted BF16 by the memory model).
+//! * QLoRA: base in blockwise INT8 (paper: "we keep the base models in
+//!   8bits for fair comparison").
+//! * ReLoRA: LoRA plus a periodic merge: base += (alpha/r)·U·V, adapters
+//!   re-initialized, adapter optimizer states reset (Lialin et al. 2023).
+
+use anyhow::Result;
+
+use crate::linalg::Mat;
+use crate::manifest::ConfigEntry;
+use crate::quant::{self, QuantTensor};
+use crate::runtime::HostTensor;
+use crate::util::Pcg32;
+
+use super::{run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer, StepCtx};
+
+struct AdapterPair {
+    name: String,
+    out: usize,
+    inn: usize,
+    u: FpTensor, // (out, r)
+    v: FpTensor, // (r, in)
+    st_u: AdamFp,
+    st_v: AdamFp,
+}
+
+pub struct Lora {
+    method: Method,
+    rank: usize,
+    lora_alpha: f32,
+    fp: Vec<FpTensor>, // frozen (embedding, norms)
+    base_fp: Vec<FpTensor>,
+    base_q: Vec<QuantTensor>,
+    adapters: Vec<AdapterPair>,
+    rng: Pcg32,
+    /// ReLoRA merge period in steps (0 = never).
+    pub merge_every: u64,
+    merges_done: u64,
+}
+
+impl Lora {
+    pub fn new(
+        method: Method,
+        entry: &ConfigEntry,
+        init: &[f32],
+        lora_alpha: f32,
+        seed: u64,
+    ) -> Self {
+        assert!(matches!(method, Method::LoRa | Method::ReLoRa | Method::QLoRa));
+        let (fp, lin) = split_init(init, &entry.fp_params, &entry.linear_params);
+        let rank = entry.model.rank;
+        let mut rng = Pcg32::new(seed, 0x10ad);
+        let mut adapters = Vec::new();
+        for t in &lin {
+            let (out, inn) = (t.shape[0], t.shape[1]);
+            adapters.push(Self::fresh_adapter(&t.name, out, inn, rank, &mut rng));
+        }
+        let (base_fp, base_q) = if method == Method::QLoRa {
+            (Vec::new(), lin.iter().map(|t| quant::quantize(&t.data, 8)).collect())
+        } else {
+            (lin, Vec::new())
+        };
+        Lora {
+            method,
+            rank,
+            lora_alpha,
+            fp,
+            base_fp,
+            base_q,
+            adapters,
+            rng,
+            merge_every: if method == Method::ReLoRa { 0 } else { 0 },
+            merges_done: 0,
+        }
+    }
+
+    fn fresh_adapter(
+        name: &str,
+        out: usize,
+        inn: usize,
+        rank: usize,
+        rng: &mut Pcg32,
+    ) -> AdapterPair {
+        // standard LoRA init (Hu et al.): A = V (r, in) kaiming-scaled
+        // gaussian, B = U (out, r) zero — the adapter product starts at
+        // zero and dU ∝ V is immediately well-scaled.
+        let v_std = 1.0 / (inn as f32).sqrt();
+        AdapterPair {
+            name: name.to_string(),
+            out,
+            inn,
+            u: FpTensor {
+                name: format!("{name}.lora_u"),
+                shape: vec![out, rank],
+                data: vec![0.0; out * rank],
+            },
+            v: FpTensor {
+                name: format!("{name}.lora_v"),
+                shape: vec![rank, inn],
+                data: rng.normal_vec(rank * inn, 0.0, v_std),
+            },
+            st_u: AdamFp::zeros(out * rank),
+            st_v: AdamFp::zeros(rank * inn),
+        }
+    }
+
+    /// ReLoRA merge: fold adapters into the base and restart them.
+    pub fn merge_and_restart(&mut self) {
+        assert_eq!(self.method, Method::ReLoRa);
+        let scale = self.lora_alpha / self.rank as f32;
+        for (base, ad) in self.base_fp.iter_mut().zip(&mut self.adapters) {
+            let u = Mat::from_vec(ad.out, self.rank, ad.u.data.clone());
+            let v = Mat::from_vec(self.rank, ad.inn, ad.v.data.clone());
+            let prod = u.matmul(&v);
+            for (b, p) in base.data.iter_mut().zip(prod.data) {
+                *b += scale * p;
+            }
+            *ad = Self::fresh_adapter(&ad.name.clone(), ad.out, ad.inn, self.rank, &mut self.rng);
+        }
+        self.merges_done += 1;
+    }
+
+    pub fn merges_done(&self) -> u64 {
+        self.merges_done
+    }
+}
+
+impl Optimizer for Lora {
+    fn method(&self) -> Method {
+        self.method
+    }
+
+    fn fwd_artifact(&self) -> &'static str {
+        if self.method == Method::QLoRa {
+            "qlora_fwd_bwd"
+        } else {
+            "lora_fwd_bwd"
+        }
+    }
+
+    fn forward_operands(&self) -> Vec<HostTensor> {
+        let mut ops: Vec<HostTensor> =
+            self.fp.iter().map(|t| HostTensor::F32(t.data.clone())).collect();
+        if self.method == Method::QLoRa {
+            for q in &self.base_q {
+                ops.push(HostTensor::I8(q.q.clone()));
+                ops.push(HostTensor::F32(q.scale.clone()));
+                ops.push(HostTensor::F32(q.zero.clone()));
+            }
+        } else {
+            for t in &self.base_fp {
+                ops.push(HostTensor::F32(t.data.clone()));
+            }
+        }
+        for ad in &self.adapters {
+            ops.push(HostTensor::F32(ad.u.data.clone()));
+            ops.push(HostTensor::F32(ad.v.data.clone()));
+        }
+        ops
+    }
+
+    fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()> {
+        // grads: (dU, dV) per adapter, in layer order
+        assert_eq!(grads.len(), 2 * self.adapters.len());
+        let mut it = grads.into_iter();
+        for ad in self.adapters.iter_mut() {
+            let gu = it.next().unwrap().into_f32()?;
+            let gv = it.next().unwrap().into_f32()?;
+            run_adam_fp(ctx, &mut ad.u, &mut ad.st_u, &gu)?;
+            run_adam_fp(ctx, &mut ad.v, &mut ad.st_v, &gv)?;
+        }
+        Ok(())
+    }
+
+    fn on_step_end(&mut self, ctx: &mut StepCtx) -> Result<()> {
+        if self.method == Method::ReLoRa
+            && self.merge_every > 0
+            && ctx.step % self.merge_every == 0
+        {
+            self.merge_and_restart();
+        }
+        Ok(())
+    }
+
+    fn live_bytes(&self) -> u64 {
+        let mut b: u64 = self.fp.iter().map(|t| t.numel() as u64 * 4).sum();
+        b += self.base_fp.iter().map(|t| t.numel() as u64 * 4).sum::<u64>();
+        b += self.base_q.iter().map(|q| q.storage_bytes() as u64).sum::<u64>();
+        for ad in &self.adapters {
+            b += (ad.u.numel() + ad.v.numel()) as u64 * 4;
+            b += ad.st_u.bytes() + ad.st_v.bytes();
+        }
+        b
+    }
+
+    fn export_flat(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for t in &self.fp {
+            out.extend_from_slice(&t.data);
+        }
+        let scale = self.lora_alpha / self.rank as f32;
+        for (i, ad) in self.adapters.iter().enumerate() {
+            let base: Vec<f32> = if self.method == Method::QLoRa {
+                quant::dequantize(&self.base_q[i])
+            } else {
+                self.base_fp[i].data.clone()
+            };
+            let u = Mat::from_vec(ad.out, self.rank, ad.u.data.clone());
+            let v = Mat::from_vec(self.rank, ad.inn, ad.v.data.clone());
+            let prod = u.matmul(&v);
+            out.extend(base.iter().zip(prod.data).map(|(b, p)| b + scale * p));
+        }
+        Ok(out)
+    }
+}

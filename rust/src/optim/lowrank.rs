@@ -1,0 +1,117 @@
+//! "Low-Rank" baseline: the linear weights are *replaced* by a factorization
+//! W = U V trained directly (Kamalakara et al. 2022).  Unlike LoRA there is
+//! no frozen base, which is why the paper's Table 1 shows it degrading
+//! sharply at scale — the model simply has no full-rank expressivity.
+
+use anyhow::Result;
+
+use crate::manifest::ConfigEntry;
+use crate::runtime::HostTensor;
+use crate::util::Pcg32;
+
+use super::{run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer, StepCtx};
+
+struct FactorPair {
+    u: FpTensor, // (out, r)
+    v: FpTensor, // (r, in)
+    st_u: AdamFp,
+    st_v: AdamFp,
+}
+
+pub struct LowRank {
+    fp: Vec<FpTensor>,
+    fp_states: Vec<AdamFp>,
+    factors: Vec<FactorPair>,
+}
+
+impl LowRank {
+    pub fn new(entry: &ConfigEntry, init: &[f32], seed: u64) -> Self {
+        let (fp, lin) = split_init(init, &entry.fp_params, &entry.linear_params);
+        let rank = entry.model.rank;
+        let mut rng = Pcg32::new(seed, 0x10f2);
+        let mut factors = Vec::new();
+        for t in &lin {
+            let (out, inn) = (t.shape[0], t.shape[1]);
+            // scale so that (U V) has roughly the init std of W
+            let std = (0.02f32 / (rank as f32).sqrt()).sqrt();
+            factors.push(FactorPair {
+                u: FpTensor {
+                    name: format!("{}.u", t.name),
+                    shape: vec![out, rank],
+                    data: rng.normal_vec(out * rank, 0.0, std),
+                },
+                v: FpTensor {
+                    name: format!("{}.v", t.name),
+                    shape: vec![rank, inn],
+                    data: rng.normal_vec(rank * inn, 0.0, std),
+                },
+                st_u: AdamFp::zeros(out * rank),
+                st_v: AdamFp::zeros(rank * inn),
+            });
+        }
+        let fp_states = fp.iter().map(|t| AdamFp::zeros(t.numel())).collect();
+        LowRank { fp, fp_states, factors }
+    }
+}
+
+impl Optimizer for LowRank {
+    fn method(&self) -> Method {
+        Method::LowRank
+    }
+
+    fn fwd_artifact(&self) -> &'static str {
+        "lowrank_fwd_bwd"
+    }
+
+    fn forward_operands(&self) -> Vec<HostTensor> {
+        let mut ops: Vec<HostTensor> =
+            self.fp.iter().map(|t| HostTensor::F32(t.data.clone())).collect();
+        for f in &self.factors {
+            ops.push(HostTensor::F32(f.u.data.clone()));
+            ops.push(HostTensor::F32(f.v.data.clone()));
+        }
+        ops
+    }
+
+    fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()> {
+        let n_fp = self.fp.len();
+        assert_eq!(grads.len(), n_fp + 2 * self.factors.len());
+        let mut it = grads.into_iter();
+        for i in 0..n_fp {
+            let g = it.next().unwrap().into_f32()?;
+            run_adam_fp(ctx, &mut self.fp[i], &mut self.fp_states[i], &g)?;
+        }
+        for f in self.factors.iter_mut() {
+            let gu = it.next().unwrap().into_f32()?;
+            let gv = it.next().unwrap().into_f32()?;
+            run_adam_fp(ctx, &mut f.u, &mut f.st_u, &gu)?;
+            run_adam_fp(ctx, &mut f.v, &mut f.st_v, &gv)?;
+        }
+        Ok(())
+    }
+
+    fn live_bytes(&self) -> u64 {
+        let mut b: u64 = self.fp.iter().map(|t| t.numel() as u64 * 4).sum();
+        b += self.fp_states.iter().map(|s| s.bytes()).sum::<u64>();
+        for f in &self.factors {
+            b += (f.u.numel() + f.v.numel()) as u64 * 4;
+            b += f.st_u.bytes() + f.st_v.bytes();
+        }
+        b
+    }
+
+    fn export_flat(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for t in &self.fp {
+            out.extend_from_slice(&t.data);
+        }
+        for f in &self.factors {
+            let (out_dim, rank) = (f.u.shape[0], f.u.shape[1]);
+            let inn = f.v.shape[1];
+            let u = crate::linalg::Mat::from_vec(out_dim, rank, f.u.data.clone());
+            let v = crate::linalg::Mat::from_vec(rank, inn, f.v.data.clone());
+            out.extend(u.matmul(&v).data);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,114 @@
+//! The training-method taxonomy used across the crate (paper §4.1 baselines
+//! plus Q-GaLore itself).
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Adam, full rank, full precision (paper "Full").
+    Full,
+    /// Adam with blockwise 8-bit optimizer states (paper "8-bit Adam").
+    Adam8bit,
+    /// W = U V factorization trained directly (paper "Low-Rank").
+    LowRank,
+    /// Frozen full-precision base + rank-r adapters (paper "LoRA").
+    LoRa,
+    /// LoRA with periodic merge-and-restart (paper "ReLoRA").
+    ReLoRa,
+    /// LoRA over an 8-bit quantized frozen base (paper "QLoRA").
+    QLoRa,
+    /// Gradient low-rank projection, fp weights + fp Adam (paper "GaLore").
+    GaLore,
+    /// GaLore with 8-bit Adam states (paper "8-bit GaLore").
+    GaLore8bit,
+    /// This paper: INT8 weights (stochastic rounding), INT4 projection,
+    /// 8-bit Adam, lazy layer-adaptive subspace updates.
+    QGaLore,
+}
+
+impl Method {
+    pub const ALL: [Method; 9] = [
+        Method::Full,
+        Method::Adam8bit,
+        Method::LowRank,
+        Method::LoRa,
+        Method::ReLoRa,
+        Method::QLoRa,
+        Method::GaLore,
+        Method::GaLore8bit,
+        Method::QGaLore,
+    ];
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "full" => Method::Full,
+            "adam8bit" | "8bit-adam" | "8-bit-adam" => Method::Adam8bit,
+            "lowrank" | "low-rank" => Method::LowRank,
+            "lora" => Method::LoRa,
+            "relora" => Method::ReLoRa,
+            "qlora" => Method::QLoRa,
+            "galore" => Method::GaLore,
+            "galore8bit" | "8bit-galore" | "8-bit-galore" => Method::GaLore8bit,
+            "qgalore" | "q-galore" => Method::QGaLore,
+            _ => return None,
+        })
+    }
+
+    /// Does the method keep weights in INT8 storage?
+    pub fn int8_weights(self) -> bool {
+        matches!(self, Method::QGaLore)
+    }
+
+    /// Does the method project gradients through a low-rank subspace?
+    pub fn galore_family(self) -> bool {
+        matches!(self, Method::GaLore | Method::GaLore8bit | Method::QGaLore)
+    }
+
+    /// Does the method use adapter/factor pairs instead of full weights?
+    pub fn adapter_family(self) -> bool {
+        matches!(
+            self,
+            Method::LowRank | Method::LoRa | Method::ReLoRa | Method::QLoRa
+        )
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Method::Full => "Full",
+            Method::Adam8bit => "8-bit Adam",
+            Method::LowRank => "Low-Rank",
+            Method::LoRa => "LoRA",
+            Method::ReLoRa => "ReLoRA",
+            Method::QLoRa => "QLoRA",
+            Method::GaLore => "GaLore",
+            Method::GaLore8bit => "8-bit GaLore",
+            Method::QGaLore => "Q-GaLore",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in Method::ALL {
+            let s = m.to_string().to_ascii_lowercase().replace(' ', "-");
+            assert_eq!(Method::parse(&s), Some(m), "{s}");
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn families() {
+        assert!(Method::QGaLore.galore_family());
+        assert!(Method::QGaLore.int8_weights());
+        assert!(!Method::GaLore.int8_weights());
+        assert!(Method::QLoRa.adapter_family());
+        assert!(!Method::Full.adapter_family());
+    }
+}

@@ -1,0 +1,246 @@
+//! Optimizer zoo: every training method of the paper's evaluation, driving
+//! the AOT update-step artifacts.
+//!
+//! Each implementation owns its parameter and optimizer-state buffers in
+//! their *storage* formats (f32, blockwise INT8, nibble-packed INT4) and
+//! knows (a) which fwd/bwd artifact computes its gradients, (b) how to lay
+//! its buffers out as artifact operands, and (c) which update artifacts to
+//! execute per tensor.  All heavy math happens inside the artifacts (L1
+//! Pallas kernels); this module is buffer management and scheduling.
+
+pub mod factory;
+pub mod full;
+pub mod galore;
+pub mod lora;
+pub mod lowrank;
+pub mod method;
+
+pub use factory::{build, build_with_init, BuildOptions};
+pub use method::Method;
+
+use anyhow::Result;
+
+use crate::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::{HostTensor, Runtime};
+
+/// Per-step context handed to `Optimizer::apply_update`.
+pub struct StepCtx<'a> {
+    pub rt: &'a mut Runtime,
+    pub man: &'a Manifest,
+    /// 1-based optimization step (Adam bias correction)
+    pub step: u64,
+    pub lr: f32,
+}
+
+impl<'a> StepCtx<'a> {
+    /// `[1/(1-b1^t), 1/(1-b2^t)]` — the `c` operand of every update artifact.
+    pub fn corrections(&self) -> HostTensor {
+        let t = self.step as i32;
+        let c1 = 1.0 / (1.0 - self.man.beta1.powi(t));
+        let c2 = 1.0 / (1.0 - self.man.beta2.powi(t));
+        HostTensor::F32(vec![c1, c2])
+    }
+
+    pub fn lr_operand(&self) -> HostTensor {
+        HostTensor::F32(vec![self.lr])
+    }
+}
+
+/// A named f32 parameter tensor.
+#[derive(Clone, Debug)]
+pub struct FpTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl FpTensor {
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Full-precision Adam moments for one tensor.
+#[derive(Clone, Debug)]
+pub struct AdamFp {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl AdamFp {
+    pub fn zeros(numel: usize) -> Self {
+        AdamFp { m: vec![0.0; numel], v: vec![0.0; numel] }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.m.len() + self.v.len()) as u64 * 4
+    }
+}
+
+/// The interface the coordinator drives.
+pub trait Optimizer {
+    fn method(&self) -> Method;
+
+    /// Name of the model-level fwd/bwd artifact (key into
+    /// `ConfigEntry::artifacts`).
+    fn fwd_artifact(&self) -> &'static str;
+
+    /// Name of the eval artifact (loss only).  Defaults to the fwd/bwd
+    /// artifact — callers read result 0 and ignore gradients.
+    fn eval_artifact(&self) -> &'static str {
+        self.fwd_artifact()
+    }
+
+    /// Parameter operands in ABI order (everything before tokens/targets).
+    fn forward_operands(&self) -> Vec<HostTensor>;
+
+    /// Consume the gradient results (everything after the loss) and update
+    /// parameters/states in place.
+    fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()>;
+
+    /// Actually-allocated bytes of params + optimizer state + projections.
+    fn live_bytes(&self) -> u64;
+
+    /// (total subspace computations, fraction vs plain-GaLore schedule).
+    fn svd_stats(&self, _step: u64) -> Option<(u64, f64)> {
+        None
+    }
+
+    /// Per-layer subspace cosine-similarity history (Figure 2 probe).
+    fn similarity_history(&self) -> Option<Vec<(String, Vec<f32>)>> {
+        None
+    }
+
+    /// Method-specific periodic maintenance (e.g. ReLoRA merge).
+    fn on_step_end(&mut self, _ctx: &mut StepCtx) -> Result<()> {
+        Ok(())
+    }
+
+    /// Export all model params as flat f32 in the `fwd_bwd_fp` ABI order
+    /// (fp params then full linear weights): INT8 weights dequantized,
+    /// adapters merged into the base, factor pairs multiplied out.  This is
+    /// the checkpoint format shared across methods (fine-tuning handoff).
+    fn export_flat(&self) -> Result<Vec<f32>>;
+}
+
+// ---------------------------------------------------------------------------
+// Shared artifact-driving helpers.
+// ---------------------------------------------------------------------------
+
+pub(crate) fn adam_artifact<'m>(man: &'m Manifest, numel: usize) -> Result<&'m ArtifactSpec> {
+    man.update(&format!("adam_step_{numel}"))
+}
+
+pub(crate) fn adam8_artifact<'m>(man: &'m Manifest, numel: usize) -> Result<&'m ArtifactSpec> {
+    man.update(&format!("adam8bit_step_{numel}"))
+}
+
+/// Run one fp Adam step on a flat tensor through its artifact.
+pub(crate) fn run_adam_fp(
+    ctx: &mut StepCtx,
+    w: &mut FpTensor,
+    st: &mut AdamFp,
+    g: &[f32],
+) -> Result<()> {
+    let spec = adam_artifact(ctx.man, w.numel())?;
+    let outs = ctx.rt.execute(
+        spec,
+        &[
+            HostTensor::F32(g.to_vec()),
+            HostTensor::F32(std::mem::take(&mut st.m)),
+            HostTensor::F32(std::mem::take(&mut st.v)),
+            HostTensor::F32(std::mem::take(&mut w.data)),
+            ctx.corrections(),
+            ctx.lr_operand(),
+        ],
+    )?;
+    let mut it = outs.into_iter();
+    w.data = it.next().unwrap().into_f32()?;
+    st.m = it.next().unwrap().into_f32()?;
+    st.v = it.next().unwrap().into_f32()?;
+    Ok(())
+}
+
+/// Run one blockwise 8-bit Adam step on a flat tensor through its artifact.
+pub(crate) fn run_adam_8bit(
+    ctx: &mut StepCtx,
+    w: &mut FpTensor,
+    st: &mut crate::quant::Adam8State,
+    g: &[f32],
+) -> Result<()> {
+    let spec = adam8_artifact(ctx.man, w.numel())?;
+    let outs = ctx.rt.execute(
+        spec,
+        &[
+            HostTensor::F32(g.to_vec()),
+            HostTensor::I8(std::mem::take(&mut st.mq)),
+            HostTensor::F32(std::mem::take(&mut st.ms)),
+            HostTensor::U8(std::mem::take(&mut st.vq)),
+            HostTensor::F32(std::mem::take(&mut st.vs)),
+            HostTensor::F32(std::mem::take(&mut w.data)),
+            ctx.corrections(),
+            ctx.lr_operand(),
+        ],
+    )?;
+    let mut it = outs.into_iter();
+    w.data = it.next().unwrap().into_f32()?;
+    match it.next().unwrap() {
+        HostTensor::I8(v) => st.mq = v,
+        other => return Err(anyhow::anyhow!("mq dtype {:?}", other.dtype())),
+    }
+    st.ms = it.next().unwrap().into_f32()?;
+    match it.next().unwrap() {
+        HostTensor::U8(v) => st.vq = v,
+        other => return Err(anyhow::anyhow!("vq dtype {:?}", other.dtype())),
+    }
+    st.vs = it.next().unwrap().into_f32()?;
+    Ok(())
+}
+
+/// Split a flat init checkpoint into named tensors per the manifest's
+/// parameter tables. Returns (fp_tensors, linear_tensors).
+pub fn split_init(
+    init: &[f32],
+    fp_params: &[(String, Vec<usize>)],
+    linear_params: &[(String, Vec<usize>)],
+) -> (Vec<FpTensor>, Vec<FpTensor>) {
+    let mut off = 0usize;
+    let mut take = |name: &str, shape: &[usize]| {
+        let n: usize = shape.iter().product();
+        let t = FpTensor {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            data: init[off..off + n].to_vec(),
+        };
+        off += n;
+        t
+    };
+    let fp = fp_params.iter().map(|(n, s)| take(n, s)).collect();
+    let lin = linear_params.iter().map(|(n, s)| take(n, s)).collect();
+    assert_eq!(off, init.len(), "init checkpoint size mismatch");
+    (fp, lin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_init_partitions_exactly() {
+        let fp = vec![("a".to_string(), vec![2usize]), ("b".to_string(), vec![3])];
+        let lin = vec![("c".to_string(), vec![2, 2])];
+        let init: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let (f, l) = split_init(&init, &fp, &lin);
+        assert_eq!(f[0].data, vec![0.0, 1.0]);
+        assert_eq!(f[1].data, vec![2.0, 3.0, 4.0]);
+        assert_eq!(l[0].data, vec![5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_init_rejects_leftover() {
+        let fp = vec![("a".to_string(), vec![2usize])];
+        let init = vec![0.0; 3];
+        split_init(&init, &fp, &[]);
+    }
+}

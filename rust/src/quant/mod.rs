@@ -1,0 +1,445 @@
+//! Block-wise quantization — host mirror of the L1 Pallas kernels.
+//!
+//! The hot-path quantization runs inside the AOT HLO artifacts; this module
+//! is the coordinator-side implementation used for (a) initializing the
+//! quantized storage buffers, (b) the subspace scheduler's INT4 projection
+//! refresh (control path, every ~200 steps), (c) checkpoint IO, and
+//! (d) cross-checking the HLO kernels in integration tests.
+//!
+//! The arithmetic mirrors `python/compile/kernels/ref.py` — including
+//! round-half-to-even, which `jnp.round` uses (NOT `f32::round`).  The hot
+//! loops use reciprocal-multiply and magic-number rounding; both can differ
+//! from the oracle by one code at exact tie boundaries, which every
+//! cross-check (tests, integration) budgets for.
+
+use crate::util::Pcg32;
+
+/// Paper §3.1: block size 256 everywhere; tensors smaller than one block use
+/// a single block of their own size.
+pub const BLOCK: usize = 256;
+pub const EPS: f32 = 1e-8;
+
+/// Effective block size for a tensor of `numel` elements.
+pub fn block_for(numel: usize) -> usize {
+    let b = BLOCK.min(numel);
+    assert_eq!(numel % b, 0, "numel {numel} not divisible by block {b}");
+    b
+}
+
+/// Round half-to-even via the classic magic-number trick: adding and
+/// subtracting 1.5·2²³ forces the FPU to round at integer granularity with
+/// the default (ties-even) rounding mode.  Exact for |v| < 2²², which every
+/// in-range quantization code satisfies; the rare out-of-range value (a
+/// degenerate block with scale floored at EPS) falls back to the library
+/// call and is clamped afterwards anyway.  ~2.3x faster than
+/// `f32::round_ties_even` in the quantize hot loop (§Perf).
+#[inline]
+fn fast_round_ties_even(v: f32) -> f32 {
+    const MAGIC: f32 = 12_582_912.0; // 1.5 * 2^23
+    if v.abs() < 4_194_304.0 {
+        (v + MAGIC) - MAGIC
+    } else {
+        v.round_ties_even()
+    }
+}
+
+fn qrange(bits: u32) -> (f32, f32) {
+    let qmin = -(1i64 << (bits - 1)) as f32;
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    (qmin, qmax)
+}
+
+fn stats(block: &[f32], bits: u32) -> (f32, f32) {
+    let (qmin, qmax) = qrange(bits);
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for &x in block {
+        mn = mn.min(x);
+        mx = mx.max(x);
+    }
+    let scale = ((mx - mn) / (qmax - qmin)).max(EPS);
+    let zero = qmin - (mn / scale).round_ties_even();
+    (scale, zero)
+}
+
+/// INT8 (or narrower, stored in i8) block-quantized tensor.
+#[derive(Clone, Debug)]
+pub struct QuantTensor {
+    pub q: Vec<i8>,
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+    pub bits: u32,
+    pub block: usize,
+}
+
+impl QuantTensor {
+    pub fn numel(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn nblocks(&self) -> usize {
+        self.scale.len()
+    }
+
+    /// Storage bytes actually held by this tensor (codes + per-block stats).
+    pub fn storage_bytes(&self) -> usize {
+        self.q.len() + self.scale.len() * 4 + self.zero.len() * 4
+    }
+}
+
+/// Round-to-nearest block-wise quantization (paper §3.1).
+///
+/// Perf note (§Perf, EXPERIMENTS.md): reciprocal-multiply + magic-number
+/// rounding in the inner loop: 74 -> 182 Melem/s on the 1M-element bench.
+pub fn quantize(x: &[f32], bits: u32) -> QuantTensor {
+    let block = block_for(x.len());
+    let (qmin, qmax) = qrange(bits);
+    let nb = x.len() / block;
+    let mut q = Vec::with_capacity(x.len());
+    let mut scale = Vec::with_capacity(nb);
+    let mut zero = Vec::with_capacity(nb);
+    for blk in x.chunks(block) {
+        let (s, z) = stats(blk, bits);
+        let inv = 1.0 / s;
+        for &v in blk {
+            let code = (fast_round_ties_even(v * inv) + z).clamp(qmin, qmax);
+            q.push(code as i8);
+        }
+        scale.push(s);
+        zero.push(z);
+    }
+    QuantTensor { q, scale, zero, bits, block }
+}
+
+/// Stochastic-rounding quantization (paper §3.4): floor(v + u), u ~ U[0,1).
+/// The caller supplies the RNG so runs replay exactly.
+pub fn sr_quantize(x: &[f32], bits: u32, rng: &mut Pcg32) -> QuantTensor {
+    let block = block_for(x.len());
+    let (qmin, qmax) = qrange(bits);
+    let nb = x.len() / block;
+    let mut q = Vec::with_capacity(x.len());
+    let mut scale = Vec::with_capacity(nb);
+    let mut zero = Vec::with_capacity(nb);
+    for blk in x.chunks(block) {
+        let (s, z) = stats(blk, bits);
+        for &v in blk {
+            let u = rng.next_f32();
+            let code = (v / s + z + u).floor().clamp(qmin, qmax);
+            q.push(code as i8);
+        }
+        scale.push(s);
+        zero.push(z);
+    }
+    QuantTensor { q, scale, zero, bits, block }
+}
+
+pub fn dequantize(t: &QuantTensor) -> Vec<f32> {
+    let mut out = Vec::with_capacity(t.q.len());
+    for (bi, blk) in t.q.chunks(t.block).enumerate() {
+        let (s, z) = (t.scale[bi], t.zero[bi]);
+        for &c in blk {
+            out.push((c as f32 - z) * s);
+        }
+    }
+    out
+}
+
+/// INT4 nibble-packed tensor: two codes per byte (even index -> low nibble),
+/// offset-binary within the nibble (code + 8).
+#[derive(Clone, Debug)]
+pub struct Quant4Tensor {
+    pub packed: Vec<u8>,
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+    pub block: usize,
+}
+
+impl Quant4Tensor {
+    pub fn numel(&self) -> usize {
+        self.packed.len() * 2
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.packed.len() + self.scale.len() * 4 + self.zero.len() * 4
+    }
+}
+
+pub fn pack_int4(codes: &[i8]) -> Vec<u8> {
+    assert_eq!(codes.len() % 2, 0);
+    codes
+        .chunks(2)
+        .map(|p| {
+            let lo = (p[0] + 8) as u8 & 0xF;
+            let hi = (p[1] + 8) as u8 & 0xF;
+            lo | (hi << 4)
+        })
+        .collect()
+}
+
+pub fn unpack_int4(packed: &[u8]) -> Vec<i8> {
+    let mut out = Vec::with_capacity(packed.len() * 2);
+    for &b in packed {
+        out.push((b & 0xF) as i8 - 8);
+        out.push(((b >> 4) & 0xF) as i8 - 8);
+    }
+    out
+}
+
+/// Quantize to INT4 and nibble-pack (the projection-matrix format, §3.3).
+pub fn quantize4(x: &[f32]) -> Quant4Tensor {
+    let t = quantize(x, 4);
+    Quant4Tensor {
+        packed: pack_int4(&t.q),
+        scale: t.scale,
+        zero: t.zero,
+        block: t.block,
+    }
+}
+
+pub fn dequantize4(t: &Quant4Tensor) -> Vec<f32> {
+    let codes = unpack_int4(&t.packed);
+    let mut out = Vec::with_capacity(codes.len());
+    for (bi, blk) in codes.chunks(t.block).enumerate() {
+        let (s, z) = (t.scale[bi], t.zero[bi]);
+        for &c in blk {
+            out.push((c as f32 - z) * s);
+        }
+    }
+    out
+}
+
+/// Blockwise 8-bit Adam state (m: symmetric i8, v: non-negative u8), the
+/// storage format threaded through the `adam8bit_*` HLO artifacts.
+#[derive(Clone, Debug)]
+pub struct Adam8State {
+    pub mq: Vec<i8>,
+    pub ms: Vec<f32>,
+    pub vq: Vec<u8>,
+    pub vs: Vec<f32>,
+    pub block: usize,
+}
+
+impl Adam8State {
+    pub fn zeros(numel: usize) -> Self {
+        let block = block_for(numel);
+        let nb = numel / block;
+        Adam8State {
+            mq: vec![0; numel],
+            ms: vec![EPS / 127.0; nb],
+            vq: vec![0; numel],
+            vs: vec![EPS / 255.0; nb],
+            block,
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.mq.len() + self.vq.len() + (self.ms.len() + self.vs.len()) * 4
+    }
+}
+
+/// Update-magnitude safety clip (mirrors `ref.UPDATE_CLIP`).
+pub const UPDATE_CLIP: f32 = 10.0;
+
+/// Host-side reference of one blockwise 8-bit Adam step (mirrors
+/// `kernels/adam8.py`); used by unit tests and the mock runtime.
+///
+/// `v` lives under the sqrt code map — `v = (code * vs)^2` — because linear
+/// u8 codes underflow for small `v` and blow the update up to `m/eps`
+/// (bitsandbytes solves the same problem with its dynamic code map).
+pub fn adam8_step_host(
+    g: &[f32],
+    st: &mut Adam8State,
+    c1: f32,
+    c2: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+) -> Vec<f32> {
+    let block = st.block;
+    let mut update = Vec::with_capacity(g.len());
+    for (bi, gb) in g.chunks(block).enumerate() {
+        let ms = st.ms[bi];
+        let vs = st.vs[bi];
+        let mut m: Vec<f32> = st.mq[bi * block..(bi + 1) * block]
+            .iter()
+            .map(|&q| q as f32 * ms)
+            .collect();
+        let mut v: Vec<f32> = st.vq[bi * block..(bi + 1) * block]
+            .iter()
+            .map(|&q| {
+                let s = q as f32 * vs;
+                s * s
+            })
+            .collect();
+        for i in 0..gb.len() {
+            m[i] = beta1 * m[i] + (1.0 - beta1) * gb[i];
+            v[i] = beta2 * v[i] + (1.0 - beta2) * gb[i] * gb[i];
+            let up = (m[i] * c1) / ((v[i] * c2).sqrt() + eps);
+            update.push(up.clamp(-UPDATE_CLIP, UPDATE_CLIP));
+        }
+        let m_absmax = m.iter().fold(0f32, |a, &x| a.max(x.abs())).max(EPS);
+        let v_max = v.iter().fold(0f32, |a, &x| a.max(x)).max(EPS);
+        let msn = m_absmax / 127.0;
+        let vsn = v_max.sqrt() / 255.0;
+        for i in 0..gb.len() {
+            st.mq[bi * block + i] =
+                fast_round_ties_even(m[i] / msn).clamp(-127.0, 127.0) as i8;
+            st.vq[bi * block + i] =
+                fast_round_ties_even(v[i].sqrt() / vsn).clamp(0.0, 255.0) as u8;
+        }
+        st.ms[bi] = msn;
+        st.vs[bi] = vsn;
+    }
+    update
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        Pcg32::seeded(seed).normal_vec(n, 0.0, 2.0)
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        for bits in [8u32, 4, 2] {
+            let x = randvec(1024, 1);
+            let t = quantize(&x, bits);
+            let xh = dequantize(&t);
+            for (bi, (xb, hb)) in x.chunks(256).zip(xh.chunks(256)).enumerate() {
+                let bound = t.scale[bi] * 0.5 + 1e-6;
+                for (a, b) in xb.iter().zip(hb) {
+                    assert!((a - b).abs() <= bound, "bits={bits} err {}", (a - b).abs());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let x = randvec(512, 2);
+        for bits in [8u32, 4, 2] {
+            let t = quantize(&x, bits);
+            let lim = 1i16 << (bits - 1);
+            assert!(t.q.iter().all(|&c| (c as i16) >= -lim && (c as i16) < lim));
+        }
+    }
+
+    #[test]
+    fn small_tensor_single_block() {
+        let x = randvec(64, 3);
+        let t = quantize(&x, 8);
+        assert_eq!(t.block, 64);
+        assert_eq!(t.nblocks(), 1);
+    }
+
+    #[test]
+    fn int4_pack_roundtrip() {
+        let x = randvec(512, 4);
+        let t = quantize(&x, 4);
+        let packed = pack_int4(&t.q);
+        assert_eq!(unpack_int4(&packed), t.q);
+    }
+
+    #[test]
+    fn quantize4_matches_quantize_then_pack() {
+        let x = randvec(512, 5);
+        let t4 = quantize4(&x);
+        let t = quantize(&x, 4);
+        assert_eq!(t4.packed, pack_int4(&t.q));
+        let d4 = dequantize4(&t4);
+        let d = dequantize(&t);
+        assert_eq!(d4, d);
+    }
+
+    #[test]
+    fn sr_unbiased() {
+        let x = randvec(256, 6);
+        let mut rng = Pcg32::seeded(7);
+        let trials = 400;
+        let mut acc = vec![0f64; 256];
+        let mut scale0 = 0f32;
+        for _ in 0..trials {
+            let t = sr_quantize(&x, 8, &mut rng);
+            scale0 = t.scale[0];
+            for (a, b) in acc.iter_mut().zip(dequantize(&t)) {
+                *a += b as f64;
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            let mean = (a / trials as f64) as f32;
+            assert!(
+                (mean - x[i]).abs() < scale0 * 0.5,
+                "i={i} mean={mean} x={}",
+                x[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sr_accumulates_small_updates_rtn_does_not() {
+        // The paper's §3.4 claim, at host level.
+        let x = randvec(256, 8);
+        let base = quantize(&x, 8);
+        let delta = base.scale[0] * 0.05;
+        let steps = 100;
+
+        let mut t = base.clone();
+        for _ in 0..steps {
+            let w: Vec<f32> = dequantize(&t).iter().map(|v| v + delta).collect();
+            t = quantize(&w, 8);
+        }
+        let drift_rtn: f32 = dequantize(&t)
+            .iter()
+            .zip(&x)
+            .map(|(a, b)| a - b)
+            .sum::<f32>()
+            / 256.0;
+
+        let mut rng = Pcg32::seeded(9);
+        let mut t = base.clone();
+        for _ in 0..steps {
+            let w: Vec<f32> = dequantize(&t).iter().map(|v| v + delta).collect();
+            t = sr_quantize(&w, 8, &mut rng);
+        }
+        let drift_sr: f32 = dequantize(&t)
+            .iter()
+            .zip(&x)
+            .map(|(a, b)| a - b)
+            .sum::<f32>()
+            / 256.0;
+
+        let want = delta * steps as f32;
+        assert!(drift_rtn.abs() < 0.15 * want, "rtn drifted {drift_rtn} vs {want}");
+        assert!(drift_sr > 0.6 * want, "sr drift {drift_sr} vs {want}");
+    }
+
+    #[test]
+    fn adam8_host_reduces_quadratic() {
+        let target: Vec<f32> = (0..256).map(|i| (i as f32 / 128.0) - 1.0).collect();
+        let mut w = vec![0f32; 256];
+        let mut st = Adam8State::zeros(256);
+        for t in 1..150 {
+            let g: Vec<f32> = w.iter().zip(&target).map(|(a, b)| a - b).collect();
+            let c1 = 1.0 / (1.0 - 0.9f32.powi(t));
+            let c2 = 1.0 / (1.0 - 0.999f32.powi(t));
+            let up = adam8_step_host(&g, &mut st, c1, c2, 0.9, 0.999, 1e-8);
+            for (wi, u) in w.iter_mut().zip(up) {
+                *wi -= 0.05 * u;
+            }
+        }
+        let loss: f32 =
+            w.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / 256.0;
+        assert!(loss < 1e-2, "loss {loss}");
+    }
+
+    #[test]
+    fn storage_bytes_accounting() {
+        let x = randvec(1024, 10);
+        let t8 = quantize(&x, 8);
+        assert_eq!(t8.storage_bytes(), 1024 + 4 * 4 + 4 * 4);
+        let t4 = quantize4(&x);
+        assert_eq!(t4.storage_bytes(), 512 + 4 * 4 + 4 * 4);
+    }
+}

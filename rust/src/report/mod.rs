@@ -1,0 +1,116 @@
+//! Rendering helpers for the repro harness: aligned markdown tables and CSV
+//! series files (the paper's figures are emitted as CSV so any plotter can
+//! regenerate them).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Simple aligned markdown table.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            out.push('|');
+            for i in 0..ncol {
+                let _ = write!(out, " {:<w$} |", cells[i], w = widths[i]);
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &widths, &mut out);
+        out.push('|');
+        for w in &widths {
+            let _ = write!(out, "{:-<w$}|", "", w = w + 2);
+        }
+        out.push('\n');
+        for r in &self.rows {
+            fmt_row(r, &widths, &mut out);
+        }
+        out
+    }
+}
+
+/// Write a CSV with a header row (figure series).
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut s = header.join(",");
+    s.push('\n');
+    for r in rows {
+        s.push_str(&r.join(","));
+        s.push('\n');
+    }
+    std::fs::write(path, s).with_context(|| format!("writing {}", path.display()))
+}
+
+pub fn f(v: f32) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f4(v: f32) -> String {
+    format!("{v:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Method", "PPL"]);
+        t.row(vec!["Full".into(), "34.06".into()]);
+        t.row(vec!["Q-GaLore".into(), "34.88".into()]);
+        let s = t.render();
+        assert!(s.contains("| Method   | PPL   |"));
+        assert!(s.lines().count() == 4);
+        let lens: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn csv_written() {
+        let p = std::env::temp_dir().join("qgalore_report_test.csv");
+        write_csv(&p, &["step", "loss"], &[vec!["1".into(), "2.5".into()]]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "step,loss\n1,2.5\n");
+    }
+}

@@ -1,0 +1,125 @@
+//! PJRT runtime: load, compile and execute the AOT HLO-text artifacts.
+//!
+//! One `PjRtClient::cpu()` per process; executables are compiled on first
+//! use and cached by artifact name.  All host<->device traffic goes through
+//! [`HostTensor`], a dtype-tagged host buffer that maps 1:1 onto the
+//! manifest's `TensorSpec`s.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`) — see
+//! DESIGN.md §2 for why serialized protos are rejected by xla_extension
+//! 0.5.1.
+
+pub mod tensor;
+
+pub use tensor::HostTensor;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::manifest::ArtifactSpec;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// executions per artifact (perf accounting)
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Runtime { client, cache: HashMap::new(), exec_counts: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached executable for) an artifact.
+    pub fn load(&mut self, spec: &ArtifactSpec) -> Result<()> {
+        if self.cache.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .map_err(|e| anyhow!("parsing {}: {e}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
+        self.cache.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute an artifact. Operand order/dtypes/shapes must match the
+    /// manifest spec; results are unpacked from the output tuple in spec
+    /// order.
+    pub fn execute(
+        &mut self,
+        spec: &ArtifactSpec,
+        operands: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        self.load(spec)?;
+        if operands.len() != spec.operands.len() {
+            return Err(anyhow!(
+                "{}: got {} operands, manifest expects {}",
+                spec.name,
+                operands.len(),
+                spec.operands.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(operands.len());
+        for (t, s) in operands.iter().zip(&spec.operands) {
+            literals.push(
+                t.to_literal(&s.shape)
+                    .with_context(|| format!("{}: operand {}", spec.name, s.name))?,
+            );
+        }
+        let exe = self.cache.get(&spec.name).expect("loaded above");
+        let outs = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}: {e}", spec.name))?;
+        *self.exec_counts.entry(spec.name.clone()).or_default() += 1;
+        let first = outs
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow!("{}: no output buffer", spec.name))?;
+        let tuple = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {} result: {e}", spec.name))?
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {} result: {e}", spec.name))?;
+        if tuple.len() != spec.results.len() {
+            return Err(anyhow!(
+                "{}: got {} results, manifest expects {}",
+                spec.name,
+                tuple.len(),
+                spec.results.len()
+            ));
+        }
+        tuple
+            .into_iter()
+            .zip(&spec.results)
+            .map(|(lit, s)| {
+                HostTensor::from_literal(&lit, s.dtype, &s.shape)
+                    .with_context(|| format!("{}: result {}", spec.name, s.name))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime behaviour against real artifacts is covered in
+    // rust/tests/integration.rs (requires `make artifacts`).
+}

@@ -1,0 +1,188 @@
+//! Dtype-tagged host tensors and their Literal conversions.
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::DType;
+
+/// A host-side tensor buffer.  Shapes live in the manifest `TensorSpec`s;
+/// the buffer only knows its element type and flat contents.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    U8(Vec<u8>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(_) => DType::F32,
+            HostTensor::I8(_) => DType::I8,
+            HostTensor::U8(_) => DType::U8,
+            HostTensor::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I8(v) => v.len(),
+            HostTensor::U8(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            other => Err(anyhow!("expected f32 tensor, got {:?}", other.dtype())),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            other => Err(anyhow!("expected f32 tensor, got {:?}", other.dtype())),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match self {
+            HostTensor::I8(v) => Ok(v),
+            other => Err(anyhow!("expected i8 tensor, got {:?}", other.dtype())),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match self {
+            HostTensor::U8(v) => Ok(v),
+            other => Err(anyhow!("expected u8 tensor, got {:?}", other.dtype())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            other => Err(anyhow!("expected i32 tensor, got {:?}", other.dtype())),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        v.first().copied().ok_or_else(|| anyhow!("empty tensor"))
+    }
+
+    fn bytes(&self) -> &[u8] {
+        match self {
+            HostTensor::F32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+            HostTensor::I8(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len())
+            },
+            HostTensor::U8(v) => v,
+            HostTensor::I32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+        }
+    }
+
+    fn element_type(&self) -> xla::ElementType {
+        match self {
+            HostTensor::F32(_) => xla::ElementType::F32,
+            HostTensor::I8(_) => xla::ElementType::S8,
+            HostTensor::U8(_) => xla::ElementType::U8,
+            HostTensor::I32(_) => xla::ElementType::S32,
+        }
+    }
+
+    /// Build an XLA literal with the given logical shape.
+    pub fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let numel: usize = shape.iter().product();
+        if numel != self.len() {
+            return Err(anyhow!(
+                "shape {:?} ({numel} elems) does not match buffer len {}",
+                shape,
+                self.len()
+            ));
+        }
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.element_type(),
+            shape,
+            self.bytes(),
+        )
+        .map_err(|e| anyhow!("literal creation: {e}"))
+    }
+
+    /// Read a literal back into a host buffer of the expected dtype.
+    pub fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        let t = match dtype {
+            DType::F32 => HostTensor::F32(
+                lit.to_vec::<f32>().map_err(|e| anyhow!("literal->f32: {e}"))?,
+            ),
+            DType::I8 => HostTensor::I8(
+                lit.to_vec::<i8>().map_err(|e| anyhow!("literal->i8: {e}"))?,
+            ),
+            DType::U8 => HostTensor::U8(
+                lit.to_vec::<u8>().map_err(|e| anyhow!("literal->u8: {e}"))?,
+            ),
+            DType::I32 => HostTensor::I32(
+                lit.to_vec::<i32>().map_err(|e| anyhow!("literal->i32: {e}"))?,
+            ),
+        };
+        if t.len() != numel {
+            return Err(anyhow!(
+                "literal has {} elements, spec shape {:?} wants {numel}",
+                t.len(),
+                shape
+            ));
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_tags() {
+        assert_eq!(HostTensor::F32(vec![1.0]).dtype(), DType::F32);
+        assert_eq!(HostTensor::I8(vec![1]).dtype(), DType::I8);
+        assert_eq!(HostTensor::U8(vec![1]).dtype(), DType::U8);
+        assert_eq!(HostTensor::I32(vec![1]).dtype(), DType::I32);
+    }
+
+    #[test]
+    fn accessor_type_checks() {
+        let t = HostTensor::F32(vec![1.0, 2.0]);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i8().is_err());
+        assert_eq!(t.scalar_f32().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0]);
+        assert!(t.to_literal(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32_and_i8() {
+        let t = HostTensor::F32(vec![1.5, -2.25, 3.0, 0.0]);
+        let lit = t.to_literal(&[2, 2]).unwrap();
+        let back = HostTensor::from_literal(&lit, DType::F32, &[2, 2]).unwrap();
+        assert_eq!(t, back);
+
+        let t = HostTensor::I8(vec![-128, -1, 0, 127]);
+        let lit = t.to_literal(&[4]).unwrap();
+        let back = HostTensor::from_literal(&lit, DType::I8, &[4]).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,302 @@
+//! Lazy layer-wise subspace exploration — the paper's §3.2 contribution.
+//!
+//! GaLore recomputes every layer's projection every `t` steps (t = 200).
+//! Q-GaLore instead monitors, per layer, the cosine similarity between
+//! consecutive projection matrices; when the last `k` refreshes were all
+//! ≥ `threshold` similar, the layer's interval doubles (`t -> 2t`): its
+//! subspace has converged ("early bird" layers stop paying for SVD).
+//!
+//! This module is pure state-machine logic (no linalg, no runtime) so every
+//! transition is unit- and property-testable; the trainer feeds it cosine
+//! similarities and it answers "is this layer's refresh due, and what
+//! interval applies".
+
+/// Per-layer adaptive interval state.
+#[derive(Clone, Debug)]
+pub struct LayerSubspaceState {
+    pub name: String,
+    /// current refresh interval in steps
+    pub interval: u64,
+    /// step of the most recent refresh (None before the first)
+    pub last_refresh: Option<u64>,
+    /// trailing window of cosine similarities between consecutive
+    /// projections (most recent last), capacity = `window`
+    pub recent_sims: Vec<f32>,
+    /// number of SVD (subspace) computations performed for this layer
+    pub svd_count: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// initial refresh interval (paper/GaLore default: 200)
+    pub base_interval: u64,
+    /// similarity threshold (paper default 0.4: "cosine similarity across
+    /// the k intervals remains greater than a threshold (e.g. >= 40%)")
+    pub threshold: f32,
+    /// how many consecutive refreshes must clear the threshold (k)
+    pub window: usize,
+    /// adaptive doubling on/off (off = plain GaLore schedule)
+    pub adaptive: bool,
+    /// optional cap so intervals cannot grow unboundedly (0 = uncapped)
+    pub max_interval: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            base_interval: 200,
+            threshold: 0.4,
+            window: 2,
+            adaptive: true,
+            max_interval: 0,
+        }
+    }
+}
+
+pub struct SubspaceScheduler {
+    pub cfg: SchedulerConfig,
+    pub layers: Vec<LayerSubspaceState>,
+}
+
+impl SubspaceScheduler {
+    pub fn new(layer_names: &[String], cfg: SchedulerConfig) -> Self {
+        let layers = layer_names
+            .iter()
+            .map(|n| LayerSubspaceState {
+                name: n.clone(),
+                interval: cfg.base_interval,
+                last_refresh: None,
+                recent_sims: Vec::new(),
+                svd_count: 0,
+            })
+            .collect();
+        SubspaceScheduler { cfg, layers }
+    }
+
+    pub fn layer(&self, idx: usize) -> &LayerSubspaceState {
+        &self.layers[idx]
+    }
+
+    /// Is layer `idx` due for a subspace refresh at `step`?
+    /// The first call (no projection yet) is always due.
+    pub fn due(&self, idx: usize, step: u64) -> bool {
+        match self.layers[idx].last_refresh {
+            None => true,
+            Some(last) => step.saturating_sub(last) >= self.layers[idx].interval,
+        }
+    }
+
+    /// Steps until layer `idx` is next due at `step` (0 = due now).
+    pub fn steps_until_due(&self, idx: usize, step: u64) -> u64 {
+        match self.layers[idx].last_refresh {
+            None => 0,
+            Some(last) => {
+                (last + self.layers[idx].interval).saturating_sub(step)
+            }
+        }
+    }
+
+    /// Record a refresh of layer `idx` at `step` with similarity `sim`
+    /// between the outgoing and incoming projection (pass `None` for the
+    /// first refresh, when there is no previous projection).
+    ///
+    /// Returns the (possibly doubled) interval now in effect.
+    pub fn record_refresh(&mut self, idx: usize, step: u64, sim: Option<f32>) -> u64 {
+        let window = self.cfg.window;
+        let st = &mut self.layers[idx];
+        st.svd_count += 1;
+        st.last_refresh = Some(step);
+        if let Some(s) = sim {
+            st.recent_sims.push(s);
+            if st.recent_sims.len() > window {
+                let excess = st.recent_sims.len() - window;
+                st.recent_sims.drain(..excess);
+            }
+        }
+        if self.cfg.adaptive
+            && st.recent_sims.len() >= window
+            && st.recent_sims.iter().all(|&s| s >= self.cfg.threshold)
+        {
+            st.interval = st.interval.saturating_mul(2);
+            if self.cfg.max_interval > 0 {
+                st.interval = st.interval.min(self.cfg.max_interval);
+            }
+            // converged streak consumed: require a fresh window before the
+            // next doubling
+            st.recent_sims.clear();
+        }
+        st.interval
+    }
+
+    /// Total subspace computations so far (across layers).
+    pub fn total_svd_count(&self) -> u64 {
+        self.layers.iter().map(|l| l.svd_count).sum()
+    }
+
+    /// SVD count a fixed-interval GaLore schedule would have used by `step`
+    /// (for the Figure 7 normalization).
+    pub fn galore_equivalent_count(&self, step: u64) -> u64 {
+        let per_layer = step / self.cfg.base_interval + 1; // refresh at step 0
+        per_layer * self.layers.len() as u64
+    }
+
+    /// Fraction of SVD calls spent vs plain GaLore (Figure 7 x-axis).
+    pub fn svd_fraction(&self, step: u64) -> f64 {
+        self.total_svd_count() as f64 / self.galore_equivalent_count(step) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(adaptive: bool) -> SubspaceScheduler {
+        let names: Vec<String> = (0..3).map(|i| format!("layer{i}")).collect();
+        SubspaceScheduler::new(
+            &names,
+            SchedulerConfig {
+                base_interval: 10,
+                threshold: 0.4,
+                window: 2,
+                adaptive,
+                max_interval: 0,
+            },
+        )
+    }
+
+    #[test]
+    fn first_refresh_always_due() {
+        let s = sched(true);
+        assert!(s.due(0, 0));
+        assert!(s.due(2, 5));
+    }
+
+    #[test]
+    fn due_follows_interval() {
+        let mut s = sched(true);
+        s.record_refresh(0, 0, None);
+        assert!(!s.due(0, 5));
+        assert!(s.due(0, 10));
+    }
+
+    #[test]
+    fn interval_doubles_after_k_similar() {
+        let mut s = sched(true);
+        s.record_refresh(0, 0, None);
+        assert_eq!(s.layer(0).interval, 10);
+        s.record_refresh(0, 10, Some(0.9));
+        assert_eq!(s.layer(0).interval, 10); // one similar: not yet
+        let iv = s.record_refresh(0, 20, Some(0.8));
+        assert_eq!(iv, 20); // two consecutive similar: doubled
+        // streak consumed: needs a fresh window of 2 again
+        s.record_refresh(0, 40, Some(0.95));
+        assert_eq!(s.layer(0).interval, 20);
+        s.record_refresh(0, 60, Some(0.95));
+        assert_eq!(s.layer(0).interval, 40);
+    }
+
+    #[test]
+    fn dissimilar_layer_never_doubles() {
+        let mut s = sched(true);
+        s.record_refresh(1, 0, None);
+        for i in 1..20 {
+            s.record_refresh(1, i * 10, Some(0.1));
+        }
+        assert_eq!(s.layer(1).interval, 10);
+    }
+
+    #[test]
+    fn mixed_window_blocks_doubling() {
+        let mut s = sched(true);
+        s.record_refresh(0, 0, None);
+        s.record_refresh(0, 10, Some(0.9));
+        s.record_refresh(0, 20, Some(0.1)); // breaks the streak
+        assert_eq!(s.layer(0).interval, 10);
+        s.record_refresh(0, 30, Some(0.9));
+        assert_eq!(s.layer(0).interval, 10);
+        s.record_refresh(0, 40, Some(0.9));
+        assert_eq!(s.layer(0).interval, 20);
+    }
+
+    #[test]
+    fn non_adaptive_matches_galore_count() {
+        let mut s = sched(false);
+        let mut step = 0u64;
+        while step <= 100 {
+            for idx in 0..3 {
+                if s.due(idx, step) {
+                    s.record_refresh(idx, step, Some(0.99));
+                }
+            }
+            step += 1;
+        }
+        // refreshes at steps 0,10,...,100 -> 11 per layer
+        assert_eq!(s.total_svd_count(), 33);
+        assert_eq!(s.galore_equivalent_count(100), 33);
+        assert!((s.svd_fraction(100) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adaptive_saves_svd_calls_on_converged_layers() {
+        let mut s = sched(true);
+        let mut step = 0u64;
+        while step <= 1000 {
+            for idx in 0..3 {
+                if s.due(idx, step) {
+                    // layer 0 converges instantly, layer 1 never, layer 2 late
+                    let sim = match idx {
+                        0 => 0.99,
+                        1 => 0.05,
+                        _ => {
+                            if step > 500 {
+                                0.9
+                            } else {
+                                0.1
+                            }
+                        }
+                    };
+                    s.record_refresh(idx, step, Some(sim));
+                }
+            }
+            step += 1;
+        }
+        let frac = s.svd_fraction(1000);
+        assert!(frac < 0.75, "adaptive fraction {frac}");
+        // the early-bird layer used far fewer refreshes than the restless one
+        assert!(s.layer(0).svd_count * 2 < s.layer(1).svd_count);
+    }
+
+    #[test]
+    fn max_interval_caps_growth() {
+        let names = vec!["l".to_string()];
+        let mut s = SubspaceScheduler::new(
+            &names,
+            SchedulerConfig {
+                base_interval: 10,
+                threshold: 0.4,
+                window: 1,
+                adaptive: true,
+                max_interval: 40,
+            },
+        );
+        s.record_refresh(0, 0, None);
+        for i in 1..10 {
+            s.record_refresh(0, i * 100, Some(0.99));
+        }
+        assert_eq!(s.layer(0).interval, 40);
+    }
+
+    #[test]
+    fn intervals_never_shrink() {
+        let mut s = sched(true);
+        s.record_refresh(0, 0, None);
+        let mut prev = s.layer(0).interval;
+        let sims = [0.9, 0.1, 0.9, 0.9, 0.05, 0.9, 0.9, 0.9];
+        for (i, &sim) in sims.iter().enumerate() {
+            s.record_refresh(0, (i as u64 + 1) * 10, Some(sim));
+            let cur = s.layer(0).interval;
+            assert!(cur >= prev);
+            prev = cur;
+        }
+    }
+}

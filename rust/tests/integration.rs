@@ -1,0 +1,371 @@
+//! Integration tests over the real AOT artifacts (`make artifacts` first).
+//!
+//! These exercise the whole stack: manifest -> PJRT runtime -> HLO
+//! executables -> optimizer state threading -> training loops, and
+//! cross-check the HLO kernels against the rust host mirrors.
+
+use qgalore::coordinator::{finetune, pretrain, FinetuneConfig, TrainConfig};
+use qgalore::manifest::Manifest;
+use qgalore::model::tiny_config;
+use qgalore::optim::{BuildOptions, Method};
+use qgalore::quant;
+use qgalore::runtime::{HostTensor, Runtime};
+use qgalore::scheduler::SchedulerConfig;
+use qgalore::util::Pcg32;
+
+const CFG: &str = "llama-tiny";
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts` first): {e}");
+            None
+        }
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match manifest() {
+            Some(m) => m,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn manifest_matches_model_abi() {
+    let man = require_artifacts!();
+    let entry = man.config(CFG).unwrap();
+    let model = tiny_config(CFG).unwrap();
+    let fp: Vec<(String, Vec<usize>)> = model
+        .fp_params()
+        .into_iter()
+        .map(|p| (p.name, p.shape))
+        .collect();
+    let lin: Vec<(String, Vec<usize>)> = model
+        .linear_params()
+        .into_iter()
+        .map(|p| (p.name, p.shape))
+        .collect();
+    assert_eq!(entry.fp_params, fp, "fp param ABI drift between python and rust");
+    assert_eq!(entry.linear_params, lin, "linear param ABI drift");
+    assert_eq!(entry.model.rank, model.rank);
+    // init checkpoint covers exactly the ABI
+    let total: usize = fp
+        .iter()
+        .chain(lin.iter())
+        .map(|(_, s)| s.iter().product::<usize>())
+        .sum();
+    assert_eq!(entry.init_numel, total);
+}
+
+#[test]
+fn eval_fwd_on_init_is_near_uniform() {
+    let man = require_artifacts!();
+    let entry = man.config(CFG).unwrap();
+    let init = man.load_init(CFG).unwrap();
+    let mut rt = Runtime::new().unwrap();
+    let eval = entry.artifacts.get("eval_fwd_fp").unwrap();
+    let mut ops = Vec::new();
+    let mut off = 0;
+    for (_, shape) in entry.fp_params.iter().chain(entry.linear_params.iter()) {
+        let n: usize = shape.iter().product();
+        ops.push(HostTensor::F32(init[off..off + n].to_vec()));
+        off += n;
+    }
+    let b = man.batch;
+    let s = entry.model.max_seq_len;
+    let mut rng = Pcg32::seeded(0);
+    let toks: Vec<i32> =
+        (0..b * s).map(|_| rng.below(entry.model.vocab_size) as i32).collect();
+    let targs: Vec<i32> =
+        (0..b * s).map(|_| rng.below(entry.model.vocab_size) as i32).collect();
+    ops.push(HostTensor::I32(toks));
+    ops.push(HostTensor::I32(targs));
+    let outs = rt.execute(eval, &ops).unwrap();
+    let loss = outs[0].scalar_f32().unwrap();
+    let uniform = (entry.model.vocab_size as f32).ln();
+    assert!((loss - uniform).abs() < 0.6, "init loss {loss} vs ln|V| {uniform}");
+}
+
+#[test]
+fn fwd_bwd_loss_matches_eval_loss() {
+    let man = require_artifacts!();
+    let entry = man.config(CFG).unwrap();
+    let init = man.load_init(CFG).unwrap();
+    let mut rt = Runtime::new().unwrap();
+    let mut ops = Vec::new();
+    let mut off = 0;
+    for (_, shape) in entry.fp_params.iter().chain(entry.linear_params.iter()) {
+        let n: usize = shape.iter().product();
+        ops.push(HostTensor::F32(init[off..off + n].to_vec()));
+        off += n;
+    }
+    let b = man.batch;
+    let s = entry.model.max_seq_len;
+    let mut rng = Pcg32::seeded(1);
+    ops.push(HostTensor::I32(
+        (0..b * s).map(|_| rng.below(entry.model.vocab_size) as i32).collect(),
+    ));
+    ops.push(HostTensor::I32(
+        (0..b * s).map(|_| rng.below(entry.model.vocab_size) as i32).collect(),
+    ));
+    let eval_loss = rt
+        .execute(entry.artifacts.get("eval_fwd_fp").unwrap(), &ops)
+        .unwrap()[0]
+        .scalar_f32()
+        .unwrap();
+    let outs = rt
+        .execute(entry.artifacts.get("fwd_bwd_fp").unwrap(), &ops)
+        .unwrap();
+    let fwd_loss = outs[0].scalar_f32().unwrap();
+    assert!((eval_loss - fwd_loss).abs() < 1e-4, "{eval_loss} vs {fwd_loss}");
+    // gradients present and finite
+    assert_eq!(outs.len(), 1 + entry.fp_params.len() + entry.linear_params.len());
+    for g in &outs[1..] {
+        assert!(g.as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn adam8bit_artifact_matches_host_mirror() {
+    let man = require_artifacts!();
+    let mut rt = Runtime::new().unwrap();
+    let numel = 1024usize;
+    let spec = man.update(&format!("adam8bit_step_{numel}")).unwrap();
+    let mut rng = Pcg32::seeded(2);
+    let g = rng.normal_vec(numel, 0.0, 0.3);
+    let w = rng.normal_vec(numel, 0.0, 1.0);
+    let mut host_state = quant::Adam8State::zeros(numel);
+    let (c1, c2) = (10.0f32, 1000.0f32);
+    let lr = 0.01f32;
+
+    let outs = rt
+        .execute(
+            spec,
+            &[
+                HostTensor::F32(g.clone()),
+                HostTensor::I8(host_state.mq.clone()),
+                HostTensor::F32(host_state.ms.clone()),
+                HostTensor::U8(host_state.vq.clone()),
+                HostTensor::F32(host_state.vs.clone()),
+                HostTensor::F32(w.clone()),
+                HostTensor::F32(vec![c1, c2]),
+                HostTensor::F32(vec![lr]),
+            ],
+        )
+        .unwrap();
+    let w_hlo = outs[0].as_f32().unwrap();
+    let up_host =
+        quant::adam8_step_host(&g, &mut host_state, c1, c2, 0.9, 0.999, 1e-8);
+    for i in 0..numel {
+        let w_host = w[i] - lr * up_host[i];
+        assert!(
+            (w_hlo[i] - w_host).abs() < 1e-4,
+            "i={i}: hlo {} host {}",
+            w_hlo[i],
+            w_host
+        );
+    }
+    // requantized moment codes agree within one code (sqrt-map rounding ulp)
+    let mq_hlo = outs[1].as_i8().unwrap();
+    for i in 0..numel {
+        assert!((mq_hlo[i] as i16 - host_state.mq[i] as i16).abs() <= 1);
+    }
+}
+
+#[test]
+fn qgalore_update_with_zero_lr_preserves_weights() {
+    let man = require_artifacts!();
+    let model = tiny_config(CFG).unwrap();
+    let (m, n, r) = (model.dim, model.dim, model.rank);
+    let spec = man.update(&format!("qgalore_update_{m}x{n}_r{r}")).unwrap();
+    let mut rt = Runtime::new().unwrap();
+    let mut rng = Pcg32::seeded(3);
+    let w = rng.normal_vec(m * n, 0.0, 0.5);
+    let wq = quant::quantize(&w, 8);
+    let p = rng.normal_vec(m * r, 0.0, 0.1);
+    let p4 = quant::quantize4(&p);
+    let st = quant::Adam8State::zeros(r * n);
+    let g = rng.normal_vec(m * n, 0.0, 1.0);
+    let outs = rt
+        .execute(
+            spec,
+            &[
+                HostTensor::F32(g),
+                HostTensor::U8(p4.packed),
+                HostTensor::F32(p4.scale),
+                HostTensor::F32(p4.zero),
+                HostTensor::I8(st.mq),
+                HostTensor::F32(st.ms),
+                HostTensor::U8(st.vq),
+                HostTensor::F32(st.vs),
+                HostTensor::I8(wq.q.clone()),
+                HostTensor::F32(wq.scale.clone()),
+                HostTensor::F32(wq.zero.clone()),
+                HostTensor::F32(vec![10.0, 1000.0]),
+                HostTensor::F32(vec![0.0]), // lr = 0
+                HostTensor::F32({
+                    let mut nr = Pcg32::seeded(7);
+                    (0..m * n).map(|_| nr.next_f32()).collect()
+                }),
+            ],
+        )
+        .unwrap();
+    // with lr = 0 the only change is the SR requantization round-trip:
+    // dequantized weights must agree within one quantization step.
+    let wq2 = quant::QuantTensor {
+        q: outs[0].as_i8().unwrap().to_vec(),
+        scale: outs[1].as_f32().unwrap().to_vec(),
+        zero: outs[2].as_f32().unwrap().to_vec(),
+        bits: 8,
+        block: wq.block,
+    };
+    let w_after = quant::dequantize(&wq2);
+    let w_before = quant::dequantize(&wq);
+    for (bi, (a, b)) in w_after
+        .chunks(wq.block)
+        .zip(w_before.chunks(wq.block))
+        .enumerate()
+    {
+        let tol = wq.scale[bi] * 1.5 + 1e-5;
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= tol, "block {bi}: {x} vs {y} tol {tol}");
+        }
+    }
+}
+
+#[test]
+fn qgalore_training_reduces_loss() {
+    let man = require_artifacts!();
+    let r = pretrain(
+        &man,
+        TrainConfig {
+            cfg_name: CFG.into(),
+            method: Method::QGaLore,
+            steps: 40,
+            lr_max: 0.01,
+            warmup: 4,
+            eval_every: 0,
+            eval_batches: 4,
+            n_documents: 256,
+            seed: 5,
+            opts: BuildOptions {
+                seed: 5,
+                sched: SchedulerConfig { base_interval: 8, ..Default::default() },
+                ..Default::default()
+            },
+            log_every: 40,
+            quiet: true,
+        },
+    )
+    .unwrap();
+    let uniform = (tiny_config(CFG).unwrap().vocab_size as f32).ln();
+    assert!(
+        r.final_val_loss < uniform - 0.8,
+        "val loss {} did not drop from {uniform}",
+        r.final_val_loss
+    );
+    // lazy scheduler must have saved SVD calls vs the fixed schedule
+    assert!(r.svd_count > 0);
+    assert!(r.svd_fraction <= 1.0 + 1e-9);
+    // export round-trips through the ABI
+    let entry = man.config(CFG).unwrap();
+    assert_eq!(r.final_params.len(), entry.init_numel);
+}
+
+#[test]
+fn all_methods_take_training_steps() {
+    let man = require_artifacts!();
+    for method in Method::ALL {
+        let r = pretrain(
+            &man,
+            TrainConfig {
+                cfg_name: CFG.into(),
+                method,
+                steps: 4,
+                lr_max: 0.005,
+                warmup: 1,
+                eval_every: 0,
+                eval_batches: 2,
+                n_documents: 128,
+                seed: 6,
+                opts: BuildOptions {
+                    seed: 6,
+                    sched: SchedulerConfig { base_interval: 2, ..Default::default() },
+                    relora_merge_every: 2,
+                    ..Default::default()
+                },
+                log_every: 10,
+                quiet: true,
+            },
+        )
+        .unwrap_or_else(|e| panic!("{method} failed: {e}"));
+        assert!(r.final_val_loss.is_finite(), "{method}");
+        assert!(r.live_bytes > 0, "{method}");
+    }
+}
+
+#[test]
+fn finetune_beats_chance() {
+    let man = require_artifacts!();
+    // brief base pretrain, then a quick 2-way fine-tune: accuracy must beat
+    // the 50% chance level with margin
+    let base = pretrain(
+        &man,
+        TrainConfig {
+            cfg_name: CFG.into(),
+            method: Method::Full,
+            steps: 60,
+            lr_max: 0.01,
+            warmup: 6,
+            eval_every: 0,
+            eval_batches: 2,
+            n_documents: 256,
+            seed: 7,
+            opts: BuildOptions::default(),
+            log_every: 100,
+            quiet: true,
+        },
+    )
+    .unwrap();
+    let r = finetune(
+        &man,
+        FinetuneConfig {
+            cfg_name: CFG.into(),
+            method: Method::QGaLore,
+            n_labels: 2,
+            steps: 200,
+            lr: 0.01,
+            seed: 7,
+            task_salt: 99,
+            n_eval_examples: 30,
+            opts: BuildOptions {
+                seed: 7,
+                sched: SchedulerConfig { base_interval: 20, ..Default::default() },
+                ..Default::default()
+            },
+            quiet: true,
+        },
+        &base.final_params,
+    )
+    .unwrap();
+    assert!(r.accuracy > 0.65, "accuracy {} not above chance", r.accuracy);
+}
+
+#[test]
+fn sr_ablation_rtn_artifact_differs() {
+    let man = require_artifacts!();
+    // both variants exist per unique layer shape
+    let model = tiny_config(CFG).unwrap();
+    for (m, n) in model.unique_linear_dims() {
+        assert!(man
+            .update(&format!("qgalore_update_{m}x{n}_r{}", model.rank))
+            .is_ok());
+        assert!(man
+            .update(&format!("qgalore_rtn_update_{m}x{n}_r{}", model.rank))
+            .is_ok());
+    }
+}

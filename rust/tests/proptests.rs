@@ -1,0 +1,279 @@
+//! Property-based tests over the substrates.
+//!
+//! The offline dependency budget has no proptest crate, so this file uses a
+//! small in-tree harness: `cases(n, seed, f)` runs `f` over n seeded random
+//! cases and reports the failing case's seed on panic — the shrinking is
+//! manual (re-run the printed case seed) but the coverage is the same idea:
+//! each property is checked across hundreds of randomized inputs.
+
+use qgalore::data::{Batcher, Tokenizer};
+use qgalore::jsonx::Json;
+use qgalore::linalg::{left_subspace, qr_orthonormal, subspace_cosine, subspace_overlap, Mat};
+use qgalore::quant;
+use qgalore::scheduler::{SchedulerConfig, SubspaceScheduler};
+use qgalore::util::Pcg32;
+
+/// Run `f` over `n` seeded cases; panics identify the case seed.
+fn cases(n: u64, seed: u64, f: impl Fn(&mut Pcg32, u64)) {
+    for i in 0..n {
+        let case_seed = seed.wrapping_mul(1_000_003).wrapping_add(i);
+        let mut rng = Pcg32::seeded(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng, case_seed)
+        }));
+        if let Err(e) = result {
+            panic!("property failed on case seed {case_seed}: {e:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// quantization properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quant_roundtrip_error_bounded() {
+    cases(200, 1, |rng, _| {
+        let bits = [8u32, 4, 2][rng.below(3)];
+        let nblocks = 1 + rng.below(6);
+        let scale = 10f32.powf(rng.next_f32() * 6.0 - 3.0); // 1e-3 .. 1e3
+        let x = rng.normal_vec(nblocks * 256, 0.0, scale);
+        let t = quant::quantize(&x, bits);
+        let xh = quant::dequantize(&t);
+        for (bi, (xb, hb)) in x.chunks(256).zip(xh.chunks(256)).enumerate() {
+            let bound = t.scale[bi] * 0.5 + t.scale[bi] * 1e-3;
+            for (a, b) in xb.iter().zip(hb) {
+                assert!((a - b).abs() <= bound);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_int4_pack_unpack_identity() {
+    cases(200, 2, |rng, _| {
+        let n = 2 * (1 + rng.below(512));
+        let codes: Vec<i8> = (0..n).map(|_| (rng.below(16) as i8) - 8).collect();
+        assert_eq!(quant::unpack_int4(&quant::pack_int4(&codes)), codes);
+    });
+}
+
+#[test]
+fn prop_sr_expectation_unbiased() {
+    cases(20, 3, |rng, _| {
+        let x = rng.normal_vec(256, 0.0, 1.0);
+        let mut acc = vec![0f64; 256];
+        let trials = 300;
+        let mut scale0 = 0.0f32;
+        for _ in 0..trials {
+            let t = quant::sr_quantize(&x, 8, rng);
+            scale0 = t.scale[0];
+            for (a, v) in acc.iter_mut().zip(quant::dequantize(&t)) {
+                *a += v as f64;
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            let mean = (*a / trials as f64) as f32;
+            assert!((mean - x[i]).abs() < scale0 * 0.6, "i={i}");
+        }
+    });
+}
+
+#[test]
+fn prop_quant_codes_within_bit_range() {
+    cases(200, 4, |rng, _| {
+        let bits = [8u32, 4, 2][rng.below(3)];
+        let nb = 1 + rng.below(4);
+        let x = rng.normal_vec(256 * nb, 0.0, 5.0);
+        let t = quant::quantize(&x, bits);
+        let lim = 1i16 << (bits - 1);
+        assert!(t.q.iter().all(|&c| (c as i16) >= -lim && (c as i16) < lim));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// linalg properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_qr_orthonormal_and_span_preserving() {
+    cases(60, 5, |rng, _| {
+        let m = 8 + rng.below(56);
+        let r = 1 + rng.below(8.min(m));
+        let a = Mat::randn(m, r, rng);
+        let q = qr_orthonormal(&a);
+        let gram = q.t_matmul(&q);
+        for i in 0..r {
+            for j in 0..r {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((gram.at(i, j) - want).abs() < 2e-3);
+            }
+        }
+        let proj = q.matmul(&q.t_matmul(&a));
+        assert!(proj.sub(&a).frobenius() / a.frobenius().max(1e-6) < 1e-3);
+    });
+}
+
+#[test]
+fn prop_subspace_iteration_recovers_planted_rank() {
+    cases(40, 6, |rng, _| {
+        let m = 16 + rng.below(48);
+        let n = 16 + rng.below(48);
+        let r = 1 + rng.below(4);
+        let u_true = qr_orthonormal(&Mat::randn(m, r, rng));
+        let v = Mat::randn(r, n, rng);
+        let g = u_true.matmul(&v);
+        let q = left_subspace(&g, r, 2, rng);
+        assert!(subspace_overlap(&u_true, &q) > 0.99);
+    });
+}
+
+#[test]
+fn prop_cosine_bounded_and_reflexive() {
+    cases(60, 7, |rng, _| {
+        let m = 8 + rng.below(56);
+        let r = 1 + rng.below(8.min(m));
+        let a = qr_orthonormal(&Mat::randn(m, r, rng));
+        let b = qr_orthonormal(&Mat::randn(m, r, rng));
+        let s = subspace_cosine(&a, &b);
+        assert!((0.0..=1.0 + 1e-5).contains(&s));
+        assert!((subspace_cosine(&a, &a) - 1.0).abs() < 1e-4);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// json properties
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Pcg32, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.next_f32() * 2000.0 - 1000.0) as f64),
+        3 => Json::Str(
+            (0..rng.below(12))
+                .map(|_| char::from(b'a' + rng.below(26) as u8))
+                .collect(),
+        ),
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    cases(300, 8, |rng, _| {
+        let v = random_json(rng, 3);
+        let parsed = Json::parse(&v.dump()).expect("roundtrip parse");
+        // floats survive via shortest-representation printing
+        assert_eq!(parsed.dump(), v.dump());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// data pipeline properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tokenizer_roundtrip_lossless() {
+    cases(100, 9, |rng, _| {
+        let words = ["alpha", "beta", "gamma", "zz9", "Qx", "longish-token"];
+        let text: String = (0..1 + rng.below(20))
+            .map(|_| words[rng.below(words.len())])
+            .collect::<Vec<_>>()
+            .join(" ");
+        let docs = vec!["alpha beta alpha gamma".to_string()];
+        let tok = Tokenizer::train(&docs, 400);
+        assert_eq!(tok.decode(&tok.encode(&text)), text);
+    });
+}
+
+#[test]
+fn prop_batcher_every_epoch_is_a_permutation() {
+    cases(60, 10, |rng, _| {
+        let seq = 4 + rng.below(12);
+        let n_windows = 4 + rng.below(20);
+        let ids: Vec<u32> = (0..(seq * n_windows + 1) as u32).collect();
+        let batch = 1 + rng.below(n_windows.min(4));
+        let mut b = Batcher::new(ids, batch, seq, rng.next_u64());
+        let per_epoch = b.n_windows() / batch;
+        for _epoch in 0..3 {
+            let mut starts = Vec::new();
+            for _ in 0..per_epoch {
+                let bt = b.next();
+                for row in 0..batch {
+                    starts.push(bt.tokens[row * seq] as usize);
+                }
+            }
+            starts.sort_unstable();
+            starts.dedup();
+            assert_eq!(starts.len(), per_epoch * batch, "windows repeated in epoch");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// scheduler properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_intervals_monotone_and_count_bounded() {
+    cases(120, 11, |rng, _| {
+        let layers: Vec<String> = (0..1 + rng.below(6)).map(|i| format!("l{i}")).collect();
+        let base = 1 + rng.below(20) as u64;
+        let mut s = SubspaceScheduler::new(
+            &layers,
+            SchedulerConfig {
+                base_interval: base,
+                threshold: rng.next_f32(),
+                window: 1 + rng.below(3),
+                adaptive: true,
+                max_interval: 0,
+            },
+        );
+        let horizon = base * 40;
+        let mut prev: Vec<u64> = vec![0; layers.len()];
+        for step in 0..horizon {
+            for idx in 0..layers.len() {
+                if s.due(idx, step) {
+                    let iv = s.record_refresh(idx, step, Some(rng.next_f32()));
+                    assert!(iv >= prev[idx], "interval shrank");
+                    prev[idx] = iv;
+                }
+            }
+        }
+        // the adaptive scheduler can never do MORE svds than fixed GaLore
+        assert!(s.total_svd_count() <= s.galore_equivalent_count(horizon));
+    });
+}
+
+#[test]
+fn prop_scheduler_non_adaptive_matches_fixed_schedule() {
+    cases(60, 12, |rng, _| {
+        let base = 1 + rng.below(15) as u64;
+        let layers = vec!["a".to_string(), "b".to_string()];
+        let mut s = SubspaceScheduler::new(
+            &layers,
+            SchedulerConfig {
+                base_interval: base,
+                threshold: 0.4,
+                window: 2,
+                adaptive: false,
+                max_interval: 0,
+            },
+        );
+        let horizon = base * (5 + rng.below(20) as u64);
+        for step in 0..=horizon {
+            for idx in 0..2 {
+                if s.due(idx, step) {
+                    s.record_refresh(idx, step, Some(rng.next_f32()));
+                }
+            }
+        }
+        assert_eq!(s.total_svd_count(), s.galore_equivalent_count(horizon));
+    });
+}
