@@ -1,14 +1,23 @@
-//! End-to-end throughput benchmarks against the AOT artifacts — the §4.3
-//! measurement: what does Q-GaLore's quantize/dequantize traffic cost per
-//! step relative to GaLore?  (The paper reports a 14.64% throughput
+//! End-to-end throughput benchmarks.
+//!
+//! Part 1 (no artifacts needed): the blocked/parallel linalg engine vs the
+//! naive single-threaded reference — GFLOP/s, speedup and parity for the
+//! projection-shaped products on the Q-GaLore hot path.
+//!
+//! Part 2 (requires `make artifacts`): the §4.3 measurement against the AOT
+//! HLO artifacts — what does Q-GaLore's quantize/dequantize traffic cost
+//! per step relative to GaLore? (The paper reports a 14.64% throughput
 //! overhead on GPU.)
 //!
-//! Run: `make artifacts && cargo bench --bench throughput`
+//! Run: `cargo bench --bench throughput` (part 1 always runs)
 
 mod bench_harness;
 
-use bench_harness::bench;
-use qgalore::coordinator::trainer::{Trainer, TrainConfig};
+use std::hint::black_box;
+
+use bench_harness::{bench, BenchResult};
+use qgalore::coordinator::trainer::{TrainConfig, Trainer};
+use qgalore::linalg::{Mat, ParallelCtx};
 use qgalore::manifest::Manifest;
 use qgalore::optim::{BuildOptions, Method};
 use qgalore::quant;
@@ -18,16 +27,119 @@ use qgalore::util::Pcg32;
 
 const CFG: &str = "llama-tiny";
 
+fn gflops(flops: usize, r: &BenchResult) -> f64 {
+    flops as f64 / (r.mean_ms / 1e3) / 1e9
+}
+
+/// Old-vs-new engine comparison on the shapes that dominate Q-GaLore steps.
+fn engine_benches() {
+    println!("== linalg engine: blocked/parallel vs naive ==");
+    let mut rng = Pcg32::seeded(0);
+
+    // The acceptance shape: 512x512x512 dense matmul.
+    let (m, k, n) = (512usize, 512usize, 512usize);
+    let a = Mat::randn(m, k, &mut rng);
+    let b = Mat::randn(k, n, &mut rng);
+    let flops = 2 * m * k * n;
+    let r_naive = bench("matmul 512x512x512 naive (old)", 1, 5, || {
+        black_box(a.matmul_naive(&b));
+    });
+    println!("    -> {:.2} GFLOP/s (baseline)", gflops(flops, &r_naive));
+    let want = a.matmul_naive(&b);
+    for t in [1usize, 2, 4, 8] {
+        let ctx = ParallelCtx::new(t);
+        let r = bench(&format!("matmul 512x512x512 blocked, {t} threads"), 1, 5, || {
+            black_box(a.matmul_with(&b, ctx));
+        });
+        let err = a.matmul_with(&b, ctx).rel_frobenius(&want);
+        println!(
+            "    -> {:.2} GFLOP/s | {:.2}x vs naive | parity rel-frobenius {:.1e}",
+            gflops(flops, &r),
+            r_naive.mean_ms / r.mean_ms,
+            err
+        );
+    }
+
+    // t_matmul at the same scale (the P^T G down-projection shape class).
+    let r_tn = bench("t_matmul 512x512x512 naive (old)", 1, 5, || {
+        black_box(a.t_matmul_naive(&b));
+    });
+    let want_t = a.t_matmul_naive(&b);
+    for t in [1usize, 8] {
+        let ctx = ParallelCtx::new(t);
+        let r = bench(&format!("t_matmul 512x512x512 blocked, {t} threads"), 1, 5, || {
+            black_box(a.t_matmul_with(&b, ctx));
+        });
+        let err = a.t_matmul_with(&b, ctx).rel_frobenius(&want_t);
+        println!(
+            "    -> {:.2} GFLOP/s | {:.2}x vs naive | parity rel-frobenius {:.1e}",
+            gflops(flops, &r),
+            r_tn.mean_ms / r.mean_ms,
+            err
+        );
+    }
+
+    // The per-step projected update at a 512-dim / rank-128 layer:
+    // R = P^T G (INT4 P), then U = P R. Old path dequantizes P to fp32 and
+    // runs the naive kernels; new path runs fused + parallel.
+    println!("\n== Q-GaLore projected-update hot path (dim 512, rank 128) ==");
+    let rank = 128usize;
+    let g = Mat::randn(m, n, &mut rng);
+    let p4 = quant::quantize4(&rng.normal_vec(m * rank, 0.0, 0.1));
+    let flops_step = 2 * m * rank * n + 2 * m * rank * n;
+    let r_old = bench("old: dequantize4 + naive P^T G + naive P R", 1, 5, || {
+        let p = Mat::from_vec(m, rank, quant::dequantize4(&p4));
+        let r = p.t_matmul_naive(&g);
+        black_box(p.matmul_naive(&r));
+    });
+    println!("    -> {:.2} GFLOP/s per step (old)", gflops(flops_step, &r_old));
+    for t in [1usize, 8] {
+        let ctx = ParallelCtx::new(t);
+        let r_new = bench(&format!("new: fused dequant4 engine, {t} threads"), 1, 5, || {
+            let r = quant::dequant4_t_matmul(&p4, m, rank, &g, ctx);
+            black_box(quant::dequant4_matmul(&p4, m, rank, &r, ctx));
+        });
+        println!(
+            "    -> {:.2} GFLOP/s | per-step latency {:.3} ms (old {:.3} ms) | {:.2}x",
+            gflops(flops_step, &r_new),
+            r_new.mean_ms,
+            r_old.mean_ms,
+            r_old.mean_ms / r_new.mean_ms
+        );
+    }
+
+    // Fused INT8-weight application W x (the forward shape class).
+    let w8 = quant::quantize(&rng.normal_vec(m * k, 0.0, 0.5), 8);
+    let x = Mat::randn(k, 64, &mut rng);
+    let flops_wx = 2 * m * k * 64;
+    let r_old8 = bench("old: dequantize int8 W + naive W x", 1, 8, || {
+        let w = Mat::from_vec(m, k, quant::dequantize(&w8));
+        black_box(w.matmul_naive(&x));
+    });
+    let ctx = ParallelCtx::new(8);
+    let r_new8 = bench("new: fused dequant8_matmul, 8 threads", 1, 8, || {
+        black_box(quant::dequant8_matmul(&w8, m, k, &x, ctx));
+    });
+    println!(
+        "    -> int8 W x: {:.2} -> {:.2} GFLOP/s ({:.2}x, no fp32 W materialized)",
+        gflops(flops_wx, &r_old8),
+        gflops(flops_wx, &r_new8),
+        r_old8.mean_ms / r_new8.mean_ms
+    );
+}
+
 fn main() {
+    engine_benches();
+
     let man = match Manifest::load("artifacts") {
         Ok(m) => m,
         Err(e) => {
-            eprintln!("SKIP benches (run `make artifacts` first): {e}");
+            eprintln!("\nSKIP artifact benches (run `make artifacts` first): {e}");
             return;
         }
     };
 
-    println!("== model fwd/bwd artifacts ==");
+    println!("\n== model fwd/bwd artifacts ==");
     let entry = man.config(CFG).unwrap().clone();
     let init = man.load_init(CFG).unwrap();
     let mut rt = Runtime::new().unwrap();
@@ -70,10 +182,10 @@ fn main() {
     let fwd_fp = entry.artifacts.get("fwd_bwd_fp").unwrap().clone();
     let fwd_q8 = entry.artifacts.get("fwd_bwd_q8").unwrap().clone();
     let r_fp = bench("fwd_bwd_fp (batch 4 x seq 64)", 3, 20, || {
-        std::hint::black_box(rt.execute(&fwd_fp, &fp_ops).unwrap());
+        black_box(rt.execute(&fwd_fp, &fp_ops).unwrap());
     });
     let r_q8 = bench("fwd_bwd_q8 (int8 weights)", 3, 20, || {
-        std::hint::black_box(rt.execute(&fwd_q8, &q8_ops).unwrap());
+        black_box(rt.execute(&fwd_q8, &q8_ops).unwrap());
     });
     println!(
         "    -> int8-weight fwd/bwd overhead vs fp: {:+.1}%",
@@ -101,7 +213,7 @@ fn main() {
         lr.clone(),
     ];
     let r_galore = bench(&format!("galore_update {m}x{n} r{rank}"), 3, 30, || {
-        std::hint::black_box(rt.execute(&galore_spec, &galore_ops).unwrap());
+        black_box(rt.execute(&galore_spec, &galore_ops).unwrap());
     });
 
     let q4 = quant::quantize4(&p);
@@ -128,7 +240,7 @@ fn main() {
         }),
     ];
     let r_qgalore = bench(&format!("qgalore_update {m}x{n} r{rank}"), 3, 30, || {
-        std::hint::black_box(rt.execute(&qgalore_spec, &qgalore_ops).unwrap());
+        black_box(rt.execute(&qgalore_spec, &qgalore_ops).unwrap());
     });
     println!(
         "    -> Q-GaLore update overhead vs GaLore (quant/dequant+SR traffic): {:+.1}% (paper: +14.6%)",
@@ -141,7 +253,7 @@ fn main() {
         .clone();
     let rtn_ops = &qgalore_ops[..qgalore_ops.len() - 1]; // no noise operand
     let r_rtn = bench(&format!("qgalore_rtn_update {m}x{n} r{rank}"), 3, 30, || {
-        std::hint::black_box(rt.execute(&rtn_spec, rtn_ops).unwrap());
+        black_box(rt.execute(&rtn_spec, rtn_ops).unwrap());
     });
     println!(
         "    -> of which SR noise generation: {:+.1}% points",

@@ -1,0 +1,321 @@
+//! Parallel cache-blocked matmul engine — the hot path under every
+//! Q-GaLore projection (`P^T g`, `P u`) and subspace refresh.
+//!
+//! Design (no external deps, std scoped threads only):
+//!
+//! * Work splits over **row panels** of the output; each worker owns a
+//!   disjoint `&mut` slab, so the parallelism is safe-Rust with zero
+//!   synchronization on the accumulation path.
+//! * Within a panel the kernel is k-blocked (`KC`-sized stripes of B stay
+//!   hot in cache while the panel's rows stream over them) with the same
+//!   ascending-k accumulation order as the naive reference, so blocked and
+//!   naive results are **bitwise identical** — parity tests assert a
+//!   1e-5 rel-Frobenius bound but the engine in fact meets 0.
+//! * `t_matmul` first transposes its per-worker column panel into a dense
+//!   row-major scratch (a few KB) and then reuses the same kernel: the
+//!   strided column walk happens once per panel instead of once per fma.
+//!
+//! Thread count comes from [`ParallelCtx`]: explicit per-call, or the
+//! process-global default (CLI `--threads` / `QGALORE_THREADS` env /
+//! `available_parallelism`). Small problems (< [`PAR_MIN_FLOPS`] fma) run
+//! serially — spawn cost would dominate.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::Mat;
+
+/// k-stripe width: `KC` rows of B (KC * n * 4 bytes) form the resident
+/// cache block each panel row streams against.
+const KC: usize = 256;
+
+/// Problems below this many fma ops (m*k*n) stay on the calling thread.
+pub const PAR_MIN_FLOPS: usize = 1 << 20;
+
+/// Buffer-cloning fan-outs (operand marshalling) below this many total
+/// elements stay serial — spawn cost would exceed the memcpy.
+pub const PAR_MIN_CLONE_ELEMS: usize = 1 << 20;
+
+/// Process-global default thread count (0 = not yet resolved).
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the global default (CLI `--threads`). Values are clamped to 1+.
+pub fn set_global_threads(n: usize) {
+    GLOBAL_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+fn detect_threads() -> usize {
+    if let Ok(s) = std::env::var("QGALORE_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The global default thread count (resolving it on first use).
+pub fn global_threads() -> usize {
+    match GLOBAL_THREADS.load(Ordering::Relaxed) {
+        0 => {
+            let n = detect_threads();
+            // racing first-callers agree on detect()'s value; an explicit
+            // set_global_threads always wins afterwards
+            let _ = GLOBAL_THREADS.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed);
+            n
+        }
+        n => n,
+    }
+}
+
+/// Parallelism context threaded through the optimizer stack: how many
+/// worker threads a linalg call may use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelCtx {
+    pub threads: usize,
+}
+
+impl ParallelCtx {
+    /// Exactly one thread (reference semantics, no spawns).
+    pub fn serial() -> Self {
+        ParallelCtx { threads: 1 }
+    }
+
+    pub fn new(threads: usize) -> Self {
+        ParallelCtx { threads: threads.max(1) }
+    }
+
+    /// The process-global default (CLI/env/hardware).
+    pub fn global() -> Self {
+        ParallelCtx { threads: global_threads() }
+    }
+}
+
+impl Default for ParallelCtx {
+    fn default() -> Self {
+        ParallelCtx::global()
+    }
+}
+
+/// Gate a buffer-cloning fan-out: serial below [`PAR_MIN_CLONE_ELEMS`]
+/// total elements (spawn cost would exceed the memcpy), else `pool`.
+pub fn clone_pool(total_elems: usize, pool: ParallelCtx) -> ParallelCtx {
+    if total_elems < PAR_MIN_CLONE_ELEMS {
+        ParallelCtx::serial()
+    } else {
+        pool
+    }
+}
+
+/// Run `body(r0, r1, slab)` over disjoint row panels of a freshly zeroed
+/// (rows, cols) row-major buffer, splitting panels across `ctx.threads`
+/// scoped workers. `slab` covers exactly rows `r0..r1`.
+pub fn par_rows<F>(ctx: ParallelCtx, rows: usize, cols: usize, body: F) -> Vec<f32>
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let mut out = vec![0f32; rows * cols];
+    if rows == 0 || cols == 0 {
+        return out;
+    }
+    let t = ctx.threads.clamp(1, rows);
+    if t <= 1 {
+        body(0, rows, &mut out);
+        return out;
+    }
+    let chunk = rows.div_ceil(t);
+    std::thread::scope(|s| {
+        for (ti, slab) in out.chunks_mut(chunk * cols).enumerate() {
+            let body = &body;
+            let r0 = ti * chunk;
+            let r1 = (r0 + chunk).min(rows);
+            s.spawn(move || body(r0, r1, slab));
+        }
+    });
+    out
+}
+
+/// Map `f` over `items` with up to `ctx.threads` scoped workers, preserving
+/// order. Used to step independent layers / tensors concurrently.
+pub fn par_map<T, U, F>(ctx: ParallelCtx, items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    if ctx.threads <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let t = ctx.threads.min(items.len());
+    let chunk = items.len().div_ceil(t);
+    let mut out: Vec<Option<U>> = (0..items.len()).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (islab, oslab) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            let f = &f;
+            s.spawn(move || {
+                for (i, o) in islab.iter().zip(oslab.iter_mut()) {
+                    *o = Some(f(i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map worker filled every slot")).collect()
+}
+
+/// Inner kernel: `out (rows, n) += panel (rows, k) @ b (k, n)`, k-blocked.
+/// Accumulation over k is strictly ascending per output element — the same
+/// order as the naive reference, so results match it bitwise.
+pub(crate) fn panel_matmul(panel: &[f32], rows: usize, k: usize, b: &Mat, out: &mut [f32]) {
+    let n = b.cols;
+    let mut kb = 0;
+    while kb < k {
+        let kend = (kb + KC).min(k);
+        for i in 0..rows {
+            let arow = &panel[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        kb = kend;
+    }
+}
+
+/// Clamp `ctx` to serial when the m*k*n fma count is below
+/// [`PAR_MIN_FLOPS`] (shared policy for the dense and fused-dequant paths).
+pub(crate) fn effective(ctx: ParallelCtx, m: usize, k: usize, n: usize) -> ParallelCtx {
+    if m.saturating_mul(k).saturating_mul(n) < PAR_MIN_FLOPS {
+        ParallelCtx::serial()
+    } else {
+        ctx
+    }
+}
+
+/// `a (m, k) @ b (k, n) -> (m, n)`, parallel over row panels of the output.
+pub fn matmul(a: &Mat, b: &Mat, ctx: ParallelCtx) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let ctx = effective(ctx, m, k, n);
+    let data = par_rows(ctx, m, n, |r0, r1, out| {
+        panel_matmul(&a.data[r0 * k..r1 * k], r1 - r0, k, b, out);
+    });
+    Mat { rows: m, cols: n, data }
+}
+
+/// Max rows of transposed scratch a `t_matmul` worker holds at once: the
+/// strided column walk is amortized per sub-panel while scratch stays at
+/// `TRANSPOSE_PANEL_ROWS * k` floats regardless of the worker's row range
+/// (a serial call would otherwise materialize the whole transpose).
+const TRANSPOSE_PANEL_ROWS: usize = 64;
+
+/// `a^T @ b` for `a (k, m)`, `b (k, n) -> (m, n)` without materializing the
+/// full transpose: each worker transposes bounded sub-panels of its column
+/// range of `a` into a reused dense scratch, then runs the shared blocked
+/// kernel on each.
+pub fn t_matmul(a: &Mat, b: &Mat, ctx: ParallelCtx) -> Mat {
+    assert_eq!(a.rows, b.rows, "t_matmul shape mismatch");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let ctx = effective(ctx, m, k, n);
+    let data = par_rows(ctx, m, n, |r0, r1, out| {
+        let mut panel = vec![0f32; TRANSPOSE_PANEL_ROWS.min(r1 - r0) * k];
+        let mut rs = r0;
+        while rs < r1 {
+            let re = (rs + TRANSPOSE_PANEL_ROWS).min(r1);
+            let pw = re - rs;
+            for kk in 0..k {
+                let arow = &a.data[kk * m..(kk + 1) * m];
+                for i in 0..pw {
+                    panel[i * k + kk] = arow[rs + i];
+                }
+            }
+            panel_matmul(
+                &panel[..pw * k],
+                pw,
+                k,
+                b,
+                &mut out[(rs - r0) * n..(re - r0) * n],
+            );
+            rs = re;
+        }
+    });
+    Mat { rows: m, cols: n, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn matmul_matches_naive_across_threads() {
+        let mut rng = Pcg32::seeded(11);
+        for (m, k, n) in [(1, 1, 1), (7, 13, 5), (64, 64, 64), (129, 257, 65)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let want = a.matmul_naive(&b);
+            for t in [1usize, 2, 8] {
+                let got = matmul(&a, &b, ParallelCtx::new(t));
+                assert!(
+                    got.rel_frobenius(&want) <= 1e-5,
+                    "matmul {m}x{k}x{n} t={t} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn t_matmul_matches_naive_across_threads() {
+        let mut rng = Pcg32::seeded(12);
+        for (k, m, n) in [(1, 1, 1), (13, 7, 5), (64, 64, 64), (257, 129, 65)] {
+            let a = Mat::randn(k, m, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let want = a.t_matmul_naive(&b);
+            for t in [1usize, 2, 8] {
+                let got = t_matmul(&a, &b, ParallelCtx::new(t));
+                assert!(
+                    got.rel_frobenius(&want) <= 1e-5,
+                    "t_matmul {k}x{m}x{n} t={t} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let a = Mat::zeros(0, 5);
+        let b = Mat::zeros(5, 3);
+        let c = matmul(&a, &b, ParallelCtx::new(4));
+        assert_eq!((c.rows, c.cols), (0, 3));
+        let a = Mat::zeros(4, 0);
+        let b = Mat::zeros(0, 3);
+        let c = matmul(&a, &b, ParallelCtx::new(4));
+        assert_eq!(c.data, vec![0.0; 12]);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        let ys = par_map(ParallelCtx::new(8), &xs, |&x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+        let empty: Vec<usize> = Vec::new();
+        assert!(par_map(ParallelCtx::new(8), &empty, |&x: &usize| x).is_empty());
+    }
+
+    #[test]
+    fn global_threads_env_and_override() {
+        // whatever the resolved default, an explicit override must win
+        let before = global_threads();
+        assert!(before >= 1);
+        set_global_threads(3);
+        assert_eq!(global_threads(), 3);
+        set_global_threads(before);
+        assert_eq!(global_threads(), before);
+    }
+}

@@ -7,9 +7,17 @@
 //! invariant subspace, which is all GaLore consumes — the singular values
 //! themselves are discarded.
 //!
-//! This runs on the *control path* (every `interval` steps per layer), so a
-//! straightforward cache-friendly implementation is sufficient; the training
-//! hot path never enters this module.
+//! The matmul substrate itself ([`engine`]) is parallel and cache-blocked:
+//! subspace refreshes batch several layers' `G G^T`-style products, and at
+//! larger testbed shapes they dominate the step. The naive `*_naive`
+//! kernels remain as the bitwise reference the parity tests (and benches)
+//! compare against.
+
+pub mod engine;
+
+pub use engine::{
+    clone_pool, global_threads, par_map, par_rows, set_global_threads, ParallelCtx,
+};
 
 use crate::util::Pcg32;
 
@@ -59,8 +67,20 @@ impl Mat {
         t
     }
 
-    /// self (m,k) @ other (k,n) -> (m,n). ikj loop order for locality.
+    /// self (m,k) @ other (k,n) -> (m,n) through the blocked/parallel
+    /// engine at the process-global thread count.
     pub fn matmul(&self, other: &Mat) -> Mat {
+        engine::matmul(self, other, ParallelCtx::global())
+    }
+
+    /// [`Mat::matmul`] with an explicit parallelism context.
+    pub fn matmul_with(&self, other: &Mat, ctx: ParallelCtx) -> Mat {
+        engine::matmul(self, other, ctx)
+    }
+
+    /// Single-threaded ikj reference kernel (parity baseline for the
+    /// engine; also what the benches call "old").
+    pub fn matmul_naive(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
@@ -81,8 +101,18 @@ impl Mat {
     }
 
     /// self^T (k,m)^T @ other (k,n) -> (m,n) without materializing the
-    /// transpose (the projection step R = P^T G).
+    /// transpose (the projection step R = P^T G), via the engine.
     pub fn t_matmul(&self, other: &Mat) -> Mat {
+        engine::t_matmul(self, other, ParallelCtx::global())
+    }
+
+    /// [`Mat::t_matmul`] with an explicit parallelism context.
+    pub fn t_matmul_with(&self, other: &Mat, ctx: ParallelCtx) -> Mat {
+        engine::t_matmul(self, other, ctx)
+    }
+
+    /// Single-threaded reference for `t_matmul` (parity baseline).
+    pub fn t_matmul_naive(&self, other: &Mat) -> Mat {
         assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
         let (k, m, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
@@ -105,6 +135,12 @@ impl Mat {
 
     pub fn frobenius(&self) -> f32 {
         self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// ||self - other||_F / ||other||_F — the parity metric shared by the
+    /// engine tests, parity suite, and benches.
+    pub fn rel_frobenius(&self, other: &Mat) -> f32 {
+        self.sub(other).frobenius() / other.frobenius().max(1e-12)
     }
 
     pub fn sub(&self, other: &Mat) -> Mat {
@@ -243,21 +279,34 @@ pub fn symmetric_eig(a: &Mat) -> (Vec<f32>, Mat) {
 /// projections is well defined (a raw randomized basis is arbitrarily
 /// rotated within the subspace).
 pub fn left_subspace(g: &Mat, r: usize, iters: usize, rng: &mut Pcg32) -> Mat {
+    left_subspace_with(g, r, iters, rng, ParallelCtx::global())
+}
+
+/// [`left_subspace`] with an explicit parallelism context — callers that
+/// refresh several layers concurrently pass [`ParallelCtx::serial`] per
+/// worker to avoid nested oversubscription.
+pub fn left_subspace_with(
+    g: &Mat,
+    r: usize,
+    iters: usize,
+    rng: &mut Pcg32,
+    ctx: ParallelCtx,
+) -> Mat {
     let r = r.min(g.rows).min(g.cols);
     let omega = Mat::randn(g.cols, r, rng);
-    let mut y = g.matmul(&omega); // (m, r)
+    let mut y = g.matmul_with(&omega, ctx); // (m, r)
     let mut q = qr_orthonormal(&y);
     for _ in 0..iters {
         // Z = G^T Q (n, r); Y = G Z (m, r)
-        let z = g.t_matmul(&q);
-        y = g.matmul(&z);
+        let z = g.t_matmul_with(&q, ctx);
+        y = g.matmul_with(&z, ctx);
         q = qr_orthonormal(&y);
     }
     // canonicalize: Z = Q^T G; C = Z Z^T; Q <- Q * eigvecs(C)
-    let z = q.t_matmul(g); // (r, n)
-    let c = z.matmul(&z.transpose()); // (r, r)
+    let z = q.t_matmul_with(g, ctx); // (r, n)
+    let c = z.matmul_with(&z.transpose(), ctx); // (r, r)
     let (_vals, vecs) = symmetric_eig(&c);
-    q.matmul(&vecs)
+    q.matmul_with(&vecs, ctx)
 }
 
 /// Cosine similarity between two orthonormal bases of the same shape, as the
@@ -282,9 +331,14 @@ pub fn subspace_cosine(a: &Mat, b: &Mat) -> f32 {
 /// Projection-invariant similarity: ||A^T B||_F^2 / r in [0, 1].  Robust to
 /// column permutation/sign — used by tests to check subspace *recovery*.
 pub fn subspace_overlap(a: &Mat, b: &Mat) -> f32 {
-    let prod = a.t_matmul(b); // (ra, rb)
+    subspace_overlap_with(a, b, ParallelCtx::global())
+}
+
+/// [`subspace_overlap`] with an explicit parallelism context.
+pub fn subspace_overlap_with(a: &Mat, b: &Mat, ctx: ParallelCtx) -> f32 {
+    let prod = a.t_matmul_with(b, ctx); // (ra, rb)
     let f = prod.frobenius();
-    f * f / a.cols.min(b.cols) as f32
+    f * f / a.cols.min(b.cols).max(1) as f32
 }
 
 #[cfg(test)]

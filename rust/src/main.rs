@@ -7,6 +7,7 @@ use anyhow::{anyhow, Result};
 
 use qgalore::cli::Args;
 use qgalore::coordinator::{checkpoint, finetune, pretrain, FinetuneConfig, TrainConfig};
+use qgalore::linalg::{set_global_threads, ParallelCtx};
 use qgalore::manifest::Manifest;
 use qgalore::memory;
 use qgalore::model;
@@ -18,7 +19,10 @@ use qgalore::util::human_bytes;
 const USAGE: &str = "\
 qgalore — Q-GaLore: INT4-projection / INT8-weight low-rank LLM training
 
-USAGE: qgalore <command> [flags]   (global: --artifacts DIR, default `artifacts`)
+USAGE: qgalore <command> [flags]
+       (global: --artifacts DIR, default `artifacts`;
+                --threads N, linalg worker threads, default QGALORE_THREADS
+                env or all cores)
 
 COMMANDS
   train      pre-train from scratch
@@ -52,6 +56,10 @@ fn main() -> Result<()> {
     let cmd = argv[0].clone();
     let args = Args::parse(&argv[1..], &["no-adaptive", "no-sr", "verbose"])?;
     let artifacts = args.str_or("artifacts", "artifacts");
+    let threads = args.u64_or("threads", 0)?;
+    if threads > 0 {
+        set_global_threads(threads as usize);
+    }
 
     match cmd.as_str() {
         "train" => {
@@ -80,6 +88,7 @@ fn main() -> Result<()> {
                     proj_bits: args.u32_or("proj-bits", 4)?,
                     use_sr: !args.bool("no-sr"),
                     relora_merge_every: steps / 3,
+                    pool: ParallelCtx::global(),
                 },
                 log_every: (steps / 20).max(1),
                 quiet: false,

@@ -45,7 +45,7 @@ impl Breakdown {
 
 fn quant_overhead(numel: usize) -> u64 {
     // one f32 scale + one f32 zero per block
-    ((numel + BLOCK - 1) / BLOCK) as u64 * 8
+    numel.div_ceil(BLOCK) as u64 * 8
 }
 
 fn int8_bytes(numel: usize) -> u64 {
@@ -53,7 +53,7 @@ fn int8_bytes(numel: usize) -> u64 {
 }
 
 fn int4_bytes(numel: usize) -> u64 {
-    (numel as u64 + 1) / 2 + quant_overhead(numel)
+    (numel as u64).div_ceil(2) + quant_overhead(numel)
 }
 
 fn hi_bytes(numel: usize) -> u64 {

@@ -3,6 +3,7 @@
 
 use anyhow::Result;
 
+use crate::linalg::ParallelCtx;
 use crate::manifest::Manifest;
 use crate::scheduler::SchedulerConfig;
 
@@ -25,6 +26,8 @@ pub struct BuildOptions {
     pub use_sr: bool,
     /// ReLoRA merge period (steps); 0 disables merging
     pub relora_merge_every: u64,
+    /// worker budget for host-side linalg (CLI `--threads` / env)
+    pub pool: ParallelCtx,
 }
 
 impl Default for BuildOptions {
@@ -35,6 +38,7 @@ impl Default for BuildOptions {
             proj_bits: 4,
             use_sr: true,
             relora_merge_every: 0,
+            pool: ParallelCtx::global(),
         }
     }
 }
@@ -61,11 +65,11 @@ pub fn build_with_init(
     let entry = man.config(cfg_name)?;
     let init = init.to_vec();
     Ok(match method {
-        Method::Full => Box::new(FullAdam::new(entry, &init)),
-        Method::Adam8bit => Box::new(Adam8bit::new(entry, &init)),
-        Method::LowRank => Box::new(LowRank::new(entry, &init, opts.seed)),
+        Method::Full => Box::new(FullAdam::new(entry, &init, opts.pool)),
+        Method::Adam8bit => Box::new(Adam8bit::new(entry, &init, opts.pool)),
+        Method::LowRank => Box::new(LowRank::new(entry, &init, opts.seed, opts.pool)),
         Method::LoRa | Method::ReLoRa | Method::QLoRa => {
-            let mut l = Lora::new(method, entry, &init, man.lora_alpha, opts.seed);
+            let mut l = Lora::new(method, entry, &init, man.lora_alpha, opts.seed, opts.pool);
             if method == Method::ReLoRa {
                 l.merge_every = opts.relora_merge_every;
             }
@@ -79,6 +83,7 @@ pub fn build_with_init(
             // explicitly enables adaptivity (Figure 7 ablation)
             SchedulerConfig { adaptive: false, ..opts.sched },
             opts.seed,
+            opts.pool,
         )),
         Method::GaLore8bit => Box::new(Galore::new(
             GaloreKind::Bit8,
@@ -86,9 +91,17 @@ pub fn build_with_init(
             &init,
             SchedulerConfig { adaptive: false, ..opts.sched },
             opts.seed,
+            opts.pool,
         )),
         Method::QGaLore => {
-            let mut g = Galore::new(GaloreKind::Quantized, entry, &init, opts.sched, opts.seed);
+            let mut g = Galore::new(
+                GaloreKind::Quantized,
+                entry,
+                &init,
+                opts.sched,
+                opts.seed,
+                opts.pool,
+            );
             g.proj_bits = opts.proj_bits;
             g.use_sr = opts.use_sr;
             Box::new(g)

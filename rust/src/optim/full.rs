@@ -3,6 +3,7 @@
 
 use anyhow::Result;
 
+use crate::linalg::{engine, par_map, ParallelCtx};
 use crate::manifest::ConfigEntry;
 use crate::quant::Adam8State;
 use crate::runtime::HostTensor;
@@ -12,21 +13,32 @@ use super::{
     StepCtx,
 };
 
+/// Marshal the fp param tensors as artifact operands, cloning buffers in
+/// parallel on `pool` (memory-bound but scales with core count). Tiny
+/// models stay serial — spawn cost would exceed the memcpy.
+fn clone_operands(pool: ParallelCtx, fp: &[FpTensor], lin: &[FpTensor]) -> Vec<HostTensor> {
+    let refs: Vec<&FpTensor> = fp.iter().chain(lin.iter()).collect();
+    let total: usize = refs.iter().map(|t| t.numel()).sum();
+    let pool = engine::clone_pool(total, pool);
+    par_map(pool, &refs, |t| HostTensor::F32(t.data.clone()))
+}
+
 pub struct FullAdam {
     pub fp: Vec<FpTensor>,
     pub lin: Vec<FpTensor>,
     states: Vec<AdamFp>, // fp tensors then linear tensors
+    pub pool: ParallelCtx,
 }
 
 impl FullAdam {
-    pub fn new(entry: &ConfigEntry, init: &[f32]) -> Self {
+    pub fn new(entry: &ConfigEntry, init: &[f32], pool: ParallelCtx) -> Self {
         let (fp, lin) = split_init(init, &entry.fp_params, &entry.linear_params);
         let states = fp
             .iter()
             .chain(lin.iter())
             .map(|t| AdamFp::zeros(t.numel()))
             .collect();
-        FullAdam { fp, lin, states }
+        FullAdam { fp, lin, states, pool }
     }
 }
 
@@ -44,11 +56,7 @@ impl Optimizer for FullAdam {
     }
 
     fn forward_operands(&self) -> Vec<HostTensor> {
-        self.fp
-            .iter()
-            .chain(self.lin.iter())
-            .map(|t| HostTensor::F32(t.data.clone()))
-            .collect()
+        clone_operands(self.pool, &self.fp, &self.lin)
     }
 
     fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()> {
@@ -90,17 +98,18 @@ pub struct Adam8bit {
     pub fp: Vec<FpTensor>,
     pub lin: Vec<FpTensor>,
     states: Vec<Adam8State>,
+    pub pool: ParallelCtx,
 }
 
 impl Adam8bit {
-    pub fn new(entry: &ConfigEntry, init: &[f32]) -> Self {
+    pub fn new(entry: &ConfigEntry, init: &[f32], pool: ParallelCtx) -> Self {
         let (fp, lin) = split_init(init, &entry.fp_params, &entry.linear_params);
         let states = fp
             .iter()
             .chain(lin.iter())
             .map(|t| Adam8State::zeros(t.numel()))
             .collect();
-        Adam8bit { fp, lin, states }
+        Adam8bit { fp, lin, states, pool }
     }
 }
 
@@ -118,11 +127,7 @@ impl Optimizer for Adam8bit {
     }
 
     fn forward_operands(&self) -> Vec<HostTensor> {
-        self.fp
-            .iter()
-            .chain(self.lin.iter())
-            .map(|t| HostTensor::F32(t.data.clone()))
-            .collect()
+        clone_operands(self.pool, &self.fp, &self.lin)
     }
 
     fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()> {

@@ -19,7 +19,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::linalg::{left_subspace, subspace_overlap, Mat};
+use crate::linalg::{left_subspace_with, par_map, subspace_overlap_with, Mat, ParallelCtx};
 use crate::manifest::ConfigEntry;
 use crate::quant::{self, Adam8State, Quant4Tensor, QuantTensor};
 use crate::runtime::HostTensor;
@@ -66,19 +66,6 @@ struct Layer {
     st_8: Option<Adam8State>,
 }
 
-impl Layer {
-    /// Current projection as an f32 matrix (dequantized for Q-GaLore),
-    /// None before the first refresh.
-    fn projection_f32(&self, rank: usize) -> Option<Mat> {
-        if let Some(p) = &self.p_fp {
-            return Some(p.clone());
-        }
-        self.p_q4
-            .as_ref()
-            .map(|q| Mat::from_vec(self.m, rank, quant::dequantize4(q)))
-    }
-}
-
 pub struct Galore {
     kind: GaloreKind,
     rank: usize,
@@ -95,6 +82,8 @@ pub struct Galore {
     sim_history: Vec<Vec<f32>>,
     rng: Pcg32,
     sr_seed: i32,
+    /// worker budget for subspace refreshes / fused dequant products
+    pub pool: ParallelCtx,
     /// projection quantization bits for the Figure 3 ablation (Q-GaLore
     /// default 4; set 8/16 to widen, 2 to stress).  16 = keep fp.
     pub proj_bits: u32,
@@ -109,6 +98,7 @@ impl Galore {
         init: &[f32],
         sched_cfg: SchedulerConfig,
         seed: u64,
+        pool: ParallelCtx,
     ) -> Self {
         let (fp, lin) = split_init(init, &entry.fp_params, &entry.linear_params);
         let rank = entry.model.rank;
@@ -177,6 +167,7 @@ impl Galore {
             sim_history: vec![Vec::new(); n_layers],
             rng: Pcg32::new(seed, 0x5eed),
             sr_seed: 1,
+            pool,
             proj_bits: if kind == GaloreKind::Quantized { 4 } else { 16 },
             use_sr: true,
         }
@@ -192,19 +183,59 @@ impl Galore {
         format!("{prefix}_{m}x{n}_r{}", self.rank)
     }
 
-    /// Refresh a layer's subspace from its current gradient; returns the
-    /// similarity to the outgoing projection (None on first refresh).
-    ///
-    /// Similarity is the rotation-invariant subspace overlap
-    /// ||P_old^T P_new||_F^2 / r in [0, 1] — the quantity the paper's
-    /// "cosine similarity between adjacent projection matrices" measures
-    /// modulo the within-subspace rotation that randomized solvers leave
-    /// free (column-wise cosine would under-read convergence for the nearly
-    /// degenerate trailing singular directions).
-    fn refresh_subspace(&mut self, idx: usize, grad: &Mat) -> Option<f32> {
-        let new_p = left_subspace(grad, self.rank, SUBSPACE_ITERS, &mut self.rng);
-        let old = self.layers[idx].projection_f32(self.rank);
-        let sim = old.as_ref().map(|o| subspace_overlap(o, &new_p));
+    /// Step 1 of a layer update: fold `g` into the pre-refresh gradient
+    /// accumulator; returns whether the layer's refresh is due this step.
+    fn pre_refresh(&mut self, step: u64, idx: usize, g: &[f32]) -> bool {
+        if self.sched.steps_until_due(idx, step) < ACCUM_WINDOW {
+            match &mut self.grad_accum[idx] {
+                Some((acc, count)) => {
+                    for (a, x) in acc.iter_mut().zip(g) {
+                        *a += x;
+                    }
+                    *count += 1;
+                }
+                slot => *slot = Some((g.to_vec(), 1)),
+            }
+        }
+        self.sched.due(idx, step)
+    }
+
+    /// Consume the layer's accumulator into the low-variance mean-gradient
+    /// matrix a refresh computes its basis from. Called per wave so at most
+    /// one wave of mean-gradient matrices is materialized at a time.
+    fn take_mean_grad(&mut self, idx: usize, g: &[f32]) -> Mat {
+        let (m, n) = (self.layers[idx].m, self.layers[idx].n);
+        match self.grad_accum[idx].take() {
+            Some((acc, count)) => {
+                Mat::from_vec(m, n, acc.into_iter().map(|x| x / count as f32).collect())
+            }
+            None => Mat::from_vec(m, n, g.to_vec()),
+        }
+    }
+
+    /// Rotation-invariant overlap ||P_old^T P_new||_F^2 / r in [0, 1] with
+    /// the layer's outgoing projection (None before the first refresh) —
+    /// the quantity the paper's "cosine similarity between adjacent
+    /// projection matrices" measures modulo the within-subspace rotation
+    /// that randomized solvers leave free. INT4-stored projections go
+    /// through the fused `dequant4_t_matmul`, so the old basis is never
+    /// materialized in fp32.
+    fn overlap_with_old(&self, idx: usize, new_p: &Mat, pool: ParallelCtx) -> Option<f32> {
+        let layer = &self.layers[idx];
+        if let Some(p) = &layer.p_fp {
+            return Some(subspace_overlap_with(p, new_p, pool));
+        }
+        layer.p_q4.as_ref().map(|q| {
+            let r_old = q.numel() / layer.m;
+            let prod = quant::dequant4_t_matmul(q, layer.m, r_old, new_p, pool);
+            let f = prod.frobenius();
+            f * f / r_old.min(new_p.cols).max(1) as f32
+        })
+    }
+
+    /// Store a freshly computed basis in the layer's storage format.
+    fn store_projection(&mut self, idx: usize, new_p: Mat) {
+        let rank = self.rank;
         let layer = &mut self.layers[idx];
         match self.kind {
             GaloreKind::Fp | GaloreKind::Bit8 => layer.p_fp = Some(new_p),
@@ -217,45 +248,16 @@ impl Galore {
                     // Figure 3 ablation: other bit widths stored via the
                     // generic QuantTensor path, dequantized on use.
                     let q = quant::quantize(&new_p.data, self.proj_bits);
-                    layer.p_fp = Some(Mat::from_vec(layer.m, self.rank, quant::dequantize(&q)));
+                    layer.p_fp = Some(Mat::from_vec(layer.m, rank, quant::dequantize(&q)));
                 }
             }
         }
-        if let Some(s) = sim {
-            self.sim_history[idx].push(s);
-        }
-        sim
     }
 
-    fn update_layer(&mut self, ctx: &mut StepCtx, idx: usize, g: Vec<f32>) -> Result<()> {
+    /// Step 2 of a layer update: the fused update step (hot path, HLO
+    /// artifact). The projection must already be current.
+    fn run_layer_update(&mut self, ctx: &mut StepCtx, idx: usize, g: Vec<f32>) -> Result<()> {
         let (m, n) = (self.layers[idx].m, self.layers[idx].n);
-        // 1. lazy subspace refresh (control path): accumulate gradients over
-        //    the ACCUM_WINDOW steps leading into a refresh, then compute the
-        //    new basis from the low-variance mean gradient
-        if self.sched.steps_until_due(idx, ctx.step) < ACCUM_WINDOW {
-            match &mut self.grad_accum[idx] {
-                Some((acc, count)) => {
-                    for (a, x) in acc.iter_mut().zip(&g) {
-                        *a += x;
-                    }
-                    *count += 1;
-                }
-                slot => *slot = Some((g.clone(), 1)),
-            }
-        }
-        if self.sched.due(idx, ctx.step) {
-            let gm = match self.grad_accum[idx].take() {
-                Some((acc, count)) => Mat::from_vec(
-                    m,
-                    n,
-                    acc.into_iter().map(|x| x / count as f32).collect(),
-                ),
-                None => Mat::from_vec(m, n, g.clone()),
-            };
-            let sim = self.refresh_subspace(idx, &gm);
-            self.sched.record_refresh(idx, ctx.step, sim);
-        }
-        // 2. fused update step (hot path, HLO artifact)
         let art = ctx.man.update(&self.update_artifact(m, n))?.clone();
         let c = ctx.corrections();
         let lr = ctx.lr_operand();
@@ -402,19 +404,27 @@ impl Optimizer for Galore {
     }
 
     fn forward_operands(&self) -> Vec<HostTensor> {
+        // operand marshalling is pure buffer cloning — fan the layers out
+        // over the pool (memory-bound, but scales with core count); tiny
+        // models stay serial, spawn cost would exceed the memcpy
+        let kind = self.kind;
+        let total: usize = self.fp.iter().map(|t| t.numel()).sum::<usize>()
+            + self.layers.iter().map(|l| l.m * l.n).sum::<usize>();
+        let pool = crate::linalg::clone_pool(total, self.pool);
         let mut ops: Vec<HostTensor> =
-            self.fp.iter().map(|t| HostTensor::F32(t.data.clone())).collect();
-        for l in &self.layers {
-            match self.kind {
-                GaloreKind::Quantized => {
-                    let w = l.w_q.as_ref().unwrap();
-                    ops.push(HostTensor::I8(w.q.clone()));
-                    ops.push(HostTensor::F32(w.scale.clone()));
-                    ops.push(HostTensor::F32(w.zero.clone()));
-                }
-                _ => ops.push(HostTensor::F32(l.w_fp.as_ref().unwrap().data.clone())),
+            par_map(pool, &self.fp, |t| HostTensor::F32(t.data.clone()));
+        let per_layer: Vec<Vec<HostTensor>> = par_map(pool, &self.layers, |l| match kind {
+            GaloreKind::Quantized => {
+                let w = l.w_q.as_ref().unwrap();
+                vec![
+                    HostTensor::I8(w.q.clone()),
+                    HostTensor::F32(w.scale.clone()),
+                    HostTensor::F32(w.zero.clone()),
+                ]
             }
-        }
+            _ => vec![HostTensor::F32(l.w_fp.as_ref().unwrap().data.clone())],
+        });
+        ops.extend(per_layer.into_iter().flatten());
         ops
     }
 
@@ -422,7 +432,16 @@ impl Optimizer for Galore {
         let n_fp = self.fp.len();
         assert_eq!(grads.len(), n_fp + self.layers.len());
         // The fused-backward discipline: consume and drop each gradient
-        // right after its tensor's update (paper §3.5).
+        // right after its tensor's update (paper §3.5). Layers whose
+        // subspace refresh falls due this step park their gradient — a
+        // MOVE out of the already-resident grads vec, so parking allocates
+        // nothing, it only delays the free to the owning wave below. The
+        // allocations a refresh makes (mean-gradient matrices, subspace
+        // bases, iteration scratch) happen per wave, so they are capped by
+        // the wave size = `pool.threads`, not the layer count, even at
+        // step 0 when every layer refreshes at once.
+        let pool = self.pool;
+        let mut due: Vec<(usize, Vec<f32>, u64)> = Vec::new();
         for (i, g) in grads.into_iter().enumerate() {
             let g = g.into_f32()?;
             if i < n_fp {
@@ -433,7 +452,49 @@ impl Optimizer for Galore {
                     _ => run_adam_8bit(ctx, &mut self.fp[i], &mut self.fp_states_8[i], &g)?,
                 }
             } else {
-                self.update_layer(ctx, i - n_fp, g)?;
+                let idx = i - n_fp;
+                if self.pre_refresh(ctx.step, idx, &g) {
+                    // per-refresh seed drawn sequentially so results do
+                    // not depend on worker count or completion order
+                    let seed = self.rng.next_u64();
+                    due.push((idx, g, seed));
+                } else {
+                    self.run_layer_update(ctx, idx, g)?;
+                }
+            }
+        }
+        // Batched refresh in waves of at most `pool.threads` layers:
+        // independent layers' subspace iterations run concurrently, and
+        // each wave's buffers are dropped before the next starts.
+        let rank = self.rank;
+        let wave_size = pool.threads.max(1);
+        while !due.is_empty() {
+            let take = wave_size.min(due.len());
+            let wave: Vec<(usize, Vec<f32>, u64)> = due.drain(..take).collect();
+            let gms: Vec<(Mat, u64)> = wave
+                .iter()
+                .map(|(idx, g, seed)| (self.take_mean_grad(*idx, g), *seed))
+                .collect();
+            // split the worker budget between the wave (outer) and each
+            // refresh's own matmuls (inner). div_ceil keeps every thread
+            // busy when the wave doesn't divide the pool, at the cost of
+            // mild transient oversubscription (outer * inner may exceed
+            // the pool by less than one worker per refresh).
+            let inner = ParallelCtx::new(pool.threads.div_ceil(wave.len()));
+            let outer = ParallelCtx::new(pool.threads.min(wave.len()));
+            let new_ps: Vec<Mat> = par_map(outer, &gms, |(gm, seed)| {
+                let mut rng = Pcg32::new(*seed, 0x5eed);
+                left_subspace_with(gm, rank, SUBSPACE_ITERS, &mut rng, inner)
+            });
+            drop(gms);
+            for ((idx, g, _seed), new_p) in wave.into_iter().zip(new_ps) {
+                let sim = self.overlap_with_old(idx, &new_p, pool);
+                if let Some(s) = sim {
+                    self.sim_history[idx].push(s);
+                }
+                self.store_projection(idx, new_p);
+                self.sched.record_refresh(idx, ctx.step, sim);
+                self.run_layer_update(ctx, idx, g)?;
             }
         }
         Ok(())

@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 
-use crate::linalg::Mat;
+use crate::linalg::{Mat, ParallelCtx};
 use crate::manifest::ConfigEntry;
 use crate::quant::{self, QuantTensor};
 use crate::runtime::HostTensor;
@@ -39,6 +39,7 @@ pub struct Lora {
     /// ReLoRA merge period in steps (0 = never).
     pub merge_every: u64,
     merges_done: u64,
+    pool: ParallelCtx,
 }
 
 impl Lora {
@@ -48,6 +49,7 @@ impl Lora {
         init: &[f32],
         lora_alpha: f32,
         seed: u64,
+        pool: ParallelCtx,
     ) -> Self {
         assert!(matches!(method, Method::LoRa | Method::ReLoRa | Method::QLoRa));
         let (fp, lin) = split_init(init, &entry.fp_params, &entry.linear_params);
@@ -72,8 +74,9 @@ impl Lora {
             base_q,
             adapters,
             rng,
-            merge_every: if method == Method::ReLoRa { 0 } else { 0 },
+            merge_every: 0, // the factory sets the ReLoRA period
             merges_done: 0,
+            pool,
         }
     }
 
@@ -114,7 +117,7 @@ impl Lora {
         for (base, ad) in self.base_fp.iter_mut().zip(&mut self.adapters) {
             let u = Mat::from_vec(ad.out, self.rank, ad.u.data.clone());
             let v = Mat::from_vec(self.rank, ad.inn, ad.v.data.clone());
-            let prod = u.matmul(&v);
+            let prod = u.matmul_with(&v, self.pool);
             for (b, p) in base.data.iter_mut().zip(prod.data) {
                 *b += scale * p;
             }
@@ -210,7 +213,7 @@ impl Optimizer for Lora {
             };
             let u = Mat::from_vec(ad.out, self.rank, ad.u.data.clone());
             let v = Mat::from_vec(self.rank, ad.inn, ad.v.data.clone());
-            let prod = u.matmul(&v);
+            let prod = u.matmul_with(&v, self.pool);
             out.extend(base.iter().zip(prod.data).map(|(b, p)| b + scale * p));
         }
         Ok(out)

@@ -5,6 +5,7 @@
 
 use anyhow::Result;
 
+use crate::linalg::{par_map, ParallelCtx};
 use crate::manifest::ConfigEntry;
 use crate::runtime::HostTensor;
 use crate::util::Pcg32;
@@ -22,10 +23,11 @@ pub struct LowRank {
     fp: Vec<FpTensor>,
     fp_states: Vec<AdamFp>,
     factors: Vec<FactorPair>,
+    pub pool: ParallelCtx,
 }
 
 impl LowRank {
-    pub fn new(entry: &ConfigEntry, init: &[f32], seed: u64) -> Self {
+    pub fn new(entry: &ConfigEntry, init: &[f32], seed: u64, pool: ParallelCtx) -> Self {
         let (fp, lin) = split_init(init, &entry.fp_params, &entry.linear_params);
         let rank = entry.model.rank;
         let mut rng = Pcg32::new(seed, 0x10f2);
@@ -50,7 +52,7 @@ impl LowRank {
             });
         }
         let fp_states = fp.iter().map(|t| AdamFp::zeros(t.numel())).collect();
-        LowRank { fp, fp_states, factors }
+        LowRank { fp, fp_states, factors, pool }
     }
 }
 
@@ -64,12 +66,18 @@ impl Optimizer for LowRank {
     }
 
     fn forward_operands(&self) -> Vec<HostTensor> {
+        let total: usize = self.fp.iter().map(|t| t.numel()).sum::<usize>()
+            + self.factors.iter().map(|f| f.u.numel() + f.v.numel()).sum::<usize>();
+        let pool = crate::linalg::clone_pool(total, self.pool);
         let mut ops: Vec<HostTensor> =
-            self.fp.iter().map(|t| HostTensor::F32(t.data.clone())).collect();
-        for f in &self.factors {
-            ops.push(HostTensor::F32(f.u.data.clone()));
-            ops.push(HostTensor::F32(f.v.data.clone()));
-        }
+            par_map(pool, &self.fp, |t| HostTensor::F32(t.data.clone()));
+        let pairs: Vec<[HostTensor; 2]> = par_map(pool, &self.factors, |f| {
+            [
+                HostTensor::F32(f.u.data.clone()),
+                HostTensor::F32(f.v.data.clone()),
+            ]
+        });
+        ops.extend(pairs.into_iter().flatten());
         ops
     }
 
@@ -110,7 +118,7 @@ impl Optimizer for LowRank {
             let inn = f.v.shape[1];
             let u = crate::linalg::Mat::from_vec(out_dim, rank, f.u.data.clone());
             let v = crate::linalg::Mat::from_vec(rank, inn, f.v.data.clone());
-            out.extend(u.matmul(&v).data);
+            out.extend(u.matmul_with(&v, self.pool).data);
         }
         Ok(out)
     }

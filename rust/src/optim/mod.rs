@@ -24,6 +24,10 @@ use crate::manifest::{ArtifactSpec, Manifest};
 use crate::runtime::{HostTensor, Runtime};
 
 /// Per-step context handed to `Optimizer::apply_update`.
+///
+/// Host-side parallelism is NOT part of this context: each optimizer owns
+/// one `ParallelCtx` (set from `BuildOptions::pool` by the factory) so a
+/// step cannot mix two different worker budgets.
 pub struct StepCtx<'a> {
     pub rt: &'a mut Runtime,
     pub man: &'a Manifest,

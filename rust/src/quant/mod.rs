@@ -12,6 +12,7 @@
 //! from the oracle by one code at exact tie boundaries, which every
 //! cross-check (tests, integration) budgets for.
 
+use crate::linalg::{engine, Mat, ParallelCtx};
 use crate::util::Pcg32;
 
 /// Paper §3.1: block size 256 everywhere; tensors smaller than one block use
@@ -152,11 +153,13 @@ pub struct Quant4Tensor {
     pub scale: Vec<f32>,
     pub zero: Vec<f32>,
     pub block: usize,
+    /// logical element count (odd-length tensors pad the final high nibble)
+    pub numel: usize,
 }
 
 impl Quant4Tensor {
     pub fn numel(&self) -> usize {
-        self.packed.len() * 2
+        self.numel
     }
 
     pub fn storage_bytes(&self) -> usize {
@@ -164,13 +167,15 @@ impl Quant4Tensor {
     }
 }
 
+/// Nibble-pack INT4 codes (two per byte). Odd lengths pad the trailing
+/// high nibble with code 0; `unpack_int4` therefore returns an even count
+/// and callers truncate to the logical length.
 pub fn pack_int4(codes: &[i8]) -> Vec<u8> {
-    assert_eq!(codes.len() % 2, 0);
     codes
         .chunks(2)
         .map(|p| {
             let lo = (p[0] + 8) as u8 & 0xF;
-            let hi = (p[1] + 8) as u8 & 0xF;
+            let hi = (p.get(1).copied().unwrap_or(0) + 8) as u8 & 0xF;
             lo | (hi << 4)
         })
         .collect()
@@ -193,11 +198,13 @@ pub fn quantize4(x: &[f32]) -> Quant4Tensor {
         scale: t.scale,
         zero: t.zero,
         block: t.block,
+        numel: x.len(),
     }
 }
 
 pub fn dequantize4(t: &Quant4Tensor) -> Vec<f32> {
-    let codes = unpack_int4(&t.packed);
+    let mut codes = unpack_int4(&t.packed);
+    codes.truncate(t.numel);
     let mut out = Vec::with_capacity(codes.len());
     for (bi, blk) in codes.chunks(t.block).enumerate() {
         let (s, z) = (t.scale[bi], t.zero[bi]);
@@ -206,6 +213,128 @@ pub fn dequantize4(t: &Quant4Tensor) -> Vec<f32> {
         }
     }
     out
+}
+
+// ---------------------------------------------------------------------------
+// Fused dequantize-matmul paths.
+//
+// Q-GaLore's INT4 projection and INT8 weights are applied without ever
+// materializing a full fp32 copy: each worker dequantizes one row (or one
+// transposed column panel) into an O(cols) scratch and feeds the shared
+// blocked accumulation loop. Accumulation order matches
+// `dequantize* -> Mat::*_naive`, so parity with the unfused reference is
+// exact.
+// ---------------------------------------------------------------------------
+
+/// Decode the INT4 code at flat index `idx` from a nibble-packed buffer.
+#[inline]
+fn code4_at(packed: &[u8], idx: usize) -> i8 {
+    let b = packed[idx / 2];
+    let nib = if idx % 2 == 0 { b & 0xF } else { b >> 4 };
+    nib as i8 - 8
+}
+
+/// `dequant(W) (rows, cols) @ x (cols, n)` for blockwise-INT8 `w`.
+pub fn dequant8_matmul(
+    w: &QuantTensor,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    assert_eq!(w.q.len(), rows * cols, "dequant8_matmul: shape mismatch");
+    assert_eq!(x.rows, cols, "dequant8_matmul: inner dim mismatch");
+    let n = x.cols;
+    let ctx = engine::effective(ctx, rows, cols, n);
+    let data = engine::par_rows(ctx, rows, n, |r0, r1, out| {
+        let mut rowbuf = vec![0f32; cols];
+        for i in r0..r1 {
+            let base = i * cols;
+            for (c, rb) in rowbuf.iter_mut().enumerate() {
+                let bi = (base + c) / w.block;
+                *rb = (w.q[base + c] as f32 - w.zero[bi]) * w.scale[bi];
+            }
+            let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            engine::panel_matmul(&rowbuf, 1, cols, x, orow);
+        }
+    });
+    Mat { rows, cols: n, data }
+}
+
+/// `dequant(P) (rows, cols) @ x (cols, n)` for nibble-packed INT4 `p` —
+/// the up-projection `P u` applied straight from storage.
+pub fn dequant4_matmul(
+    p: &Quant4Tensor,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    assert_eq!(p.numel(), rows * cols, "dequant4_matmul: shape mismatch");
+    assert_eq!(x.rows, cols, "dequant4_matmul: inner dim mismatch");
+    let n = x.cols;
+    let ctx = engine::effective(ctx, rows, cols, n);
+    let data = engine::par_rows(ctx, rows, n, |r0, r1, out| {
+        let mut rowbuf = vec![0f32; cols];
+        for i in r0..r1 {
+            let base = i * cols;
+            for (c, rb) in rowbuf.iter_mut().enumerate() {
+                let bi = (base + c) / p.block;
+                *rb = (code4_at(&p.packed, base + c) as f32 - p.zero[bi]) * p.scale[bi];
+            }
+            let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            engine::panel_matmul(&rowbuf, 1, cols, x, orow);
+        }
+    });
+    Mat { rows, cols: n, data }
+}
+
+/// Max columns of dequantized transposed scratch a `dequant4_t_matmul`
+/// worker holds at once (mirrors the engine's transpose sub-paneling, so
+/// serial calls never materialize the whole fp32 matrix).
+const DEQUANT_PANEL_COLS: usize = 64;
+
+/// `dequant(P)^T @ x` for `p` logically (rows, cols), `x (rows, n)` —
+/// the down-projection `P^T g` applied straight from INT4 storage. Each
+/// worker dequantizes bounded transposed column sub-panels into a reused
+/// scratch, never the whole matrix.
+pub fn dequant4_t_matmul(
+    p: &Quant4Tensor,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    assert_eq!(p.numel(), rows * cols, "dequant4_t_matmul: shape mismatch");
+    assert_eq!(x.rows, rows, "dequant4_t_matmul: inner dim mismatch");
+    let n = x.cols;
+    let ctx = engine::effective(ctx, cols, rows, n);
+    let data = engine::par_rows(ctx, cols, n, |j0, j1, out| {
+        let mut panel = vec![0f32; DEQUANT_PANEL_COLS.min(j1 - j0) * rows];
+        let mut js = j0;
+        while js < j1 {
+            let je = (js + DEQUANT_PANEL_COLS).min(j1);
+            let pw = je - js;
+            for i in 0..rows {
+                let base = i * cols;
+                for j in js..je {
+                    let idx = base + j;
+                    let bi = idx / p.block;
+                    panel[(j - js) * rows + i] =
+                        (code4_at(&p.packed, idx) as f32 - p.zero[bi]) * p.scale[bi];
+                }
+            }
+            engine::panel_matmul(
+                &panel[..pw * rows],
+                pw,
+                rows,
+                x,
+                &mut out[(js - j0) * n..(je - j0) * n],
+            );
+            js = je;
+        }
+    });
+    Mat { rows: cols, cols: n, data }
 }
 
 /// Blockwise 8-bit Adam state (m: symmetric i8, v: non-negative u8), the
@@ -441,5 +570,61 @@ mod tests {
         assert_eq!(t8.storage_bytes(), 1024 + 4 * 4 + 4 * 4);
         let t4 = quantize4(&x);
         assert_eq!(t4.storage_bytes(), 512 + 4 * 4 + 4 * 4);
+    }
+
+    #[test]
+    fn int4_odd_length_roundtrip() {
+        let codes: Vec<i8> = (0..7i32).map(|i| ((i % 16) - 8) as i8).collect();
+        let packed = pack_int4(&codes);
+        assert_eq!(packed.len(), 4);
+        let unpacked = unpack_int4(&packed);
+        assert_eq!(&unpacked[..7], &codes[..]);
+        // quantize4 round-trips odd lengths via the numel field
+        let x = randvec(91, 11);
+        let t = quantize4(&x);
+        assert_eq!(t.numel(), 91);
+        assert_eq!(dequantize4(&t).len(), 91);
+    }
+
+    #[test]
+    fn dequant8_matmul_matches_unfused() {
+        let mut rng = Pcg32::seeded(12);
+        for (m, k, n) in [(1usize, 1usize, 1usize), (7, 13, 5), (64, 64, 9), (128, 256, 33)] {
+            let w = quantize(&rng.normal_vec(m * k, 0.0, 1.0), 8);
+            let x = Mat::randn(k, n, &mut rng);
+            let want = Mat::from_vec(m, k, dequantize(&w)).matmul_naive(&x);
+            for t in [1usize, 2, 8] {
+                let got = dequant8_matmul(&w, m, k, &x, ParallelCtx::new(t));
+                assert!(got.rel_frobenius(&want) <= 1e-5, "{m}x{k}x{n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn dequant4_matmul_matches_unfused() {
+        let mut rng = Pcg32::seeded(13);
+        for (m, k, n) in [(1usize, 1usize, 1usize), (7, 13, 5), (64, 64, 9), (128, 256, 33)] {
+            let p = quantize4(&rng.normal_vec(m * k, 0.0, 0.3));
+            let x = Mat::randn(k, n, &mut rng);
+            let want = Mat::from_vec(m, k, dequantize4(&p)).matmul_naive(&x);
+            for t in [1usize, 2, 8] {
+                let got = dequant4_matmul(&p, m, k, &x, ParallelCtx::new(t));
+                assert!(got.rel_frobenius(&want) <= 1e-5, "{m}x{k}x{n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn dequant4_t_matmul_matches_unfused() {
+        let mut rng = Pcg32::seeded(14);
+        for (m, r, n) in [(1usize, 1usize, 1usize), (13, 7, 5), (64, 16, 9), (128, 32, 65)] {
+            let p = quantize4(&rng.normal_vec(m * r, 0.0, 0.3));
+            let x = Mat::randn(m, n, &mut rng);
+            let want = Mat::from_vec(m, r, dequantize4(&p)).t_matmul_naive(&x);
+            for t in [1usize, 2, 8] {
+                let got = dequant4_t_matmul(&p, m, r, &x, ParallelCtx::new(t));
+                assert!(got.rel_frobenius(&want) <= 1e-5, "{m}x{r}x{n} t={t}");
+            }
+        }
     }
 }

@@ -267,6 +267,40 @@ mod tests {
     }
 
     #[test]
+    fn converging_trace_drops_svd_fraction_below_40_percent() {
+        // The paper's Figure 7 claim: on a converging run (cosine similarity
+        // climbing past the threshold layer by layer) the lazy scheduler
+        // spends well under 40% of plain GaLore's SVD budget.
+        let names: Vec<String> = (0..4).map(|i| format!("layer{i}")).collect();
+        let mut s = SubspaceScheduler::new(
+            &names,
+            SchedulerConfig {
+                base_interval: 10,
+                threshold: 0.4,
+                window: 2,
+                adaptive: true,
+                max_interval: 0,
+            },
+        );
+        let horizon = 2000u64;
+        for step in 0..=horizon {
+            for idx in 0..4 {
+                if s.due(idx, step) {
+                    // similarity converges at a per-layer pace: early layers
+                    // immediately, late layers after a warmup phase
+                    let warmup = 50 * (idx as u64 + 1);
+                    let sim = if step < warmup { 0.1 } else { 0.9 };
+                    s.record_refresh(idx, step, Some(sim));
+                }
+            }
+        }
+        let frac = s.svd_fraction(horizon);
+        assert!(frac < 0.4, "converged trace still spent {frac} of GaLore's SVDs");
+        // and intervals actually grew
+        assert!(s.layer(0).interval > 10 * 8);
+    }
+
+    #[test]
     fn max_interval_caps_growth() {
         let names = vec!["l".to_string()];
         let mut s = SubspaceScheduler::new(

@@ -1,0 +1,166 @@
+//! Parity suite for the blocked/parallel linalg engine and the fused
+//! dequantize-matmul paths: every fast kernel must agree with the naive
+//! single-threaded reference to <= 1e-5 rel-Frobenius across awkward shapes
+//! (non-multiples of the block size, degenerate 1x1) and thread counts
+//! 1/2/8. The engine preserves the reference's ascending-k accumulation
+//! order, so the observed error is in fact 0 — the tolerance guards future
+//! kernel rewrites that reorder arithmetic.
+
+use qgalore::linalg::{engine, Mat, ParallelCtx};
+use qgalore::quant;
+use qgalore::util::Pcg32;
+
+const THREADS: [usize; 3] = [1, 2, 8];
+const TOL: f32 = 1e-5;
+
+fn rel_frob(got: &Mat, want: &Mat) -> f32 {
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+    got.rel_frobenius(want)
+}
+
+#[test]
+fn matmul_parity_across_shapes_and_threads() {
+    let mut rng = Pcg32::seeded(100);
+    for (m, k, n) in [
+        (1usize, 1usize, 1usize),
+        (7, 13, 13),
+        (13, 7, 3),
+        (64, 64, 64),
+        (129, 257, 63),
+        (257, 129, 129),
+    ] {
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let want = a.matmul_naive(&b);
+        for t in THREADS {
+            let got = a.matmul_with(&b, ParallelCtx::new(t));
+            let err = rel_frob(&got, &want);
+            assert!(err <= TOL, "matmul {m}x{k}x{n} threads={t}: rel err {err}");
+        }
+    }
+}
+
+#[test]
+fn t_matmul_parity_across_shapes_and_threads() {
+    let mut rng = Pcg32::seeded(101);
+    for (k, m, n) in [
+        (1usize, 1usize, 1usize),
+        (13, 7, 5),
+        (7, 13, 13),
+        (64, 64, 64),
+        (257, 129, 65),
+        (129, 257, 31),
+    ] {
+        let a = Mat::randn(k, m, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let want = a.t_matmul_naive(&b);
+        for t in THREADS {
+            let got = a.t_matmul_with(&b, ParallelCtx::new(t));
+            let err = rel_frob(&got, &want);
+            assert!(err <= TOL, "t_matmul {k}x{m}x{n} threads={t}: rel err {err}");
+        }
+    }
+}
+
+#[test]
+fn default_matmul_matches_naive() {
+    // the convenience Mat::matmul / Mat::t_matmul (global ctx) are the same
+    // kernels — spot-check them on a large-ish shape
+    let mut rng = Pcg32::seeded(102);
+    let a = Mat::randn(129, 96, &mut rng);
+    let b = Mat::randn(96, 71, &mut rng);
+    assert!(rel_frob(&a.matmul(&b), &a.matmul_naive(&b)) <= TOL);
+    let c = Mat::randn(96, 55, &mut rng);
+    let d = Mat::randn(96, 33, &mut rng);
+    assert!(rel_frob(&c.t_matmul(&d), &c.t_matmul_naive(&d)) <= TOL);
+}
+
+#[test]
+fn dequant8_matmul_parity() {
+    let mut rng = Pcg32::seeded(103);
+    // numel constraint: < 256 (single block) or a multiple of 256
+    for (m, k, n) in [(1usize, 1usize, 1usize), (7, 13, 9), (64, 64, 31), (128, 256, 65)] {
+        let w = quant::quantize(&rng.normal_vec(m * k, 0.0, 1.0), 8);
+        let x = Mat::randn(k, n, &mut rng);
+        let want = Mat::from_vec(m, k, quant::dequantize(&w)).matmul_naive(&x);
+        for t in THREADS {
+            let got = quant::dequant8_matmul(&w, m, k, &x, ParallelCtx::new(t));
+            let err = rel_frob(&got, &want);
+            assert!(err <= TOL, "dequant8_matmul {m}x{k}x{n} threads={t}: {err}");
+        }
+    }
+}
+
+#[test]
+fn dequant4_matmul_parity() {
+    let mut rng = Pcg32::seeded(104);
+    for (m, k, n) in [(1usize, 1usize, 1usize), (7, 13, 9), (64, 64, 31), (128, 256, 65)] {
+        let p = quant::quantize4(&rng.normal_vec(m * k, 0.0, 0.25));
+        let x = Mat::randn(k, n, &mut rng);
+        let want = Mat::from_vec(m, k, quant::dequantize4(&p)).matmul_naive(&x);
+        for t in THREADS {
+            let got = quant::dequant4_matmul(&p, m, k, &x, ParallelCtx::new(t));
+            let err = rel_frob(&got, &want);
+            assert!(err <= TOL, "dequant4_matmul {m}x{k}x{n} threads={t}: {err}");
+        }
+    }
+}
+
+#[test]
+fn dequant4_t_matmul_parity() {
+    let mut rng = Pcg32::seeded(105);
+    for (m, r, n) in [(1usize, 1usize, 1usize), (13, 7, 9), (64, 16, 31), (256, 64, 65)] {
+        let p = quant::quantize4(&rng.normal_vec(m * r, 0.0, 0.25));
+        let x = Mat::randn(m, n, &mut rng);
+        let want = Mat::from_vec(m, r, quant::dequantize4(&p)).t_matmul_naive(&x);
+        for t in THREADS {
+            let got = quant::dequant4_t_matmul(&p, m, r, &x, ParallelCtx::new(t));
+            let err = rel_frob(&got, &want);
+            assert!(err <= TOL, "dequant4_t_matmul {m}x{r}x{n} threads={t}: {err}");
+        }
+    }
+}
+
+#[test]
+fn randomized_parity_property() {
+    // 60 random shapes x 3 thread counts, including shapes straddling the
+    // parallelism threshold, all within tolerance of the references
+    let mut rng = Pcg32::seeded(106);
+    for case in 0..60u64 {
+        let m = 1 + rng.below(150);
+        let k = 1 + rng.below(150);
+        let n = 1 + rng.below(150);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let want = a.matmul_naive(&b);
+        let at = Mat::randn(k, m, &mut rng);
+        let want_t = at.t_matmul_naive(&b);
+        for t in THREADS {
+            let ctx = ParallelCtx::new(t);
+            assert!(
+                rel_frob(&engine::matmul(&a, &b, ctx), &want) <= TOL,
+                "case {case} matmul {m}x{k}x{n} t={t}"
+            );
+            assert!(
+                rel_frob(&engine::t_matmul(&at, &b, ctx), &want_t) <= TOL,
+                "case {case} t_matmul {k}x{m}x{n} t={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn left_subspace_identical_across_thread_counts() {
+    // the subspace refresh must not depend on worker count: same seed, same
+    // basis, bit for bit
+    let mut rng = Pcg32::seeded(107);
+    let g = Mat::randn(96, 128, &mut rng);
+    let mut r1 = Pcg32::seeded(1);
+    let mut r2 = Pcg32::seeded(1);
+    let mut r8 = Pcg32::seeded(1);
+    let q1 = qgalore::linalg::left_subspace_with(&g, 16, 2, &mut r1, ParallelCtx::new(1));
+    let q2 = qgalore::linalg::left_subspace_with(&g, 16, 2, &mut r2, ParallelCtx::new(2));
+    let q8 = qgalore::linalg::left_subspace_with(&g, 16, 2, &mut r8, ParallelCtx::new(8));
+    assert_eq!(q1.data, q2.data, "thread count changed the refreshed basis");
+    assert_eq!(q1.data, q8.data, "thread count changed the refreshed basis");
+}

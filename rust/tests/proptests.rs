@@ -51,10 +51,42 @@ fn prop_quant_roundtrip_error_bounded() {
 
 #[test]
 fn prop_int4_pack_unpack_identity() {
+    // both parities: even lengths round-trip exactly; odd lengths round-trip
+    // through the padded high nibble (unpack yields the padded even count)
     cases(200, 2, |rng, _| {
-        let n = 2 * (1 + rng.below(512));
+        let n = 1 + rng.below(1024);
         let codes: Vec<i8> = (0..n).map(|_| (rng.below(16) as i8) - 8).collect();
-        assert_eq!(quant::unpack_int4(&quant::pack_int4(&codes)), codes);
+        let packed = quant::pack_int4(&codes);
+        assert_eq!(packed.len(), n.div_ceil(2));
+        let unpacked = quant::unpack_int4(&packed);
+        assert_eq!(unpacked.len(), packed.len() * 2);
+        assert_eq!(&unpacked[..n], &codes[..]);
+        if n % 2 == 1 {
+            assert_eq!(unpacked[n], 0, "odd-length pad nibble must decode to 0");
+        }
+    });
+}
+
+#[test]
+fn prop_quant4_roundtrip_tracks_numel() {
+    cases(120, 13, |rng, _| {
+        // single-block (possibly odd) and multi-block sizes
+        let n = if rng.below(2) == 0 {
+            1 + rng.below(255)
+        } else {
+            256 * (1 + rng.below(4))
+        };
+        let x = rng.normal_vec(n, 0.0, 1.0);
+        let t = quant::quantize4(&x);
+        assert_eq!(t.numel(), n);
+        let xh = quant::dequantize4(&t);
+        assert_eq!(xh.len(), n);
+        for (bi, (xb, hb)) in x.chunks(t.block).zip(xh.chunks(t.block)).enumerate() {
+            let bound = t.scale[bi] * 0.5 + t.scale[bi] * 1e-3;
+            for (a, b) in xb.iter().zip(hb) {
+                assert!((a - b).abs() <= bound);
+            }
+        }
     });
 }
 

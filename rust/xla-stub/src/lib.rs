@@ -1,0 +1,278 @@
+//! Offline stub of the `xla` (xla_extension) bindings.
+//!
+//! The coordinator's dependency budget must build with no network and no
+//! C++ toolchain, so this crate mirrors exactly the API surface
+//! `qgalore::runtime` consumes:
+//!
+//! * [`Literal`] is **fully functional** — dtype-tagged host buffers with
+//!   shape metadata and tuple nesting, so every host<->literal conversion
+//!   (and the unit tests over them) behaves like the real bindings.
+//! * The PJRT execution path ([`PjRtClient::compile`]) returns a descriptive
+//!   error: running the AOT HLO artifacts requires the real xla_extension
+//!   runtime.  Everything above the execute boundary (manifest parsing,
+//!   operand marshalling, optimizer state threading) stays testable.
+//!
+//! Swapping in the real bindings is a one-line change in `rust/Cargo.toml`.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real bindings' `Display`-able error.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error(msg.into())
+}
+
+/// XLA element types used by the coordinator's ABI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S8,
+    U8,
+    S32,
+}
+
+impl ElementType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::S8 | ElementType::U8 => 1,
+        }
+    }
+}
+
+/// Native rust types that map onto [`ElementType`] buffers.
+pub trait NativeType: Sized + Copy {
+    const TY: ElementType;
+    fn from_le(chunk: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(c: &[u8]) -> Self {
+        f32::from_le_bytes([c[0], c[1], c[2], c[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(c: &[u8]) -> Self {
+        i32::from_le_bytes([c[0], c[1], c[2], c[3]])
+    }
+}
+
+impl NativeType for i8 {
+    const TY: ElementType = ElementType::S8;
+    fn from_le(c: &[u8]) -> Self {
+        c[0] as i8
+    }
+}
+
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+    fn from_le(c: &[u8]) -> Self {
+        c[0]
+    }
+}
+
+/// A host literal: either a dense buffer with a shape, or a tuple of
+/// literals (the result form of every coordinator artifact).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = dims.iter().product();
+        if numel * ty.size_bytes() != data.len() {
+            return Err(err(format!(
+                "literal shape {:?} ({:?}) wants {} bytes, got {}",
+                dims,
+                ty,
+                numel * ty.size_bytes(),
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec(), tuple: None })
+    }
+
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { ty: ElementType::F32, dims: Vec::new(), data: Vec::new(), tuple: Some(elements) }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Copy the buffer out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(err("to_vec on a tuple literal"));
+        }
+        if self.ty != T::TY {
+            return Err(err(format!("literal is {:?}, requested {:?}", self.ty, T::TY)));
+        }
+        let w = self.ty.size_bytes();
+        Ok(self.data.chunks_exact(w).map(T::from_le).collect())
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple.ok_or_else(|| err("literal is not a tuple"))
+    }
+}
+
+/// Parsed HLO module (text interchange). The stub stores the raw text so
+/// load errors surface at the right place (missing/unreadable artifact
+/// files) even without a compiler behind it.
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err(format!("reading {}: {e}", path.display())))?;
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+pub struct XlaComputation {
+    _text_len: usize,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _text_len: proto.text.len() }
+    }
+}
+
+/// PJRT client. The stub constructs (so coordinator setup paths run), but
+/// compilation reports that no backend is linked.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(err(
+            "xla stub backend: cannot compile HLO (this build links the offline \
+             stub; point rust/Cargo.toml's `xla` dependency at the real \
+             xla_extension bindings to execute AOT artifacts)",
+        ))
+    }
+}
+
+/// A compiled executable. Unconstructable through the stub client; methods
+/// exist so the coordinator's execute path typechecks unchanged.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(err("xla stub backend: execute unavailable"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+        assert_eq!(lit.dims(), &[3]);
+    }
+
+    #[test]
+    fn literal_shape_checked() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4]).is_err()
+        );
+    }
+
+    #[test]
+    fn literal_dtype_checked() {
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S8, &[2], &[1u8, 2]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        assert_eq!(lit.to_vec::<i8>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn tuple_destructure() {
+        let a = Literal::create_from_shape_and_untyped_data(ElementType::U8, &[1], &[7]).unwrap();
+        let t = Literal::tuple(vec![a]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].to_vec::<u8>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn compile_reports_stub() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub");
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let e = client.compile(&comp).err().unwrap();
+        assert!(e.to_string().contains("stub"));
+    }
+}
