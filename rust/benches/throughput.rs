@@ -2,7 +2,9 @@
 //!
 //! Part 1 (no artifacts needed): the blocked/parallel linalg engine vs the
 //! naive single-threaded reference — GFLOP/s, speedup and parity for the
-//! projection-shaped products on the Q-GaLore hot path.
+//! projection-shaped products on the Q-GaLore hot path — plus the
+//! dispatch-overhead microbench (per-call latency of small repeated
+//! matmuls: scoped-spawn vs the persistent worker pool).
 //!
 //! Part 2 (requires `make artifacts`): the §4.3 measurement against the AOT
 //! HLO artifacts — what does Q-GaLore's quantize/dequantize traffic cost
@@ -17,7 +19,7 @@ use std::hint::black_box;
 
 use bench_harness::{bench, BenchResult};
 use qgalore::coordinator::trainer::{TrainConfig, Trainer};
-use qgalore::linalg::{Mat, ParallelCtx};
+use qgalore::linalg::{engine, Mat, ParallelCtx, WorkerPool};
 use qgalore::manifest::Manifest;
 use qgalore::optim::{BuildOptions, Method};
 use qgalore::quant;
@@ -128,8 +130,52 @@ fn engine_benches() {
     );
 }
 
+/// Dispatch-overhead microbench: per-call latency on deliberately small
+/// (sub-`PAR_MIN_FLOPS`) repeated matmuls, where dispatch cost dominates the
+/// arithmetic — exactly the regime of Q-GaLore's many per-layer products.
+/// `matmul_ungated` bypasses the serial gate so scoped-spawn (the PR-1
+/// engine) and the persistent pool are measured head to head; the gap to
+/// the serial baseline is each substrate's dispatch tax.
+fn dispatch_benches() {
+    println!("\n== dispatch overhead: scoped spawn (old) vs persistent pool (new) ==");
+    let mut rng = Pcg32::seeded(7);
+    // an explicit 4-worker pool so the comparison is like for like: the
+    // global pool is sized to the machine's core count, not to the label
+    let pool4 = WorkerPool::leaked(4);
+    for (m, k, n) in [(32usize, 32usize, 32usize), (64, 64, 64), (96, 96, 96)] {
+        assert!(
+            m * k * n < engine::PAR_MIN_FLOPS,
+            "dispatch bench shapes must sit below the serial gate"
+        );
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let iters = 200;
+        let r_serial = bench(&format!("matmul {m}x{k}x{n} serial"), 20, iters, || {
+            black_box(engine::matmul_ungated(&a, &b, ParallelCtx::serial()));
+        });
+        let scoped = ParallelCtx::scoped(4);
+        let r_scoped = bench(&format!("matmul {m}x{k}x{n} scoped-spawn x4"), 20, iters, || {
+            black_box(engine::matmul_ungated(&a, &b, scoped));
+        });
+        let pooled = ParallelCtx::with_pool(4, pool4);
+        let r_pool = bench(&format!("matmul {m}x{k}x{n} pool x4"), 20, iters, || {
+            black_box(engine::matmul_ungated(&a, &b, pooled));
+        });
+        println!(
+            "    -> per-call: serial {:.1} us | scoped {:.1} us | pool {:.1} us | dispatch tax {:.1} -> {:.1} us ({:.2}x pool speedup vs scoped)",
+            r_serial.mean_ms * 1e3,
+            r_scoped.mean_ms * 1e3,
+            r_pool.mean_ms * 1e3,
+            (r_scoped.mean_ms - r_serial.mean_ms) * 1e3,
+            (r_pool.mean_ms - r_serial.mean_ms) * 1e3,
+            r_scoped.mean_ms / r_pool.mean_ms,
+        );
+    }
+}
+
 fn main() {
     engine_benches();
+    dispatch_benches();
 
     let man = match Manifest::load("artifacts") {
         Ok(m) => m,

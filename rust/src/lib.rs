@@ -19,7 +19,7 @@
 //! |---------------|------|
 //! | [`jsonx`]     | minimal JSON parser/serializer (manifest, configs, logs) |
 //! | [`util`]      | PCG RNG, timing, small helpers |
-//! | [`linalg`]    | dense matrices, Householder QR, randomized subspace iteration (the SVD substrate) |
+//! | [`linalg`]    | dense matrices, QR, randomized subspace iteration, persistent worker pool (the SVD + matmul substrate) |
 //! | [`quant`]     | block-wise INT8/INT4 quantization + stochastic rounding (host mirror of the L1 kernels) |
 //! | [`data`]      | synthetic-C4 corpus, tokenizer, sequence packer/batcher |
 //! | [`model`]     | model topology metadata + AOT ABI (mirrors `python/compile/configs.py`) |

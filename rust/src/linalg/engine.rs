@@ -1,27 +1,38 @@
 //! Parallel cache-blocked matmul engine — the hot path under every
 //! Q-GaLore projection (`P^T g`, `P u`) and subspace refresh.
 //!
-//! Design (no external deps, std scoped threads only):
+//! Architecture (no external deps; std threads only):
 //!
-//! * Work splits over **row panels** of the output; each worker owns a
-//!   disjoint `&mut` slab, so the parallelism is safe-Rust with zero
-//!   synchronization on the accumulation path.
+//! * **Decomposition** lives here: work splits over disjoint row panels of
+//!   the output keyed by [`ParallelCtx::threads`]; each task owns a
+//!   `&mut` slab, so the parallelism is safe-Rust with zero synchronization
+//!   on the accumulation path.
+//! * **Execution** lives in the persistent [`pool`](super::pool): a
+//!   [`ParallelCtx`] is a *handle* — a thread budget plus the
+//!   [`WorkerPool`] that will run the tasks.  The pool is spun up once
+//!   (from CLI `--threads` / `QGALORE_THREADS` env / detected cores) and
+//!   reused for every call, replacing PR-1's per-call
+//!   `std::thread::scope` spawns and their ~100us dispatch tax.  The old
+//!   scoped-spawn path survives as a fallback ([`ParallelCtx::scoped`]) and
+//!   as the baseline the dispatch-overhead bench measures against.
+//! * Because the pool executes the *same* disjoint-slab decomposition, its
+//!   results are **bitwise identical** to the scoped-thread engine and to a
+//!   1-thread run, for any pool size (asserted by `tests/parity.rs`).
 //! * Within a panel the kernel is k-blocked (`KC`-sized stripes of B stay
-//!   hot in cache while the panel's rows stream over them) with the same
-//!   ascending-k accumulation order as the naive reference, so blocked and
-//!   naive results are **bitwise identical** — parity tests assert a
-//!   1e-5 rel-Frobenius bound but the engine in fact meets 0.
-//! * `t_matmul` first transposes its per-worker column panel into a dense
-//!   row-major scratch (a few KB) and then reuses the same kernel: the
-//!   strided column walk happens once per panel instead of once per fma.
+//!   hot in cache) with the same ascending-k accumulation order as the
+//!   naive reference, so blocked and naive results also match bitwise —
+//!   parity tests assert a 1e-5 rel-Frobenius bound but the engine in fact
+//!   meets 0.
+//! * `t_matmul` transposes bounded per-worker column sub-panels into a
+//!   dense row-major scratch and reuses the same kernel: the strided column
+//!   walk happens once per panel instead of once per fma.
 //!
-//! Thread count comes from [`ParallelCtx`]: explicit per-call, or the
-//! process-global default (CLI `--threads` / `QGALORE_THREADS` env /
-//! `available_parallelism`). Small problems (< [`PAR_MIN_FLOPS`] fma) run
-//! serially — spawn cost would dominate.
+//! Small problems (< [`PAR_MIN_FLOPS`] fma) run serially on the calling
+//! thread — even pool dispatch costs more than the arithmetic there.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use super::pool::{global_pool, WorkerPool};
 use super::Mat;
 
 /// k-stripe width: `KC` rows of B (KC * n * 4 bytes) form the resident
@@ -32,64 +43,142 @@ const KC: usize = 256;
 pub const PAR_MIN_FLOPS: usize = 1 << 20;
 
 /// Buffer-cloning fan-outs (operand marshalling) below this many total
-/// elements stay serial — spawn cost would exceed the memcpy.
+/// elements stay serial — dispatch cost would exceed the memcpy.
 pub const PAR_MIN_CLONE_ELEMS: usize = 1 << 20;
 
-/// Process-global default thread count (0 = not yet resolved).
-static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+/// Resolve-once container for a worker-count default: 0 = unresolved, an
+/// explicit [`ThreadCount::set`] always wins over the detected value.
+/// Factored out of the process-global so tests exercise the override
+/// semantics on a *private* instance instead of mutating (and racing) the
+/// global that concurrent parity tests read through `ParallelCtx::global`.
+pub(crate) struct ThreadCount(AtomicUsize);
+
+impl ThreadCount {
+    pub(crate) const fn unresolved() -> Self {
+        ThreadCount(AtomicUsize::new(0))
+    }
+
+    /// Explicit override (CLI `--threads`). Clamped to 1+.
+    pub(crate) fn set(&self, n: usize) {
+        self.0.store(n.max(1), Ordering::Relaxed);
+    }
+
+    /// Current value, resolving via `detect` on first use.
+    pub(crate) fn get(&self, detect: impl FnOnce() -> usize) -> usize {
+        match self.0.load(Ordering::Relaxed) {
+            0 => {
+                let n = detect().max(1);
+                // racing first-callers agree on detect()'s value; an
+                // explicit set() always wins afterwards
+                let _ = self.0.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed);
+                n
+            }
+            n => n,
+        }
+    }
+}
+
+/// Process-global default thread count.
+static GLOBAL_THREADS: ThreadCount = ThreadCount::unresolved();
 
 /// Override the global default (CLI `--threads`). Values are clamped to 1+.
+/// Call before the first parallel work: the global pool sizes itself from
+/// this value once, on first use.
 pub fn set_global_threads(n: usize) {
-    GLOBAL_THREADS.store(n.max(1), Ordering::Relaxed);
+    GLOBAL_THREADS.set(n);
+}
+
+/// `QGALORE_THREADS`-style value -> worker count (>= 1), if well-formed.
+fn parse_threads(s: &str) -> Option<usize> {
+    match s.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n),
+        _ => None,
+    }
 }
 
 fn detect_threads() -> usize {
-    if let Ok(s) = std::env::var("QGALORE_THREADS") {
-        if let Ok(n) = s.trim().parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    std::env::var("QGALORE_THREADS")
+        .ok()
+        .and_then(|s| parse_threads(&s))
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
 /// The global default thread count (resolving it on first use).
 pub fn global_threads() -> usize {
-    match GLOBAL_THREADS.load(Ordering::Relaxed) {
-        0 => {
-            let n = detect_threads();
-            // racing first-callers agree on detect()'s value; an explicit
-            // set_global_threads always wins afterwards
-            let _ = GLOBAL_THREADS.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed);
-            n
-        }
-        n => n,
-    }
+    GLOBAL_THREADS.get(detect_threads)
 }
 
-/// Parallelism context threaded through the optimizer stack: how many
-/// worker threads a linalg call may use.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Parallelism handle threaded through the optimizer stack: a thread budget
+/// (how many disjoint slabs the decomposition produces) plus the worker
+/// pool that executes them.  `Copy`, so it flows by value everywhere; the
+/// pool reference is `&'static` (the global pool, or a leaked explicit one).
+///
+/// The budget controls *decomposition only* — results are bitwise identical
+/// whatever pool (or the scoped fallback) runs the slabs.
+#[derive(Clone, Copy, Debug)]
 pub struct ParallelCtx {
     pub threads: usize,
+    pool: Option<&'static WorkerPool>,
 }
 
 impl ParallelCtx {
-    /// Exactly one thread (reference semantics, no spawns).
+    /// Exactly one thread (reference semantics, no dispatch at all).
     pub fn serial() -> Self {
-        ParallelCtx { threads: 1 }
+        ParallelCtx { threads: 1, pool: None }
     }
 
+    /// A budget of `threads` executed on the process-global pool.
     pub fn new(threads: usize) -> Self {
-        ParallelCtx { threads: threads.max(1) }
+        let threads = threads.max(1);
+        ParallelCtx { threads, pool: if threads > 1 { Some(global_pool()) } else { None } }
     }
 
-    /// The process-global default (CLI/env/hardware).
+    /// A budget of `threads` executed by per-call scoped spawns (the PR-1
+    /// engine).  Kept as a fallback and as the dispatch-overhead baseline
+    /// for `benches/throughput.rs`.
+    pub fn scoped(threads: usize) -> Self {
+        ParallelCtx { threads: threads.max(1), pool: None }
+    }
+
+    /// A budget of `threads` executed on an explicit pool (tests/benches;
+    /// leak the pool via [`WorkerPool::leaked`] to get the `'static` handle).
+    pub fn with_pool(threads: usize, pool: &'static WorkerPool) -> Self {
+        ParallelCtx { threads: threads.max(1), pool: Some(pool) }
+    }
+
+    /// The process-global default (CLI/env/hardware) on the global pool.
     pub fn global() -> Self {
-        ParallelCtx { threads: global_threads() }
+        ParallelCtx::new(global_threads())
+    }
+
+    /// Same pool, different thread budget — for callers splitting one
+    /// worker budget between an outer fan-out and inner linalg calls.
+    pub fn with_threads(self, threads: usize) -> Self {
+        ParallelCtx { threads: threads.max(1), pool: self.pool }
+    }
+
+    /// The pool that should execute a parallel call, if any.
+    fn pool(&self) -> Option<&'static WorkerPool> {
+        if self.threads <= 1 {
+            None
+        } else {
+            self.pool
+        }
     }
 }
+
+impl PartialEq for ParallelCtx {
+    fn eq(&self, other: &Self) -> bool {
+        self.threads == other.threads
+            && match (self.pool, other.pool) {
+                (None, None) => true,
+                (Some(a), Some(b)) => std::ptr::eq(a, b),
+                _ => false,
+            }
+    }
+}
+
+impl Eq for ParallelCtx {}
 
 impl Default for ParallelCtx {
     fn default() -> Self {
@@ -98,7 +187,7 @@ impl Default for ParallelCtx {
 }
 
 /// Gate a buffer-cloning fan-out: serial below [`PAR_MIN_CLONE_ELEMS`]
-/// total elements (spawn cost would exceed the memcpy), else `pool`.
+/// total elements (dispatch cost would exceed the memcpy), else `pool`.
 pub fn clone_pool(total_elems: usize, pool: ParallelCtx) -> ParallelCtx {
     if total_elems < PAR_MIN_CLONE_ELEMS {
         ParallelCtx::serial()
@@ -109,7 +198,10 @@ pub fn clone_pool(total_elems: usize, pool: ParallelCtx) -> ParallelCtx {
 
 /// Run `body(r0, r1, slab)` over disjoint row panels of a freshly zeroed
 /// (rows, cols) row-major buffer, splitting panels across `ctx.threads`
-/// scoped workers. `slab` covers exactly rows `r0..r1`.
+/// tasks.  Tasks execute on the ctx's pool (or per-call scoped workers for
+/// a pool-less ctx); either way the decomposition — and therefore the
+/// result, bit for bit — is identical.  `slab` covers exactly rows
+/// `r0..r1`.
 pub fn par_rows<F>(ctx: ParallelCtx, rows: usize, cols: usize, body: F) -> Vec<f32>
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
@@ -124,19 +216,36 @@ where
         return out;
     }
     let chunk = rows.div_ceil(t);
-    std::thread::scope(|s| {
-        for (ti, slab) in out.chunks_mut(chunk * cols).enumerate() {
-            let body = &body;
-            let r0 = ti * chunk;
-            let r1 = (r0 + chunk).min(rows);
-            s.spawn(move || body(r0, r1, slab));
+    let body = &body;
+    match ctx.pool() {
+        Some(pool) => {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .chunks_mut(chunk * cols)
+                .enumerate()
+                .map(|(ti, slab)| {
+                    let r0 = ti * chunk;
+                    let r1 = (r0 + chunk).min(rows);
+                    Box::new(move || body(r0, r1, slab)) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(tasks);
         }
-    });
+        None => {
+            std::thread::scope(|s| {
+                for (ti, slab) in out.chunks_mut(chunk * cols).enumerate() {
+                    let r0 = ti * chunk;
+                    let r1 = (r0 + chunk).min(rows);
+                    s.spawn(move || body(r0, r1, slab));
+                }
+            });
+        }
+    }
     out
 }
 
-/// Map `f` over `items` with up to `ctx.threads` scoped workers, preserving
-/// order. Used to step independent layers / tensors concurrently.
+/// Map `f` over `items` with up to `ctx.threads` tasks, preserving order.
+/// Used to step independent layers / tensors concurrently; executes on the
+/// ctx's pool like [`par_rows`].
 pub fn par_map<T, U, F>(ctx: ParallelCtx, items: &[T], f: F) -> Vec<U>
 where
     T: Sync,
@@ -149,16 +258,34 @@ where
     let t = ctx.threads.min(items.len());
     let chunk = items.len().div_ceil(t);
     let mut out: Vec<Option<U>> = (0..items.len()).map(|_| None).collect();
-    std::thread::scope(|s| {
-        for (islab, oslab) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
-            let f = &f;
-            s.spawn(move || {
-                for (i, o) in islab.iter().zip(oslab.iter_mut()) {
-                    *o = Some(f(i));
+    let f = &f;
+    match ctx.pool() {
+        Some(pool) => {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = items
+                .chunks(chunk)
+                .zip(out.chunks_mut(chunk))
+                .map(|(islab, oslab)| {
+                    Box::new(move || {
+                        for (i, o) in islab.iter().zip(oslab.iter_mut()) {
+                            *o = Some(f(i));
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(tasks);
+        }
+        None => {
+            std::thread::scope(|s| {
+                for (islab, oslab) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                    s.spawn(move || {
+                        for (i, o) in islab.iter().zip(oslab.iter_mut()) {
+                            *o = Some(f(i));
+                        }
+                    });
                 }
             });
         }
-    });
+    }
     out.into_iter().map(|o| o.expect("par_map worker filled every slot")).collect()
 }
 
@@ -200,9 +327,17 @@ pub(crate) fn effective(ctx: ParallelCtx, m: usize, k: usize, n: usize) -> Paral
 
 /// `a (m, k) @ b (k, n) -> (m, n)`, parallel over row panels of the output.
 pub fn matmul(a: &Mat, b: &Mat, ctx: ParallelCtx) -> Mat {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    matmul_ungated(a, b, effective(ctx, m, k, n))
+}
+
+/// [`matmul`] without the [`PAR_MIN_FLOPS`] serial gate.  Bench/test hook:
+/// the dispatch-overhead benchmark drives deliberately small products
+/// through the parallel path to measure per-call scoped-spawn vs pool
+/// latency.  Results are identical to [`matmul`] for any ctx.
+pub fn matmul_ungated(a: &Mat, b: &Mat, ctx: ParallelCtx) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch");
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    let ctx = effective(ctx, m, k, n);
     let data = par_rows(ctx, m, n, |r0, r1, out| {
         panel_matmul(&a.data[r0 * k..r1 * k], r1 - r0, k, b, out);
     });
@@ -300,6 +435,27 @@ mod tests {
     }
 
     #[test]
+    fn scoped_fallback_matches_pool_bitwise() {
+        // ungated so the small shape actually exercises both dispatch paths
+        let mut rng = Pcg32::seeded(13);
+        let a = Mat::randn(65, 33, &mut rng);
+        let b = Mat::randn(33, 17, &mut rng);
+        let want = matmul_ungated(&a, &b, ParallelCtx::serial());
+        for t in [2usize, 8] {
+            assert_eq!(
+                matmul_ungated(&a, &b, ParallelCtx::scoped(t)).data,
+                want.data,
+                "scoped t={t}"
+            );
+            assert_eq!(
+                matmul_ungated(&a, &b, ParallelCtx::new(t)).data,
+                want.data,
+                "pool t={t}"
+            );
+        }
+    }
+
+    #[test]
     fn par_map_preserves_order() {
         let xs: Vec<usize> = (0..100).collect();
         let ys = par_map(ParallelCtx::new(8), &xs, |&x| x * 2);
@@ -309,13 +465,46 @@ mod tests {
     }
 
     #[test]
-    fn global_threads_env_and_override() {
-        // whatever the resolved default, an explicit override must win
-        let before = global_threads();
-        assert!(before >= 1);
-        set_global_threads(3);
-        assert_eq!(global_threads(), 3);
-        set_global_threads(before);
-        assert_eq!(global_threads(), before);
+    fn thread_count_override_and_resolution() {
+        // a PRIVATE instance: the former version of this test mutated the
+        // process-global count, racing parity tests that concurrently read
+        // ParallelCtx::global() under cargo's parallel test runner
+        let tc = ThreadCount::unresolved();
+        assert_eq!(tc.get(|| 5), 5);
+        assert_eq!(tc.get(|| 99), 5, "detection resolves exactly once");
+        tc.set(3);
+        assert_eq!(tc.get(|| 99), 3, "explicit override wins");
+        tc.set(0);
+        assert_eq!(tc.get(|| 99), 1, "override clamps to 1+");
+    }
+
+    #[test]
+    fn thread_env_parsing() {
+        assert_eq!(parse_threads("4"), Some(4));
+        assert_eq!(parse_threads(" 16\n"), Some(16));
+        assert_eq!(parse_threads("0"), None, "0 falls back to detection");
+        assert_eq!(parse_threads("-2"), None);
+        assert_eq!(parse_threads("lots"), None);
+        assert_eq!(parse_threads(""), None);
+    }
+
+    #[test]
+    fn global_threads_resolves_to_at_least_one() {
+        // read-only on the process global: safe under the parallel runner
+        assert!(global_threads() >= 1);
+        assert_eq!(ParallelCtx::global().threads, global_threads());
+    }
+
+    #[test]
+    fn ctx_constructors_and_budget_split() {
+        assert_eq!(ParallelCtx::serial().threads, 1);
+        assert_eq!(ParallelCtx::new(0).threads, 1);
+        assert_eq!(ParallelCtx::scoped(0).threads, 1);
+        let ctx = ParallelCtx::new(8);
+        assert_eq!(ctx.with_threads(3).threads, 3);
+        assert_eq!(ctx.with_threads(0).threads, 1);
+        // serial never dispatches, whatever handle it carries
+        assert!(ParallelCtx::new(1).pool().is_none());
+        assert!(ctx.with_threads(1).pool().is_none());
     }
 }

@@ -7,17 +7,21 @@
 //! invariant subspace, which is all GaLore consumes — the singular values
 //! themselves are discarded.
 //!
-//! The matmul substrate itself ([`engine`]) is parallel and cache-blocked:
-//! subspace refreshes batch several layers' `G G^T`-style products, and at
-//! larger testbed shapes they dominate the step. The naive `*_naive`
-//! kernels remain as the bitwise reference the parity tests (and benches)
-//! compare against.
+//! The matmul substrate itself ([`engine`]) is parallel and cache-blocked,
+//! and executes on the persistent worker pool ([`pool`]): decomposition
+//! into disjoint row panels happens in the engine, execution on long-lived
+//! pool workers, so per-call dispatch is a queue push instead of a thread
+//! spawn.  Same-shape subspace refreshes batch into one stacked range-finder
+//! product ([`left_subspace_batched`]); the naive `*_naive` kernels remain
+//! as the bitwise reference the parity tests (and benches) compare against.
 
 pub mod engine;
+pub mod pool;
 
 pub use engine::{
     clone_pool, global_threads, par_map, par_rows, set_global_threads, ParallelCtx,
 };
+pub use pool::{global_pool, WorkerPool};
 
 use crate::util::Pcg32;
 
@@ -283,8 +287,8 @@ pub fn left_subspace(g: &Mat, r: usize, iters: usize, rng: &mut Pcg32) -> Mat {
 }
 
 /// [`left_subspace`] with an explicit parallelism context — callers that
-/// refresh several layers concurrently pass [`ParallelCtx::serial`] per
-/// worker to avoid nested oversubscription.
+/// refresh several layers concurrently split their worker budget with
+/// [`ParallelCtx::with_threads`] to avoid nested oversubscription.
 pub fn left_subspace_with(
     g: &Mat,
     r: usize,
@@ -294,19 +298,90 @@ pub fn left_subspace_with(
 ) -> Mat {
     let r = r.min(g.rows).min(g.cols);
     let omega = Mat::randn(g.cols, r, rng);
-    let mut y = g.matmul_with(&omega, ctx); // (m, r)
-    let mut q = qr_orthonormal(&y);
+    let y = g.matmul_with(&omega, ctx); // (m, r)
+    finish_left_subspace(g, &y, iters, ctx)
+}
+
+/// Everything after the range-finder product `Y = G Omega`: QR, power
+/// iterations, and canonicalization.  Shared between the per-layer and
+/// batched refresh paths so the two are bitwise identical by construction.
+fn finish_left_subspace(g: &Mat, y: &Mat, iters: usize, ctx: ParallelCtx) -> Mat {
+    let mut q = qr_orthonormal(y);
     for _ in 0..iters {
         // Z = G^T Q (n, r); Y = G Z (m, r)
         let z = g.t_matmul_with(&q, ctx);
-        y = g.matmul_with(&z, ctx);
-        q = qr_orthonormal(&y);
+        let y2 = g.matmul_with(&z, ctx);
+        q = qr_orthonormal(&y2);
     }
     // canonicalize: Z = Q^T G; C = Z Z^T; Q <- Q * eigvecs(C)
     let z = q.t_matmul_with(g, ctx); // (r, n)
     let c = z.matmul_with(&z.transpose(), ctx); // (r, r)
     let (_vals, vecs) = symmetric_eig(&c);
     q.matmul_with(&vecs, ctx)
+}
+
+/// Shape-batched subspace refresh: [`left_subspace_with`] for several
+/// same-shape gradient matrices at once, sharing one range sketch.
+///
+/// The sketch `Omega` is drawn ONCE from `rng` for the whole group, and the
+/// range-finder products are presented to the worker pool as a single
+/// stacked `(L*m, n) @ (n, r)` matmul — row panels of the stacked output
+/// map straight onto per-layer row blocks, so each layer's slice is bitwise
+/// identical to `g.matmul(&omega)` computed on its own.  The per-layer
+/// power iterations and canonicalization (whose operands differ per layer
+/// and therefore cannot stack) then fan out across `pool`, each with a
+/// proportional share of the worker budget.
+///
+/// Equivalence contract (asserted by `tests/parity.rs`): the result is
+/// bitwise identical to calling [`left_subspace_with`] on each `g` with a
+/// clone of `rng` — i.e. batching changes dispatch, never projections.
+pub fn left_subspace_batched(
+    gs: &[&Mat],
+    r: usize,
+    iters: usize,
+    rng: &mut Pcg32,
+    pool: ParallelCtx,
+) -> Vec<Mat> {
+    if gs.is_empty() {
+        return Vec::new();
+    }
+    let (m, n) = (gs[0].rows, gs[0].cols);
+    for g in gs {
+        assert_eq!((g.rows, g.cols), (m, n), "batched refresh needs one shape");
+    }
+    let r = r.min(m).min(n);
+    let omega = Mat::randn(n, r, rng);
+    // one stacked (L*m, n) @ (n, r) range-finder product over all layers:
+    // the pool sees a single large matmul instead of L small dispatches,
+    // without materializing the stacked gradient (each panel indexes into
+    // its owning layer's buffer directly)
+    let l = gs.len();
+    let lrows = l * m;
+    let ctx = engine::effective(pool, lrows, n, r);
+    let ydata = engine::par_rows(ctx, lrows, r, |r0, r1, out| {
+        let mut row = r0;
+        while row < r1 {
+            let li = row / m;
+            let l0 = row % m;
+            let lw = (m - l0).min(r1 - row);
+            engine::panel_matmul(
+                &gs[li].data[l0 * n..(l0 + lw) * n],
+                lw,
+                n,
+                &omega,
+                &mut out[(row - r0) * r..(row - r0 + lw) * r],
+            );
+            row += lw;
+        }
+    });
+    // per-layer finish, fanned out on the pool with a split worker budget
+    // (same outer/inner policy as the optimizer's wave scheduler)
+    let ys: Vec<(usize, Mat)> = (0..l)
+        .map(|li| (li, Mat::from_vec(m, r, ydata[li * m * r..(li + 1) * m * r].to_vec())))
+        .collect();
+    let inner = pool.with_threads(pool.threads.div_ceil(l));
+    let outer = pool.with_threads(pool.threads.min(l));
+    par_map(outer, &ys, |(li, y)| finish_left_subspace(gs[*li], y, iters, inner))
 }
 
 /// Cosine similarity between two orthonormal bases of the same shape, as the
@@ -516,5 +591,40 @@ mod tests {
         let q = left_subspace(&g, 32, 2, &mut rng);
         assert_eq!(q.cols, 6);
         assert_eq!(q.rows, 8);
+    }
+
+    #[test]
+    fn batched_refresh_recovers_each_layer() {
+        // three layers with distinct planted subspaces through ONE batched
+        // call: each recovered basis must match its own layer, not a blend
+        let mut rng = Pcg32::seeded(30);
+        let mut gs = Vec::new();
+        let mut trues = Vec::new();
+        for _ in 0..3 {
+            let u_true = qr_orthonormal(&Mat::randn(48, 4, &mut rng));
+            let v = Mat::randn(4, 96, &mut rng);
+            gs.push(u_true.matmul(&v));
+            trues.push(u_true);
+        }
+        let grefs: Vec<&Mat> = gs.iter().collect();
+        let mut brng = Pcg32::seeded(31);
+        let qs = left_subspace_batched(&grefs, 4, 2, &mut brng, ParallelCtx::new(4));
+        assert_eq!(qs.len(), 3);
+        for (u_true, q) in trues.iter().zip(&qs) {
+            let overlap = subspace_overlap(u_true, q);
+            assert!(overlap > 0.999, "batched refresh lost a layer: {overlap}");
+        }
+    }
+
+    #[test]
+    fn batched_refresh_empty_and_single() {
+        let mut rng = Pcg32::seeded(32);
+        assert!(left_subspace_batched(&[], 4, 2, &mut rng, ParallelCtx::new(2)).is_empty());
+        let g = Mat::randn(24, 36, &mut rng);
+        let mut r1 = Pcg32::seeded(33);
+        let mut r2 = Pcg32::seeded(33);
+        let batched = left_subspace_batched(&[&g], 6, 2, &mut r1, ParallelCtx::new(2));
+        let solo = left_subspace_with(&g, 6, 2, &mut r2, ParallelCtx::serial());
+        assert_eq!(batched[0].data, solo.data, "L=1 batched must equal solo");
     }
 }

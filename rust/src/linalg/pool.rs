@@ -1,0 +1,371 @@
+//! Persistent worker pool — the execution substrate under `par_rows` /
+//! `par_map` and every fused dequant kernel.
+//!
+//! PR-1's engine spawned fresh `std::thread::scope` workers per call, which
+//! costs ~100us of dispatch per matmul.  That tax is invisible on big dense
+//! products but caps speedup exactly where Q-GaLore lives: many small
+//! per-layer products (`P^T g`, `P u`, rank-r refreshes) each individually
+//! below a millisecond.  This module replaces per-call spawning with a
+//! long-lived pool:
+//!
+//! * Workers are spun up **once** (from `--threads` / `QGALORE_THREADS` via
+//!   [`global_pool`], or explicitly via [`WorkerPool::new`]) and block on a
+//!   condvar-guarded FIFO job queue between calls.
+//! * [`WorkerPool::run_scoped`] submits one call's task set and returns only
+//!   after every task has executed, which is what makes handing the pool
+//!   closures that borrow the caller's stack sound (see SAFETY below).
+//! * While waiting, the submitting thread **helps**: it drains tasks from
+//!   the shared queue instead of sleeping.  Helping is not just a latency
+//!   optimization — it is the deadlock-freedom argument for *nested*
+//!   submission (the galore wave scheduler fans layers out with `par_map`
+//!   and each layer's refresh submits its own matmul tasks): a worker
+//!   blocked on an inner submission keeps executing queued tasks, so the
+//!   queue always drains and every latch eventually opens.
+//! * A task that panics is caught, its payload parked on the submission's
+//!   latch, and the panic **resumed in the submitting thread** (original
+//!   message intact) after the call settles — the pool itself survives,
+//!   matching `std::thread::scope` semantics.
+//!
+//! The pool does not decide decomposition — `par_rows`/`par_map` still split
+//! work into the same disjoint slabs keyed by `ParallelCtx::threads`, so
+//! results are bitwise identical to the scoped-thread engine and to a
+//! 1-thread run regardless of how many pool workers actually execute the
+//! slabs (asserted by `tests/parity.rs`).
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A queued unit of work.  Tasks are erased to `'static` at submission; the
+/// latch protocol in [`WorkerPool::run_scoped`] is what keeps that sound.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    /// signalled when tasks are pushed (and at shutdown)
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Completion latch for one `run_scoped` submission.  Carries the first
+/// caught panic payload so the submitter can resume it verbatim — the
+/// original assert/index message survives, like `std::thread::scope`.
+struct Latch {
+    left: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch {
+            left: Mutex::new(n),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+
+    fn complete(&self) {
+        let mut left = self.left.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.left.lock().unwrap() == 0
+    }
+
+    fn wait(&self) {
+        let mut left = self.left.lock().unwrap();
+        while *left > 0 {
+            left = self.done.wait(left).unwrap();
+        }
+    }
+}
+
+/// A long-lived pool of worker threads with a shared FIFO job queue.
+///
+/// One process-global instance ([`global_pool`]) backs `ParallelCtx::new` /
+/// `::global`; tests and benches construct private instances (usually via
+/// [`WorkerPool::leaked`], since `ParallelCtx` carries a `&'static` handle
+/// so it can stay `Copy`).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` (clamped to 1+) threads, parked on the job queue.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("qgalore-pool-{i}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, workers }
+    }
+
+    /// A leaked (process-lifetime) pool: the `&'static` handle form that
+    /// [`super::ParallelCtx::with_pool`] takes.  Used by tests and benches
+    /// that need explicit pool sizes; the workers are never joined.
+    pub fn leaked(workers: usize) -> &'static WorkerPool {
+        Box::leak(Box::new(WorkerPool::new(workers)))
+    }
+
+    /// Number of worker threads (excluding helping submitters).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute every task and return once all have completed.
+    ///
+    /// The submitting thread helps drain the queue while it waits, so
+    /// calling this from *inside* a pool task (nested submission) cannot
+    /// deadlock.  If any task panicked, the panic is re-thrown here after
+    /// the whole submission has settled.
+    ///
+    /// SAFETY invariant: tasks may borrow data with lifetime `'scope`
+    /// (shorter than `'static`).  They are transmuted to `'static` to sit
+    /// in the shared queue, which is sound because this function does not
+    /// return until the latch confirms every submitted task has finished
+    /// running — no task can outlive the borrows it captures.
+    pub fn run_scoped<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if tasks.len() == 1 {
+            // nothing to fan out; run inline (panics propagate naturally)
+            (tasks.into_iter().next().unwrap())();
+            return;
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for task in tasks {
+                let l = Arc::clone(&latch);
+                let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                    if let Err(payload) =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(task))
+                    {
+                        let mut slot = l.panic.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(payload);
+                        }
+                    }
+                    l.complete();
+                });
+                // SAFETY: see the invariant above — we block on `latch`
+                // below until every wrapped task has run to completion, so
+                // the 'scope borrows stay live for every execution.
+                let wrapped: Task = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'scope>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(wrapped)
+                };
+                q.push_back(wrapped);
+            }
+            self.shared.available.notify_all();
+        }
+        // Help while waiting: run queued tasks (ours or another
+        // submission's) until the queue is momentarily empty, then block on
+        // the latch for whatever is still in flight on the workers.
+        loop {
+            if latch.is_done() {
+                break;
+            }
+            let task = self.shared.queue.lock().unwrap().pop_front();
+            match task {
+                Some(t) => t(),
+                None => {
+                    latch.wait();
+                    break;
+                }
+            }
+        }
+        let payload = latch.panic.lock().unwrap().take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerPool").field("workers", &self.workers).finish_non_exhaustive()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            // signal under the queue lock: a worker is either holding the
+            // lock (and will see the flag on its next check) or already
+            // waiting (and will be woken) — no lost-wakeup window between
+            // its shutdown check and its wait
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Release);
+            self.shared.available.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break Some(t);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match task {
+            // panics are caught inside the run_scoped wrapper, so a bad
+            // task cannot take the worker (or the queue mutex) down
+            Some(t) => t(),
+            None => return,
+        }
+    }
+}
+
+/// The process-global pool: sized from [`super::engine::global_threads`]
+/// (CLI `--threads` / `QGALORE_THREADS` env / detected cores) on first use.
+/// `main` touches this right after parsing `--threads` so the workers spin
+/// up once, before any timed work.
+pub fn global_pool() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| WorkerPool::new(super::engine::global_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..64)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn reuse_across_many_submissions() {
+        let pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(tasks);
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn tasks_can_borrow_caller_stack() {
+        let pool = WorkerPool::new(2);
+        let mut out = vec![0usize; 8];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(2)
+            .enumerate()
+            .map(|(i, slab)| {
+                Box::new(move || {
+                    for (j, s) in slab.iter_mut().enumerate() {
+                        *s = i * 2 + j;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(out, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_task_propagates_but_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("task boom")),
+                Box::new(|| {}),
+            ];
+            pool.run_scoped(tasks);
+        }));
+        let payload = boom.expect_err("panic must reach the submitter");
+        assert_eq!(
+            payload.downcast_ref::<&str>().copied().unwrap_or(""),
+            "task boom",
+            "original panic payload must be preserved"
+        );
+        // the pool keeps working after a task panic
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(4);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..16)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        drop(pool); // must not hang
+        assert_eq!(counter.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = global_pool() as *const WorkerPool;
+        let b = global_pool() as *const WorkerPool;
+        assert!(std::ptr::eq(a, b));
+        assert!(global_pool().workers() >= 1);
+    }
+}

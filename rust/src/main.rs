@@ -7,7 +7,7 @@ use anyhow::{anyhow, Result};
 
 use qgalore::cli::Args;
 use qgalore::coordinator::{checkpoint, finetune, pretrain, FinetuneConfig, TrainConfig};
-use qgalore::linalg::{set_global_threads, ParallelCtx};
+use qgalore::linalg::{global_pool, set_global_threads, ParallelCtx};
 use qgalore::manifest::Manifest;
 use qgalore::memory;
 use qgalore::model;
@@ -21,8 +21,8 @@ qgalore — Q-GaLore: INT4-projection / INT8-weight low-rank LLM training
 
 USAGE: qgalore <command> [flags]
        (global: --artifacts DIR, default `artifacts`;
-                --threads N, linalg worker threads, default QGALORE_THREADS
-                env or all cores)
+                --threads N, persistent linalg worker-pool size, default
+                QGALORE_THREADS env or all cores; spun up once at launch)
 
 COMMANDS
   train      pre-train from scratch
@@ -60,6 +60,9 @@ fn main() -> Result<()> {
     if threads > 0 {
         set_global_threads(threads as usize);
     }
+    // spin the persistent worker pool up exactly once, before any timed
+    // work: every linalg call from here on is a queue push, not a spawn
+    let _ = global_pool();
 
     match cmd.as_str() {
         "train" => {

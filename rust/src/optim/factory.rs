@@ -26,7 +26,9 @@ pub struct BuildOptions {
     pub use_sr: bool,
     /// ReLoRA merge period (steps); 0 disables merging
     pub relora_merge_every: u64,
-    /// worker budget for host-side linalg (CLI `--threads` / env)
+    /// worker-pool handle + thread budget for host-side linalg (CLI
+    /// `--threads` / env; the default handle is the process-global
+    /// persistent pool, spun up once and shared by every optimizer)
     pub pool: ParallelCtx,
 }
 

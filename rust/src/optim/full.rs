@@ -14,8 +14,9 @@ use super::{
 };
 
 /// Marshal the fp param tensors as artifact operands, cloning buffers in
-/// parallel on `pool` (memory-bound but scales with core count). Tiny
-/// models stay serial — spawn cost would exceed the memcpy.
+/// parallel on the persistent worker pool (memory-bound but scales with
+/// core count). Tiny models stay serial — even pool dispatch would exceed
+/// the memcpy.
 fn clone_operands(pool: ParallelCtx, fp: &[FpTensor], lin: &[FpTensor]) -> Vec<HostTensor> {
     let refs: Vec<&FpTensor> = fp.iter().chain(lin.iter()).collect();
     let total: usize = refs.iter().map(|t| t.numel()).sum();

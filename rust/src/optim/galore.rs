@@ -12,14 +12,18 @@
 //! | 8-bit GaLore| fp      | fp         | blockwise INT8 |
 //! | Q-GaLore    | INT8 + stochastic rounding | packed INT4 | blockwise INT8 |
 //!
-//! The subspace itself is recomputed on the *control path* by
-//! `linalg::left_subspace` under the lazy layer-adaptive scheduler
-//! (`crate::scheduler`); the per-step update runs through the fused
-//! `*_update_{m}x{n}_r{r}` HLO artifacts built from the L1 Pallas kernels.
+//! The subspace itself is recomputed on the *control path* under the lazy
+//! layer-adaptive scheduler (`crate::scheduler`), via the **shape-batched**
+//! refresh (`linalg::left_subspace_batched`): layers due in the same step
+//! whose gradients share (m, n) are grouped, share one range sketch, and
+//! present the worker pool with a single stacked (L*m, n) range-finder
+//! product instead of L small dispatches.  The per-step update runs through
+//! the fused `*_update_{m}x{n}_r{r}` HLO artifacts built from the L1
+//! Pallas kernels.
 
 use anyhow::{anyhow, Result};
 
-use crate::linalg::{left_subspace_with, par_map, subspace_overlap_with, Mat, ParallelCtx};
+use crate::linalg::{left_subspace_batched, par_map, subspace_overlap_with, Mat, ParallelCtx};
 use crate::manifest::ConfigEntry;
 use crate::quant::{self, Adam8State, Quant4Tensor, QuantTensor};
 use crate::runtime::HostTensor;
@@ -58,9 +62,12 @@ struct Layer {
     // weight storage (exactly one is Some, per kind)
     w_fp: Option<FpTensor>,
     w_q: Option<QuantTensor>,
-    // projection storage
+    // projection storage (at most one is Some): fp for GaLore / the 16-bit
+    // ablation, nibble-packed INT4 for default Q-GaLore, generic i8-coded
+    // QuantTensor for the 2-/8-bit Figure-3 ablation widths
     p_fp: Option<Mat>,
     p_q4: Option<Quant4Tensor>,
+    p_q: Option<QuantTensor>,
     // low-rank Adam state storage
     st_fp: Option<AdamFp>,
     st_8: Option<Adam8State>,
@@ -115,6 +122,7 @@ impl Galore {
                     w_q: None,
                     p_fp: None,
                     p_q4: None,
+                    p_q: None,
                     st_fp: Some(AdamFp::zeros(state_numel)),
                     st_8: None,
                 },
@@ -126,6 +134,7 @@ impl Galore {
                     w_q: None,
                     p_fp: None,
                     p_q4: None,
+                    p_q: None,
                     st_fp: None,
                     st_8: Some(Adam8State::zeros(state_numel)),
                 },
@@ -137,6 +146,7 @@ impl Galore {
                     w_q: Some(quant::quantize(&t.data, 8)),
                     p_fp: None,
                     p_q4: None,
+                    p_q: None,
                     st_fp: None,
                     st_8: Some(Adam8State::zeros(state_numel)),
                 },
@@ -225,17 +235,26 @@ impl Galore {
         if let Some(p) = &layer.p_fp {
             return Some(subspace_overlap_with(p, new_p, pool));
         }
-        layer.p_q4.as_ref().map(|q| {
-            let r_old = q.numel() / layer.m;
-            let prod = quant::dequant4_t_matmul(q, layer.m, r_old, new_p, pool);
+        let overlap = |prod: Mat, r_old: usize| {
             let f = prod.frobenius();
             f * f / r_old.min(new_p.cols).max(1) as f32
+        };
+        if let Some(q) = &layer.p_q4 {
+            let r_old = q.numel() / layer.m;
+            return Some(overlap(
+                quant::dequant4_t_matmul(q, layer.m, r_old, new_p, pool),
+                r_old,
+            ));
+        }
+        // generic-bit ablation storage: same fused discipline, i8 codes
+        layer.p_q.as_ref().map(|q| {
+            let r_old = q.numel() / layer.m;
+            overlap(quant::dequant8_t_matmul(q, layer.m, r_old, new_p, pool), r_old)
         })
     }
 
     /// Store a freshly computed basis in the layer's storage format.
     fn store_projection(&mut self, idx: usize, new_p: Mat) {
-        let rank = self.rank;
         let layer = &mut self.layers[idx];
         match self.kind {
             GaloreKind::Fp | GaloreKind::Bit8 => layer.p_fp = Some(new_p),
@@ -245,10 +264,11 @@ impl Galore {
                 } else if self.proj_bits == 4 {
                     layer.p_q4 = Some(quant::quantize4(&new_p.data));
                 } else {
-                    // Figure 3 ablation: other bit widths stored via the
-                    // generic QuantTensor path, dequantized on use.
-                    let q = quant::quantize(&new_p.data, self.proj_bits);
-                    layer.p_fp = Some(Mat::from_vec(layer.m, rank, quant::dequantize(&q)));
+                    // Figure 3 ablation bit widths (2 / 8): stored PACKED
+                    // as a generic QuantTensor and applied through the
+                    // fused dequant paths, so `live_bytes` reports the
+                    // packed size the ablation measures — not an fp32 copy.
+                    layer.p_q = Some(quant::quantize(&new_p.data, self.proj_bits));
                 }
             }
         }
@@ -316,12 +336,16 @@ impl Galore {
                 st.vs = it.next().unwrap().into_f32()?;
             }
             GaloreKind::Quantized => {
-                // Ablation bit-widths store the projection as f32; the INT4
-                // artifact path requires packed nibbles, so re-pack on the
-                // fly for those (hot path stays INT4 in the default config).
-                let (p4, ps, pz) = match (&layer.p_q4, &layer.p_fp) {
-                    (Some(q), _) => (q.packed.clone(), q.scale.clone(), q.zero.clone()),
-                    (None, Some(pf)) => {
+                // The INT4 artifact path requires packed nibbles; the
+                // ablation storages (generic i8 codes or fp32) re-pack on
+                // the fly (hot path stays INT4 in the default config).
+                let (p4, ps, pz) = match (&layer.p_q4, &layer.p_q, &layer.p_fp) {
+                    (Some(q), _, _) => (q.packed.clone(), q.scale.clone(), q.zero.clone()),
+                    (None, Some(q), _) => {
+                        let q4 = quant::quantize4(&quant::dequantize(q));
+                        (q4.packed, q4.scale, q4.zero)
+                    }
+                    (None, None, Some(pf)) => {
                         let q = quant::quantize4(&pf.data);
                         (q.packed, q.scale, q.zero)
                     }
@@ -348,13 +372,17 @@ impl Galore {
                     // SR noise is generated host-side (counter-based PCG
                     // keeps runs replayable; generating it in-graph with
                     // threefry cost ~1.7x the whole GaLore update on this
-                    // backend — EXPERIMENTS.md §Perf); the RTN ablation
-                    // artifact takes no noise operand.
+                    // backend — EXPERIMENTS.md §Perf), via the
+                    // chunk-streamed parallel fill so big layers fan the
+                    // fill over the worker pool without the result ever
+                    // depending on worker count.  The RTN ablation artifact
+                    // takes no noise operand.
                     self.sr_seed = self.sr_seed.wrapping_add(1);
-                    let mut noise_rng = Pcg32::new(self.sr_seed as u64, 0x5e_ed);
-                    ops.push(HostTensor::F32(
-                        (0..m * n).map(|_| noise_rng.next_f32()).collect(),
-                    ));
+                    ops.push(HostTensor::F32(quant::uniform_noise(
+                        m * n,
+                        self.sr_seed as u64,
+                        self.pool,
+                    )));
                 }
                 let outs = ctx.rt.execute(&art, &ops)?;
                 let mut it = outs.into_iter();
@@ -405,8 +433,8 @@ impl Optimizer for Galore {
 
     fn forward_operands(&self) -> Vec<HostTensor> {
         // operand marshalling is pure buffer cloning — fan the layers out
-        // over the pool (memory-bound, but scales with core count); tiny
-        // models stay serial, spawn cost would exceed the memcpy
+        // over the persistent pool (memory-bound, but scales with core
+        // count); tiny models stay serial, dispatch would exceed the memcpy
         let kind = self.kind;
         let total: usize = self.fp.iter().map(|t| t.numel()).sum::<usize>()
             + self.layers.iter().map(|l| l.m * l.n).sum::<usize>();
@@ -441,7 +469,7 @@ impl Optimizer for Galore {
         // the wave size = `pool.threads`, not the layer count, even at
         // step 0 when every layer refreshes at once.
         let pool = self.pool;
-        let mut due: Vec<(usize, Vec<f32>, u64)> = Vec::new();
+        let mut due: Vec<(usize, Vec<f32>)> = Vec::new();
         for (i, g) in grads.into_iter().enumerate() {
             let g = g.into_f32()?;
             if i < n_fp {
@@ -454,47 +482,57 @@ impl Optimizer for Galore {
             } else {
                 let idx = i - n_fp;
                 if self.pre_refresh(ctx.step, idx, &g) {
-                    // per-refresh seed drawn sequentially so results do
-                    // not depend on worker count or completion order
-                    let seed = self.rng.next_u64();
-                    due.push((idx, g, seed));
+                    due.push((idx, g));
                 } else {
                     self.run_layer_update(ctx, idx, g)?;
                 }
             }
         }
-        // Batched refresh in waves of at most `pool.threads` layers:
-        // independent layers' subspace iterations run concurrently, and
-        // each wave's buffers are dropped before the next starts.
+        // Shape-batched refresh: due layers are grouped by (m, n) in
+        // first-due order, and each group draws ONE sketch seed —
+        // sequentially, so the grouping (and therefore the training trace)
+        // is independent of the worker count.  Groups are consumed in
+        // waves of at most `pool.threads` layers, which caps the wave's
+        // live buffers (mean-gradient matrices, bases, iteration scratch)
+        // exactly as before — even at step 0 when every layer refreshes at
+        // once.  Every wave of a group re-derives the same omega from the
+        // group seed, so splitting a group into waves cannot change the
+        // projections (the `left_subspace_batched` contract).
         let rank = self.rank;
         let wave_size = pool.threads.max(1);
-        while !due.is_empty() {
-            let take = wave_size.min(due.len());
-            let wave: Vec<(usize, Vec<f32>, u64)> = due.drain(..take).collect();
-            let gms: Vec<(Mat, u64)> = wave
-                .iter()
-                .map(|(idx, g, seed)| (self.take_mean_grad(*idx, g), *seed))
-                .collect();
-            // split the worker budget between the wave (outer) and each
-            // refresh's own matmuls (inner). div_ceil keeps every thread
-            // busy when the wave doesn't divide the pool, at the cost of
-            // mild transient oversubscription (outer * inner may exceed
-            // the pool by less than one worker per refresh).
-            let inner = ParallelCtx::new(pool.threads.div_ceil(wave.len()));
-            let outer = ParallelCtx::new(pool.threads.min(wave.len()));
-            let new_ps: Vec<Mat> = par_map(outer, &gms, |(gm, seed)| {
-                let mut rng = Pcg32::new(*seed, 0x5eed);
-                left_subspace_with(gm, rank, SUBSPACE_ITERS, &mut rng, inner)
-            });
-            drop(gms);
-            for ((idx, g, _seed), new_p) in wave.into_iter().zip(new_ps) {
-                let sim = self.overlap_with_old(idx, &new_p, pool);
-                if let Some(s) = sim {
-                    self.sim_history[idx].push(s);
+        let mut groups: Vec<((usize, usize), u64, Vec<(usize, Vec<f32>)>)> = Vec::new();
+        for (idx, g) in due {
+            let key = (self.layers[idx].m, self.layers[idx].n);
+            let gi = match groups.iter().position(|(k, _, _)| *k == key) {
+                Some(gi) => gi,
+                None => {
+                    let seed = self.rng.next_u64();
+                    groups.push((key, seed, Vec::new()));
+                    groups.len() - 1
                 }
-                self.store_projection(idx, new_p);
-                self.sched.record_refresh(idx, ctx.step, sim);
-                self.run_layer_update(ctx, idx, g)?;
+            };
+            groups[gi].2.push((idx, g));
+        }
+        for (_shape, seed, mut members) in groups {
+            while !members.is_empty() {
+                let take = wave_size.min(members.len());
+                let wave: Vec<(usize, Vec<f32>)> = members.drain(..take).collect();
+                let gms: Vec<Mat> =
+                    wave.iter().map(|(idx, g)| self.take_mean_grad(*idx, g)).collect();
+                let grefs: Vec<&Mat> = gms.iter().collect();
+                let mut rng = Pcg32::new(seed, 0x5eed);
+                let new_ps = left_subspace_batched(&grefs, rank, SUBSPACE_ITERS, &mut rng, pool);
+                drop(grefs);
+                drop(gms);
+                for ((idx, g), new_p) in wave.into_iter().zip(new_ps) {
+                    let sim = self.overlap_with_old(idx, &new_p, pool);
+                    if let Some(s) = sim {
+                        self.sim_history[idx].push(s);
+                    }
+                    self.store_projection(idx, new_p);
+                    self.sched.record_refresh(idx, ctx.step, sim);
+                    self.run_layer_update(ctx, idx, g)?;
+                }
             }
         }
         Ok(())
@@ -519,6 +557,9 @@ impl Optimizer for Galore {
                 b += p.data.len() as u64 * 4;
             }
             if let Some(p) = &l.p_q4 {
+                b += p.storage_bytes() as u64;
+            }
+            if let Some(p) = &l.p_q {
                 b += p.storage_bytes() as u64;
             }
             if let Some(s) = &l.st_fp {

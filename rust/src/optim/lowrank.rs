@@ -66,6 +66,8 @@ impl Optimizer for LowRank {
     }
 
     fn forward_operands(&self) -> Vec<HostTensor> {
+        // buffer cloning fans out over the persistent pool above the
+        // PAR_MIN_CLONE_ELEMS gate (same policy as every optimizer)
         let total: usize = self.fp.iter().map(|t| t.numel()).sum::<usize>()
             + self.factors.iter().map(|f| f.u.numel() + f.v.numel()).sum::<usize>();
         let pool = crate::linalg::clone_pool(total, self.pool);

@@ -27,7 +27,9 @@ use crate::runtime::{HostTensor, Runtime};
 ///
 /// Host-side parallelism is NOT part of this context: each optimizer owns
 /// one `ParallelCtx` (set from `BuildOptions::pool` by the factory) so a
-/// step cannot mix two different worker budgets.
+/// step cannot mix two different worker budgets.  The ctx is a *handle*
+/// onto the persistent worker pool — copies share the same long-lived
+/// workers, so per-call dispatch is a queue push, not a thread spawn.
 pub struct StepCtx<'a> {
     pub rt: &'a mut Runtime,
     pub man: &'a Manifest,

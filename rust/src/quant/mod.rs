@@ -113,25 +113,75 @@ pub fn quantize(x: &[f32], bits: u32) -> QuantTensor {
 }
 
 /// Stochastic-rounding quantization (paper §3.4): floor(v + u), u ~ U[0,1).
-/// The caller supplies the RNG so runs replay exactly.
+/// The caller supplies the RNG so runs replay exactly: one u64 is drawn
+/// from it to key the noise, and each quantization block then draws from
+/// its own PCG stream — a thread-count-independent chunking, so the result
+/// is identical whether the fill runs serially or fanned over the worker
+/// pool (gated by [`engine::PAR_MIN_CLONE_ELEMS`] like every marshalling
+/// fan-out).
 pub fn sr_quantize(x: &[f32], bits: u32, rng: &mut Pcg32) -> QuantTensor {
+    sr_quantize_with(x, bits, rng, ParallelCtx::global())
+}
+
+/// [`sr_quantize`] with an explicit parallelism context.
+pub fn sr_quantize_with(x: &[f32], bits: u32, rng: &mut Pcg32, ctx: ParallelCtx) -> QuantTensor {
     let block = block_for(x.len());
     let (qmin, qmax) = qrange(bits);
     let nb = x.len() / block;
-    let mut q = Vec::with_capacity(x.len());
     let mut scale = Vec::with_capacity(nb);
     let mut zero = Vec::with_capacity(nb);
     for blk in x.chunks(block) {
         let (s, z) = stats(blk, bits);
-        for &v in blk {
-            let u = rng.next_f32();
-            let code = (v / s + z + u).floor().clamp(qmin, qmax);
-            q.push(code as i8);
-        }
         scale.push(s);
         zero.push(z);
     }
+    let base = rng.next_u64();
+    let ctx = engine::clone_pool(x.len(), ctx);
+    // per-block i8 chunks, not a full f32 intermediate: codes are produced
+    // in their storage width, and par_map's order-preserving fan-out keeps
+    // the block -> stream mapping independent of worker count
+    let blocks: Vec<usize> = (0..nb).collect();
+    let chunks: Vec<Vec<i8>> = engine::par_map(ctx, &blocks, |&bi| {
+        let mut noise = Pcg32::new(base, bi as u64);
+        let (s, z) = (scale[bi], zero[bi]);
+        x[bi * block..(bi + 1) * block]
+            .iter()
+            .map(|&v| {
+                let u = noise.next_f32();
+                (v / s + z + u).floor().clamp(qmin, qmax) as i8
+            })
+            .collect()
+    });
+    let q: Vec<i8> = chunks.into_iter().flatten().collect();
     QuantTensor { q, scale, zero, bits, block }
+}
+
+/// Chunk width of [`uniform_noise`]: each chunk draws from its own PCG
+/// stream keyed by (seed, chunk index), so the fill is deterministic and
+/// independent of worker count and chunk-to-worker assignment.
+pub const NOISE_CHUNK: usize = 4096;
+
+/// Deterministic parallel U[0,1) fill of `n` elements — the host-side SR
+/// noise operand of the `qgalore_update` artifacts (generating it in-graph
+/// with threefry cost ~1.7x the whole update on this backend;
+/// EXPERIMENTS.md §Perf).  Serial below [`engine::PAR_MIN_CLONE_ELEMS`]
+/// elements, else fanned over `ctx` on the worker pool.
+pub fn uniform_noise(n: usize, seed: u64, ctx: ParallelCtx) -> Vec<f32> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let rows = n.div_ceil(NOISE_CHUNK);
+    let ctx = engine::clone_pool(n, ctx);
+    let mut out = engine::par_rows(ctx, rows, NOISE_CHUNK, |r0, r1, slab| {
+        for r in r0..r1 {
+            let mut rng = Pcg32::new(seed, r as u64);
+            for o in &mut slab[(r - r0) * NOISE_CHUNK..(r - r0 + 1) * NOISE_CHUNK] {
+                *o = rng.next_f32();
+            }
+        }
+    });
+    out.truncate(n);
+    out
 }
 
 pub fn dequantize(t: &QuantTensor) -> Vec<f32> {
@@ -322,6 +372,50 @@ pub fn dequant4_t_matmul(
                     let bi = idx / p.block;
                     panel[(j - js) * rows + i] =
                         (code4_at(&p.packed, idx) as f32 - p.zero[bi]) * p.scale[bi];
+                }
+            }
+            engine::panel_matmul(
+                &panel[..pw * rows],
+                pw,
+                rows,
+                x,
+                &mut out[(js - j0) * n..(je - j0) * n],
+            );
+            js = je;
+        }
+    });
+    Mat { rows: cols, cols: n, data }
+}
+
+/// `dequant(P)^T @ x` for a generic i8-coded blockwise `p` logically
+/// (rows, cols), `x (rows, n)` — the ablation bit-width analogue of
+/// [`dequant4_t_matmul`]: 2-/8-bit projections (Figure 3) stay packed in
+/// storage and are applied without materializing an fp32 copy.  Workers
+/// dequantize bounded transposed column sub-panels into a reused scratch.
+pub fn dequant8_t_matmul(
+    p: &QuantTensor,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    assert_eq!(p.q.len(), rows * cols, "dequant8_t_matmul: shape mismatch");
+    assert_eq!(x.rows, rows, "dequant8_t_matmul: inner dim mismatch");
+    let n = x.cols;
+    let ctx = engine::effective(ctx, cols, rows, n);
+    let data = engine::par_rows(ctx, cols, n, |j0, j1, out| {
+        let mut panel = vec![0f32; DEQUANT_PANEL_COLS.min(j1 - j0) * rows];
+        let mut js = j0;
+        while js < j1 {
+            let je = (js + DEQUANT_PANEL_COLS).min(j1);
+            let pw = je - js;
+            for i in 0..rows {
+                let base = i * cols;
+                for j in js..je {
+                    let idx = base + j;
+                    let bi = idx / p.block;
+                    panel[(j - js) * rows + i] =
+                        (p.q[idx] as f32 - p.zero[bi]) * p.scale[bi];
                 }
             }
             engine::panel_matmul(
@@ -626,5 +720,55 @@ mod tests {
                 assert!(got.rel_frobenius(&want) <= 1e-5, "{m}x{r}x{n} t={t}");
             }
         }
+    }
+
+    #[test]
+    fn dequant8_t_matmul_matches_unfused() {
+        // both ablation bit widths ride the same i8-coded path
+        let mut rng = Pcg32::seeded(15);
+        for bits in [8u32, 2] {
+            for (m, r, n) in [(1usize, 1usize, 1usize), (13, 7, 5), (64, 16, 9), (128, 32, 65)] {
+                let p = quantize(&rng.normal_vec(m * r, 0.0, 0.3), bits);
+                let x = Mat::randn(m, n, &mut rng);
+                let want = Mat::from_vec(m, r, dequantize(&p)).t_matmul_naive(&x);
+                for t in [1usize, 2, 8] {
+                    let got = dequant8_t_matmul(&p, m, r, &x, ParallelCtx::new(t));
+                    assert!(
+                        got.rel_frobenius(&want) <= 1e-5,
+                        "bits={bits} {m}x{r}x{n} t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sr_quantize_thread_count_independent() {
+        // 2^20 elements reaches the PAR_MIN_CLONE_ELEMS gate, so the t>1
+        // calls really run on the pool; codes must not depend on it
+        let x = randvec(1 << 20, 20);
+        let mut r0 = Pcg32::seeded(5);
+        let want = sr_quantize_with(&x, 8, &mut r0, ParallelCtx::serial());
+        for t in [2usize, 8] {
+            let mut r = Pcg32::seeded(5);
+            let got = sr_quantize_with(&x, 8, &mut r, ParallelCtx::new(t));
+            assert_eq!(got.q, want.q, "sr codes changed with {t} threads");
+            assert_eq!(got.scale, want.scale);
+            assert_eq!(got.zero, want.zero);
+        }
+    }
+
+    #[test]
+    fn uniform_noise_deterministic_and_thread_independent() {
+        // straddles the chunk grid (truncated tail) and the parallel gate
+        let n = (1 << 20) + 5;
+        let a = uniform_noise(n, 7, ParallelCtx::serial());
+        let b = uniform_noise(n, 7, ParallelCtx::new(8));
+        assert_eq!(a, b, "noise fill depends on worker count");
+        assert_eq!(a.len(), n);
+        assert!(a.iter().all(|&v| (0.0..1.0).contains(&v)));
+        let c = uniform_noise(n, 8, ParallelCtx::serial());
+        assert_ne!(a, c, "distinct seeds must decorrelate");
+        assert!(uniform_noise(0, 7, ParallelCtx::serial()).is_empty());
     }
 }

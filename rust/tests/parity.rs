@@ -5,8 +5,16 @@
 //! 1/2/8. The engine preserves the reference's ascending-k accumulation
 //! order, so the observed error is in fact 0 — the tolerance guards future
 //! kernel rewrites that reorder arithmetic.
+//!
+//! The persistent worker-pool tests at the bottom assert the stronger
+//! contract the pool engine makes: results are BITWISE equal to serial for
+//! any pool size (1/2/8 workers), across pool reuse, under concurrent
+//! submission from several caller threads, and through the shape-batched
+//! subspace refresh.
 
-use qgalore::linalg::{engine, Mat, ParallelCtx};
+use qgalore::linalg::{
+    engine, left_subspace_batched, left_subspace_with, Mat, ParallelCtx, WorkerPool,
+};
 use qgalore::quant;
 use qgalore::util::Pcg32;
 
@@ -145,6 +153,94 @@ fn randomized_parity_property() {
                 rel_frob(&engine::t_matmul(&at, &b, ctx), &want_t) <= TOL,
                 "case {case} t_matmul {k}x{m}x{n} t={t}"
             );
+        }
+    }
+}
+
+#[test]
+fn pool_bitwise_identity_and_reuse() {
+    // one pool instance per size, REUSED across many calls and shapes: the
+    // pool-executed decomposition must match serial bit for bit.
+    // matmul_ungated bypasses the PAR_MIN_FLOPS serial gate, so even the
+    // small shapes genuinely exercise pool dispatch.
+    let mut rng = Pcg32::seeded(200);
+    let shapes = [(7usize, 13usize, 5usize), (64, 64, 64), (129, 257, 65), (33, 1, 9)];
+    let mats: Vec<(Mat, Mat)> = shapes
+        .iter()
+        .map(|&(m, k, n)| (Mat::randn(m, k, &mut rng), Mat::randn(k, n, &mut rng)))
+        .collect();
+    for workers in [1usize, 2, 8] {
+        let pool: &'static WorkerPool = WorkerPool::leaked(workers);
+        for round in 0..10 {
+            for (a, b) in &mats {
+                let want = engine::matmul_ungated(a, b, ParallelCtx::serial());
+                for t in [2usize, 3, 8] {
+                    let got = engine::matmul_ungated(a, b, ParallelCtx::with_pool(t, pool));
+                    assert_eq!(
+                        got.data, want.data,
+                        "pool({workers}w) t={t} round={round} not bitwise-identical"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_concurrent_submission_from_many_callers() {
+    let pool: &'static WorkerPool = WorkerPool::leaked(4);
+    let mut rng = Pcg32::seeded(201);
+    let a = Mat::randn(96, 64, &mut rng);
+    let b = Mat::randn(64, 48, &mut rng);
+    let want = engine::matmul_ungated(&a, &b, ParallelCtx::serial());
+    std::thread::scope(|s| {
+        for _ in 0..6 {
+            s.spawn(|| {
+                for t in [2usize, 4, 8] {
+                    let got = engine::matmul_ungated(&a, &b, ParallelCtx::with_pool(t, pool));
+                    assert_eq!(got.data, want.data, "concurrent submission diverged");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn pool_nested_submission_does_not_deadlock() {
+    // the galore wave shape: an outer par_map whose tasks submit their own
+    // inner matmuls to the SAME (smaller) pool.  The helping submitter is
+    // what makes this safe; this test is the deadlock regression guard.
+    let pool: &'static WorkerPool = WorkerPool::leaked(2);
+    let outer = ParallelCtx::with_pool(4, pool);
+    let inner = ParallelCtx::with_pool(2, pool);
+    let mut rng = Pcg32::seeded(203);
+    let a = Mat::randn(40, 40, &mut rng);
+    let b = Mat::randn(40, 40, &mut rng);
+    let want = engine::matmul_ungated(&a, &b, ParallelCtx::serial());
+    let items: Vec<usize> = (0..8).collect();
+    let results =
+        qgalore::linalg::par_map(outer, &items, |_| engine::matmul_ungated(&a, &b, inner));
+    for r in results {
+        assert_eq!(r.data, want.data);
+    }
+}
+
+#[test]
+fn batched_refresh_matches_per_layer_bitwise() {
+    // the left_subspace_batched contract: stacked (L*m, n) refresh produces
+    // projections bitwise identical to L separate refreshes sharing the
+    // same sketch rng, at every thread count
+    let mut rng = Pcg32::seeded(202);
+    let gs: Vec<Mat> = (0..5).map(|_| Mat::randn(48, 96, &mut rng)).collect();
+    let grefs: Vec<&Mat> = gs.iter().collect();
+    for t in [1usize, 2, 8] {
+        let mut batch_rng = Pcg32::seeded(9);
+        let batched = left_subspace_batched(&grefs, 8, 2, &mut batch_rng, ParallelCtx::new(t));
+        assert_eq!(batched.len(), gs.len());
+        for (li, (g, got)) in gs.iter().zip(&batched).enumerate() {
+            let mut solo_rng = Pcg32::seeded(9);
+            let want = left_subspace_with(g, 8, 2, &mut solo_rng, ParallelCtx::serial());
+            assert_eq!(got.data, want.data, "layer {li} diverged from solo refresh (t={t})");
         }
     }
 }
