@@ -19,7 +19,7 @@ use std::hint::black_box;
 
 use bench_harness::{bench, BenchResult};
 use qgalore::coordinator::trainer::{TrainConfig, Trainer};
-use qgalore::linalg::{engine, Mat, ParallelCtx, WorkerPool};
+use qgalore::linalg::{engine, KernelPath, Mat, ParallelCtx, WorkerPool};
 use qgalore::manifest::Manifest;
 use qgalore::optim::{BuildOptions, Method};
 use qgalore::quant;
@@ -130,6 +130,61 @@ fn engine_benches() {
     );
 }
 
+/// Microkernel-vs-baseline comparison: the register-blocked MRxNR kernel
+/// bodies (explicit AVX2 where the CPU has it, plus the portable tiling)
+/// against the PR-1/2 autovectorized row kernel, kept callable as
+/// `KernelPath::Autovec` exactly like `ParallelCtx::scoped` is for the
+/// pool.  Same shapes, same thread budgets, GFLOP/s side by side; every
+/// row is also asserted bitwise-identical to the naive reference.
+fn microkernel_benches() {
+    println!("\n== microkernel vs autovectorized baseline (register-blocked MRxNR tiles) ==");
+    let mut rng = Pcg32::seeded(3);
+    // dense acceptance shape + the two projection-shaped products
+    for (m, k, n) in [(512usize, 512usize, 512usize), (512, 128, 512), (1024, 512, 128)] {
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let flops = 2 * m * k * n;
+        let want = a.matmul_naive(&b);
+        for t in [1usize, 8] {
+            let ctx = ParallelCtx::new(t);
+            let r_base = bench(
+                &format!("matmul {m}x{k}x{n} autovec (baseline), {t} thr"),
+                1,
+                5,
+                || {
+                    black_box(engine::matmul_with_kernel(&a, &b, ctx, KernelPath::Autovec));
+                },
+            );
+            let mut line = format!("    -> t={t}: autovec {:.2}", gflops(flops, &r_base));
+            let mut paths = vec![KernelPath::Portable];
+            if qgalore::linalg::simd_kernel_available() {
+                paths.push(KernelPath::Simd);
+            }
+            for path in paths {
+                let r = bench(
+                    &format!("matmul {m}x{k}x{n} {path:?} microkernel, {t} thr"),
+                    1,
+                    5,
+                    || {
+                        black_box(engine::matmul_with_kernel(&a, &b, ctx, path));
+                    },
+                );
+                assert_eq!(
+                    engine::matmul_with_kernel(&a, &b, ctx, path).data,
+                    want.data,
+                    "{path:?} diverged from naive"
+                );
+                line.push_str(&format!(
+                    " | {path:?} {:.2} GFLOP/s ({:.2}x vs autovec)",
+                    gflops(flops, &r),
+                    r_base.mean_ms / r.mean_ms
+                ));
+            }
+            println!("{line}");
+        }
+    }
+}
+
 /// Dispatch-overhead microbench: per-call latency on deliberately small
 /// (sub-`PAR_MIN_FLOPS`) repeated matmuls, where dispatch cost dominates the
 /// arithmetic — exactly the regime of Q-GaLore's many per-layer products.
@@ -175,6 +230,7 @@ fn dispatch_benches() {
 
 fn main() {
     engine_benches();
+    microkernel_benches();
     dispatch_benches();
 
     let man = match Manifest::load("artifacts") {

@@ -8,6 +8,7 @@
 //! learn, and (c) enough entropy that it cannot be memorized by a tiny
 //! model — perplexity curves behave qualitatively like real text.
 
+use crate::linalg::{par_map, ParallelCtx};
 use crate::util::Pcg32;
 
 /// Base word inventory; inflections multiply this into a few thousand
@@ -152,6 +153,17 @@ impl CorpusGenerator {
         doc
     }
 
+    /// Batch document generation over the worker pool (the data pipeline is
+    /// embarrassingly parallel).  Document `i` draws from its own PCG
+    /// stream keyed by `(seed, i)` — the same chunking discipline as
+    /// `quant::uniform_noise` — so the corpus is a pure function of
+    /// `(salt, seed, n)`, independent of worker count and of which worker
+    /// generated which document (`par_map` preserves order).
+    pub fn documents(&self, n: usize, seed: u64, ctx: ParallelCtx) -> Vec<String> {
+        let idx: Vec<u64> = (0..n as u64).collect();
+        par_map(ctx, &idx, |&i| self.document(&mut Pcg32::new(seed, i)))
+    }
+
     /// A labeled classification example for the synthetic fine-tuning tasks
     /// (GLUE/MMLU substitute): `label` selects a salt, which changes the
     /// bigram affinity structure — the model must pick up distributional
@@ -199,6 +211,25 @@ mod tests {
         let c = gen.document(&mut Pcg32::seeded(6));
         assert_eq!(a, b);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn batch_documents_independent_of_worker_count() {
+        // per-document PCG streams: the generated corpus must not depend on
+        // how the batch was split over workers
+        let gen = CorpusGenerator::new(2);
+        let want = gen.documents(24, 5, ParallelCtx::serial());
+        assert_eq!(want.len(), 24);
+        for t in [2usize, 8] {
+            assert_eq!(
+                gen.documents(24, 5, ParallelCtx::new(t)),
+                want,
+                "corpus changed with {t} workers"
+            );
+        }
+        // distinct documents and distinct seeds actually differ
+        assert_ne!(want[0], want[1]);
+        assert_ne!(gen.documents(24, 6, ParallelCtx::serial()), want);
     }
 
     #[test]

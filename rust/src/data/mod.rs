@@ -16,23 +16,37 @@ pub use batcher::{Batch, Batcher};
 pub use corpus::CorpusGenerator;
 pub use tokenizer::Tokenizer;
 
-use crate::util::Pcg32;
+use crate::linalg::ParallelCtx;
 
-/// Convenience: corpus -> tokenizer -> (train_ids, val_ids) for a vocab cap.
+/// Convenience: corpus -> tokenizer -> (train_ids, val_ids) for a vocab cap,
+/// at the process-global worker budget.
 pub fn build_dataset(
     vocab_size: usize,
     n_documents: usize,
     seed: u64,
 ) -> (Tokenizer, Vec<u32>, Vec<u32>) {
-    let mut rng = Pcg32::seeded(seed);
+    build_dataset_with(vocab_size, n_documents, seed, ParallelCtx::global())
+}
+
+/// [`build_dataset`] with an explicit parallelism context.  Corpus
+/// generation and tokenization both fan out over the worker pool
+/// ([`CorpusGenerator::documents`], [`Tokenizer::encode_batch`]); document
+/// `i` draws from its own PCG stream keyed by `(seed, i)`, so the dataset
+/// is a pure function of its arguments — bitwise independent of worker
+/// count (asserted by the tests below).
+pub fn build_dataset_with(
+    vocab_size: usize,
+    n_documents: usize,
+    seed: u64,
+    ctx: ParallelCtx,
+) -> (Tokenizer, Vec<u32>, Vec<u32>) {
     let gen = CorpusGenerator::new(seed);
-    let docs: Vec<String> = (0..n_documents).map(|_| gen.document(&mut rng)).collect();
+    let docs = gen.documents(n_documents, seed, ctx);
     let n_val = (n_documents / 16).max(1);
     let tokenizer = Tokenizer::train(&docs, vocab_size);
     let mut train_ids = Vec::new();
     let mut val_ids = Vec::new();
-    for (i, d) in docs.iter().enumerate() {
-        let ids = tokenizer.encode(d);
+    for (i, ids) in tokenizer.encode_batch(&docs, ctx).into_iter().enumerate() {
         if i < n_val {
             val_ids.extend(ids);
         } else {
@@ -60,5 +74,18 @@ mod tests {
         let (_, a, _) = build_dataset(512, 16, 7);
         let (_, b, _) = build_dataset(512, 16, 7);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dataset_independent_of_worker_count() {
+        // the parallel pipeline must produce the identical corpus, token
+        // streams and split whatever the worker budget is
+        let (tok1, train1, val1) = build_dataset_with(512, 48, 11, ParallelCtx::serial());
+        for t in [2usize, 8] {
+            let (tokt, traint, valt) = build_dataset_with(512, 48, 11, ParallelCtx::new(t));
+            assert_eq!(train1, traint, "train ids changed with {t} workers");
+            assert_eq!(val1, valt, "val ids changed with {t} workers");
+            assert_eq!(tok1.vocab_len(), tokt.vocab_len());
+        }
     }
 }

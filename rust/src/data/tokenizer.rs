@@ -8,6 +8,8 @@
 
 use std::collections::HashMap;
 
+use crate::linalg::{par_map, ParallelCtx};
+
 pub const PAD: u32 = 0;
 pub const BOS: u32 = 1;
 pub const EOS: u32 = 2;
@@ -83,6 +85,13 @@ impl Tokenizer {
         }
         ids.push(EOS);
         ids
+    }
+
+    /// Encode a batch of documents, fanned out over the worker pool.
+    /// `par_map` preserves item order and `encode` is a pure function, so
+    /// the result is independent of worker count.
+    pub fn encode_batch(&self, docs: &[String], ctx: ParallelCtx) -> Vec<Vec<u32>> {
+        par_map(ctx, docs, |d| self.encode(d))
     }
 
     pub fn decode(&self, ids: &[u32]) -> String {
@@ -168,6 +177,18 @@ mod tests {
             (0..2000).map(|i| format!("word{i} appears here")).collect();
         let t = Tokenizer::train(&many, 300);
         assert!(t.vocab_len() <= 300);
+    }
+
+    #[test]
+    fn encode_batch_matches_sequential_and_worker_count() {
+        let t = Tokenizer::train(&docs(), 512);
+        let texts: Vec<String> = (0..16)
+            .map(|i| format!("the fox number{i} jumps over unknown{i} dog"))
+            .collect();
+        let want: Vec<Vec<u32>> = texts.iter().map(|s| t.encode(s)).collect();
+        for ctx in [ParallelCtx::serial(), ParallelCtx::new(2), ParallelCtx::new(8)] {
+            assert_eq!(t.encode_batch(&texts, ctx), want);
+        }
     }
 
     #[test]

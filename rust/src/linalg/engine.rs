@@ -11,18 +11,36 @@
 //!   [`ParallelCtx`] is a *handle* — a thread budget plus the
 //!   [`WorkerPool`] that will run the tasks.  The pool is spun up once
 //!   (from CLI `--threads` / `QGALORE_THREADS` env / detected cores) and
-//!   reused for every call, replacing PR-1's per-call
-//!   `std::thread::scope` spawns and their ~100us dispatch tax.  The old
-//!   scoped-spawn path survives as a fallback ([`ParallelCtx::scoped`]) and
-//!   as the baseline the dispatch-overhead bench measures against.
+//!   reused for every call.  The old scoped-spawn path survives as a
+//!   fallback ([`ParallelCtx::scoped`]) and as the baseline the
+//!   dispatch-overhead bench measures against.
+//! * **The kernel body** is a register-blocked microkernel (PR 3): an
+//!   [`MR`]×[`NR`] tile of output accumulators stays live in registers
+//!   across each `KC`-wide k stripe, vectorized across the *independent*
+//!   j (output-column) dimension, so each output element's k-accumulation
+//!   order is exactly the naive reference's ascending walk — results stay
+//!   **bitwise identical** to `Mat::matmul_naive` while B-row loads and
+//!   out-row traffic drop by the tile factors.  Three bodies sit behind
+//!   [`KernelPath`] runtime dispatch:
+//!   - [`KernelPath::Simd`]: explicit AVX2 intrinsics (x86_64, selected at
+//!     runtime when `is_x86_feature_detected!` reports both `avx2` and
+//!     `fma`), 8-lane f32 column vectors with 4 row accumulators.
+//!   - [`KernelPath::Portable`]: the same tiling and op order in plain
+//!     unrolled Rust (autovectorizes well on any target).
+//!   - [`KernelPath::Autovec`]: the PR-1/2 row-streaming kernel, kept
+//!     callable as the regression baseline `benches/throughput.rs` compares
+//!     against (like `ParallelCtx::scoped` is for the pool).
+//!   m/n/k tails fall to a scalar edge kernel with the same per-element
+//!   order.  Why mul+add and not `fmadd`: a fused multiply-add rounds once
+//!   where the reference (`o += a * b`) rounds twice, so real FMA would
+//!   silently break the bitwise contract every parity test pins down.  The
+//!   kernel is memory-bound, and register blocking — not fusion — carries
+//!   the speedup; the `fma` target feature is still enabled so the dispatch
+//!   contract matches the detection gate.
 //! * Because the pool executes the *same* disjoint-slab decomposition, its
-//!   results are **bitwise identical** to the scoped-thread engine and to a
-//!   1-thread run, for any pool size (asserted by `tests/parity.rs`).
-//! * Within a panel the kernel is k-blocked (`KC`-sized stripes of B stay
-//!   hot in cache) with the same ascending-k accumulation order as the
-//!   naive reference, so blocked and naive results also match bitwise —
-//!   parity tests assert a 1e-5 rel-Frobenius bound but the engine in fact
-//!   meets 0.
+//!   results are bitwise identical to the scoped-thread engine and to a
+//!   1-thread run, for any pool size, any kernel path (asserted by
+//!   `tests/parity.rs` and `tests/golden_trace.rs`).
 //! * `t_matmul` transposes bounded per-worker column sub-panels into a
 //!   dense row-major scratch and reuses the same kernel: the strided column
 //!   walk happens once per panel instead of once per fma.
@@ -30,14 +48,23 @@
 //! Small problems (< [`PAR_MIN_FLOPS`] fma) run serially on the calling
 //! thread — even pool dispatch costs more than the arithmetic there.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 
 use super::pool::{global_pool, WorkerPool};
 use super::Mat;
 
 /// k-stripe width: `KC` rows of B (KC * n * 4 bytes) form the resident
-/// cache block each panel row streams against.
+/// cache block each register tile streams against.
 const KC: usize = 256;
+
+/// Microkernel register-tile rows: output rows accumulated simultaneously,
+/// amortizing each B-row load across `MR` fma rows.
+pub const MR: usize = 4;
+
+/// Microkernel register-tile columns: one 8-lane f32 vector of *independent*
+/// output columns, so vectorizing across them cannot reorder any single
+/// element's k accumulation.
+pub const NR: usize = 8;
 
 /// Problems below this many fma ops (m*k*n) stay on the calling thread.
 pub const PAR_MIN_FLOPS: usize = 1 << 20;
@@ -106,6 +133,144 @@ fn detect_threads() -> usize {
 /// The global default thread count (resolving it on first use).
 pub fn global_threads() -> usize {
     GLOBAL_THREADS.get(detect_threads)
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-path selection.
+// ---------------------------------------------------------------------------
+
+/// Which `panel_matmul` body executes the accumulation.  All paths are
+/// bitwise identical for finite inputs (same per-element ascending-k
+/// mul+add order), so the choice is purely a throughput knob — which is
+/// what makes a process-global override safe to flip even mid-run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Respect the process override (`QGALORE_KERNEL` env /
+    /// [`set_kernel_override`]), else pick [`KernelPath::Simd`] when the
+    /// CPU supports it and [`KernelPath::Portable`] otherwise.
+    Auto,
+    /// Explicit AVX2 microkernel (x86_64 with avx2+fma only; silently
+    /// falls back to `Portable` elsewhere).
+    Simd,
+    /// Register-blocked microkernel in plain Rust — same tiling, same op
+    /// order as `Simd`, on every target.
+    Portable,
+    /// The PR-1/2 autovectorized row-streaming kernel: the baseline the
+    /// microkernel benches compare against.
+    Autovec,
+}
+
+const K_UNSET: u8 = 0;
+const K_AUTO: u8 = 1;
+const K_SIMD: u8 = 2;
+const K_PORTABLE: u8 = 3;
+const K_AUTOVEC: u8 = 4;
+
+fn kernel_code(p: KernelPath) -> u8 {
+    match p {
+        KernelPath::Auto => K_AUTO,
+        KernelPath::Simd => K_SIMD,
+        KernelPath::Portable => K_PORTABLE,
+        KernelPath::Autovec => K_AUTOVEC,
+    }
+}
+
+fn kernel_from_code(c: u8) -> KernelPath {
+    match c {
+        K_SIMD => KernelPath::Simd,
+        K_PORTABLE => KernelPath::Portable,
+        K_AUTOVEC => KernelPath::Autovec,
+        _ => KernelPath::Auto,
+    }
+}
+
+/// `QGALORE_KERNEL`-style value -> kernel path, if well-formed.
+fn parse_kernel(s: &str) -> Option<KernelPath> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "auto" => Some(KernelPath::Auto),
+        "simd" | "avx2" => Some(KernelPath::Simd),
+        "portable" => Some(KernelPath::Portable),
+        "autovec" | "baseline" => Some(KernelPath::Autovec),
+        _ => None,
+    }
+}
+
+/// Process-global kernel override; `K_UNSET` until first resolution (which
+/// consults the `QGALORE_KERNEL` env var, for CI matrix runs).
+static KERNEL_OVERRIDE: AtomicU8 = AtomicU8::new(K_UNSET);
+
+/// Force every [`KernelPath::Auto`] caller (i.e. the whole engine) onto one
+/// kernel body.  Results are bitwise identical across paths, so flipping
+/// this — even concurrently with in-flight matmuls — changes throughput,
+/// never values; `tests/golden_trace.rs` drives whole training traces
+/// through each path via this hook.
+pub fn set_kernel_override(path: KernelPath) {
+    KERNEL_OVERRIDE.store(kernel_code(path), Ordering::Relaxed);
+}
+
+/// The current process-wide kernel selection (resolving the `QGALORE_KERNEL`
+/// env var on first use; [`KernelPath::Auto`] when neither env nor
+/// [`set_kernel_override`] chose one).
+pub fn kernel_override() -> KernelPath {
+    match KERNEL_OVERRIDE.load(Ordering::Relaxed) {
+        K_UNSET => {
+            let p = match std::env::var("QGALORE_KERNEL") {
+                Ok(s) => parse_kernel(&s).unwrap_or_else(|| {
+                    // loud, not silent: a typo here must not let a CI job
+                    // that exists to force one body quietly test another
+                    eprintln!(
+                        "warning: unrecognized QGALORE_KERNEL={s:?} \
+                         (want auto|simd|portable|autovec); using auto"
+                    );
+                    KernelPath::Auto
+                }),
+                Err(_) => KernelPath::Auto,
+            };
+            // racing first-callers agree on the env value; an explicit
+            // set_kernel_override always wins afterwards
+            let _ = KERNEL_OVERRIDE.compare_exchange(
+                K_UNSET,
+                kernel_code(p),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+            kernel_from_code(KERNEL_OVERRIDE.load(Ordering::Relaxed))
+        }
+        c => kernel_from_code(c),
+    }
+}
+
+/// Whether this machine can run the explicit-intrinsics SIMD body.
+pub fn simd_kernel_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Collapse a requested path to the body that will actually run: `Auto`
+/// defers to the process override, and `Simd` degrades to `Portable` when
+/// the CPU (or target) lacks avx2+fma.
+fn resolved_kernel(path: KernelPath) -> KernelPath {
+    let p = match path {
+        KernelPath::Auto => kernel_override(),
+        p => p,
+    };
+    match p {
+        KernelPath::Auto | KernelPath::Simd => {
+            if simd_kernel_available() {
+                KernelPath::Simd
+            } else {
+                KernelPath::Portable
+            }
+        }
+        p => p,
+    }
 }
 
 /// Parallelism handle threaded through the optimizer stack: a thread budget
@@ -289,10 +454,59 @@ where
     out.into_iter().map(|o| o.expect("par_map worker filled every slot")).collect()
 }
 
-/// Inner kernel: `out (rows, n) += panel (rows, k) @ b (k, n)`, k-blocked.
-/// Accumulation over k is strictly ascending per output element — the same
-/// order as the naive reference, so results match it bitwise.
-pub(crate) fn panel_matmul(panel: &[f32], rows: usize, k: usize, b: &Mat, out: &mut [f32]) {
+// ---------------------------------------------------------------------------
+// Kernel bodies.
+//
+// Contract shared by every body: `out (rows, n) += panel (rows, k) @ b`,
+// with each output element's k accumulation strictly ascending — the naive
+// reference's order — for FINITE inputs and an `out` buffer containing no
+// -0.0 entries (par_rows always supplies fresh +0.0 slabs, and f32
+// addition only yields -0.0 from two -0.0 operands, so accumulators never
+// become -0.0 either).  Under that contract all bodies, the naive
+// reference, and the autovec baseline are bitwise identical.
+//
+// One deliberate divergence inside the contract: the reference (and the
+// autovec baseline) skip `a == 0.0` terms as a perf heuristic; the
+// microkernel — main tiles AND scalar edge tiles, uniformly, so tile
+// placement and therefore the thread-count-driven panel split can never
+// matter — does not.  Adding `0.0 * b` (b finite) to a never--0.0
+// accumulator is a bitwise no-op, so results still match bit for bit.
+// ---------------------------------------------------------------------------
+
+/// Scalar edge kernel for tile tails: rows `i0..i1` x cols `j0..j1` over the
+/// k stripe `kb..kend`, in the same per-element ascending-k order (and the
+/// same no-skip term handling) as the main register tiles.
+#[allow(clippy::too_many_arguments)]
+fn edge_tile(
+    panel: &[f32],
+    k: usize,
+    b: &Mat,
+    out: &mut [f32],
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    kb: usize,
+    kend: usize,
+) {
+    let n = b.cols;
+    for i in i0..i1 {
+        let arow = &panel[i * k..(i + 1) * k];
+        let orow = &mut out[i * n + j0..i * n + j1];
+        for kk in kb..kend {
+            let av = arow[kk];
+            let brow = &b.data[kk * n + j0..kk * n + j1];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// The PR-1/2 row-streaming kernel (j-loop left to the autovectorizer; the
+/// out row round-trips through memory on every k step).  Kept callable as
+/// the microkernel's bench baseline and regression reference.
+fn panel_matmul_autovec(panel: &[f32], rows: usize, k: usize, b: &Mat, out: &mut [f32]) {
     let n = b.cols;
     let mut kb = 0;
     while kb < k {
@@ -315,6 +529,164 @@ pub(crate) fn panel_matmul(panel: &[f32], rows: usize, k: usize, b: &Mat, out: &
     }
 }
 
+/// Register-blocked microkernel in portable Rust: [`MR`]x[`NR`] accumulator
+/// tiles live across each `KC` stripe, the [`NR`] lane loop autovectorizes.
+/// Identical tiling and op order to the AVX2 body, so the two are bitwise
+/// interchangeable.
+fn panel_matmul_portable(panel: &[f32], rows: usize, k: usize, b: &Mat, out: &mut [f32]) {
+    let n = b.cols;
+    let r_main = rows - rows % MR;
+    let n_main = n - n % NR;
+    let mut kb = 0;
+    while kb < k {
+        let kend = (kb + KC).min(k);
+        let mut i = 0;
+        while i < r_main {
+            let mut j = 0;
+            while j < n_main {
+                // load the MRxNR out tile, accumulate the stripe, store
+                let mut acc = [[0f32; NR]; MR];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    accr.copy_from_slice(&out[(i + r) * n + j..(i + r) * n + j + NR]);
+                }
+                for kk in kb..kend {
+                    let brow = &b.data[kk * n + j..kk * n + j + NR];
+                    for (r, accr) in acc.iter_mut().enumerate() {
+                        let av = panel[(i + r) * k + kk];
+                        for (o, &bv) in accr.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate() {
+                    out[(i + r) * n + j..(i + r) * n + j + NR].copy_from_slice(accr);
+                }
+                j += NR;
+            }
+            if j < n {
+                edge_tile(panel, k, b, out, i, i + MR, j, n, kb, kend);
+            }
+            i += MR;
+        }
+        if i < rows {
+            edge_tile(panel, k, b, out, i, rows, 0, n, kb, kend);
+        }
+        kb = kend;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    //! Explicit AVX2 body of the register-blocked microkernel.
+    //!
+    //! Accumulation is `add(mul(a, b))`, NOT `fmadd`: the reference kernel
+    //! rounds the product and the sum separately, and the bitwise contract
+    //! is with the reference — see the module docs.  The speedup comes from
+    //! the tile structure (4 out rows x 8 columns resident in ymm
+    //! registers for a whole k stripe), not from fusing the arithmetic.
+
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    };
+
+    use super::{edge_tile, Mat, KC, MR, NR};
+
+    /// AVX2 `panel_matmul` body.
+    ///
+    /// # Safety
+    /// The CPU must support `avx2` and `fma`; callers route through
+    /// [`super::resolved_kernel`], which gates on
+    /// [`super::simd_kernel_available`].  All pointer arithmetic stays
+    /// inside the slices by the loop bounds (`j + NR <= n`, `i + MR <=
+    /// rows`, `kk < k`).
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn panel_matmul(
+        panel: &[f32],
+        rows: usize,
+        k: usize,
+        b: &Mat,
+        out: &mut [f32],
+    ) {
+        let n = b.cols;
+        let r_main = rows - rows % MR;
+        let n_main = n - n % NR;
+        let mut kb = 0;
+        while kb < k {
+            let kend = (kb + KC).min(k);
+            let mut i = 0;
+            while i < r_main {
+                let mut j = 0;
+                while j < n_main {
+                    let o = out.as_mut_ptr();
+                    let mut acc0 = _mm256_loadu_ps(o.add(i * n + j));
+                    let mut acc1 = _mm256_loadu_ps(o.add((i + 1) * n + j));
+                    let mut acc2 = _mm256_loadu_ps(o.add((i + 2) * n + j));
+                    let mut acc3 = _mm256_loadu_ps(o.add((i + 3) * n + j));
+                    let bp = b.data.as_ptr();
+                    let ap = panel.as_ptr();
+                    for kk in kb..kend {
+                        let bv = _mm256_loadu_ps(bp.add(kk * n + j));
+                        let a0 = _mm256_set1_ps(*ap.add(i * k + kk));
+                        let a1 = _mm256_set1_ps(*ap.add((i + 1) * k + kk));
+                        let a2 = _mm256_set1_ps(*ap.add((i + 2) * k + kk));
+                        let a3 = _mm256_set1_ps(*ap.add((i + 3) * k + kk));
+                        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(a0, bv));
+                        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(a1, bv));
+                        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(a2, bv));
+                        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(a3, bv));
+                    }
+                    _mm256_storeu_ps(o.add(i * n + j), acc0);
+                    _mm256_storeu_ps(o.add((i + 1) * n + j), acc1);
+                    _mm256_storeu_ps(o.add((i + 2) * n + j), acc2);
+                    _mm256_storeu_ps(o.add((i + 3) * n + j), acc3);
+                    j += NR;
+                }
+                if j < n {
+                    edge_tile(panel, k, b, out, i, i + MR, j, n, kb, kend);
+                }
+                i += MR;
+            }
+            if i < rows {
+                edge_tile(panel, k, b, out, i, rows, 0, n, kb, kend);
+            }
+            kb = kend;
+        }
+    }
+}
+
+/// Inner kernel: `out (rows, n) += panel (rows, k) @ b (k, n)` through the
+/// process-selected kernel body.  Accumulation over k is strictly ascending
+/// per output element — the same order as the naive reference, so results
+/// match it bitwise.
+pub(crate) fn panel_matmul(panel: &[f32], rows: usize, k: usize, b: &Mat, out: &mut [f32]) {
+    panel_matmul_with(panel, rows, k, b, out, KernelPath::Auto);
+}
+
+/// [`panel_matmul`] with an explicit kernel body (tests/benches).
+pub(crate) fn panel_matmul_with(
+    panel: &[f32],
+    rows: usize,
+    k: usize,
+    b: &Mat,
+    out: &mut [f32],
+    path: KernelPath,
+) {
+    match resolved_kernel(path) {
+        KernelPath::Simd => {
+            // SAFETY: resolved_kernel only returns Simd when avx2+fma were
+            // detected at runtime on this CPU.
+            #[cfg(target_arch = "x86_64")]
+            unsafe {
+                simd::panel_matmul(panel, rows, k, b, out);
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            panel_matmul_portable(panel, rows, k, b, out);
+        }
+        KernelPath::Autovec => panel_matmul_autovec(panel, rows, k, b, out),
+        _ => panel_matmul_portable(panel, rows, k, b, out),
+    }
+}
+
 /// Clamp `ctx` to serial when the m*k*n fma count is below
 /// [`PAR_MIN_FLOPS`] (shared policy for the dense and fused-dequant paths).
 pub(crate) fn effective(ctx: ParallelCtx, m: usize, k: usize, n: usize) -> ParallelCtx {
@@ -328,7 +700,7 @@ pub(crate) fn effective(ctx: ParallelCtx, m: usize, k: usize, n: usize) -> Paral
 /// `a (m, k) @ b (k, n) -> (m, n)`, parallel over row panels of the output.
 pub fn matmul(a: &Mat, b: &Mat, ctx: ParallelCtx) -> Mat {
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    matmul_ungated(a, b, effective(ctx, m, k, n))
+    matmul_with_kernel(a, b, effective(ctx, m, k, n), KernelPath::Auto)
 }
 
 /// [`matmul`] without the [`PAR_MIN_FLOPS`] serial gate.  Bench/test hook:
@@ -336,10 +708,18 @@ pub fn matmul(a: &Mat, b: &Mat, ctx: ParallelCtx) -> Mat {
 /// through the parallel path to measure per-call scoped-spawn vs pool
 /// latency.  Results are identical to [`matmul`] for any ctx.
 pub fn matmul_ungated(a: &Mat, b: &Mat, ctx: ParallelCtx) -> Mat {
+    matmul_with_kernel(a, b, ctx, KernelPath::Auto)
+}
+
+/// [`matmul`] with an explicit kernel body and no serial gate — the hook
+/// the microkernel parity sweep and the kernel benches drive each path
+/// through directly.  Results are bitwise identical to [`matmul`] for any
+/// (ctx, path).
+pub fn matmul_with_kernel(a: &Mat, b: &Mat, ctx: ParallelCtx, path: KernelPath) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch");
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let data = par_rows(ctx, m, n, |r0, r1, out| {
-        panel_matmul(&a.data[r0 * k..r1 * k], r1 - r0, k, b, out);
+        panel_matmul_with(&a.data[r0 * k..r1 * k], r1 - r0, k, b, out, path);
     });
     Mat { rows: m, cols: n, data }
 }
@@ -352,12 +732,18 @@ const TRANSPOSE_PANEL_ROWS: usize = 64;
 
 /// `a^T @ b` for `a (k, m)`, `b (k, n) -> (m, n)` without materializing the
 /// full transpose: each worker transposes bounded sub-panels of its column
-/// range of `a` into a reused dense scratch, then runs the shared blocked
-/// kernel on each.
+/// range of `a` into a reused dense scratch, then runs the shared
+/// microkernel on each.
 pub fn t_matmul(a: &Mat, b: &Mat, ctx: ParallelCtx) -> Mat {
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    t_matmul_with_kernel(a, b, effective(ctx, m, k, n), KernelPath::Auto)
+}
+
+/// [`t_matmul`] with an explicit kernel body and no serial gate (the
+/// microkernel parity sweep's transposed-panel hook).
+pub fn t_matmul_with_kernel(a: &Mat, b: &Mat, ctx: ParallelCtx, path: KernelPath) -> Mat {
     assert_eq!(a.rows, b.rows, "t_matmul shape mismatch");
     let (k, m, n) = (a.rows, a.cols, b.cols);
-    let ctx = effective(ctx, m, k, n);
     let data = par_rows(ctx, m, n, |r0, r1, out| {
         let mut panel = vec![0f32; TRANSPOSE_PANEL_ROWS.min(r1 - r0) * k];
         let mut rs = r0;
@@ -370,12 +756,13 @@ pub fn t_matmul(a: &Mat, b: &Mat, ctx: ParallelCtx) -> Mat {
                     panel[i * k + kk] = arow[rs + i];
                 }
             }
-            panel_matmul(
+            panel_matmul_with(
                 &panel[..pw * k],
                 pw,
                 k,
                 b,
                 &mut out[(rs - r0) * n..(re - r0) * n],
+                path,
             );
             rs = re;
         }
@@ -452,6 +839,72 @@ mod tests {
                 want.data,
                 "pool t={t}"
             );
+        }
+    }
+
+    #[test]
+    fn kernel_paths_are_bitwise_interchangeable() {
+        // every explicit body must agree with the naive reference bit for
+        // bit, on shapes hitting all of the m/n tail classes at once
+        let mut rng = Pcg32::seeded(14);
+        for (m, k, n) in [(4, 16, 8), (5, 7, 9), (13, 300, 23), (64, 257, 65)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let want = a.matmul_naive(&b);
+            let mut paths = vec![KernelPath::Auto, KernelPath::Portable, KernelPath::Autovec];
+            if simd_kernel_available() {
+                paths.push(KernelPath::Simd);
+            }
+            for path in paths {
+                let got = matmul_with_kernel(&a, &b, ParallelCtx::serial(), path);
+                assert_eq!(got.data, want.data, "{path:?} {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn microkernel_respects_accumulate_contract() {
+        // panel_matmul is +=: a pre-filled out buffer must accumulate in
+        // the reference's order (out entry first, then ascending k)
+        let mut rng = Pcg32::seeded(15);
+        let (m, k, n) = (6usize, 10usize, 11usize);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let seed_out = Mat::randn(m, n, &mut rng);
+        let mut paths = vec![KernelPath::Portable, KernelPath::Autovec];
+        if simd_kernel_available() {
+            paths.push(KernelPath::Simd);
+        }
+        let mut want = seed_out.data.clone();
+        panel_matmul_with(&a.data, m, k, &b, &mut want, KernelPath::Autovec);
+        for path in paths {
+            let mut got = seed_out.data.clone();
+            panel_matmul_with(&a.data, m, k, &b, &mut got, path);
+            assert_eq!(got, want, "{path:?} accumulate-into-out diverged");
+        }
+    }
+
+    #[test]
+    fn kernel_env_parsing() {
+        assert_eq!(parse_kernel("auto"), Some(KernelPath::Auto));
+        assert_eq!(parse_kernel(" SIMD\n"), Some(KernelPath::Simd));
+        assert_eq!(parse_kernel("avx2"), Some(KernelPath::Simd));
+        assert_eq!(parse_kernel("portable"), Some(KernelPath::Portable));
+        assert_eq!(parse_kernel("autovec"), Some(KernelPath::Autovec));
+        assert_eq!(parse_kernel("baseline"), Some(KernelPath::Autovec));
+        assert_eq!(parse_kernel("cuda"), None);
+        assert_eq!(parse_kernel(""), None);
+    }
+
+    #[test]
+    fn kernel_resolution_never_yields_auto() {
+        let all = [KernelPath::Auto, KernelPath::Simd, KernelPath::Portable, KernelPath::Autovec];
+        for p in all {
+            let r = resolved_kernel(p);
+            assert_ne!(r, KernelPath::Auto, "{p:?} resolved to Auto");
+            if r == KernelPath::Simd {
+                assert!(simd_kernel_available(), "Simd resolved without CPU support");
+            }
         }
     }
 

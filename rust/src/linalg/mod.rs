@@ -11,7 +11,10 @@
 //! and executes on the persistent worker pool ([`pool`]): decomposition
 //! into disjoint row panels happens in the engine, execution on long-lived
 //! pool workers, so per-call dispatch is a queue push instead of a thread
-//! spawn.  Same-shape subspace refreshes batch into one stacked range-finder
+//! spawn.  Inside each panel a register-blocked SIMD microkernel
+//! ([`engine::KernelPath`]: AVX2 / portable, dispatched at runtime) does
+//! the accumulation in the naive reference's exact per-element order.
+//! Same-shape subspace refreshes batch into one stacked range-finder
 //! product ([`left_subspace_batched`]); the naive `*_naive` kernels remain
 //! as the bitwise reference the parity tests (and benches) compare against.
 
@@ -19,7 +22,8 @@ pub mod engine;
 pub mod pool;
 
 pub use engine::{
-    clone_pool, global_threads, par_map, par_rows, set_global_threads, ParallelCtx,
+    clone_pool, global_threads, kernel_override, par_map, par_rows, set_global_threads,
+    set_kernel_override, simd_kernel_available, KernelPath, ParallelCtx,
 };
 pub use pool::{global_pool, WorkerPool};
 

@@ -269,11 +269,14 @@ pub fn dequantize4(t: &Quant4Tensor) -> Vec<f32> {
 // Fused dequantize-matmul paths.
 //
 // Q-GaLore's INT4 projection and INT8 weights are applied without ever
-// materializing a full fp32 copy: each worker dequantizes one row (or one
-// transposed column panel) into an O(cols) scratch and feeds the shared
-// blocked accumulation loop. Accumulation order matches
+// materializing a full fp32 copy: each worker dequantizes a bounded panel
+// (a DEQUANT_ROW_TILE row group, or a transposed column sub-panel) into a
+// reused scratch and feeds the engine's register-blocked microkernel —
+// multi-row panels, so the kernel forms full MR x NR register tiles
+// instead of degenerating to single-row edge work.  Dequantized values and
+// the per-element ascending-k accumulation order both match
 // `dequantize* -> Mat::*_naive`, so parity with the unfused reference is
-// exact.
+// bitwise (asserted by tests/parity.rs).
 // ---------------------------------------------------------------------------
 
 /// Decode the INT4 code at flat index `idx` from a nibble-packed buffer.
@@ -282,6 +285,49 @@ fn code4_at(packed: &[u8], idx: usize) -> i8 {
     let b = packed[idx / 2];
     let nib = if idx % 2 == 0 { b & 0xF } else { b >> 4 };
     nib as i8 - 8
+}
+
+/// Rows of dequantized scratch a plain-orientation worker feeds the
+/// microkernel at once — a multiple of [`engine::MR`] so the kernel forms
+/// full register tiles, bounded so scratch stays at O(tile * cols) floats.
+const DEQUANT_ROW_TILE: usize = 8 * engine::MR;
+
+/// Shared body of the plain-orientation fused paths:
+/// `deq(A) (rows, cols) @ x (cols, n)` where `deq` decodes the flat
+/// element index from whatever packed storage the caller owns.  Each
+/// worker dequantizes [`DEQUANT_ROW_TILE`]-row groups into a reused
+/// scratch panel and runs the microkernel on each group, so every storage
+/// format shares one tile loop and cannot drift from the others.
+fn dequant_rows_matmul(
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+    deq: impl Fn(usize) -> f32 + Sync,
+) -> Mat {
+    let n = x.cols;
+    let ctx = engine::effective(ctx, rows, cols, n);
+    let data = engine::par_rows(ctx, rows, n, |r0, r1, out| {
+        let mut tile = vec![0f32; DEQUANT_ROW_TILE.min(r1 - r0) * cols];
+        let mut rs = r0;
+        while rs < r1 {
+            let re = (rs + DEQUANT_ROW_TILE).min(r1);
+            let tw = re - rs;
+            let base = rs * cols;
+            for (t, tb) in tile[..tw * cols].iter_mut().enumerate() {
+                *tb = deq(base + t);
+            }
+            engine::panel_matmul(
+                &tile[..tw * cols],
+                tw,
+                cols,
+                x,
+                &mut out[(rs - r0) * n..(re - r0) * n],
+            );
+            rs = re;
+        }
+    });
+    Mat { rows, cols: n, data }
 }
 
 /// `dequant(W) (rows, cols) @ x (cols, n)` for blockwise-INT8 `w`.
@@ -294,21 +340,10 @@ pub fn dequant8_matmul(
 ) -> Mat {
     assert_eq!(w.q.len(), rows * cols, "dequant8_matmul: shape mismatch");
     assert_eq!(x.rows, cols, "dequant8_matmul: inner dim mismatch");
-    let n = x.cols;
-    let ctx = engine::effective(ctx, rows, cols, n);
-    let data = engine::par_rows(ctx, rows, n, |r0, r1, out| {
-        let mut rowbuf = vec![0f32; cols];
-        for i in r0..r1 {
-            let base = i * cols;
-            for (c, rb) in rowbuf.iter_mut().enumerate() {
-                let bi = (base + c) / w.block;
-                *rb = (w.q[base + c] as f32 - w.zero[bi]) * w.scale[bi];
-            }
-            let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
-            engine::panel_matmul(&rowbuf, 1, cols, x, orow);
-        }
-    });
-    Mat { rows, cols: n, data }
+    dequant_rows_matmul(rows, cols, x, ctx, |idx| {
+        let bi = idx / w.block;
+        (w.q[idx] as f32 - w.zero[bi]) * w.scale[bi]
+    })
 }
 
 /// `dequant(P) (rows, cols) @ x (cols, n)` for nibble-packed INT4 `p` —
@@ -322,32 +357,58 @@ pub fn dequant4_matmul(
 ) -> Mat {
     assert_eq!(p.numel(), rows * cols, "dequant4_matmul: shape mismatch");
     assert_eq!(x.rows, cols, "dequant4_matmul: inner dim mismatch");
-    let n = x.cols;
-    let ctx = engine::effective(ctx, rows, cols, n);
-    let data = engine::par_rows(ctx, rows, n, |r0, r1, out| {
-        let mut rowbuf = vec![0f32; cols];
-        for i in r0..r1 {
-            let base = i * cols;
-            for (c, rb) in rowbuf.iter_mut().enumerate() {
-                let bi = (base + c) / p.block;
-                *rb = (code4_at(&p.packed, base + c) as f32 - p.zero[bi]) * p.scale[bi];
-            }
-            let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
-            engine::panel_matmul(&rowbuf, 1, cols, x, orow);
-        }
-    });
-    Mat { rows, cols: n, data }
+    dequant_rows_matmul(rows, cols, x, ctx, |idx| {
+        let bi = idx / p.block;
+        (code4_at(&p.packed, idx) as f32 - p.zero[bi]) * p.scale[bi]
+    })
 }
 
-/// Max columns of dequantized transposed scratch a `dequant4_t_matmul`
+/// Max columns of dequantized transposed scratch a transposed-orientation
 /// worker holds at once (mirrors the engine's transpose sub-paneling, so
 /// serial calls never materialize the whole fp32 matrix).
 const DEQUANT_PANEL_COLS: usize = 64;
 
+/// Shared body of the transposed fused paths: `deq(A)^T @ x` for `A`
+/// logically (rows, cols) and `x (rows, n)`, with `deq` decoding the flat
+/// element index from the caller's packed storage.  Workers dequantize
+/// bounded transposed column sub-panels into a reused scratch and feed the
+/// microkernel — one tile loop for every storage format.
+fn dequant_cols_t_matmul(
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+    deq: impl Fn(usize) -> f32 + Sync,
+) -> Mat {
+    let n = x.cols;
+    let ctx = engine::effective(ctx, cols, rows, n);
+    let data = engine::par_rows(ctx, cols, n, |j0, j1, out| {
+        let mut panel = vec![0f32; DEQUANT_PANEL_COLS.min(j1 - j0) * rows];
+        let mut js = j0;
+        while js < j1 {
+            let je = (js + DEQUANT_PANEL_COLS).min(j1);
+            let pw = je - js;
+            for i in 0..rows {
+                let base = i * cols;
+                for j in js..je {
+                    panel[(j - js) * rows + i] = deq(base + j);
+                }
+            }
+            engine::panel_matmul(
+                &panel[..pw * rows],
+                pw,
+                rows,
+                x,
+                &mut out[(js - j0) * n..(je - j0) * n],
+            );
+            js = je;
+        }
+    });
+    Mat { rows: cols, cols: n, data }
+}
+
 /// `dequant(P)^T @ x` for `p` logically (rows, cols), `x (rows, n)` —
-/// the down-projection `P^T g` applied straight from INT4 storage. Each
-/// worker dequantizes bounded transposed column sub-panels into a reused
-/// scratch, never the whole matrix.
+/// the down-projection `P^T g` applied straight from INT4 storage.
 pub fn dequant4_t_matmul(
     p: &Quant4Tensor,
     rows: usize,
@@ -357,41 +418,16 @@ pub fn dequant4_t_matmul(
 ) -> Mat {
     assert_eq!(p.numel(), rows * cols, "dequant4_t_matmul: shape mismatch");
     assert_eq!(x.rows, rows, "dequant4_t_matmul: inner dim mismatch");
-    let n = x.cols;
-    let ctx = engine::effective(ctx, cols, rows, n);
-    let data = engine::par_rows(ctx, cols, n, |j0, j1, out| {
-        let mut panel = vec![0f32; DEQUANT_PANEL_COLS.min(j1 - j0) * rows];
-        let mut js = j0;
-        while js < j1 {
-            let je = (js + DEQUANT_PANEL_COLS).min(j1);
-            let pw = je - js;
-            for i in 0..rows {
-                let base = i * cols;
-                for j in js..je {
-                    let idx = base + j;
-                    let bi = idx / p.block;
-                    panel[(j - js) * rows + i] =
-                        (code4_at(&p.packed, idx) as f32 - p.zero[bi]) * p.scale[bi];
-                }
-            }
-            engine::panel_matmul(
-                &panel[..pw * rows],
-                pw,
-                rows,
-                x,
-                &mut out[(js - j0) * n..(je - j0) * n],
-            );
-            js = je;
-        }
-    });
-    Mat { rows: cols, cols: n, data }
+    dequant_cols_t_matmul(rows, cols, x, ctx, |idx| {
+        let bi = idx / p.block;
+        (code4_at(&p.packed, idx) as f32 - p.zero[bi]) * p.scale[bi]
+    })
 }
 
 /// `dequant(P)^T @ x` for a generic i8-coded blockwise `p` logically
 /// (rows, cols), `x (rows, n)` — the ablation bit-width analogue of
 /// [`dequant4_t_matmul`]: 2-/8-bit projections (Figure 3) stay packed in
-/// storage and are applied without materializing an fp32 copy.  Workers
-/// dequantize bounded transposed column sub-panels into a reused scratch.
+/// storage and are applied without materializing an fp32 copy.
 pub fn dequant8_t_matmul(
     p: &QuantTensor,
     rows: usize,
@@ -401,34 +437,10 @@ pub fn dequant8_t_matmul(
 ) -> Mat {
     assert_eq!(p.q.len(), rows * cols, "dequant8_t_matmul: shape mismatch");
     assert_eq!(x.rows, rows, "dequant8_t_matmul: inner dim mismatch");
-    let n = x.cols;
-    let ctx = engine::effective(ctx, cols, rows, n);
-    let data = engine::par_rows(ctx, cols, n, |j0, j1, out| {
-        let mut panel = vec![0f32; DEQUANT_PANEL_COLS.min(j1 - j0) * rows];
-        let mut js = j0;
-        while js < j1 {
-            let je = (js + DEQUANT_PANEL_COLS).min(j1);
-            let pw = je - js;
-            for i in 0..rows {
-                let base = i * cols;
-                for j in js..je {
-                    let idx = base + j;
-                    let bi = idx / p.block;
-                    panel[(j - js) * rows + i] =
-                        (p.q[idx] as f32 - p.zero[bi]) * p.scale[bi];
-                }
-            }
-            engine::panel_matmul(
-                &panel[..pw * rows],
-                pw,
-                rows,
-                x,
-                &mut out[(js - j0) * n..(je - j0) * n],
-            );
-            js = je;
-        }
-    });
-    Mat { rows: cols, cols: n, data }
+    dequant_cols_t_matmul(rows, cols, x, ctx, |idx| {
+        let bi = idx / p.block;
+        (p.q[idx] as f32 - p.zero[bi]) * p.scale[bi]
+    })
 }
 
 /// Blockwise 8-bit Adam state (m: symmetric i8, v: non-negative u8), the

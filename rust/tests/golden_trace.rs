@@ -1,0 +1,114 @@
+//! Golden-trace end-to-end determinism test.
+//!
+//! Unit parity (tests/parity.rs) checks single kernel calls; a kernel
+//! regression can still hide in the *composition* — scratch reuse across
+//! calls, the += accumulate contract, state threaded through many steps.
+//! This test runs a tiny fixed-seed Q-GaLore-style training loop entirely
+//! host-side (least squares + INT4-projected momentum SGD, so no XLA
+//! artifacts are needed) and asserts the per-step loss trace is BITWISE
+//! stable:
+//!
+//! * across worker counts (1 vs 4 vs 8) — the `--threads` contract;
+//! * across kernel bodies (AVX2 / portable / the autovec baseline) via the
+//!   process-global [`engine::set_kernel_override`] hook.
+//!
+//! The problem sizes are chosen so the forward/gradient products sit ABOVE
+//! `PAR_MIN_FLOPS` (the parallel paths genuinely run) while the projection
+//! products sit below it (the serial gate is exercised in the same trace).
+
+use qgalore::linalg::{engine, left_subspace_with, KernelPath, Mat, ParallelCtx};
+use qgalore::quant;
+use qgalore::util::Pcg32;
+
+const STEPS: usize = 10;
+const REFRESH_EVERY: usize = 4;
+/// 128^3 = 2 * PAR_MIN_FLOPS fma per dense product: the fan-out is real.
+const DIM: usize = 128;
+const RANK: usize = 16;
+
+/// One fixed-seed training run; returns the per-step loss trace as raw f32
+/// bit patterns (bitwise comparison, not tolerance).
+fn train_trace(ctx: ParallelCtx) -> Vec<u32> {
+    let mut rng = Pcg32::seeded(77);
+    // fixed data, built serially so the trace alone reflects `ctx`
+    let x = Mat::randn(DIM, DIM, &mut rng);
+    let w_true = Mat::randn(DIM, DIM, &mut rng);
+    let y = x.matmul_with(&w_true, ParallelCtx::serial());
+
+    let mut w = Mat::zeros(DIM, DIM);
+    let mut p4: Option<quant::Quant4Tensor> = None;
+    let mut momentum = Mat::zeros(RANK, DIM);
+    let mut sketch_rng = Pcg32::seeded(123);
+    let lr = 1.0 / (4.0 * DIM as f32);
+    let mut trace = Vec::with_capacity(STEPS);
+    for step in 0..STEPS {
+        // forward + loss on the full batch
+        let pred = x.matmul_with(&w, ctx);
+        let err = pred.sub(&y);
+        let loss = err.data.iter().map(|e| e * e).sum::<f32>() / err.data.len() as f32;
+        trace.push(loss.to_bits());
+        // gradient G = X^T E
+        let g = x.t_matmul_with(&err, ctx);
+        // periodic subspace refresh -> INT4-quantized projection (the
+        // Q-GaLore storage format)
+        if step % REFRESH_EVERY == 0 {
+            let p = left_subspace_with(&g, RANK, 2, &mut sketch_rng, ctx);
+            p4 = Some(quant::quantize4(&p.data));
+            // momentum lives in projected coordinates; a new basis means a
+            // fresh accumulator
+            momentum = Mat::zeros(RANK, DIM);
+        }
+        let proj = p4.as_ref().expect("projection refreshed at step 0");
+        // low-rank step: R = P^T G, EMA momentum, U = P M, W -= lr U —
+        // both projection products run fused from INT4 storage
+        let r = quant::dequant4_t_matmul(proj, DIM, RANK, &g, ctx);
+        for (m, rv) in momentum.data.iter_mut().zip(&r.data) {
+            *m = 0.9 * *m + 0.1 * rv;
+        }
+        let u = quant::dequant4_matmul(proj, DIM, RANK, &momentum, ctx);
+        for (wv, uv) in w.data.iter_mut().zip(&u.data) {
+            *wv -= lr * uv;
+        }
+    }
+    trace
+}
+
+#[test]
+fn golden_trace_locks_numerics() {
+    // --- thread-count stability -------------------------------------------
+    let t1 = train_trace(ParallelCtx::new(1));
+    assert_eq!(t1.len(), STEPS);
+    for t in [4usize, 8] {
+        assert_eq!(
+            train_trace(ParallelCtx::new(t)),
+            t1,
+            "loss trace changed between --threads 1 and --threads {t}"
+        );
+    }
+
+    // --- kernel-path stability --------------------------------------------
+    // All bodies are bitwise interchangeable, so flipping the process
+    // override must leave the whole trace untouched.  This test file is its
+    // own binary and this is its only #[test], so the override cannot race
+    // another test's expectations; restore the prior setting regardless.
+    let prev = engine::kernel_override();
+    let mut paths = vec![KernelPath::Portable, KernelPath::Autovec];
+    if engine::simd_kernel_available() {
+        paths.push(KernelPath::Simd);
+    }
+    for path in paths {
+        engine::set_kernel_override(path);
+        let got = train_trace(ParallelCtx::new(4));
+        engine::set_kernel_override(prev);
+        assert_eq!(got, t1, "loss trace changed under kernel override {path:?}");
+    }
+
+    // --- the trace is a real training signal ------------------------------
+    let first = f32::from_bits(t1[0]);
+    let last = f32::from_bits(t1[STEPS - 1]);
+    assert!(first.is_finite() && last.is_finite(), "non-finite loss in trace");
+    assert!(
+        last < 0.9 * first,
+        "rank-{RANK} projected training did not reduce loss ({first} -> {last})"
+    );
+}

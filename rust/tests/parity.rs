@@ -6,20 +6,37 @@
 //! order, so the observed error is in fact 0 — the tolerance guards future
 //! kernel rewrites that reorder arithmetic.
 //!
-//! The persistent worker-pool tests at the bottom assert the stronger
-//! contract the pool engine makes: results are BITWISE equal to serial for
-//! any pool size (1/2/8 workers), across pool reuse, under concurrent
-//! submission from several caller threads, and through the shape-batched
-//! subspace refresh.
+//! The microkernel sweep (`microkernel_*`, `fused_dequant_bitwise_*`)
+//! asserts the register-blocked kernel's stronger contract directly: for
+//! every (m, n) tail class up to two MRxNR register tiles, k values
+//! straddling the KC stripe boundary, every kernel body (AVX2 / portable /
+//! the autovec baseline) and 1/2/8 workers, results are BITWISE equal to
+//! the naive reference — and the fused INT4/INT8 paths are bitwise equal
+//! to dequantize-then-reference, nibble tails included.
+//!
+//! The persistent worker-pool tests at the bottom assert the analogous
+//! pool contract: results are BITWISE equal to serial for any pool size
+//! (1/2/8 workers), across pool reuse, under concurrent submission from
+//! several caller threads, and through the shape-batched subspace refresh.
 
 use qgalore::linalg::{
-    engine, left_subspace_batched, left_subspace_with, Mat, ParallelCtx, WorkerPool,
+    engine, left_subspace_batched, left_subspace_with, KernelPath, Mat, ParallelCtx, WorkerPool,
 };
 use qgalore::quant;
 use qgalore::util::Pcg32;
 
 const THREADS: [usize; 3] = [1, 2, 8];
 const TOL: f32 = 1e-5;
+
+/// Every explicit kernel body this machine can run (Simd only where the
+/// CPU has avx2+fma; Autovec is the PR-1/2 baseline).
+fn kernel_paths() -> Vec<KernelPath> {
+    let mut v = vec![KernelPath::Portable, KernelPath::Autovec];
+    if qgalore::linalg::simd_kernel_available() {
+        v.push(KernelPath::Simd);
+    }
+    v
+}
 
 fn rel_frob(got: &Mat, want: &Mat) -> f32 {
     assert_eq!((got.rows, got.cols), (want.rows, want.cols));
@@ -152,6 +169,132 @@ fn randomized_parity_property() {
             assert!(
                 rel_frob(&engine::t_matmul(&at, &b, ctx), &want_t) <= TOL,
                 "case {case} t_matmul {k}x{m}x{n} t={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn microkernel_shape_sweep_bitwise() {
+    // The microkernel acceptance sweep: EVERY (m % MR, n % NR) tail class
+    // up to two register tiles (m in 1..=2*MR+1, n in 1..=2*NR+1), crossed
+    // with k values straddling the KC=256 stripe boundary, on every kernel
+    // body this machine has, at 1/2/8 workers — all bitwise equal to the
+    // naive reference.
+    let ks = [1usize, 2, 3, 7, 8, 255, 256, 257, 513];
+    for path in kernel_paths() {
+        let mut rng = Pcg32::seeded(300);
+        for m in 1..=9usize {
+            for n in 1..=17usize {
+                for &k in &ks {
+                    let a = Mat::randn(m, k, &mut rng);
+                    let b = Mat::randn(k, n, &mut rng);
+                    let want = a.matmul_naive(&b);
+                    for t in THREADS {
+                        let got = engine::matmul_with_kernel(&a, &b, ParallelCtx::new(t), path);
+                        assert_eq!(
+                            got.data, want.data,
+                            "{path:?} matmul {m}x{k}x{n} t={t} not bitwise"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn microkernel_t_matmul_shape_sweep_bitwise() {
+    // same sweep through the transposed-panel path (bounded sub-panel
+    // transposes feeding the same microkernel)
+    let ks = [1usize, 2, 3, 7, 8, 255, 256, 257, 513];
+    for path in kernel_paths() {
+        let mut rng = Pcg32::seeded(301);
+        for m in 1..=9usize {
+            for n in 1..=17usize {
+                for &k in &ks {
+                    let a = Mat::randn(k, m, &mut rng);
+                    let b = Mat::randn(k, n, &mut rng);
+                    let want = a.t_matmul_naive(&b);
+                    for t in THREADS {
+                        let got =
+                            engine::t_matmul_with_kernel(&a, &b, ParallelCtx::new(t), path);
+                        assert_eq!(
+                            got.data, want.data,
+                            "{path:?} t_matmul {k}x{m}x{n} t={t} not bitwise"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn microkernel_larger_shapes_bitwise_across_paths() {
+    // multi-tile interiors plus tails, larger than the sweep's 2-tile
+    // bound: every path must agree with the reference AND each other
+    let mut rng = Pcg32::seeded(302);
+    for (m, k, n) in [(33usize, 129usize, 47usize), (64, 300, 64), (129, 513, 65)] {
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let want = a.matmul_naive(&b);
+        for path in kernel_paths() {
+            for t in THREADS {
+                let got = engine::matmul_with_kernel(&a, &b, ParallelCtx::new(t), path);
+                assert_eq!(got.data, want.data, "{path:?} {m}x{k}x{n} t={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_dequant_bitwise_vs_unfused() {
+    // The fused INT4/INT8 paths dequantize row-group (or transposed
+    // column) panels into scratch and feed the microkernel: outputs must
+    // equal dequantize-then-reference-matmul BIT FOR BIT, including
+    // odd-column shapes whose INT4 rows start mid-byte (nibble tails).
+    // numel must be < 256 (single block) or a multiple of 256.
+    let mut rng = Pcg32::seeded(303);
+    for (m, c, n) in [
+        (1usize, 1usize, 1usize),
+        (5, 7, 9),
+        (3, 33, 5),    // odd cols, single block
+        (9, 21, 17),   // odd cols, crosses a row-tile boundary
+        (256, 3, 9),   // odd cols, multi-block, many row tiles
+        (64, 64, 33),
+        (128, 256, 65),
+    ] {
+        let raw = rng.normal_vec(m * c, 0.0, 0.3);
+        let p4 = quant::quantize4(&raw);
+        let w8 = quant::quantize(&raw, 8);
+        let x = Mat::randn(c, n, &mut rng);
+        let want4 = Mat::from_vec(m, c, quant::dequantize4(&p4)).matmul_naive(&x);
+        let want8 = Mat::from_vec(m, c, quant::dequantize(&w8)).matmul_naive(&x);
+        let xt = Mat::randn(m, n, &mut rng);
+        let want4t = Mat::from_vec(m, c, quant::dequantize4(&p4)).t_matmul_naive(&xt);
+        let want8t = Mat::from_vec(m, c, quant::dequantize(&w8)).t_matmul_naive(&xt);
+        for t in THREADS {
+            let ctx = ParallelCtx::new(t);
+            assert_eq!(
+                quant::dequant4_matmul(&p4, m, c, &x, ctx).data,
+                want4.data,
+                "dequant4_matmul {m}x{c}x{n} t={t} not bitwise"
+            );
+            assert_eq!(
+                quant::dequant8_matmul(&w8, m, c, &x, ctx).data,
+                want8.data,
+                "dequant8_matmul {m}x{c}x{n} t={t} not bitwise"
+            );
+            assert_eq!(
+                quant::dequant4_t_matmul(&p4, m, c, &xt, ctx).data,
+                want4t.data,
+                "dequant4_t_matmul {m}x{c}x{n} t={t} not bitwise"
+            );
+            assert_eq!(
+                quant::dequant8_t_matmul(&w8, m, c, &xt, ctx).data,
+                want8t.data,
+                "dequant8_t_matmul {m}x{c}x{n} t={t} not bitwise"
             );
         }
     }
