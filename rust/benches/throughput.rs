@@ -189,14 +189,16 @@ fn microkernel_benches() {
 /// (sub-`PAR_MIN_FLOPS`) repeated matmuls, where dispatch cost dominates the
 /// arithmetic — exactly the regime of Q-GaLore's many per-layer products.
 /// `matmul_ungated` bypasses the serial gate so scoped-spawn (the PR-1
-/// engine) and the persistent pool are measured head to head; the gap to
-/// the serial baseline is each substrate's dispatch tax.
+/// engine), the PR-2 single-FIFO pool, and the work-stealing pool are
+/// measured head to head; the gap to the serial baseline is each
+/// substrate's dispatch tax.
 fn dispatch_benches() {
-    println!("\n== dispatch overhead: scoped spawn (old) vs persistent pool (new) ==");
+    println!("\n== dispatch overhead: scoped spawn vs FIFO pool (PR 2) vs stealing pool ==");
     let mut rng = Pcg32::seeded(7);
-    // an explicit 4-worker pool so the comparison is like for like: the
+    // explicit 4-worker pools so the comparison is like for like: the
     // global pool is sized to the machine's core count, not to the label
-    let pool4 = WorkerPool::leaked(4);
+    let pool4_fifo = WorkerPool::leaked_fifo(4);
+    let pool4_steal = WorkerPool::leaked(4);
     for (m, k, n) in [(32usize, 32usize, 32usize), (64, 64, 64), (96, 96, 96)] {
         assert!(
             m * k * n < engine::PAR_MIN_FLOPS,
@@ -212,18 +214,76 @@ fn dispatch_benches() {
         let r_scoped = bench(&format!("matmul {m}x{k}x{n} scoped-spawn x4"), 20, iters, || {
             black_box(engine::matmul_ungated(&a, &b, scoped));
         });
-        let pooled = ParallelCtx::with_pool(4, pool4);
-        let r_pool = bench(&format!("matmul {m}x{k}x{n} pool x4"), 20, iters, || {
-            black_box(engine::matmul_ungated(&a, &b, pooled));
+        let fifo = ParallelCtx::with_pool(4, pool4_fifo);
+        let r_fifo = bench(&format!("matmul {m}x{k}x{n} fifo-pool x4"), 20, iters, || {
+            black_box(engine::matmul_ungated(&a, &b, fifo));
+        });
+        let steal = ParallelCtx::with_pool(4, pool4_steal);
+        let r_steal = bench(&format!("matmul {m}x{k}x{n} steal-pool x4"), 20, iters, || {
+            black_box(engine::matmul_ungated(&a, &b, steal));
         });
         println!(
-            "    -> per-call: serial {:.1} us | scoped {:.1} us | pool {:.1} us | dispatch tax {:.1} -> {:.1} us ({:.2}x pool speedup vs scoped)",
+            "    -> per-call: serial {:.1} us | scoped {:.1} us | fifo {:.1} us | steal {:.1} us | dispatch tax {:.1} / {:.1} / {:.1} us",
             r_serial.mean_ms * 1e3,
             r_scoped.mean_ms * 1e3,
-            r_pool.mean_ms * 1e3,
+            r_fifo.mean_ms * 1e3,
+            r_steal.mean_ms * 1e3,
             (r_scoped.mean_ms - r_serial.mean_ms) * 1e3,
-            (r_pool.mean_ms - r_serial.mean_ms) * 1e3,
-            r_scoped.mean_ms / r_pool.mean_ms,
+            (r_fifo.mean_ms - r_serial.mean_ms) * 1e3,
+            (r_steal.mean_ms - r_serial.mean_ms) * 1e3,
+        );
+    }
+}
+
+/// Many-small-jobs contention bench: several submitter threads hammering
+/// tiny parallel matmuls at the same pool concurrently — the regime where
+/// the PR-2 shared queue serializes every push/pop on one mutex while the
+/// stealing pool's contention stays per-deque.  This is the Q-GaLore
+/// steady state (every layer's `P^T g` / `P u` products land together),
+/// and the shape of the ROADMAP item this layer closes.
+fn contention_benches() {
+    println!("\n== many-small-jobs contention: FIFO queue vs work stealing ==");
+    let mut rng = Pcg32::seeded(9);
+    let a = Mat::randn(48, 48, &mut rng);
+    let b = Mat::randn(48, 48, &mut rng);
+    let jobs_per_submitter = 200;
+    for workers in [4usize, 8] {
+        let pools: [(&str, &'static WorkerPool); 2] = [
+            ("fifo", WorkerPool::leaked_fifo(workers)),
+            ("steal", WorkerPool::leaked(workers)),
+        ];
+        let mut means = [0f64; 2];
+        for (pi, &(label, pool)) in pools.iter().enumerate() {
+            let submitters = workers;
+            let r = bench(
+                &format!("{submitters} submitters x {jobs_per_submitter} jobs, {label} x{workers}"),
+                1,
+                5,
+                || {
+                    std::thread::scope(|s| {
+                        for _ in 0..submitters {
+                            s.spawn(|| {
+                                let ctx = ParallelCtx::with_pool(4, pool);
+                                for _ in 0..jobs_per_submitter {
+                                    black_box(engine::matmul_ungated(&a, &b, ctx));
+                                }
+                            });
+                        }
+                    });
+                },
+            );
+            means[pi] = r.mean_ms;
+            let jobs = submitters * jobs_per_submitter;
+            println!(
+                "    -> {label} x{workers}: {:.2} ms for {jobs} jobs ({:.1} us/job, steals={})",
+                r.mean_ms,
+                r.mean_ms * 1e3 / jobs as f64,
+                pool.stats().steals,
+            );
+        }
+        println!(
+            "    -> stealing vs FIFO at {workers} workers: {:.2}x",
+            means[0] / means[1]
         );
     }
 }
@@ -232,6 +292,7 @@ fn main() {
     engine_benches();
     microkernel_benches();
     dispatch_benches();
+    contention_benches();
 
     let man = match Manifest::load("artifacts") {
         Ok(m) => m,

@@ -11,9 +11,17 @@
 //!   [`ParallelCtx`] is a *handle* — a thread budget plus the
 //!   [`WorkerPool`] that will run the tasks.  The pool is spun up once
 //!   (from CLI `--threads` / `QGALORE_THREADS` env / detected cores) and
-//!   reused for every call.  The old scoped-spawn path survives as a
-//!   fallback ([`ParallelCtx::scoped`]) and as the baseline the
-//!   dispatch-overhead bench measures against.
+//!   reused for every call; since PR 4 it schedules over per-worker
+//!   stealing deques (round-robin submission, LIFO own-pop, PCG-stream
+//!   victim choice) instead of one shared FIFO, so the many small
+//!   projection products Q-GaLore issues stop serializing on a single
+//!   queue mutex at high worker counts.  Which thread runs a slab — and
+//!   in what steal order — never affects the bits: tasks own disjoint
+//!   output slices and the decomposition below is keyed by the ctx alone.
+//!   The old scoped-spawn path survives as a fallback
+//!   ([`ParallelCtx::scoped`]) and as the baseline the dispatch-overhead
+//!   bench measures against; the PR-2 single-FIFO pool survives as
+//!   [`WorkerPool::new_fifo`] for the same reason.
 //! * **The kernel body** is a register-blocked microkernel (PR 3): an
 //!   [`MR`]×[`NR`] tile of output accumulators stays live in registers
 //!   across each `KC`-wide k stripe, vectorized across the *independent*

@@ -8,10 +8,12 @@
 //! themselves are discarded.
 //!
 //! The matmul substrate itself ([`engine`]) is parallel and cache-blocked,
-//! and executes on the persistent worker pool ([`pool`]): decomposition
-//! into disjoint row panels happens in the engine, execution on long-lived
-//! pool workers, so per-call dispatch is a queue push instead of a thread
-//! spawn.  Inside each panel a register-blocked SIMD microkernel
+//! and executes on the persistent work-stealing worker pool ([`pool`]):
+//! decomposition into disjoint row panels happens in the engine, execution
+//! on long-lived workers with per-worker deques (LIFO own-pop, PCG-ordered
+//! stealing on empty), so per-call dispatch is a deque push instead of a
+//! thread spawn and dispatch contention stays per-deque even at 16-32+
+//! workers.  Inside each panel a register-blocked SIMD microkernel
 //! ([`engine::KernelPath`]: AVX2 / portable, dispatched at runtime) does
 //! the accumulation in the naive reference's exact per-element order.
 //! Same-shape subspace refreshes batch into one stacked range-finder
@@ -25,7 +27,7 @@ pub use engine::{
     clone_pool, global_threads, kernel_override, par_map, par_rows, set_global_threads,
     set_kernel_override, simd_kernel_available, KernelPath, ParallelCtx,
 };
-pub use pool::{global_pool, WorkerPool};
+pub use pool::{global_pool, PoolStats, WorkerPool, STEAL_SEED_ENV};
 
 use crate::util::Pcg32;
 

@@ -273,10 +273,18 @@ pub fn dequantize4(t: &Quant4Tensor) -> Vec<f32> {
 // (a DEQUANT_ROW_TILE row group, or a transposed column sub-panel) into a
 // reused scratch and feeds the engine's register-blocked microkernel —
 // multi-row panels, so the kernel forms full MR x NR register tiles
-// instead of degenerating to single-row edge work.  Dequantized values and
+// instead of degenerating to single-row edge work.
+//
+// Submission rides `engine::par_rows`, which hands the work-stealing pool
+// one task per disjoint output slab: each task owns its slab AND its own
+// dequant scratch (allocated inside the task body), so a stolen task
+// dequantizes into thread-local scratch wherever it lands and no steal
+// interleaving can alias another worker's panel.  Dequantized values and
 // the per-element ascending-k accumulation order both match
 // `dequantize* -> Mat::*_naive`, so parity with the unfused reference is
-// bitwise (asserted by tests/parity.rs).
+// bitwise for any worker count, queue discipline (FIFO baseline or
+// stealing), and steal order (asserted by tests/parity.rs and the
+// scheduler-equivalence property in tests/proptests.rs).
 // ---------------------------------------------------------------------------
 
 /// Decode the INT4 code at flat index `idx` from a nibble-packed buffer.

@@ -10,13 +10,18 @@
 //!
 //! * across worker counts (1 vs 4 vs 8) — the `--threads` contract;
 //! * across kernel bodies (AVX2 / portable / the autovec baseline) via the
-//!   process-global [`engine::set_kernel_override`] hook.
+//!   process-global [`engine::set_kernel_override`] hook;
+//! * across the work-stealing pool at 1/4/8/16 workers and under hostile
+//!   victim-choice seeds (explicit + the `QGALORE_STEAL_SEED` env knob) —
+//!   the bits cannot depend on which thread stole which task when.
 //!
 //! The problem sizes are chosen so the forward/gradient products sit ABOVE
 //! `PAR_MIN_FLOPS` (the parallel paths genuinely run) while the projection
 //! products sit below it (the serial gate is exercised in the same trace).
 
-use qgalore::linalg::{engine, left_subspace_with, KernelPath, Mat, ParallelCtx};
+use qgalore::linalg::{
+    engine, left_subspace_with, KernelPath, Mat, ParallelCtx, WorkerPool, STEAL_SEED_ENV,
+};
 use qgalore::quant;
 use qgalore::util::Pcg32;
 
@@ -102,6 +107,44 @@ fn golden_trace_locks_numerics() {
         engine::set_kernel_override(prev);
         assert_eq!(got, t1, "loss trace changed under kernel override {path:?}");
     }
+
+    // --- stealing-pool stability ------------------------------------------
+    // The work-stealing pool reorders task execution (LIFO own-pops, PCG
+    // victim choice, round-robin placement), so this is the strongest form
+    // of the determinism contract: the loss bits must survive any worker
+    // count AND any steal interleaving.  Explicit pools, not the global
+    // one, so both knobs are controlled per run.
+    for workers in [1usize, 4, 8, 16] {
+        let pool = WorkerPool::leaked_with_steal_seed(workers, 0xDEAD_BEEF);
+        // thread budget >= 4 so a 1-worker pool still gets real dispatch
+        // (a threads=1 ctx would gate to serial and never touch the pool)
+        let got = train_trace(ParallelCtx::with_pool(workers.max(4), pool));
+        assert_eq!(
+            got, t1,
+            "loss trace changed on the stealing pool at {workers} workers"
+        );
+    }
+    // hostile steal orders: same 16-worker pool shape, adversarial
+    // victim-choice seeds — if any trace bit depended on who stole what,
+    // some seed here would flip it
+    for seed in [1u64, u64::MAX] {
+        let pool = WorkerPool::leaked_with_steal_seed(16, seed);
+        let got = train_trace(ParallelCtx::with_pool(16, pool));
+        assert_eq!(got, t1, "loss trace depends on steal order (seed {seed:#x})");
+    }
+    // and once through the env knob (what CI sets process-wide): this file
+    // is its own test binary with a single #[test], so the set/restore pair
+    // cannot race another test's env reads.  Restore — not remove — so a
+    // CI-forced QGALORE_STEAL_SEED still governs pools built after this.
+    let prev_seed = std::env::var(STEAL_SEED_ENV).ok();
+    std::env::set_var(STEAL_SEED_ENV, "314159");
+    let pool = WorkerPool::leaked(8);
+    match prev_seed {
+        Some(v) => std::env::set_var(STEAL_SEED_ENV, v),
+        None => std::env::remove_var(STEAL_SEED_ENV),
+    }
+    let got = train_trace(ParallelCtx::with_pool(8, pool));
+    assert_eq!(got, t1, "loss trace changed under env-forced steal seed");
 
     // --- the trace is a real training signal ------------------------------
     let first = f32::from_bits(t1[0]);

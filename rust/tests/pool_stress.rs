@@ -1,0 +1,164 @@
+//! Concurrency stress suite for the work-stealing execution layer.
+//!
+//! `tests/parity.rs` pins the *numerics* of pooled execution; this file
+//! pins its *liveness and fault isolation* under the nastiest composition
+//! the optimizer stack produces: many submitter threads, each running
+//! nested submissions (`par_map` whose items submit their own `par_rows`
+//! matmuls to the SAME pool), with panicking tasks injected mid-stream.
+//! Asserted, at 1, 4, and 16 workers:
+//!
+//! * **No deadlock.**  The helping-submitter rule (pop own deque, then
+//!   steal) must keep every latch opening even when every worker is itself
+//!   blocked inside a nested submission.  The test finishing IS the assert.
+//! * **Panics resurface in the correct submitter, payload intact.**  A
+//!   panic travels to the latch of the submission that owns the task — not
+//!   to whichever thread happened to steal and run it — and arrives with
+//!   its original message.  Concurrent submitters inject distinct payloads
+//!   and each must catch exactly its own.
+//! * **The pool survives.**  After the storm (including every injected
+//!   panic), the same pool instance still executes work and still produces
+//!   bitwise-correct results.
+//!
+//! Worker counts below, at, and above the submitter count are all covered:
+//! 1 worker forces maximal helper execution, 16 forces maximal stealing.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use qgalore::linalg::{engine, par_map, Mat, ParallelCtx, WorkerPool};
+use qgalore::util::Pcg32;
+
+const SUBMITTERS: usize = 8;
+const ITERS: usize = 12;
+const OUTER_ITEMS: usize = 6;
+
+/// The full storm against one pool size.
+fn stress(workers: usize) {
+    let pool: &'static WorkerPool = WorkerPool::leaked(workers);
+    let mut rng = Pcg32::seeded(900 + workers as u64);
+    // small shapes: the point is scheduling pressure, not arithmetic
+    let a = Mat::randn(48, 32, &mut rng);
+    let b = Mat::randn(32, 24, &mut rng);
+    let want = engine::matmul_ungated(&a, &b, ParallelCtx::serial());
+
+    std::thread::scope(|s| {
+        for ti in 0..SUBMITTERS {
+            let (a, b, want) = (&a, &b, &want);
+            s.spawn(move || {
+                // nested shape from the galore wave scheduler: outer fan-out
+                // over layers, each layer submitting its own matmul tasks
+                let outer = ParallelCtx::with_pool(4, pool);
+                let inner = ParallelCtx::with_pool(2, pool);
+                let items: Vec<usize> = (0..OUTER_ITEMS).collect();
+                for it in 0..ITERS {
+                    if (ti + it) % 4 == 0 {
+                        // panic injection: one outer item blows up while its
+                        // siblings (and 7 other submitters) keep computing
+                        let msg = format!("injected-{ti}-{it}");
+                        let result = catch_unwind(AssertUnwindSafe(|| {
+                            par_map(outer, &items, |&i| {
+                                if i == 3 {
+                                    panic!("{msg}");
+                                }
+                                engine::matmul_ungated(a, b, inner)
+                            })
+                        }));
+                        let payload = result.expect_err("injected panic must resurface");
+                        let text = payload
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .unwrap_or_else(|| "<non-string payload>".into());
+                        assert_eq!(
+                            text, msg,
+                            "panic payload crossed submitters (workers={workers})"
+                        );
+                    } else {
+                        let results =
+                            par_map(outer, &items, |_| engine::matmul_ungated(a, b, inner));
+                        for (ii, r) in results.iter().enumerate() {
+                            assert_eq!(
+                                r.data, want.data,
+                                "item {ii} diverged under stress \
+                                 (workers={workers}, submitter={ti}, iter={it})"
+                            );
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    // the pool is still alive and still bitwise-correct after the storm
+    for t in [2usize, 4, 8] {
+        let got = engine::matmul_ungated(&a, &b, ParallelCtx::with_pool(t, pool));
+        assert_eq!(got.data, want.data, "pool unusable after stress (t={t})");
+    }
+}
+
+#[test]
+fn stress_1_worker() {
+    stress(1);
+}
+
+#[test]
+fn stress_4_workers() {
+    stress(4);
+}
+
+#[test]
+fn stress_16_workers() {
+    stress(16);
+}
+
+#[test]
+fn deep_nesting_on_a_tiny_pool_does_not_deadlock() {
+    // three levels of nested submission on a 2-worker pool: par_map ->
+    // par_map -> par_rows(matmul).  Every worker spends most of its life
+    // blocked inside an inner latch; only helping keeps the system live.
+    let pool: &'static WorkerPool = WorkerPool::leaked(2);
+    let ctx = ParallelCtx::with_pool(3, pool);
+    let mut rng = Pcg32::seeded(77);
+    let a = Mat::randn(24, 24, &mut rng);
+    let b = Mat::randn(24, 24, &mut rng);
+    let want = engine::matmul_ungated(&a, &b, ParallelCtx::serial());
+    let outer_items: Vec<usize> = (0..4).collect();
+    let inner_items: Vec<usize> = (0..3).collect();
+    let nested = par_map(ctx, &outer_items, |_| {
+        par_map(ctx, &inner_items, |_| engine::matmul_ungated(&a, &b, ctx))
+    });
+    for level in nested {
+        for r in level {
+            assert_eq!(r.data, want.data, "deep nesting corrupted a result");
+        }
+    }
+}
+
+#[test]
+fn panic_in_nested_inner_submission_reaches_the_outer_submitter() {
+    // the panic fires two latch levels down (inside an inner par_map task
+    // launched from an outer par_map task); it must still unwind cleanly
+    // to THIS thread with the payload intact, and the pool must survive
+    let pool: &'static WorkerPool = WorkerPool::leaked(4);
+    let ctx = ParallelCtx::with_pool(4, pool);
+    let outer_items: Vec<usize> = (0..4).collect();
+    let inner_items: Vec<usize> = (0..4).collect();
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        par_map(ctx, &outer_items, |&o| {
+            par_map(ctx, &inner_items, |&i| {
+                if o == 2 && i == 1 {
+                    panic!("nested boom");
+                }
+                o * 10 + i
+            })
+        })
+    }));
+    let payload = result.expect_err("nested panic must resurface");
+    assert_eq!(
+        payload.downcast_ref::<&str>().copied().unwrap_or(""),
+        "nested boom",
+        "nested panic payload mangled"
+    );
+    // pool still usable
+    let items: Vec<usize> = (0..8).collect();
+    let doubled = par_map(ctx, &items, |&x| x * 2);
+    assert_eq!(doubled, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+}

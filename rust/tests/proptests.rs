@@ -8,7 +8,10 @@
 
 use qgalore::data::{Batcher, Tokenizer};
 use qgalore::jsonx::Json;
-use qgalore::linalg::{left_subspace, qr_orthonormal, subspace_cosine, subspace_overlap, Mat};
+use qgalore::linalg::{
+    engine, left_subspace, par_map, par_rows, qr_orthonormal, subspace_cosine,
+    subspace_overlap, KernelPath, Mat, ParallelCtx, WorkerPool,
+};
 use qgalore::quant;
 use qgalore::scheduler::{SchedulerConfig, SubspaceScheduler};
 use qgalore::util::Pcg32;
@@ -170,6 +173,170 @@ fn prop_cosine_bounded_and_reflexive() {
         let s = subspace_cosine(&a, &b);
         assert!((0.0..=1.0 + 1e-5).contains(&s));
         assert!((subspace_cosine(&a, &a) - 1.0).abs() < 1e-4);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// scheduler-equivalence properties
+//
+// The execution-layer contract: par_rows / par_map / the dense engine / the
+// fused dequant kernels produce BITWISE-identical output under every
+// scheduler — serial, per-call scoped spawns, the PR-2 single-FIFO pool,
+// and the work-stealing pool — for arbitrary job counts, chunk sizes
+// (ctx.threads drives the decomposition), and worker counts.  Scheduling
+// decides WHO runs a slab and WHEN; never what the slab contains.
+// ---------------------------------------------------------------------------
+
+/// Pools shared by every case: leaking one per case would leak hundreds of
+/// worker threads across a 20-case property run.  Worker counts straddle
+/// the decomposition widths the cases draw (1 under, 4 at, 16 over).
+fn equivalence_pools() -> &'static [(&'static WorkerPool, &'static WorkerPool)] {
+    use std::sync::OnceLock;
+    static POOLS: OnceLock<Vec<(&'static WorkerPool, &'static WorkerPool)>> = OnceLock::new();
+    POOLS.get_or_init(|| {
+        [1usize, 4, 16]
+            .iter()
+            .map(|&w| (WorkerPool::leaked_fifo(w), WorkerPool::leaked(w)))
+            .collect()
+    })
+}
+
+/// Every execution scheduler for one thread budget against one pool pair:
+/// serial is the caller's reference, the rest must match it bit for bit.
+/// The pool-independent scoped scheduler is checked once per case by the
+/// callers (not per pool pair — it would re-run identical work).
+fn schedulers(
+    threads: usize,
+    fifo: &'static WorkerPool,
+    steal: &'static WorkerPool,
+) -> [(&'static str, ParallelCtx); 2] {
+    [
+        ("fifo-pool", ParallelCtx::with_pool(threads, fifo)),
+        ("steal-pool", ParallelCtx::with_pool(threads, steal)),
+    ]
+}
+
+#[test]
+fn prop_scheduler_equivalence_bitwise() {
+    let pools = equivalence_pools();
+    cases(20, 40, |rng, seed| {
+        let m = 1 + rng.below(96);
+        let k = 1 + rng.below(64);
+        let n = 1 + rng.below(48);
+        let threads = 1 + rng.below(9); // chunk width = ceil(rows / threads)
+        let a = Mat::randn(m, k, rng);
+        let b = Mat::randn(k, n, rng);
+        let at = a.transpose(); // (k, m): a t_matmul operand with shared k
+        let want_mm = engine::matmul_ungated(&a, &b, ParallelCtx::serial());
+        let want_tm =
+            engine::t_matmul_with_kernel(&b, &at, ParallelCtx::serial(), KernelPath::Auto);
+
+        // par_rows body keyed by ABSOLUTE row only, so any chunking must
+        // reproduce it; per-row PCG streams like the SR/noise fills use
+        let cols = 1 + rng.below(32);
+        let rows = 1 + rng.below(64);
+        let fill = move |r0: usize, _r1: usize, slab: &mut [f32]| {
+            for (ri, row) in slab.chunks_mut(cols).enumerate() {
+                let mut prng = Pcg32::new(seed, (r0 + ri) as u64);
+                for v in row {
+                    *v = prng.next_f32();
+                }
+            }
+        };
+        let want_rows = par_rows(ParallelCtx::serial(), rows, cols, fill);
+
+        // par_map over a random job count, result keyed by item value only
+        let items: Vec<u64> = (0..1 + rng.below(33) as u64).collect();
+        let want_map: Vec<u32> =
+            items.iter().map(|&i| Pcg32::new(seed, i).next_u32()).collect();
+
+        // the scoped scheduler is pool-independent: check it once per case
+        let scoped = std::iter::once(("scoped", ParallelCtx::scoped(threads)));
+        let pooled = pools
+            .iter()
+            .flat_map(|&(fifo, steal)| schedulers(threads, fifo, steal));
+        for (label, ctx) in scoped.chain(pooled) {
+            assert_eq!(
+                engine::matmul_ungated(&a, &b, ctx).data,
+                want_mm.data,
+                "matmul {m}x{k}x{n} t={threads} diverged under {label}"
+            );
+            assert_eq!(
+                engine::t_matmul_with_kernel(&b, &at, ctx, KernelPath::Auto).data,
+                want_tm.data,
+                "t_matmul t={threads} diverged under {label}"
+            );
+            assert_eq!(
+                par_rows(ctx, rows, cols, fill),
+                want_rows,
+                "par_rows {rows}x{cols} t={threads} diverged under {label}"
+            );
+            assert_eq!(
+                par_map(ctx, &items, |&i| Pcg32::new(seed, i).next_u32()),
+                want_map,
+                "par_map jobs={} t={threads} diverged under {label}",
+                items.len()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fused_dequant_scheduler_equivalence_bitwise() {
+    // fused dequant paths gate to serial below PAR_MIN_FLOPS, so this
+    // property mixes sub-gate shapes (the gate itself must be
+    // scheduler-independent) with above-gate shapes where the pools
+    // genuinely fan out dequant scratch tiles across workers
+    let pools = equivalence_pools();
+    cases(8, 41, |rng, _seed| {
+        // blockwise quantization needs numel <= 256 or numel % 256 == 0:
+        // above-gate shapes fix m = 256 (any k divides out), sub-gate
+        // shapes keep m*k within one block
+        let above_gate = rng.below(2) == 0;
+        let (m, k) = if above_gate {
+            (256, 64 + rng.below(64))
+        } else {
+            (1 + rng.below(16), 1 + rng.below(16))
+        };
+        let n = if above_gate { 64 } else { 1 + rng.below(24) };
+        assert!(!above_gate || m * k * n >= engine::PAR_MIN_FLOPS);
+        let threads = 2 + rng.below(7);
+        let p4 = quant::quantize4(&rng.normal_vec(m * k, 0.0, 0.3));
+        let w8 = quant::quantize(&rng.normal_vec(m * k, 0.0, 0.3), 8);
+        let x = Mat::randn(k, n, rng);
+        let xt = Mat::randn(m, n, rng);
+        let serial = ParallelCtx::serial();
+        let want4 = quant::dequant4_matmul(&p4, m, k, &x, serial);
+        let want8 = quant::dequant8_matmul(&w8, m, k, &x, serial);
+        let want4t = quant::dequant4_t_matmul(&p4, m, k, &xt, serial);
+        let want8t = quant::dequant8_t_matmul(&w8, m, k, &xt, serial);
+        // scoped once per case (pool-independent), then each pool pair
+        let scoped = std::iter::once(("scoped", ParallelCtx::scoped(threads)));
+        let pooled = pools
+            .iter()
+            .flat_map(|&(fifo, steal)| schedulers(threads, fifo, steal));
+        for (label, ctx) in scoped.chain(pooled) {
+            assert_eq!(
+                quant::dequant4_matmul(&p4, m, k, &x, ctx).data,
+                want4.data,
+                "dequant4_matmul {m}x{k}x{n} t={threads} diverged under {label}"
+            );
+            assert_eq!(
+                quant::dequant8_matmul(&w8, m, k, &x, ctx).data,
+                want8.data,
+                "dequant8_matmul {m}x{k}x{n} t={threads} diverged under {label}"
+            );
+            assert_eq!(
+                quant::dequant4_t_matmul(&p4, m, k, &xt, ctx).data,
+                want4t.data,
+                "dequant4_t_matmul {m}x{k}x{n} t={threads} diverged under {label}"
+            );
+            assert_eq!(
+                quant::dequant8_t_matmul(&w8, m, k, &xt, ctx).data,
+                want8t.data,
+                "dequant8_t_matmul {m}x{k}x{n} t={threads} diverged under {label}"
+            );
+        }
     });
 }
 
