@@ -189,15 +189,20 @@ fn microkernel_benches() {
 /// (sub-`PAR_MIN_FLOPS`) repeated matmuls, where dispatch cost dominates the
 /// arithmetic — exactly the regime of Q-GaLore's many per-layer products.
 /// `matmul_ungated` bypasses the serial gate so scoped-spawn (the PR-1
-/// engine), the PR-2 single-FIFO pool, and the work-stealing pool are
-/// measured head to head; the gap to the serial baseline is each
-/// substrate's dispatch tax.
+/// engine), the PR-2 single-FIFO pool, the PR-4 mutex-deque pool, and the
+/// Chase-Lev pool are measured head to head; the gap to the serial
+/// baseline is each substrate's dispatch tax.  The Chase-Lev pool runs
+/// both over-decomposed (the default) and at 1 slab/worker, isolating the
+/// cost of cutting finer tasks.
 fn dispatch_benches() {
-    println!("\n== dispatch overhead: scoped spawn vs FIFO pool (PR 2) vs stealing pool ==");
+    println!(
+        "\n== dispatch overhead: scoped spawn vs FIFO (PR 2) vs mutex-deque (PR 4) vs chase-lev =="
+    );
     let mut rng = Pcg32::seeded(7);
     // explicit 4-worker pools so the comparison is like for like: the
     // global pool is sized to the machine's core count, not to the label
     let pool4_fifo = WorkerPool::leaked_fifo(4);
+    let pool4_mutex = WorkerPool::leaked_mutex_steal(4);
     let pool4_steal = WorkerPool::leaked(4);
     for (m, k, n) in [(32usize, 32usize, 32usize), (64, 64, 64), (96, 96, 96)] {
         assert!(
@@ -218,18 +223,30 @@ fn dispatch_benches() {
         let r_fifo = bench(&format!("matmul {m}x{k}x{n} fifo-pool x4"), 20, iters, || {
             black_box(engine::matmul_ungated(&a, &b, fifo));
         });
+        let mutex = ParallelCtx::with_pool(4, pool4_mutex);
+        let r_mutex = bench(&format!("matmul {m}x{k}x{n} mutex-deque x4"), 20, iters, || {
+            black_box(engine::matmul_ungated(&a, &b, mutex));
+        });
         let steal = ParallelCtx::with_pool(4, pool4_steal);
-        let r_steal = bench(&format!("matmul {m}x{k}x{n} steal-pool x4"), 20, iters, || {
+        let r_steal = bench(&format!("matmul {m}x{k}x{n} chase-lev x4"), 20, iters, || {
             black_box(engine::matmul_ungated(&a, &b, steal));
         });
+        let steal1 = steal.with_slabs_per_worker(1);
+        let r_steal1 =
+            bench(&format!("matmul {m}x{k}x{n} chase-lev x4, 1 slab/worker"), 20, iters, || {
+                black_box(engine::matmul_ungated(&a, &b, steal1));
+            });
         println!(
-            "    -> per-call: serial {:.1} us | scoped {:.1} us | fifo {:.1} us | steal {:.1} us | dispatch tax {:.1} / {:.1} / {:.1} us",
+            "    -> per-call: serial {:.1} us | scoped {:.1} us | fifo {:.1} us | mutex-deque {:.1} us | chase-lev {:.1} us (1 slab/w {:.1} us) | dispatch tax {:.1} / {:.1} / {:.1} / {:.1} us",
             r_serial.mean_ms * 1e3,
             r_scoped.mean_ms * 1e3,
             r_fifo.mean_ms * 1e3,
+            r_mutex.mean_ms * 1e3,
             r_steal.mean_ms * 1e3,
+            r_steal1.mean_ms * 1e3,
             (r_scoped.mean_ms - r_serial.mean_ms) * 1e3,
             (r_fifo.mean_ms - r_serial.mean_ms) * 1e3,
+            (r_mutex.mean_ms - r_serial.mean_ms) * 1e3,
             (r_steal.mean_ms - r_serial.mean_ms) * 1e3,
         );
     }
@@ -237,22 +254,25 @@ fn dispatch_benches() {
 
 /// Many-small-jobs contention bench: several submitter threads hammering
 /// tiny parallel matmuls at the same pool concurrently — the regime where
-/// the PR-2 shared queue serializes every push/pop on one mutex while the
-/// stealing pool's contention stays per-deque.  This is the Q-GaLore
-/// steady state (every layer's `P^T g` / `P u` products land together),
-/// and the shape of the ROADMAP item this layer closes.
+/// mutex-guarded queues serialize every push/pop while the Chase-Lev
+/// pool's own-pops are wait-free and its steals a single CAS.  This is the
+/// Q-GaLore steady state (every layer's `P^T g` / `P u` products land
+/// together), and the shape of the ROADMAP item this layer closes.  The
+/// PR-2 FIFO queue and the PR-4 mutex-deque pool run as baselines so the
+/// mutex-deque vs Chase-Lev gap is reported side by side on live hardware.
 fn contention_benches() {
-    println!("\n== many-small-jobs contention: FIFO queue vs work stealing ==");
+    println!("\n== many-small-jobs contention: FIFO vs mutex-deque vs chase-lev ==");
     let mut rng = Pcg32::seeded(9);
     let a = Mat::randn(48, 48, &mut rng);
     let b = Mat::randn(48, 48, &mut rng);
     let jobs_per_submitter = 200;
     for workers in [4usize, 8] {
-        let pools: [(&str, &'static WorkerPool); 2] = [
+        let pools: [(&str, &'static WorkerPool); 3] = [
             ("fifo", WorkerPool::leaked_fifo(workers)),
-            ("steal", WorkerPool::leaked(workers)),
+            ("mutex-deque", WorkerPool::leaked_mutex_steal(workers)),
+            ("chase-lev", WorkerPool::leaked(workers)),
         ];
-        let mut means = [0f64; 2];
+        let mut means = [0f64; 3];
         for (pi, &(label, pool)) in pools.iter().enumerate() {
             let submitters = workers;
             let r = bench(
@@ -282,8 +302,9 @@ fn contention_benches() {
             );
         }
         println!(
-            "    -> stealing vs FIFO at {workers} workers: {:.2}x",
-            means[0] / means[1]
+            "    -> at {workers} workers: chase-lev vs fifo {:.2}x, chase-lev vs mutex-deque {:.2}x",
+            means[0] / means[2],
+            means[1] / means[2]
         );
     }
 }

@@ -68,11 +68,19 @@ pub struct TrainResult {
 }
 
 /// Linear warmup then cosine decay to 10% of peak.
+///
+/// Total-order safe: the post-warmup offset is a `saturating_sub` (a plain
+/// `step - warmup` would panic in debug / wrap in release if a caller ever
+/// evaluated the cosine branch with `step < warmup`), and progress clamps
+/// at 1 so steps past `total` hold the floor LR instead of walking the
+/// cosine back up.  In-range behavior is bit-identical to before.
 pub fn lr_at(step: u64, total: u64, warmup: u64, lr_max: f32) -> f32 {
     if step < warmup.max(1) {
         return lr_max * (step as f32 + 1.0) / warmup.max(1) as f32;
     }
-    let progress = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+    let progress = (step.saturating_sub(warmup) as f32
+        / (total.saturating_sub(warmup)).max(1) as f32)
+        .min(1.0);
     let cosine = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
     lr_max * (0.1 + 0.9 * cosine)
 }
@@ -243,4 +251,67 @@ impl<'m> Trainer<'m> {
 /// Convenience wrapper: build a trainer from defaults and run it.
 pub fn pretrain(man: &Manifest, cfg: TrainConfig) -> Result<TrainResult> {
     Trainer::new(man, cfg)?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::lr_at;
+
+    const TOTAL: u64 = 100;
+    const WARMUP: u64 = 10;
+    const LR: f32 = 0.02;
+
+    #[test]
+    fn lr_ramp_boundary_step_warmup_minus_one() {
+        // the last warmup step reaches exactly the peak: (w-1+1)/w == 1
+        assert_eq!(lr_at(WARMUP - 1, TOTAL, WARMUP, LR), LR);
+        // and the ramp below it is strictly increasing
+        for s in 1..WARMUP {
+            assert!(lr_at(s, TOTAL, WARMUP, LR) > lr_at(s - 1, TOTAL, WARMUP, LR));
+        }
+    }
+
+    #[test]
+    fn lr_cosine_boundary_step_warmup() {
+        // first cosine step: progress 0, cos(0) = 1 -> peak LR (the
+        // schedule is continuous across the warmup/cosine seam)
+        let at_warmup = lr_at(WARMUP, TOTAL, WARMUP, LR);
+        assert_eq!(at_warmup, LR * (0.1 + 0.9 * 1.0));
+        assert!((at_warmup - LR).abs() < 1e-6 * LR);
+        // and it decays monotonically from there to the end
+        for s in (WARMUP + 1)..=TOTAL {
+            assert!(lr_at(s, TOTAL, WARMUP, LR) <= lr_at(s - 1, TOTAL, WARMUP, LR));
+        }
+    }
+
+    #[test]
+    fn lr_boundary_step_total_hits_the_floor() {
+        // progress 1, cos(pi) = -1 -> 10% of peak (f32 pi is inexact, so
+        // compare with a small tolerance)
+        let end = lr_at(TOTAL, TOTAL, WARMUP, LR);
+        assert!((end - 0.1 * LR).abs() < 1e-4 * LR, "end lr {end}");
+    }
+
+    #[test]
+    fn lr_beyond_total_holds_the_floor() {
+        // clamped progress: the cosine must not walk back up past total
+        let end = lr_at(TOTAL, TOTAL, WARMUP, LR);
+        assert_eq!(lr_at(TOTAL + 1, TOTAL, WARMUP, LR), end);
+        assert_eq!(lr_at(TOTAL + 10_000, TOTAL, WARMUP, LR), end);
+    }
+
+    #[test]
+    fn lr_degenerate_schedules_never_underflow_or_blow_up() {
+        // warmup 0, warmup == total, warmup > total: every step must give
+        // a finite LR in (0, lr_max] — the saturating_sub guard in action
+        for (total, warmup) in [(50u64, 0u64), (50, 50), (5, 10), (1, 0), (0, 0)] {
+            for step in 0..=(total + warmup + 3) {
+                let lr = lr_at(step, total, warmup, LR);
+                assert!(
+                    lr.is_finite() && lr > 0.0 && lr <= LR * 1.0001,
+                    "lr_at({step}, {total}, {warmup}) = {lr}"
+                );
+            }
+        }
+    }
 }

@@ -11,17 +11,29 @@
 //!   [`ParallelCtx`] is a *handle* — a thread budget plus the
 //!   [`WorkerPool`] that will run the tasks.  The pool is spun up once
 //!   (from CLI `--threads` / `QGALORE_THREADS` env / detected cores) and
-//!   reused for every call; since PR 4 it schedules over per-worker
-//!   stealing deques (round-robin submission, LIFO own-pop, PCG-stream
-//!   victim choice) instead of one shared FIFO, so the many small
-//!   projection products Q-GaLore issues stop serializing on a single
-//!   queue mutex at high worker counts.  Which thread runs a slab — and
-//!   in what steal order — never affects the bits: tasks own disjoint
-//!   output slices and the decomposition below is keyed by the ctx alone.
-//!   The old scoped-spawn path survives as a fallback
+//!   reused for every call; it schedules over per-worker **Chase-Lev**
+//!   deques (wait-free LIFO own-pop, CAS-only FIFO steals, a once-per-
+//!   batch injector for external submitters) instead of mutex queues, so
+//!   the many small projection products Q-GaLore issues stop serializing
+//!   on locks at high worker counts.  Which thread runs a slab — and in
+//!   what steal order — never affects the bits: tasks own disjoint output
+//!   slices and the decomposition below is keyed by the ctx alone.  The
+//!   old scoped-spawn path survives as a fallback
 //!   ([`ParallelCtx::scoped`]) and as the baseline the dispatch-overhead
-//!   bench measures against; the PR-2 single-FIFO pool survives as
-//!   [`WorkerPool::new_fifo`] for the same reason.
+//!   bench measures against; the PR-2 single-FIFO pool
+//!   ([`WorkerPool::new_fifo`]) and the PR-4 mutex-deque pool
+//!   ([`WorkerPool::new_mutex_steal`]) survive for the same reason.
+//! * **Over-decomposition** (this PR): pool-dispatched `par_rows` /
+//!   `par_map` calls cut about [`ParallelCtx::slabs_per_worker`] slabs per
+//!   budgeted worker (default [`DEFAULT_SLABS_PER_WORKER`], env
+//!   [`SLABS_ENV`]) instead of exactly one, so a straggler slab no longer
+//!   serializes a wave's tail — idle workers steal the finer-grained
+//!   leftovers, which the Chase-Lev rewrite makes nearly free.  Slab
+//!   bounds affect only who computes which rows, never any element's
+//!   accumulation order, so results stay bitwise identical at every slab
+//!   count (asserted by `tests/parity.rs` and `tests/proptests.rs`).  The
+//!   scoped fallback keeps one slab per thread: over-decomposing it would
+//!   multiply OS thread spawns with no stealing to profit from.
 //! * **The kernel body** is a register-blocked microkernel (PR 3): an
 //!   [`MR`]×[`NR`] tile of output accumulators stays live in registers
 //!   across each `KC`-wide k stripe, vectorized across the *independent*
@@ -60,6 +72,7 @@ use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 
 use super::pool::{global_pool, WorkerPool};
 use super::Mat;
+use crate::util::env_parse;
 
 /// k-stripe width: `KC` rows of B (KC * n * 4 bytes) form the resident
 /// cache block each register tile streams against.
@@ -123,6 +136,9 @@ pub fn set_global_threads(n: usize) {
     GLOBAL_THREADS.set(n);
 }
 
+/// Env var overriding the worker count (CLI `--threads` wins over it).
+pub const THREADS_ENV: &str = "QGALORE_THREADS";
+
 /// `QGALORE_THREADS`-style value -> worker count (>= 1), if well-formed.
 fn parse_threads(s: &str) -> Option<usize> {
     match s.trim().parse::<usize>() {
@@ -132,15 +148,61 @@ fn parse_threads(s: &str) -> Option<usize> {
 }
 
 fn detect_threads() -> usize {
-    std::env::var("QGALORE_THREADS")
-        .ok()
-        .and_then(|s| parse_threads(&s))
+    // warn-on-malformed like every QGALORE_* knob: a typo'd QGALORE_THREADS
+    // used to be silently ignored while QGALORE_KERNEL typos warned —
+    // a CI job pinning the thread count must not quietly run on all cores
+    env_parse(THREADS_ENV, "a worker count >= 1", parse_threads)
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
 /// The global default thread count (resolving it on first use).
 pub fn global_threads() -> usize {
     GLOBAL_THREADS.get(detect_threads)
+}
+
+// ---------------------------------------------------------------------------
+// Over-decomposition (slabs per worker).
+// ---------------------------------------------------------------------------
+
+/// Env var overriding the default slab multiplier for pool dispatch.
+pub const SLABS_ENV: &str = "QGALORE_SLABS_PER_WORKER";
+
+/// Default slabs cut per budgeted worker when dispatching to a pool.
+/// ~4 smooths stragglers (an idle worker steals the tail instead of
+/// waiting on the slowest slab) without making tasks so small that even a
+/// Chase-Lev push/steal dominates the arithmetic.
+pub const DEFAULT_SLABS_PER_WORKER: usize = 4;
+
+/// Upper bound on the slab multiplier — beyond this, per-task overhead
+/// provably dominates any straggler win for the shapes this engine sees.
+pub const MAX_SLABS_PER_WORKER: usize = 64;
+
+/// `QGALORE_SLABS_PER_WORKER`-style value -> multiplier, if well-formed.
+fn parse_slabs(s: &str) -> Option<usize> {
+    match s.trim().parse::<usize>() {
+        Ok(n) if (1..=MAX_SLABS_PER_WORKER).contains(&n) => Some(n),
+        _ => None,
+    }
+}
+
+/// Process-global default slab multiplier (resolve-once like the thread
+/// count; [`ThreadCount`] is just a resolve-once positive usize).
+static GLOBAL_SLABS: ThreadCount = ThreadCount::unresolved();
+
+/// Override the global default slab multiplier (clamped to
+/// `1..=`[`MAX_SLABS_PER_WORKER`]).  Newly constructed [`ParallelCtx`]
+/// values pick it up; in-flight ctxs keep the value they captured.
+pub fn set_global_slabs_per_worker(n: usize) {
+    GLOBAL_SLABS.set(n.clamp(1, MAX_SLABS_PER_WORKER));
+}
+
+/// The global default slab multiplier (resolving [`SLABS_ENV`] on first
+/// use, falling back to [`DEFAULT_SLABS_PER_WORKER`]).
+pub fn global_slabs_per_worker() -> usize {
+    GLOBAL_SLABS.get(|| {
+        env_parse(SLABS_ENV, "a slab multiplier in 1..=64", parse_slabs)
+            .unwrap_or(DEFAULT_SLABS_PER_WORKER)
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -192,6 +254,9 @@ fn kernel_from_code(c: u8) -> KernelPath {
     }
 }
 
+/// Env var forcing a kernel body process-wide (CI matrix runs).
+pub const KERNEL_ENV: &str = "QGALORE_KERNEL";
+
 /// `QGALORE_KERNEL`-style value -> kernel path, if well-formed.
 fn parse_kernel(s: &str) -> Option<KernelPath> {
     match s.trim().to_ascii_lowercase().as_str() {
@@ -222,18 +287,10 @@ pub fn set_kernel_override(path: KernelPath) {
 pub fn kernel_override() -> KernelPath {
     match KERNEL_OVERRIDE.load(Ordering::Relaxed) {
         K_UNSET => {
-            let p = match std::env::var("QGALORE_KERNEL") {
-                Ok(s) => parse_kernel(&s).unwrap_or_else(|| {
-                    // loud, not silent: a typo here must not let a CI job
-                    // that exists to force one body quietly test another
-                    eprintln!(
-                        "warning: unrecognized QGALORE_KERNEL={s:?} \
-                         (want auto|simd|portable|autovec); using auto"
-                    );
-                    KernelPath::Auto
-                }),
-                Err(_) => KernelPath::Auto,
-            };
+            // the shared warn-on-malformed env parser: a typo here must not
+            // let a CI job that exists to force one body quietly test another
+            let p = env_parse(KERNEL_ENV, "auto|simd|portable|autovec", parse_kernel)
+                .unwrap_or(KernelPath::Auto);
             // racing first-callers agree on the env value; an explicit
             // set_kernel_override always wins afterwards
             let _ = KERNEL_OVERRIDE.compare_exchange(
@@ -282,41 +339,58 @@ fn resolved_kernel(path: KernelPath) -> KernelPath {
 }
 
 /// Parallelism handle threaded through the optimizer stack: a thread budget
-/// (how many disjoint slabs the decomposition produces) plus the worker
-/// pool that executes them.  `Copy`, so it flows by value everywhere; the
-/// pool reference is `&'static` (the global pool, or a leaked explicit one).
+/// (how many workers' worth of slabs the decomposition produces) plus the
+/// worker pool that executes them.  `Copy`, so it flows by value
+/// everywhere; the pool reference is `&'static` (the global pool, or a
+/// leaked explicit one).
 ///
-/// The budget controls *decomposition only* — results are bitwise identical
-/// whatever pool (or the scoped fallback) runs the slabs.
+/// The budget and slab multiplier control *decomposition only* — results
+/// are bitwise identical whatever pool (or the scoped fallback) runs the
+/// slabs, and at any slab count.
 #[derive(Clone, Copy, Debug)]
 pub struct ParallelCtx {
     pub threads: usize,
+    /// Slabs cut per budgeted worker on pool dispatch (over-decomposition;
+    /// see the module docs).  Ignored by the serial and scoped paths.
+    pub slabs_per_worker: usize,
     pool: Option<&'static WorkerPool>,
 }
 
 impl ParallelCtx {
     /// Exactly one thread (reference semantics, no dispatch at all).
     pub fn serial() -> Self {
-        ParallelCtx { threads: 1, pool: None }
+        ParallelCtx { threads: 1, slabs_per_worker: 1, pool: None }
     }
 
     /// A budget of `threads` executed on the process-global pool.
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
-        ParallelCtx { threads, pool: if threads > 1 { Some(global_pool()) } else { None } }
+        ParallelCtx {
+            threads,
+            slabs_per_worker: global_slabs_per_worker(),
+            pool: if threads > 1 { Some(global_pool()) } else { None },
+        }
     }
 
     /// A budget of `threads` executed by per-call scoped spawns (the PR-1
     /// engine).  Kept as a fallback and as the dispatch-overhead baseline
     /// for `benches/throughput.rs`.
     pub fn scoped(threads: usize) -> Self {
-        ParallelCtx { threads: threads.max(1), pool: None }
+        ParallelCtx {
+            threads: threads.max(1),
+            slabs_per_worker: global_slabs_per_worker(),
+            pool: None,
+        }
     }
 
     /// A budget of `threads` executed on an explicit pool (tests/benches;
     /// leak the pool via [`WorkerPool::leaked`] to get the `'static` handle).
     pub fn with_pool(threads: usize, pool: &'static WorkerPool) -> Self {
-        ParallelCtx { threads: threads.max(1), pool: Some(pool) }
+        ParallelCtx {
+            threads: threads.max(1),
+            slabs_per_worker: global_slabs_per_worker(),
+            pool: Some(pool),
+        }
     }
 
     /// The process-global default (CLI/env/hardware) on the global pool.
@@ -327,7 +401,14 @@ impl ParallelCtx {
     /// Same pool, different thread budget — for callers splitting one
     /// worker budget between an outer fan-out and inner linalg calls.
     pub fn with_threads(self, threads: usize) -> Self {
-        ParallelCtx { threads: threads.max(1), pool: self.pool }
+        ParallelCtx { threads: threads.max(1), ..self }
+    }
+
+    /// Same pool and budget, explicit slab multiplier (clamped to
+    /// `1..=`[`MAX_SLABS_PER_WORKER`]) — the in-process form of
+    /// [`SLABS_ENV`] for tests and tuning.
+    pub fn with_slabs_per_worker(self, slabs: usize) -> Self {
+        ParallelCtx { slabs_per_worker: slabs.clamp(1, MAX_SLABS_PER_WORKER), ..self }
     }
 
     /// The pool that should execute a parallel call, if any.
@@ -338,11 +419,20 @@ impl ParallelCtx {
             self.pool
         }
     }
+
+    /// Slab count for a pool-dispatched decomposition over `items` units:
+    /// `threads * slabs_per_worker`, clamped to the work available.
+    fn slabs(&self, items: usize) -> usize {
+        self.threads
+            .saturating_mul(self.slabs_per_worker.max(1))
+            .clamp(1, items)
+    }
 }
 
 impl PartialEq for ParallelCtx {
     fn eq(&self, other: &Self) -> bool {
         self.threads == other.threads
+            && self.slabs_per_worker == other.slabs_per_worker
             && match (self.pool, other.pool) {
                 (None, None) => true,
                 (Some(a), Some(b)) => std::ptr::eq(a, b),
@@ -370,11 +460,13 @@ pub fn clone_pool(total_elems: usize, pool: ParallelCtx) -> ParallelCtx {
 }
 
 /// Run `body(r0, r1, slab)` over disjoint row panels of a freshly zeroed
-/// (rows, cols) row-major buffer, splitting panels across `ctx.threads`
-/// tasks.  Tasks execute on the ctx's pool (or per-call scoped workers for
-/// a pool-less ctx); either way the decomposition — and therefore the
-/// result, bit for bit — is identical.  `slab` covers exactly rows
-/// `r0..r1`.
+/// (rows, cols) row-major buffer.  Pool dispatch over-decomposes into
+/// about `ctx.threads * ctx.slabs_per_worker` tasks (stragglers get stolen
+/// instead of serializing the tail); the scoped fallback keeps one slab
+/// per spawned thread.  Slab bounds never change what any output element
+/// contains — the body is keyed by absolute row — so the result is
+/// bitwise identical for every scheduler AND every slab count.  `slab`
+/// covers exactly rows `r0..r1`.
 pub fn par_rows<F>(ctx: ParallelCtx, rows: usize, cols: usize, body: F) -> Vec<f32>
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
@@ -388,10 +480,10 @@ where
         body(0, rows, &mut out);
         return out;
     }
-    let chunk = rows.div_ceil(t);
     let body = &body;
     match ctx.pool() {
         Some(pool) => {
+            let chunk = rows.div_ceil(ctx.slabs(rows));
             let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
                 .chunks_mut(chunk * cols)
                 .enumerate()
@@ -404,6 +496,7 @@ where
             pool.run_scoped(tasks);
         }
         None => {
+            let chunk = rows.div_ceil(t);
             std::thread::scope(|s| {
                 for (ti, slab) in out.chunks_mut(chunk * cols).enumerate() {
                     let r0 = ti * chunk;
@@ -416,9 +509,10 @@ where
     out
 }
 
-/// Map `f` over `items` with up to `ctx.threads` tasks, preserving order.
-/// Used to step independent layers / tensors concurrently; executes on the
-/// ctx's pool like [`par_rows`].
+/// Map `f` over `items`, preserving order.  Used to step independent
+/// layers / tensors concurrently; pool dispatch over-decomposes like
+/// [`par_rows`] (per-item results depend only on the item, so chunking is
+/// invisible in the output).
 pub fn par_map<T, U, F>(ctx: ParallelCtx, items: &[T], f: F) -> Vec<U>
 where
     T: Sync,
@@ -428,12 +522,11 @@ where
     if ctx.threads <= 1 || items.len() <= 1 {
         return items.iter().map(&f).collect();
     }
-    let t = ctx.threads.min(items.len());
-    let chunk = items.len().div_ceil(t);
     let mut out: Vec<Option<U>> = (0..items.len()).map(|_| None).collect();
     let f = &f;
     match ctx.pool() {
         Some(pool) => {
+            let chunk = items.len().div_ceil(ctx.slabs(items.len()));
             let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = items
                 .chunks(chunk)
                 .zip(out.chunks_mut(chunk))
@@ -448,6 +541,8 @@ where
             pool.run_scoped(tasks);
         }
         None => {
+            let t = ctx.threads.min(items.len());
+            let chunk = items.len().div_ceil(t);
             std::thread::scope(|s| {
                 for (islab, oslab) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
                     s.spawn(move || {
@@ -967,5 +1062,80 @@ mod tests {
         // serial never dispatches, whatever handle it carries
         assert!(ParallelCtx::new(1).pool().is_none());
         assert!(ctx.with_threads(1).pool().is_none());
+    }
+
+    #[test]
+    fn slabs_env_parsing() {
+        assert_eq!(parse_slabs("1"), Some(1));
+        assert_eq!(parse_slabs(" 4\n"), Some(4));
+        assert_eq!(parse_slabs("64"), Some(64));
+        assert_eq!(parse_slabs("0"), None, "0 slabs is malformed, not serial");
+        assert_eq!(parse_slabs("65"), None, "beyond the cap is malformed");
+        assert_eq!(parse_slabs("-2"), None);
+        assert_eq!(parse_slabs("many"), None);
+        assert_eq!(parse_slabs(""), None);
+    }
+
+    #[test]
+    fn slabs_builder_and_decomposition_math() {
+        let ctx = ParallelCtx::new(4).with_slabs_per_worker(3);
+        assert_eq!(ctx.slabs_per_worker, 3);
+        // threads * slabs_per_worker, clamped to the available rows
+        assert_eq!(ctx.slabs(1000), 12);
+        assert_eq!(ctx.slabs(5), 5);
+        assert_eq!(ctx.slabs(1), 1);
+        // builder clamps to the legal range
+        assert_eq!(ParallelCtx::new(2).with_slabs_per_worker(0).slabs_per_worker, 1);
+        assert_eq!(
+            ParallelCtx::new(2).with_slabs_per_worker(1_000).slabs_per_worker,
+            MAX_SLABS_PER_WORKER
+        );
+        // with_threads preserves the multiplier; serial pins it to 1
+        assert_eq!(ctx.with_threads(2).slabs_per_worker, 3);
+        assert_eq!(ParallelCtx::serial().slabs_per_worker, 1);
+        assert!(global_slabs_per_worker() >= 1);
+    }
+
+    #[test]
+    fn over_decomposition_is_bitwise_invariant() {
+        // the over-decomposition contract: slab count changes who computes
+        // which rows, never any element's bits.  matmul + par_rows with a
+        // row-keyed body, across slab multipliers straddling the row count.
+        let mut rng = Pcg32::seeded(16);
+        let a = Mat::randn(37, 45, &mut rng);
+        let b = Mat::randn(45, 21, &mut rng);
+        let want = matmul_ungated(&a, &b, ParallelCtx::serial());
+        for spw in [1usize, 2, 4, 8, 64] {
+            for t in [2usize, 8] {
+                let ctx = ParallelCtx::new(t).with_slabs_per_worker(spw);
+                assert_eq!(
+                    matmul_ungated(&a, &b, ctx).data,
+                    want.data,
+                    "matmul t={t} spw={spw} diverged"
+                );
+            }
+        }
+        let fill = |r0: usize, _r1: usize, slab: &mut [f32]| {
+            for (ri, row) in slab.chunks_mut(3).enumerate() {
+                for (ci, v) in row.iter_mut().enumerate() {
+                    *v = ((r0 + ri) * 10 + ci) as f32;
+                }
+            }
+        };
+        let want_rows = par_rows(ParallelCtx::serial(), 29, 3, fill);
+        for spw in [1usize, 4, 64] {
+            let got = par_rows(ParallelCtx::new(4).with_slabs_per_worker(spw), 29, 3, fill);
+            assert_eq!(got, want_rows, "par_rows spw={spw} diverged");
+        }
+    }
+
+    #[test]
+    fn par_map_over_decomposed_preserves_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        for spw in [1usize, 4, 64] {
+            let ctx = ParallelCtx::new(8).with_slabs_per_worker(spw);
+            let ys = par_map(ctx, &xs, |&x| x * 2);
+            assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>(), "spw={spw}");
+        }
     }
 }

@@ -9,11 +9,13 @@
 //!
 //! The matmul substrate itself ([`engine`]) is parallel and cache-blocked,
 //! and executes on the persistent work-stealing worker pool ([`pool`]):
-//! decomposition into disjoint row panels happens in the engine, execution
-//! on long-lived workers with per-worker deques (LIFO own-pop, PCG-ordered
-//! stealing on empty), so per-call dispatch is a deque push instead of a
-//! thread spawn and dispatch contention stays per-deque even at 16-32+
-//! workers.  Inside each panel a register-blocked SIMD microkernel
+//! decomposition into disjoint row panels happens in the engine (over-
+//! decomposed to ~4 slabs per budgeted worker so stragglers get stolen),
+//! execution on long-lived workers with per-worker Chase-Lev deques
+//! (wait-free LIFO own-pop, CAS-only PCG-ordered stealing on empty), so
+//! per-call dispatch is a lock-free deque push instead of a thread spawn
+//! and the dispatch path holds no mutex at any worker count.  Inside each
+//! panel a register-blocked SIMD microkernel
 //! ([`engine::KernelPath`]: AVX2 / portable, dispatched at runtime) does
 //! the accumulation in the naive reference's exact per-element order.
 //! Same-shape subspace refreshes batch into one stacked range-finder
@@ -24,8 +26,10 @@ pub mod engine;
 pub mod pool;
 
 pub use engine::{
-    clone_pool, global_threads, kernel_override, par_map, par_rows, set_global_threads,
-    set_kernel_override, simd_kernel_available, KernelPath, ParallelCtx,
+    clone_pool, global_slabs_per_worker, global_threads, kernel_override, par_map, par_rows,
+    set_global_slabs_per_worker, set_global_threads, set_kernel_override,
+    simd_kernel_available, KernelPath, ParallelCtx, DEFAULT_SLABS_PER_WORKER, KERNEL_ENV,
+    MAX_SLABS_PER_WORKER, SLABS_ENV, THREADS_ENV,
 };
 pub use pool::{global_pool, PoolStats, WorkerPool, STEAL_SEED_ENV};
 

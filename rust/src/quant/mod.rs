@@ -276,15 +276,21 @@ pub fn dequantize4(t: &Quant4Tensor) -> Vec<f32> {
 // instead of degenerating to single-row edge work.
 //
 // Submission rides `engine::par_rows`, which hands the work-stealing pool
-// one task per disjoint output slab: each task owns its slab AND its own
-// dequant scratch (allocated inside the task body), so a stolen task
-// dequantizes into thread-local scratch wherever it lands and no steal
-// interleaving can alias another worker's panel.  Dequantized values and
-// the per-element ascending-k accumulation order both match
-// `dequantize* -> Mat::*_naive`, so parity with the unfused reference is
-// bitwise for any worker count, queue discipline (FIFO baseline or
-// stealing), and steal order (asserted by tests/parity.rs and the
-// scheduler-equivalence property in tests/proptests.rs).
+// one task per disjoint output slab — over-decomposed since the Chase-Lev
+// rewrite (~`slabs_per_worker` slabs per budgeted worker), so a straggler
+// dequant slab is stolen rather than serializing the wave.  Each task owns
+// its slab AND its own dequant scratch (allocated inside the task body),
+// so a stolen task dequantizes into thread-local scratch wherever it lands
+// and no steal interleaving can alias another worker's panel.  The `deq`
+// closures index PACKED storage by absolute flat element index and the
+// row-group/sub-panel walks below are keyed by absolute output position,
+// so slab boundaries change only who decodes which rows — never a decoded
+// value or the per-element ascending-k accumulation order, both of which
+// match `dequantize* -> Mat::*_naive`.  Parity with the unfused reference
+// is therefore bitwise for any worker count, any slab count, queue
+// discipline (FIFO / mutex-deque baselines or Chase-Lev stealing), and
+// steal order (asserted by tests/parity.rs and the scheduler-equivalence
+// property in tests/proptests.rs).
 // ---------------------------------------------------------------------------
 
 /// Decode the INT4 code at flat index `idx` from a nibble-packed buffer.

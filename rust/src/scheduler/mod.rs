@@ -102,7 +102,12 @@ impl SubspaceScheduler {
     ///
     /// Returns the (possibly doubled) interval now in effect.
     pub fn record_refresh(&mut self, idx: usize, step: u64, sim: Option<f32>) -> u64 {
-        let window = self.cfg.window;
+        // `window == 0` must behave like the smallest meaningful window (1),
+        // not like "always converged": unclamped, the trailing buffer
+        // drained to empty on every push, `recent_sims.len() >= 0` was
+        // vacuously true and `all()` over an empty window always passed —
+        // so EVERY refresh doubled the interval, similarity ignored.
+        let window = self.cfg.window.max(1);
         let st = &mut self.layers[idx];
         st.svd_count += 1;
         st.last_refresh = Some(step);
@@ -298,6 +303,37 @@ mod tests {
         assert!(frac < 0.4, "converged trace still spent {frac} of GaLore's SVDs");
         // and intervals actually grew
         assert!(s.layer(0).interval > 10 * 8);
+    }
+
+    #[test]
+    fn zero_window_does_not_double_unconditionally() {
+        // regression: cfg.window == 0 made the convergence check vacuous
+        // (empty similarity window, `all()` trivially true), so every
+        // refresh — even the sim-less first one — doubled the interval
+        let names = vec!["l".to_string()];
+        let mut s = SubspaceScheduler::new(
+            &names,
+            SchedulerConfig {
+                base_interval: 10,
+                threshold: 0.4,
+                window: 0,
+                adaptive: true,
+                max_interval: 0,
+            },
+        );
+        s.record_refresh(0, 0, None);
+        assert_eq!(s.layer(0).interval, 10, "sim-less first refresh must not double");
+        for i in 1..=5u64 {
+            s.record_refresh(0, i * 10, Some(0.1));
+            assert_eq!(
+                s.layer(0).interval,
+                10,
+                "below-threshold similarity must never double (refresh {i})"
+            );
+        }
+        // clamped to window-of-1 semantics: one above-threshold sim doubles
+        let iv = s.record_refresh(0, 60, Some(0.9));
+        assert_eq!(iv, 20, "window=0 must act as window=1, not as never-double");
     }
 
     #[test]

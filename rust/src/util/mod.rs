@@ -96,6 +96,47 @@ impl Stopwatch {
     }
 }
 
+/// Parse an optional raw env-var value, warning loudly on malformed input
+/// instead of silently falling back — the shared policy for every
+/// `QGALORE_*` knob (`QGALORE_THREADS`, `QGALORE_KERNEL`,
+/// `QGALORE_STEAL_SEED`, `QGALORE_SLABS_PER_WORKER`).  A typo in a CI
+/// matrix job must not let the job quietly test a different configuration
+/// than its name claims.
+///
+/// `raw` is the env value if the variable was set (`None` = unset, which is
+/// not a warning); the value is trimmed before `parse` sees it.  Returns
+/// `None` for both "unset" and "malformed" so callers chain their own
+/// default with `unwrap_or*`.  Split from [`env_parse`] so unit tests can
+/// drive the malformed path without mutating process env (racy under the
+/// parallel test runner).
+pub fn parse_env_or_warn<T>(
+    var: &str,
+    raw: Option<&str>,
+    expected: &str,
+    parse: impl FnOnce(&str) -> Option<T>,
+) -> Option<T> {
+    let raw = raw?;
+    match parse(raw.trim()) {
+        Some(v) => Some(v),
+        None => {
+            eprintln!(
+                "warning: unrecognized {var}={raw:?} (want {expected}); using the default"
+            );
+            None
+        }
+    }
+}
+
+/// [`parse_env_or_warn`] reading the live process environment.
+pub fn env_parse<T>(
+    var: &str,
+    expected: &str,
+    parse: impl FnOnce(&str) -> Option<T>,
+) -> Option<T> {
+    let raw = std::env::var(var).ok();
+    parse_env_or_warn(var, raw.as_deref(), expected, parse)
+}
+
 /// Mean of a slice (0.0 for empty — callers guard semantics).
 pub fn mean(xs: &[f32]) -> f32 {
     if xs.is_empty() {
@@ -176,5 +217,40 @@ mod tests {
     fn human_bytes_formats() {
         assert_eq!(human_bytes(2_000_000_000), "2.00G");
         assert_eq!(human_bytes(5_000_000), "5MB");
+    }
+
+    fn parse_u64(s: &str) -> Option<u64> {
+        s.parse::<u64>().ok()
+    }
+
+    #[test]
+    fn env_parse_unset_is_silent_none() {
+        assert_eq!(parse_env_or_warn("QGALORE_TEST_VAR", None, "a u64", parse_u64), None);
+    }
+
+    #[test]
+    fn env_parse_well_formed_value_parses() {
+        let got = parse_env_or_warn("QGALORE_TEST_VAR", Some("42"), "a u64", parse_u64);
+        assert_eq!(got, Some(42));
+        // trimmed before the parser sees it, like every QGALORE_* knob
+        let got = parse_env_or_warn("QGALORE_TEST_VAR", Some(" 7\n"), "a u64", parse_u64);
+        assert_eq!(got, Some(7));
+    }
+
+    #[test]
+    fn env_parse_malformed_value_falls_back() {
+        // the warning itself goes to stderr; the contract under test is
+        // that a malformed value yields None (so callers take the default)
+        // rather than panicking or being mistaken for "unset + parsed"
+        for bad in ["lots", "", "-3", "4x"] {
+            let got = parse_env_or_warn("QGALORE_TEST_VAR", Some(bad), "a u64", parse_u64);
+            assert_eq!(got, None, "malformed {bad:?} must fall back to the default");
+        }
+    }
+
+    #[test]
+    fn env_parse_reads_process_env() {
+        // a variable that is certainly unset: silent None
+        assert_eq!(env_parse("QGALORE_DEFINITELY_UNSET_TEST_VAR", "a u64", parse_u64), None);
     }
 }

@@ -9,6 +9,8 @@
 //! stable:
 //!
 //! * across worker counts (1 vs 4 vs 8) — the `--threads` contract;
+//! * across over-decomposition slab multipliers (1 slab/worker up to the
+//!   64 cap) — the `QGALORE_SLABS_PER_WORKER` contract;
 //! * across kernel bodies (AVX2 / portable / the autovec baseline) via the
 //!   process-global [`engine::set_kernel_override`] hook;
 //! * across the work-stealing pool at 1/4/8/16 workers and under hostile
@@ -106,6 +108,16 @@ fn golden_trace_locks_numerics() {
         let got = train_trace(ParallelCtx::new(4));
         engine::set_kernel_override(prev);
         assert_eq!(got, t1, "loss trace changed under kernel override {path:?}");
+    }
+
+    // --- slab-count (over-decomposition) stability ------------------------
+    // par_rows/par_map cut ~slabs_per_worker slabs per budgeted worker by
+    // default; the multiplier changes only who computes which rows, so the
+    // whole trace must be bitwise stable from 1 slab/worker (the pre-
+    // rewrite decomposition) to the 64 cap.
+    for spw in [1usize, 2, 8, 64] {
+        let got = train_trace(ParallelCtx::new(4).with_slabs_per_worker(spw));
+        assert_eq!(got, t1, "loss trace changed at {spw} slabs per worker");
     }
 
     // --- stealing-pool stability ------------------------------------------

@@ -330,6 +330,65 @@ fn pool_bitwise_identity_and_reuse() {
 }
 
 #[test]
+fn over_decomposition_bitwise_across_slab_counts_and_pools() {
+    // the over-decomposition contract on real pools: slab multipliers from
+    // 1 (the pre-rewrite decomposition) to the 64 cap change only which
+    // worker computes which rows — dense, transposed, and fused INT4/INT8
+    // outputs must stay bitwise identical to serial on stealing AND FIFO
+    // pools, at worker counts straddling the slab count.
+    let mut rng = Pcg32::seeded(210);
+    // dense: odd-shaped and driven ungated so even small slabs hit the pool
+    let (m, c, n) = (96usize, 64usize, 33usize);
+    let a = Mat::randn(m, c, &mut rng);
+    let b = Mat::randn(c, n, &mut rng);
+    let at = Mat::randn(c, m, &mut rng);
+    // fused: an above-PAR_MIN_FLOPS shape, since the fused paths keep their
+    // serial gate and would otherwise never reach the pool here
+    let (fm, fc, fn_) = (256usize, 256usize, 64usize);
+    assert!(fm * fc * fn_ >= engine::PAR_MIN_FLOPS);
+    let p4 = quant::quantize4(&rng.normal_vec(fm * fc, 0.0, 0.3));
+    let fx = Mat::randn(fc, fn_, &mut rng);
+    let fxt = Mat::randn(fm, fn_, &mut rng);
+    let serial = ParallelCtx::serial();
+    let want_mm = engine::matmul_ungated(&a, &b, serial);
+    let want_tm = engine::t_matmul_with_kernel(&at, &b, serial, KernelPath::Auto);
+    let want4 = quant::dequant4_matmul(&p4, fm, fc, &fx, serial);
+    let want4t = quant::dequant4_t_matmul(&p4, fm, fc, &fxt, serial);
+    let pools: [&'static WorkerPool; 2] = [WorkerPool::leaked(4), WorkerPool::leaked_fifo(4)];
+    for pool in pools {
+        for spw in [1usize, 2, 4, 16, 64] {
+            for t in [2usize, 8] {
+                let ctx = ParallelCtx::with_pool(t, pool).with_slabs_per_worker(spw);
+                assert_eq!(
+                    engine::matmul_ungated(&a, &b, ctx).data,
+                    want_mm.data,
+                    "matmul t={t} spw={spw} ({}) not bitwise",
+                    pool.kind()
+                );
+                assert_eq!(
+                    engine::t_matmul_with_kernel(&at, &b, ctx, KernelPath::Auto).data,
+                    want_tm.data,
+                    "t_matmul t={t} spw={spw} ({}) not bitwise",
+                    pool.kind()
+                );
+                assert_eq!(
+                    quant::dequant4_matmul(&p4, fm, fc, &fx, ctx).data,
+                    want4.data,
+                    "dequant4_matmul t={t} spw={spw} ({}) not bitwise",
+                    pool.kind()
+                );
+                assert_eq!(
+                    quant::dequant4_t_matmul(&p4, fm, fc, &fxt, ctx).data,
+                    want4t.data,
+                    "dequant4_t_matmul t={t} spw={spw} ({}) not bitwise",
+                    pool.kind()
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn pool_concurrent_submission_from_many_callers() {
     let pool: &'static WorkerPool = WorkerPool::leaked(4);
     let mut rng = Pcg32::seeded(201);

@@ -31,9 +31,8 @@ const SUBMITTERS: usize = 8;
 const ITERS: usize = 12;
 const OUTER_ITEMS: usize = 6;
 
-/// The full storm against one pool size.
-fn stress(workers: usize) {
-    let pool: &'static WorkerPool = WorkerPool::leaked(workers);
+/// The full storm against one pool instance.
+fn stress_on(pool: &'static WorkerPool, workers: usize) {
     let mut rng = Pcg32::seeded(900 + workers as u64);
     // small shapes: the point is scheduling pressure, not arithmetic
     let a = Mat::randn(48, 32, &mut rng);
@@ -96,17 +95,28 @@ fn stress(workers: usize) {
 
 #[test]
 fn stress_1_worker() {
-    stress(1);
+    stress_on(WorkerPool::leaked(1), 1);
 }
 
 #[test]
 fn stress_4_workers() {
-    stress(4);
+    stress_on(WorkerPool::leaked(4), 4);
 }
 
 #[test]
 fn stress_16_workers() {
-    stress(16);
+    stress_on(WorkerPool::leaked(16), 16);
+}
+
+#[test]
+fn stress_16_workers_forced_hostile_steal_seeds() {
+    // the Chase-Lev satellite case: the same storm at 16 workers, but with
+    // the victim-choice PCG stream pinned to adversarial seeds (the
+    // in-process form of QGALORE_STEAL_SEED).  Liveness, panic routing,
+    // and bitwise results must all survive any steal order the seed buys.
+    for seed in [0xDEAD_BEEFu64, u64::MAX] {
+        stress_on(WorkerPool::leaked_with_steal_seed(16, seed), 16);
+    }
 }
 
 #[test]

@@ -182,9 +182,10 @@ fn prop_cosine_bounded_and_reflexive() {
 // The execution-layer contract: par_rows / par_map / the dense engine / the
 // fused dequant kernels produce BITWISE-identical output under every
 // scheduler — serial, per-call scoped spawns, the PR-2 single-FIFO pool,
-// and the work-stealing pool — for arbitrary job counts, chunk sizes
-// (ctx.threads drives the decomposition), and worker counts.  Scheduling
-// decides WHO runs a slab and WHEN; never what the slab contains.
+// and the Chase-Lev work-stealing pool — for arbitrary job counts, chunk
+// sizes (ctx.threads and the per-case-random slabs_per_worker multiplier
+// drive the decomposition), and worker counts.  Scheduling decides WHO
+// runs a slab and WHEN; never what the slab contains.
 // ---------------------------------------------------------------------------
 
 /// Pools shared by every case: leaking one per case would leak hundreds of
@@ -203,16 +204,19 @@ fn equivalence_pools() -> &'static [(&'static WorkerPool, &'static WorkerPool)] 
 
 /// Every execution scheduler for one thread budget against one pool pair:
 /// serial is the caller's reference, the rest must match it bit for bit.
-/// The pool-independent scoped scheduler is checked once per case by the
+/// `spw` is the over-decomposition multiplier (randomized per case — slab
+/// counts must be as invisible in the bits as worker counts are).  The
+/// pool-independent scoped scheduler is checked once per case by the
 /// callers (not per pool pair — it would re-run identical work).
 fn schedulers(
     threads: usize,
+    spw: usize,
     fifo: &'static WorkerPool,
     steal: &'static WorkerPool,
 ) -> [(&'static str, ParallelCtx); 2] {
     [
-        ("fifo-pool", ParallelCtx::with_pool(threads, fifo)),
-        ("steal-pool", ParallelCtx::with_pool(threads, steal)),
+        ("fifo-pool", ParallelCtx::with_pool(threads, fifo).with_slabs_per_worker(spw)),
+        ("steal-pool", ParallelCtx::with_pool(threads, steal).with_slabs_per_worker(spw)),
     ]
 }
 
@@ -223,7 +227,8 @@ fn prop_scheduler_equivalence_bitwise() {
         let m = 1 + rng.below(96);
         let k = 1 + rng.below(64);
         let n = 1 + rng.below(48);
-        let threads = 1 + rng.below(9); // chunk width = ceil(rows / threads)
+        let threads = 1 + rng.below(9); // chunk width = ceil(rows / slabs)
+        let spw = 1 + rng.below(8); // over-decomposition multiplier
         let a = Mat::randn(m, k, rng);
         let b = Mat::randn(k, n, rng);
         let at = a.transpose(); // (k, m): a t_matmul operand with shared k
@@ -254,12 +259,12 @@ fn prop_scheduler_equivalence_bitwise() {
         let scoped = std::iter::once(("scoped", ParallelCtx::scoped(threads)));
         let pooled = pools
             .iter()
-            .flat_map(|&(fifo, steal)| schedulers(threads, fifo, steal));
+            .flat_map(|&(fifo, steal)| schedulers(threads, spw, fifo, steal));
         for (label, ctx) in scoped.chain(pooled) {
             assert_eq!(
                 engine::matmul_ungated(&a, &b, ctx).data,
                 want_mm.data,
-                "matmul {m}x{k}x{n} t={threads} diverged under {label}"
+                "matmul {m}x{k}x{n} t={threads} spw={spw} diverged under {label}"
             );
             assert_eq!(
                 engine::t_matmul_with_kernel(&b, &at, ctx, KernelPath::Auto).data,
@@ -301,6 +306,7 @@ fn prop_fused_dequant_scheduler_equivalence_bitwise() {
         let n = if above_gate { 64 } else { 1 + rng.below(24) };
         assert!(!above_gate || m * k * n >= engine::PAR_MIN_FLOPS);
         let threads = 2 + rng.below(7);
+        let spw = 1 + rng.below(8); // over-decomposition multiplier
         let p4 = quant::quantize4(&rng.normal_vec(m * k, 0.0, 0.3));
         let w8 = quant::quantize(&rng.normal_vec(m * k, 0.0, 0.3), 8);
         let x = Mat::randn(k, n, rng);
@@ -314,7 +320,7 @@ fn prop_fused_dequant_scheduler_equivalence_bitwise() {
         let scoped = std::iter::once(("scoped", ParallelCtx::scoped(threads)));
         let pooled = pools
             .iter()
-            .flat_map(|&(fifo, steal)| schedulers(threads, fifo, steal));
+            .flat_map(|&(fifo, steal)| schedulers(threads, spw, fifo, steal));
         for (label, ctx) in scoped.chain(pooled) {
             assert_eq!(
                 quant::dequant4_matmul(&p4, m, k, &x, ctx).data,
