@@ -37,6 +37,7 @@ fn main() -> Result<()> {
             opts: BuildOptions::default(),
             log_every: 50,
             quiet: false,
+            dataflow: qgalore::coordinator::dataflow_default(),
         },
     )?;
     println!("base model val ppl: {:.2}\n", base.final_ppl);

@@ -54,6 +54,7 @@ fn main() -> Result<()> {
             },
             log_every: (steps / 10).max(1),
             quiet: false,
+            dataflow: qgalore::coordinator::dataflow_default(),
         };
         let r = pretrain(&man, cfg)?;
         let curve: Vec<Vec<String>> = r

@@ -40,6 +40,7 @@ fn main() -> Result<()> {
         },
         log_every: 10,
         quiet: false,
+        dataflow: qgalore::coordinator::dataflow_default(),
     };
     let r = pretrain(&man, cfg)?;
 

@@ -15,10 +15,13 @@
 
 mod bench_harness;
 
+use std::collections::BTreeMap;
 use std::hint::black_box;
 
 use bench_harness::{bench, BenchResult};
 use qgalore::coordinator::trainer::{TrainConfig, Trainer};
+use qgalore::coordinator::{HostDataflowTrainer, HostMethod, HostStepConfig};
+use qgalore::jsonx::Json;
 use qgalore::linalg::{engine, KernelPath, Mat, ParallelCtx, WorkerPool};
 use qgalore::manifest::Manifest;
 use qgalore::optim::{BuildOptions, Method};
@@ -309,11 +312,70 @@ fn contention_benches() {
     }
 }
 
+/// Sequential step vs dataflow step graph on the host reference trainer
+/// (the same `StepGraphBuilder`/`run_graph` machinery `Trainer::step`
+/// uses, minus the runtime): steps/sec at 1/4/8/16 workers, written to
+/// `BENCH_step.json` so the step-throughput trajectory is tracked across
+/// PRs.  Layers sit below the engine's serial gate on purpose — all the
+/// parallelism must come from layer-level chain overlap, which is exactly
+/// what the dataflow step adds.
+fn step_benches() {
+    println!("\n== dataflow step graph vs sequential step (host trainer, 12 layers) ==");
+    // two shape groups so refresh waves are shape-batched; interval 4 so
+    // waves land inside the timed window, not just at step 0
+    let shapes: Vec<(usize, usize)> =
+        (0..12).map(|i| if i % 3 == 2 { (64, 48) } else { (96, 96) }).collect();
+    let cfg = HostStepConfig {
+        method: HostMethod::Galore,
+        rank: 8,
+        sched: SchedulerConfig { base_interval: 4, ..Default::default() },
+        seed: 5,
+        ..HostStepConfig::default()
+    };
+    let mut rows = Vec::new();
+    for workers in [1usize, 4, 8, 16] {
+        let pool = WorkerPool::leaked(workers);
+        let ctx = ParallelCtx::with_pool(workers, pool);
+        let mut seq = HostDataflowTrainer::new(&shapes, cfg);
+        let r_seq = bench(&format!("sequential step, {workers} workers"), 3, 30, || {
+            black_box(seq.step_sequential(ctx));
+        });
+        let mut df = HostDataflowTrainer::new(&shapes, cfg);
+        let r_df = bench(&format!("dataflow step, {workers} workers"), 3, 30, || {
+            black_box(df.step_dataflow(ctx, pool).unwrap());
+        });
+        let sps_seq = 1e3 / r_seq.mean_ms;
+        let sps_df = 1e3 / r_df.mean_ms;
+        println!(
+            "    -> {workers:>2} workers: sequential {sps_seq:.1} steps/s | dataflow {sps_df:.1} steps/s ({:.2}x)",
+            sps_df / sps_seq
+        );
+        rows.push((workers, sps_seq, sps_df));
+    }
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|&(w, s, d)| {
+            let mut row = BTreeMap::new();
+            row.insert("workers".to_string(), Json::Num(w as f64));
+            row.insert("sequential_steps_per_sec".to_string(), Json::Num(s));
+            row.insert("dataflow_steps_per_sec".to_string(), Json::Num(d));
+            Json::Obj(row)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("host_dataflow_step".to_string()));
+    root.insert("layers".to_string(), Json::Num(shapes.len() as f64));
+    root.insert("rows".to_string(), Json::Arr(arr));
+    std::fs::write("BENCH_step.json", Json::Obj(root).dump()).expect("write BENCH_step.json");
+    println!("    wrote BENCH_step.json");
+}
+
 fn main() {
     engine_benches();
     microkernel_benches();
     dispatch_benches();
     contention_benches();
+    step_benches();
 
     let man = match Manifest::load("artifacts") {
         Ok(m) => m,
@@ -326,7 +388,7 @@ fn main() {
     println!("\n== model fwd/bwd artifacts ==");
     let entry = man.config(CFG).unwrap().clone();
     let init = man.load_init(CFG).unwrap();
-    let mut rt = Runtime::new().unwrap();
+    let rt = Runtime::new().unwrap();
     let mut rng = Pcg32::seeded(0);
     let b = man.batch;
     let s = entry.model.max_seq_len;
@@ -463,6 +525,7 @@ fn main() {
             },
             log_every: u64::MAX,
             quiet: true,
+            dataflow: false,
         };
         let mut trainer = Trainer::new(&man, cfg).unwrap();
         // prime compile caches + first subspace refresh outside the timing

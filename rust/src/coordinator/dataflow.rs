@@ -1,0 +1,465 @@
+//! Host-side reference dataflow trainer.
+//!
+//! [`HostDataflowTrainer`] drives the SAME step-graph machinery as
+//! `Trainer::step` — `StepGraphBuilder` over `WorkerPool::run_graph`, one
+//! chain per layer, shape-batched basis waves keyed by
+//! `SubspaceScheduler::plan_due`, serial pre-assignment of every shared
+//! decision, one serial join point — but with the per-layer "artifact"
+//! replaced by an in-process least-squares problem (grad = Xᵀ(XW − Y),
+//! INT4-projected momentum update, counter-seeded uniform noise).  The
+//! xla stub cannot compile HLO artifacts, so this is how the determinism
+//! and fault-containment contracts of the dataflow step are exercised
+//! end-to-end in tests and benches (`tests/golden_trace.rs`,
+//! `tests/proptests.rs`, `tests/pool_stress.rs`, `benches/throughput.rs`)
+//! without a runtime.
+//!
+//! [`HostDataflowTrainer::step_sequential`] and
+//! [`HostDataflowTrainer::step_dataflow`] must be bitwise-identical for
+//! any worker count, steal seed, slab setting, and scheduling discipline;
+//! every per-layer kernel they call is itself bits-invariant to the
+//! `ParallelCtx` (the engine contract), so equality is decided purely by
+//! the dataflow discipline: disjoint per-chain state, serially
+//! pre-assigned seeds/counters, one reduction point.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::linalg::{left_subspace_batched, Mat, ParallelCtx, WorkerPool};
+use crate::optim::StepGraphBuilder;
+use crate::quant;
+use crate::scheduler::{SchedulerConfig, SubspaceScheduler};
+use crate::util::Pcg32;
+
+/// Power-iteration count at refresh time (mirrors the optimizer's).
+const SUBSPACE_ITERS: usize = 2;
+
+/// Which update rule each host layer runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HostMethod {
+    /// dense: W -= lr·(G + ε·noise); no projection, no scheduler
+    Full,
+    /// projected update under the FIXED-interval scheduler
+    LowRank,
+    /// projected update under the adaptive lazy scheduler
+    Galore,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct HostStepConfig {
+    pub method: HostMethod,
+    pub rank: usize,
+    pub lr: f32,
+    /// weight of the counter-seeded uniform noise folded into each update
+    /// (stands in for Q-GaLore's stochastic-rounding noise operand)
+    pub noise_eps: f32,
+    pub sched: SchedulerConfig,
+    pub seed: u64,
+}
+
+impl Default for HostStepConfig {
+    fn default() -> Self {
+        HostStepConfig {
+            method: HostMethod::Galore,
+            rank: 4,
+            lr: 1e-3,
+            noise_eps: 1e-3,
+            sched: SchedulerConfig::default(),
+            seed: 0,
+        }
+    }
+}
+
+/// One independent least-squares problem: minimize ||X W − Y||² over W.
+struct HostLayer {
+    m: usize,
+    n: usize,
+    x: Mat, // (m, m), fixed
+    y: Mat, // (m, n), fixed
+    w: Mat, // (m, n), trained
+    /// INT4-stored left basis (m, r), refreshed under the scheduler
+    p4: Option<quant::Quant4Tensor>,
+    /// low-rank momentum (r, n); reset at every refresh
+    momentum: Option<Mat>,
+}
+
+/// Immutable parameters of one layer task, `Copy` into every graph node.
+#[derive(Clone, Copy)]
+struct TaskCfg {
+    dense: bool,
+    rank: usize,
+    lr: f32,
+    noise_eps: f32,
+    ctx: ParallelCtx,
+}
+
+/// Gradient and loss of one layer against its fixed (X, Y).
+fn layer_grad(layer: &HostLayer, ctx: ParallelCtx) -> (Mat, f32) {
+    let resid = layer.x.matmul_with(&layer.w, ctx).sub(&layer.y);
+    let f = resid.frobenius();
+    let loss = f * f / (layer.m * layer.n) as f32;
+    let g = layer.x.t_matmul_with(&resid, ctx);
+    (g, loss)
+}
+
+/// One weight update.  Projected path mirrors the Q-GaLore data flow:
+/// down-project through the stored INT4 basis, momentum EMA in the
+/// subspace, up-project, apply with counter-seeded noise.
+fn layer_update(layer: &mut HostLayer, cfg: TaskCfg, ctr: u64, g: &Mat) {
+    let (m, n) = (layer.m, layer.n);
+    let noise = quant::uniform_noise(m * n, ctr, cfg.ctx);
+    let update = if cfg.dense {
+        g.clone()
+    } else {
+        let p4 = layer.p4.as_ref().expect("projected layer refreshed at step 0");
+        let lowg = quant::dequant4_t_matmul(p4, m, cfg.rank, g, cfg.ctx);
+        let mom = layer.momentum.as_mut().expect("momentum reset at refresh");
+        for (me, ge) in mom.data.iter_mut().zip(&lowg.data) {
+            *me = 0.9 * *me + 0.1 * ge;
+        }
+        quant::dequant4_matmul(p4, m, cfg.rank, mom, cfg.ctx)
+    };
+    for ((we, ue), ne) in layer.w.data.iter_mut().zip(&update.data).zip(&noise) {
+        *we -= cfg.lr * (ue + cfg.noise_eps * (ne - 0.5));
+    }
+}
+
+/// Install a freshly computed basis: overlap-vs-old similarity (None
+/// before the first refresh), INT4 storage, momentum reset.
+fn refresh_layer(layer: &mut HostLayer, cfg: TaskCfg, new_p: Mat) -> Option<f32> {
+    let sim = layer.p4.as_ref().map(|old| {
+        let r_old = old.numel() / layer.m;
+        let prod = quant::dequant4_t_matmul(old, layer.m, r_old, &new_p, cfg.ctx);
+        let f = prod.frobenius();
+        f * f / r_old.min(new_p.cols).max(1) as f32
+    });
+    layer.momentum = Some(Mat::zeros(new_p.cols, layer.n));
+    layer.p4 = Some(quant::quantize4(&new_p.data));
+    sim
+}
+
+pub struct HostDataflowTrainer {
+    layers: Vec<HostLayer>,
+    pub sched: SubspaceScheduler,
+    method: HostMethod,
+    rank: usize,
+    lr: f32,
+    noise_eps: f32,
+    /// group sketch seeds (drawn serially, one per shape group per step)
+    rng: Pcg32,
+    /// update-noise counter (pre-assigned serially in walk order)
+    noise_ctr: u64,
+    step: u64,
+    /// fault injection: panic inside the update chain of layer `.1` at
+    /// step `.0` of the DATAFLOW path (tests/pool_stress.rs)
+    pub fail_at: Option<(u64, usize)>,
+}
+
+impl HostDataflowTrainer {
+    pub fn new(shapes: &[(usize, usize)], cfg: HostStepConfig) -> Self {
+        let mut drng = Pcg32::new(cfg.seed, 0xda7a);
+        let layers: Vec<HostLayer> = shapes
+            .iter()
+            .map(|&(m, n)| {
+                let xs = 1.0 / (m as f32).sqrt();
+                HostLayer {
+                    m,
+                    n,
+                    x: Mat::from_vec(m, m, drng.normal_vec(m * m, 0.0, xs)),
+                    y: Mat::from_vec(m, n, drng.normal_vec(m * n, 0.0, 1.0)),
+                    w: Mat::from_vec(m, n, drng.normal_vec(m * n, 0.0, 0.1)),
+                    p4: None,
+                    momentum: None,
+                }
+            })
+            .collect();
+        let names: Vec<String> = (0..layers.len()).map(|i| format!("host{i}")).collect();
+        let sched_cfg = match cfg.method {
+            // LowRank models the fixed-interval baselines
+            HostMethod::LowRank => SchedulerConfig { adaptive: false, ..cfg.sched },
+            _ => cfg.sched,
+        };
+        HostDataflowTrainer {
+            layers,
+            sched: SubspaceScheduler::new(&names, sched_cfg),
+            method: cfg.method,
+            rank: cfg.rank,
+            lr: cfg.lr,
+            noise_eps: cfg.noise_eps,
+            rng: Pcg32::new(cfg.seed, 0x5eed),
+            noise_ctr: 0,
+            step: 0,
+            fail_at: None,
+        }
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.step
+    }
+
+    /// Flat concatenation of every layer's trained weights — the bit
+    /// pattern the equivalence tests compare.
+    pub fn export_weights(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            out.extend_from_slice(&l.w.data);
+        }
+        out
+    }
+
+    fn task_cfg(&self, ctx: ParallelCtx) -> TaskCfg {
+        TaskCfg {
+            dense: self.method == HostMethod::Full,
+            rank: self.rank,
+            lr: self.lr,
+            noise_eps: self.noise_eps,
+            ctx,
+        }
+    }
+
+    fn next_noise_ctr(&mut self) -> u64 {
+        self.noise_ctr += 1;
+        self.noise_ctr
+    }
+
+    /// The sequential reference step (mirrors `Galore::apply_update`):
+    /// walk layers in index order, park due layers, run shape-batched
+    /// refresh waves, update.  Returns the mean loss.
+    pub fn step_sequential(&mut self, ctx: ParallelCtx) -> f32 {
+        let step = self.step;
+        let cfg = self.task_cfg(ctx);
+        let mut total = 0f32;
+        let mut due: Vec<(usize, Mat)> = Vec::new();
+        for idx in 0..self.layers.len() {
+            let (g, loss) = layer_grad(&self.layers[idx], ctx);
+            total += loss;
+            if !cfg.dense && self.sched.due(idx, step) {
+                due.push((idx, g));
+            } else {
+                let ctr = self.next_noise_ctr();
+                layer_update(&mut self.layers[idx], cfg, ctr, &g);
+            }
+        }
+        // shape groups in first-due order, ONE sketch seed per group
+        let mut groups: Vec<((usize, usize), u64, Vec<(usize, Mat)>)> = Vec::new();
+        for (idx, g) in due {
+            let key = (self.layers[idx].m, self.layers[idx].n);
+            let gi = match groups.iter().position(|(k, _, _)| *k == key) {
+                Some(gi) => gi,
+                None => {
+                    let seed = self.rng.next_u64();
+                    groups.push((key, seed, Vec::new()));
+                    groups.len() - 1
+                }
+            };
+            groups[gi].2.push((idx, g));
+        }
+        let wave_size = ctx.threads.max(1);
+        for (_shape, seed, mut members) in groups {
+            while !members.is_empty() {
+                let take = wave_size.min(members.len());
+                let wave: Vec<(usize, Mat)> = members.drain(..take).collect();
+                let grefs: Vec<&Mat> = wave.iter().map(|(_, g)| g).collect();
+                let mut rng = Pcg32::new(seed, 0x5eed);
+                let new_ps =
+                    left_subspace_batched(&grefs, self.rank, SUBSPACE_ITERS, &mut rng, ctx);
+                drop(grefs);
+                for ((idx, g), new_p) in wave.into_iter().zip(new_ps) {
+                    let sim = refresh_layer(&mut self.layers[idx], cfg, new_p);
+                    self.sched.record_refresh(idx, step, sim);
+                    let ctr = self.next_noise_ctr();
+                    layer_update(&mut self.layers[idx], cfg, ctr, &g);
+                }
+            }
+        }
+        self.step += 1;
+        total / self.layers.len() as f32
+    }
+
+    /// The dataflow step: same arithmetic as [`Self::step_sequential`],
+    /// factored into a dependency graph on `pool`.  Non-due layers are
+    /// one fused grad→update node each; a due layer contributes a grad
+    /// node feeding its wave's basis node, which fans back out into the
+    /// members' refresh+update nodes.  All shared decisions are planned
+    /// serially up front; loss reduction and scheduler recording happen
+    /// serially after the join.  A panic in any chain (including the
+    /// injected `fail_at` fault) surfaces as this step's `Err`, the step
+    /// counter does not advance, and the pool survives.
+    pub fn step_dataflow(&mut self, ctx: ParallelCtx, pool: &WorkerPool) -> Result<f32> {
+        let step = self.step;
+        let cfg = self.task_cfg(ctx);
+        let nl = self.layers.len();
+
+        // ---- plan phase (serial): due snapshot, shape groups/waves,
+        // noise counters in sequential-walk consumption order
+        let due_set: Vec<usize> =
+            if cfg.dense { Vec::new() } else { self.sched.plan_due(step) };
+        let is_due = |idx: usize| due_set.contains(&idx);
+        let mut now_ctrs: Vec<Option<u64>> = vec![None; nl];
+        for (idx, slot) in now_ctrs.iter_mut().enumerate() {
+            if !is_due(idx) {
+                *slot = Some(self.next_noise_ctr());
+            }
+        }
+        let mut groups: Vec<((usize, usize), u64, Vec<usize>)> = Vec::new();
+        for &idx in &due_set {
+            let key = (self.layers[idx].m, self.layers[idx].n);
+            let gi = match groups.iter().position(|(k, _, _)| *k == key) {
+                Some(gi) => gi,
+                None => {
+                    let seed = self.rng.next_u64();
+                    groups.push((key, seed, Vec::new()));
+                    groups.len() - 1
+                }
+            };
+            groups[gi].2.push(idx);
+        }
+        struct WavePlan {
+            seed: u64,
+            members: Vec<(usize, u64)>, // (layer idx, noise counter)
+        }
+        let wave_size = ctx.threads.max(1);
+        let mut waves: Vec<WavePlan> = Vec::new();
+        for (_shape, seed, mut members) in groups {
+            while !members.is_empty() {
+                let take = wave_size.min(members.len());
+                let wm: Vec<(usize, u64)> =
+                    members.drain(..take).map(|idx| (idx, self.next_noise_ctr())).collect();
+                waves.push(WavePlan { seed, members: wm });
+            }
+        }
+
+        // ---- execute phase: the step graph
+        let fail = self.fail_at;
+        let loss_slots: Vec<Mutex<Option<f32>>> = (0..nl).map(|_| Mutex::new(None)).collect();
+        let g_slots: Vec<Vec<Mutex<Option<Mat>>>> = waves
+            .iter()
+            .map(|w| w.members.iter().map(|_| Mutex::new(None)).collect())
+            .collect();
+        let relay_slots: Vec<Vec<Mutex<Option<&mut HostLayer>>>> = waves
+            .iter()
+            .map(|w| w.members.iter().map(|_| Mutex::new(None)).collect())
+            .collect();
+        let proj_slots: Vec<Vec<Mutex<Option<Mat>>>> = waves
+            .iter()
+            .map(|w| w.members.iter().map(|_| Mutex::new(None)).collect())
+            .collect();
+        let sim_slots: Vec<Vec<Mutex<Option<f32>>>> = waves
+            .iter()
+            .map(|w| w.members.iter().map(|_| Mutex::new(None)).collect())
+            .collect();
+        let mut recordings: Vec<(usize, usize, usize)> = Vec::new();
+        let mut layer_slots: Vec<Option<&mut HostLayer>> =
+            self.layers.iter_mut().map(Some).collect();
+        let mut b = StepGraphBuilder::new();
+        for idx in 0..nl {
+            let Some(ctr) = now_ctrs[idx] else { continue };
+            let layer = layer_slots[idx].take().expect("one chain per layer");
+            let lslot = &loss_slots[idx];
+            b.node(&[], move || {
+                if fail == Some((step, idx)) {
+                    panic!("injected dataflow fault at layer {idx}");
+                }
+                let (g, loss) = layer_grad(layer, cfg.ctx);
+                *lslot.lock().unwrap() = Some(loss);
+                layer_update(layer, cfg, ctr, &g);
+            });
+        }
+        for (wi, wave) in waves.iter().enumerate() {
+            let mut grad_ids = Vec::with_capacity(wave.members.len());
+            for (mi, &(idx, _ctr)) in wave.members.iter().enumerate() {
+                let layer = layer_slots[idx].take().expect("one chain per layer");
+                let gslot = &g_slots[wi][mi];
+                let rslot = &relay_slots[wi][mi];
+                let lslot = &loss_slots[idx];
+                grad_ids.push(b.node(&[], move || {
+                    let (g, loss) = layer_grad(layer, cfg.ctx);
+                    *lslot.lock().unwrap() = Some(loss);
+                    *gslot.lock().unwrap() = Some(g);
+                    *rslot.lock().unwrap() = Some(layer);
+                }));
+            }
+            let seed = wave.seed;
+            let wave_g = &g_slots[wi];
+            let wave_p = &proj_slots[wi];
+            let rank = self.rank;
+            let basis = b.node(&grad_ids, move || {
+                let guards: Vec<_> = wave_g.iter().map(|s| s.lock().unwrap()).collect();
+                let grefs: Vec<&Mat> =
+                    guards.iter().map(|gu| gu.as_ref().expect("grad node filled slot")).collect();
+                let mut rng = Pcg32::new(seed, 0x5eed);
+                let new_ps = left_subspace_batched(&grefs, rank, SUBSPACE_ITERS, &mut rng, cfg.ctx);
+                drop(grefs);
+                drop(guards);
+                for (slot, p) in wave_p.iter().zip(new_ps) {
+                    *slot.lock().unwrap() = Some(p);
+                }
+            });
+            for (mi, &(idx, ctr)) in wave.members.iter().enumerate() {
+                recordings.push((wi, mi, idx));
+                let gslot = &g_slots[wi][mi];
+                let rslot = &relay_slots[wi][mi];
+                let pslot = &proj_slots[wi][mi];
+                let sslot = &sim_slots[wi][mi];
+                b.node(&[basis], move || {
+                    if fail == Some((step, idx)) {
+                        panic!("injected dataflow fault at layer {idx}");
+                    }
+                    let layer = rslot.lock().unwrap().take().expect("grad node relayed layer");
+                    let g = gslot.lock().unwrap().take().expect("grad node filled slot");
+                    let new_p = pslot.lock().unwrap().take().expect("basis node filled slot");
+                    *sslot.lock().unwrap() = refresh_layer(layer, cfg, new_p);
+                    layer_update(layer, cfg, ctr, &g);
+                });
+            }
+        }
+        b.run(pool)?;
+
+        // ---- join phase (serial): loss reduction in layer index order,
+        // scheduler recording in plan order — exactly the orders the
+        // sequential walk uses
+        let mut total = 0f32;
+        for slot in &loss_slots {
+            total += slot.lock().unwrap().expect("every chain recorded its loss");
+        }
+        for (wi, mi, idx) in recordings {
+            let sim = *sim_slots[wi][mi].lock().unwrap();
+            self.sched.record_refresh(idx, step, sim);
+        }
+        self.step += 1;
+        Ok(total / nl as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_pair(method: HostMethod) {
+        let cfg = HostStepConfig {
+            method,
+            rank: 2,
+            sched: SchedulerConfig { base_interval: 2, ..SchedulerConfig::default() },
+            seed: 9,
+            ..HostStepConfig::default()
+        };
+        let shapes = [(12, 8), (12, 8), (10, 6)];
+        let mut seq = HostDataflowTrainer::new(&shapes, cfg);
+        let mut df = HostDataflowTrainer::new(&shapes, cfg);
+        let pool = WorkerPool::with_steal_seed(4, 11);
+        let ctx = ParallelCtx::serial();
+        for s in 0..5 {
+            let a = seq.step_sequential(ctx);
+            let b = df.step_dataflow(ctx, &pool).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "loss diverged at step {s} ({method:?})");
+        }
+        assert_eq!(seq.export_weights(), df.export_weights(), "{method:?} weights diverged");
+    }
+
+    #[test]
+    fn dataflow_matches_sequential_smoke() {
+        run_pair(HostMethod::Full);
+        run_pair(HostMethod::LowRank);
+        run_pair(HostMethod::Galore);
+    }
+}

@@ -167,7 +167,7 @@ pub fn finetune(
     }
     let mut opt =
         optim::build_with_init(cfg.method, man, &cfg.cfg_name, &init, cfg.opts)?;
-    let mut rt = Runtime::new()?;
+    let rt = Runtime::new()?;
     let fwd = entry
         .artifacts
         .get(opt.fwd_artifact())
@@ -197,9 +197,9 @@ pub fn finetune(
                 println!("[ft {:>8}] step {step:>4} loss {loss:.4}", cfg.method.to_string());
             }
         }
-        let mut ctx = StepCtx { rt: &mut rt, man, step: step + 1, lr: cfg.lr };
-        opt.apply_update(&mut ctx, grads)?;
-        opt.on_step_end(&mut ctx)?;
+        let ctx = StepCtx { rt: &rt, man, step: step + 1, lr: cfg.lr };
+        opt.apply_update(&ctx, grads)?;
+        opt.on_step_end(&ctx)?;
     }
 
     // ---- accuracy eval: label-prefix scoring over exported params ----

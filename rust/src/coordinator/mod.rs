@@ -6,10 +6,15 @@
 //! * [`finetune`] — synthetic classification fine-tuning (the GLUE/MMLU
 //!   substitute): label-conditioned corpora, label-prefix scoring accuracy.
 //! * [`checkpoint`] — flat-f32 checkpoint save/load with JSON sidecar.
+//! * [`dataflow`] — host-side reference dataflow trainer: the step-graph
+//!   discipline of `Trainer::step` on in-process layers, so determinism /
+//!   fault-injection tests and benches run without an executing runtime.
 
 pub mod checkpoint;
+pub mod dataflow;
 pub mod finetune;
 pub mod trainer;
 
+pub use dataflow::{HostDataflowTrainer, HostMethod, HostStepConfig};
 pub use finetune::{finetune, FinetuneConfig, FinetuneResult};
-pub use trainer::{pretrain, TrainConfig, TrainResult};
+pub use trainer::{dataflow_default, pretrain, TrainConfig, TrainResult, DATAFLOW_ENV};

@@ -1,11 +1,32 @@
 //! Pre-training loop.
 //!
 //! One step = execute the method's fwd/bwd artifact, then hand the gradient
-//! list to the optimizer, which walks it tensor-by-tensor, running each
-//! tensor's fused update artifact and dropping the gradient immediately —
-//! the rust-side realization of the paper's fused-backward memory
-//! discipline (§3.5).  Subspace refreshes happen inside the galore-family
-//! optimizers under the lazy scheduler.
+//! list to the optimizer.  Two step paths share that structure:
+//!
+//! * **Sequential** (`Optimizer::apply_update`, the default): walk the
+//!   gradients tensor-by-tensor, running each tensor's fused update
+//!   artifact and dropping the gradient immediately — the rust-side
+//!   realization of the paper's fused-backward memory discipline (§3.5).
+//!
+//! * **Dataflow** (`TrainConfig::dataflow`, env `QGALORE_DATAFLOW`): the
+//!   same per-tensor work, factored into a dependency graph on the
+//!   work-stealing pool (`WorkerPool::run_graph`).  Each fp tensor and
+//!   each linear layer's project→Adam8→update chain is an independent
+//!   node owning that tensor's state; a due refresh becomes a basis node
+//!   (one shape-batched `left_subspace_batched` wave) fanning into its
+//!   member layers' update nodes; and the *next* batch is prefetched
+//!   (`Batcher::prefetch`) concurrently with the whole update graph.
+//!
+//! The determinism contract makes the two paths bitwise-identical for any
+//! worker count / steal seed / slab setting: per-chain state is disjoint
+//! (commuting updates), every shared decision (accumulator folds, due
+//! set via `SubspaceScheduler::plan_due`, group sketch seeds, SR noise
+//! seeds) is pre-assigned serially in sequential-walk order, and there is
+//! a single serial join point per step where cross-layer reductions
+//! (loss check, scheduler recording) happen in layer order.  Pinned by
+//! `tests/golden_trace.rs` and `tests/proptests.rs`; fault containment
+//! (a panicking chain surfaces in `step()`'s `Result`, the pool
+//! survives) by `tests/pool_stress.rs`.
 
 use anyhow::{anyhow, Result};
 
@@ -14,6 +35,22 @@ use crate::manifest::Manifest;
 use crate::optim::{self, BuildOptions, Method, Optimizer, StepCtx};
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::Stopwatch;
+
+/// Env var enabling the dataflow step path for `TrainConfig::default()`
+/// (`1/true/on` vs `0/false/off`; default off).
+pub const DATAFLOW_ENV: &str = "QGALORE_DATAFLOW";
+
+/// Default for `TrainConfig::dataflow`, from [`DATAFLOW_ENV`].
+pub fn dataflow_default() -> bool {
+    crate::util::env_parse(DATAFLOW_ENV, "1/true/on or 0/false/off", |s| {
+        match s.to_ascii_lowercase().as_str() {
+            "1" | "true" | "on" => Some(true),
+            "0" | "false" | "off" => Some(false),
+            _ => None,
+        }
+    })
+    .unwrap_or(false)
+}
 
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -30,6 +67,9 @@ pub struct TrainConfig {
     pub opts: BuildOptions,
     pub log_every: u64,
     pub quiet: bool,
+    /// run the update phase as a dependency graph on the work-stealing
+    /// pool, overlapped with next-batch prefetch (see the module docs)
+    pub dataflow: bool,
 }
 
 impl Default for TrainConfig {
@@ -47,6 +87,7 @@ impl Default for TrainConfig {
             opts: BuildOptions::default(),
             log_every: 25,
             quiet: false,
+            dataflow: dataflow_default(),
         }
     }
 }
@@ -169,9 +210,35 @@ impl<'m> Trainer<'m> {
             return Err(anyhow!("non-finite training loss at step {step}"));
         }
         let lr = lr_at(step, self.cfg.steps, self.cfg.warmup, self.cfg.lr_max);
-        let mut ctx = StepCtx { rt: &mut self.rt, man: self.man, step: step + 1, lr };
-        self.opt.apply_update(&mut ctx, grads)?;
-        self.opt.on_step_end(&mut ctx)?;
+        let ctx = StepCtx { rt: &self.rt, man: self.man, step: step + 1, lr };
+        if self.cfg.dataflow {
+            // Dataflow path: the whole update graph runs as one pool task
+            // while a sibling task prefetches the next batch, so tokenize/
+            // shuffle/copy overlaps the update chains.  A panic or Err in
+            // any chain resurfaces here as this step's Err; the pool
+            // itself survives (tests/pool_stress.rs).
+            let wpool = self
+                .cfg
+                .opts
+                .pool
+                .worker_pool()
+                .unwrap_or_else(crate::linalg::global_pool);
+            let opt = &mut self.opt;
+            let batcher = &mut self.train_batcher;
+            let mut upd: Option<Result<()>> = None;
+            {
+                let upd = &mut upd;
+                let ctx = &ctx;
+                wpool.run_scoped(vec![
+                    Box::new(move || *upd = Some(opt.apply_update_dataflow(ctx, grads, wpool))),
+                    Box::new(move || batcher.prefetch()),
+                ]);
+            }
+            upd.expect("update task ran")?;
+        } else {
+            self.opt.apply_update(&ctx, grads)?;
+        }
+        self.opt.on_step_end(&ctx)?;
         Ok(loss)
     }
 

@@ -25,6 +25,9 @@ pub struct Batcher {
     cursor: usize,
     epoch: u64,
     seed: u64,
+    /// batch materialized ahead of time by [`Batcher::prefetch`]; `next`
+    /// drains it first, so prefetching never changes the batch sequence
+    pending: Option<Batch>,
 }
 
 impl Batcher {
@@ -34,7 +37,8 @@ impl Batcher {
         // non-overlapping windows at stride `seq` (the +1 target overlaps)
         let windows: Vec<usize> =
             (0..n).map(|i| i * seq).filter(|&s| s + stride <= ids.len()).collect();
-        let mut b = Batcher { windows, ids, batch, seq, cursor: 0, epoch: 0, seed };
+        let mut b =
+            Batcher { windows, ids, batch, seq, cursor: 0, epoch: 0, seed, pending: None };
         b.reshuffle();
         b
     }
@@ -53,8 +57,28 @@ impl Batcher {
         self.cursor = 0;
     }
 
-    /// Next batch; wraps to a new shuffled epoch when exhausted.
+    /// Next batch; wraps to a new shuffled epoch when exhausted.  Returns
+    /// the prefetched batch first if one is pending, so interleaving
+    /// [`Batcher::prefetch`] anywhere between `next` calls leaves the
+    /// batch sequence unchanged.
     pub fn next(&mut self) -> Batch {
+        match self.pending.take() {
+            Some(b) => b,
+            None => self.compute_next(),
+        }
+    }
+
+    /// Materialize the next batch ahead of time (the dataflow trainer
+    /// calls this concurrently with the update graph).  Idempotent: a
+    /// second call before `next` is a no-op.
+    pub fn prefetch(&mut self) {
+        if self.pending.is_none() {
+            let b = self.compute_next();
+            self.pending = Some(b);
+        }
+    }
+
+    fn compute_next(&mut self) -> Batch {
         assert!(
             self.windows.len() >= self.batch,
             "need >= {} windows, have {}",
@@ -149,6 +173,28 @@ mod tests {
         }
         let mut c = Batcher::new(ids(2000), 4, 32, 4);
         assert_ne!(a.next().tokens, c.next().tokens);
+    }
+
+    #[test]
+    fn prefetch_does_not_change_the_batch_sequence() {
+        let mut plain = Batcher::new(ids(2000), 4, 32, 7);
+        let mut pre = Batcher::new(ids(2000), 4, 32, 7);
+        for i in 0..30 {
+            // interleave prefetch in several patterns, including across an
+            // epoch wrap and double-prefetch (idempotence)
+            if i % 3 == 0 {
+                pre.prefetch();
+            }
+            if i % 7 == 0 {
+                pre.prefetch();
+                pre.prefetch();
+            }
+            let a = plain.next();
+            let b = pre.next();
+            assert_eq!(a.tokens, b.tokens, "batch {i} diverged");
+            assert_eq!(a.targets, b.targets, "batch {i} diverged");
+        }
+        assert_eq!(plain.epoch(), pre.epoch());
     }
 
     #[test]

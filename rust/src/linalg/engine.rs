@@ -411,6 +411,13 @@ impl ParallelCtx {
         ParallelCtx { slabs_per_worker: slabs.clamp(1, MAX_SLABS_PER_WORKER), ..self }
     }
 
+    /// The underlying pool handle regardless of thread budget — the
+    /// dataflow trainer schedules its step graph here even when the
+    /// linalg budget is serial (ungated, unlike the private `pool()`).
+    pub fn worker_pool(&self) -> Option<&'static WorkerPool> {
+        self.pool
+    }
+
     /// The pool that should execute a parallel call, if any.
     fn pool(&self) -> Option<&'static WorkerPool> {
         if self.threads <= 1 {

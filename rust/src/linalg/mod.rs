@@ -31,7 +31,7 @@ pub use engine::{
     simd_kernel_available, KernelPath, ParallelCtx, DEFAULT_SLABS_PER_WORKER, KERNEL_ENV,
     MAX_SLABS_PER_WORKER, SLABS_ENV, THREADS_ENV,
 };
-pub use pool::{global_pool, PoolStats, WorkerPool, STEAL_SEED_ENV};
+pub use pool::{global_pool, GraphNode, PoolStats, WorkerPool, STEAL_SEED_ENV};
 
 use crate::util::Pcg32;
 

@@ -532,6 +532,43 @@ impl Latch {
     }
 }
 
+/// One node of a [`WorkerPool::run_graph`] dependency graph: a task plus
+/// the indices of the nodes that must complete before it may start.
+///
+/// Indices refer to positions in the `Vec<GraphNode>` handed to
+/// `run_graph`; forward references (depending on a node declared later)
+/// are allowed — only cycles are rejected.
+pub struct GraphNode<'scope> {
+    deps: Vec<usize>,
+    task: Box<dyn FnOnce() + Send + 'scope>,
+}
+
+impl<'scope> GraphNode<'scope> {
+    pub fn new(deps: Vec<usize>, task: impl FnOnce() + Send + 'scope) -> Self {
+        GraphNode { deps, task: Box::new(task) }
+    }
+}
+
+/// Shared state of one in-flight `run_graph` submission.  Nodes whose
+/// dependencies are not yet met park their (wrapped, `'static`-erased)
+/// task in `slots`; the LAST finishing dependency takes it out and
+/// enqueues it, so a node enters the deques exactly once and only when
+/// runnable.
+struct GraphRun {
+    shared: Arc<Shared>,
+    latch: Latch,
+    /// First-panic fail-fast flag: once set, nodes that have not started
+    /// yet skip their payload (but still complete and still release their
+    /// successors, so the latch always opens and nothing leaks).
+    abort: AtomicBool,
+    /// Unmet-dependency counts, one per node.
+    remaining: Vec<AtomicUsize>,
+    /// Successor adjacency, one list per node.
+    succs: Vec<Vec<usize>>,
+    /// Parked wrapped tasks awaiting their last dependency.
+    slots: Vec<Mutex<Option<Task>>>,
+}
+
 /// Pop one task from the stealing pool's injector.  A pool worker
 /// (`home = Some`) additionally migrates a bounded share of what remains
 /// onto its own deque — owner pushes, wait-free — so siblings pick the
@@ -863,6 +900,172 @@ impl WorkerPool {
             }
         }
         let payload = latch.panic.lock().unwrap().take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Execute a dependency graph of tasks and return once every node has
+    /// completed.  A node starts only after all of its `deps` have
+    /// finished; independent nodes run concurrently under the pool's
+    /// normal stealing discipline, and a finishing node enqueues each
+    /// successor it was the last unmet dependency of (onto its own deque
+    /// when the finisher is a pool worker — the chain stays hot).
+    ///
+    /// This is the execution substrate of the dataflow training step: each
+    /// layer's project→Adam→update chain is a path in the graph, refresh
+    /// waves are nodes that fan into their member layers' chains, and the
+    /// submitter's return is the step's single join point.
+    ///
+    /// Semantics mirror [`WorkerPool::run_scoped`]:
+    ///
+    /// * The submitting thread helps while it waits (nested submission
+    ///   from inside a pool task cannot deadlock), and node tasks may
+    ///   themselves submit nested `run_scoped`/`par_map` batches.
+    /// * The first panicking node's payload is re-thrown here after the
+    ///   whole graph has settled.  Nodes that have not started when the
+    ///   panic lands skip their payload (fail-fast) but still complete and
+    ///   release their successors, so the latch opens, the pool survives,
+    ///   and no parked task leaks.  Nodes already running elsewhere are
+    ///   unaffected.
+    ///
+    /// Cycles and out-of-range dependency indices panic BEFORE anything is
+    /// submitted (the graph is validated with a Kahn pass up front).
+    ///
+    /// SAFETY invariant: same as `run_scoped` — tasks may borrow `'scope`
+    /// data because this function blocks until the latch confirms every
+    /// node (including parked ones, which always drain) has completed.
+    pub fn run_graph<'scope>(&self, nodes: Vec<GraphNode<'scope>>) {
+        let n = nodes.len();
+        if n == 0 {
+            return;
+        }
+        let mut deps = Vec::with_capacity(n);
+        let mut tasks = Vec::with_capacity(n);
+        for node in nodes {
+            deps.push(node.deps);
+            tasks.push(node.task);
+        }
+        // Validate + build adjacency before any submission, so a malformed
+        // graph cannot strand half-submitted work in the deques.
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indeg = vec![0usize; n];
+        for (i, ds) in deps.iter().enumerate() {
+            for &d in ds {
+                assert!(d < n, "graph node {i} depends on node {d}, but there are only {n} nodes");
+                succs[d].push(i);
+                indeg[i] += 1;
+            }
+        }
+        {
+            // Kahn pass: every node must be schedulable
+            let mut left = indeg.clone();
+            let mut ready: Vec<usize> = (0..n).filter(|&i| left[i] == 0).collect();
+            let mut seen = 0usize;
+            while let Some(i) = ready.pop() {
+                seen += 1;
+                for &s in &succs[i] {
+                    left[s] -= 1;
+                    if left[s] == 0 {
+                        ready.push(s);
+                    }
+                }
+            }
+            assert_eq!(
+                seen, n,
+                "dependency graph has a cycle (only {seen} of {n} nodes schedulable)"
+            );
+        }
+        if n == 1 {
+            // a single node has nothing to overlap with; run inline
+            // (panics propagate naturally, like run_scoped's fast path)
+            (tasks.into_iter().next().unwrap())();
+            return;
+        }
+        let run = Arc::new(GraphRun {
+            shared: Arc::clone(&self.shared),
+            latch: Latch::new(n),
+            abort: AtomicBool::new(false),
+            remaining: indeg.iter().map(|&d| AtomicUsize::new(d)).collect(),
+            succs,
+            slots: (0..n).map(|_| Mutex::new(None)).collect(),
+        });
+        for (i, task) in tasks.into_iter().enumerate() {
+            let r = Arc::clone(&run);
+            let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                if !r.abort.load(Ordering::Acquire) {
+                    if let Err(payload) =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(task))
+                    {
+                        r.abort.store(true, Ordering::Release);
+                        let mut slot = r.latch.panic.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(payload);
+                        }
+                    }
+                }
+                // Release successors: the fetch_sub observing 1 is the
+                // unique last dependency, so exactly one finisher takes
+                // each parked task out of its slot.
+                let home = HOME.with(|h| {
+                    let (pool, id) = h.get();
+                    (pool == Arc::as_ptr(&r.shared) as usize).then_some(id)
+                });
+                let mut unlocked: Vec<Task> = Vec::new();
+                for &s in &r.succs[i] {
+                    if r.remaining[s].fetch_sub(1, Ordering::AcqRel) == 1 {
+                        if let Some(t) = r.slots[s].lock().unwrap().take() {
+                            unlocked.push(t);
+                        }
+                    }
+                }
+                if !unlocked.is_empty() {
+                    r.shared.enqueue(unlocked, home);
+                }
+                r.latch.complete();
+            });
+            // SAFETY: see the invariant above — the latch below holds this
+            // call until every node (parked or enqueued) has run, so the
+            // 'scope borrows stay live for every execution.
+            let wrapped =
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Task>(wrapped) };
+            *run.slots[i].lock().unwrap() = Some(wrapped);
+        }
+        // Submit the roots (nodes with no dependencies) as one batch; every
+        // other node is released by its last finishing dependency.
+        let home = HOME.with(|h| {
+            let (pool, id) = h.get();
+            (pool == Arc::as_ptr(&self.shared) as usize).then_some(id)
+        });
+        let mut roots: Vec<Task> = Vec::new();
+        for (i, &d) in indeg.iter().enumerate() {
+            if d == 0 {
+                if let Some(t) = run.slots[i].lock().unwrap().take() {
+                    roots.push(t);
+                }
+            }
+        }
+        self.shared.enqueue(roots, home);
+        // Help while waiting, exactly like run_scoped (distinct helper
+        // stream range so graph submitters never collide with scoped ones).
+        static GRAPH_HELPER_STREAM: AtomicU64 = AtomicU64::new(1 << 33);
+        let mut rng = Pcg32::new(
+            self.shared.steal_seed,
+            GRAPH_HELPER_STREAM.fetch_add(1, Ordering::Relaxed),
+        );
+        loop {
+            if run.latch.is_done() {
+                break;
+            }
+            match find_task(&self.shared, home, &mut rng) {
+                Some(t) => t(),
+                None => {
+                    run.latch.wait();
+                    break;
+                }
+            }
+        }
+        let payload = run.latch.panic.lock().unwrap().take();
         if let Some(p) = payload {
             std::panic::resume_unwind(p);
         }
@@ -1510,5 +1713,241 @@ mod tests {
             }
             assert_eq!(counter.load(Ordering::Relaxed), 175, "seed {seed:#x}");
         }
+    }
+
+    // -----------------------------------------------------------------------
+    // run_graph: the dependency-graph executor under the dataflow step.
+    // -----------------------------------------------------------------------
+
+    /// The three pool disciplines at a given size — graph execution must
+    /// behave identically on all of them.
+    fn graph_pools(workers: usize) -> Vec<WorkerPool> {
+        vec![
+            WorkerPool::with_steal_seed(workers, 42),
+            WorkerPool::new_fifo(workers),
+            WorkerPool::new_mutex_steal(workers),
+        ]
+    }
+
+    #[test]
+    fn graph_chain_runs_in_dependency_order() {
+        for workers in [1usize, 4, 16] {
+            for pool in graph_pools(workers) {
+                let log = Mutex::new(Vec::new());
+                let nodes = vec![
+                    GraphNode::new(vec![], || log.lock().unwrap().push('a')),
+                    GraphNode::new(vec![0], || log.lock().unwrap().push('b')),
+                    GraphNode::new(vec![1], || log.lock().unwrap().push('c')),
+                ];
+                pool.run_graph(nodes);
+                assert_eq!(
+                    *log.lock().unwrap(),
+                    vec!['a', 'b', 'c'],
+                    "chain order violated ({} workers, {})",
+                    workers,
+                    pool.kind()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn graph_diamond_joins_after_both_branches() {
+        // a -> (b, c) -> d, with d also a *forward* reference target:
+        // declaration order is deliberately not topological order
+        for workers in [1usize, 4, 16] {
+            let pool = WorkerPool::with_steal_seed(workers, 7);
+            for _ in 0..20 {
+                let flags: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+                let join_saw = AtomicUsize::new(0);
+                let nodes = vec![
+                    // node 0 = the JOIN, depending on nodes declared later
+                    GraphNode::new(vec![2, 3], || {
+                        join_saw.store(
+                            flags[1].load(Ordering::SeqCst)
+                                + flags[2].load(Ordering::SeqCst)
+                                + flags[3].load(Ordering::SeqCst),
+                            Ordering::SeqCst,
+                        );
+                        flags[0].store(1, Ordering::SeqCst);
+                    }),
+                    // node 1 = the root
+                    GraphNode::new(vec![], || {
+                        flags[1].store(1, Ordering::SeqCst);
+                    }),
+                    // nodes 2, 3 = the parallel branches
+                    GraphNode::new(vec![1], || {
+                        assert_eq!(flags[1].load(Ordering::SeqCst), 1, "branch ran before root");
+                        flags[2].store(1, Ordering::SeqCst);
+                    }),
+                    GraphNode::new(vec![1], || {
+                        assert_eq!(flags[1].load(Ordering::SeqCst), 1, "branch ran before root");
+                        flags[3].store(1, Ordering::SeqCst);
+                    }),
+                ];
+                pool.run_graph(nodes);
+                assert_eq!(join_saw.load(Ordering::SeqCst), 3, "join ran before both branches");
+                assert!(flags.iter().all(|f| f.load(Ordering::SeqCst) == 1), "a node was lost");
+            }
+        }
+    }
+
+    #[test]
+    fn graph_wide_fanout_runs_every_node() {
+        let pool = WorkerPool::with_steal_seed(8, 3);
+        let counter = AtomicUsize::new(0);
+        // 64 roots, each with a dependent, plus one join over all dependents
+        let mut nodes: Vec<GraphNode<'_>> = Vec::new();
+        for _ in 0..64 {
+            nodes.push(GraphNode::new(vec![], || {
+                counter.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        for i in 0..64 {
+            nodes.push(GraphNode::new(vec![i], || {
+                counter.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        nodes.push(GraphNode::new((64..128).collect(), || {
+            counter.fetch_add(1000, Ordering::Relaxed);
+        }));
+        pool.run_graph(nodes);
+        assert_eq!(counter.load(Ordering::Relaxed), 128 + 1000);
+    }
+
+    #[test]
+    fn graph_panic_resurfaces_skips_descendants_and_pool_survives() {
+        let pool = WorkerPool::with_steal_seed(4, 11);
+        let ran_after = AtomicUsize::new(0);
+        let sibling_ran = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let nodes = vec![
+                GraphNode::new(vec![], || panic!("graph boom")),
+                // descendant of the panicking node: must be skipped
+                GraphNode::new(vec![0], || {
+                    ran_after.fetch_add(1, Ordering::Relaxed);
+                }),
+                GraphNode::new(vec![1], || {
+                    ran_after.fetch_add(1, Ordering::Relaxed);
+                }),
+                // independent root: may or may not run its payload before
+                // the abort flag lands; either way it must not wedge
+                GraphNode::new(vec![], || {
+                    sibling_ran.fetch_add(1, Ordering::Relaxed);
+                }),
+            ];
+            pool.run_graph(nodes);
+        }));
+        let payload = result.expect_err("graph panic must resurface in the submitter");
+        assert_eq!(
+            payload.downcast_ref::<&str>().copied().unwrap_or(""),
+            "graph boom",
+            "panic payload mangled"
+        );
+        assert_eq!(
+            ran_after.load(Ordering::Relaxed),
+            0,
+            "descendants of a panicked node must be skipped"
+        );
+        // the pool survives: a fresh graph on the same pool runs clean
+        let counter = AtomicUsize::new(0);
+        let nodes = vec![
+            GraphNode::new(vec![], || {
+                counter.fetch_add(1, Ordering::Relaxed);
+            }),
+            GraphNode::new(vec![0], || {
+                counter.fetch_add(10, Ordering::Relaxed);
+            }),
+        ];
+        pool.run_graph(nodes);
+        assert_eq!(counter.load(Ordering::Relaxed), 11, "pool wedged after a graph panic");
+        assert!(wait_for(|| pool.sleepers() == 4), "workers failed to quiesce after panic");
+    }
+
+    #[test]
+    fn graph_cycle_is_rejected_before_submission() {
+        let pool = WorkerPool::with_steal_seed(2, 9);
+        let ran = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let nodes = vec![
+                GraphNode::new(vec![1], || {
+                    ran.fetch_add(1, Ordering::Relaxed);
+                }),
+                GraphNode::new(vec![0], || {
+                    ran.fetch_add(1, Ordering::Relaxed);
+                }),
+            ];
+            pool.run_graph(nodes);
+        }));
+        let payload = result.expect_err("cyclic graph must be rejected");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("cycle"), "wrong rejection message: {msg}");
+        assert_eq!(ran.load(Ordering::Relaxed), 0, "cycle rejection must precede submission");
+        // nothing was stranded in the deques
+        let counter = AtomicUsize::new(0);
+        pool.run_graph(vec![
+            GraphNode::new(vec![], || {
+                counter.fetch_add(1, Ordering::Relaxed);
+            }),
+            GraphNode::new(vec![0], || {
+                counter.fetch_add(1, Ordering::Relaxed);
+            }),
+        ]);
+        assert_eq!(counter.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn graph_nodes_may_submit_nested_scoped_batches() {
+        // a graph node fanning out its own run_scoped batch on the SAME
+        // pool — the shape of a refresh-wave node submitting its matmuls
+        let pool = WorkerPool::with_steal_seed(2, 13);
+        let counter = AtomicUsize::new(0);
+        let nodes = vec![
+            GraphNode::new(vec![], || {
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..6)
+                    .map(|_| {
+                        Box::new(|| {
+                            counter.fetch_add(1, Ordering::Relaxed);
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_scoped(tasks);
+            }),
+            GraphNode::new(vec![0], || {
+                counter.fetch_add(100, Ordering::Relaxed);
+            }),
+        ];
+        pool.run_graph(nodes);
+        assert_eq!(counter.load(Ordering::Relaxed), 106);
+    }
+
+    #[test]
+    fn graph_from_inside_a_pool_task_does_not_deadlock() {
+        // nested graph submission: a run_scoped task on the pool submits a
+        // run_graph to the same pool (the trainer overlaps the update graph
+        // with batch prefetch exactly this way)
+        let pool = WorkerPool::with_steal_seed(2, 17);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+            .map(|_| {
+                Box::new(|| {
+                    let nodes = vec![
+                        GraphNode::new(vec![], || {
+                            counter.fetch_add(1, Ordering::Relaxed);
+                        }),
+                        GraphNode::new(vec![0], || {
+                            counter.fetch_add(10, Ordering::Relaxed);
+                        }),
+                    ];
+                    pool.run_graph(nodes);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 22);
     }
 }

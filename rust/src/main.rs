@@ -28,6 +28,7 @@ COMMANDS
   train      pre-train from scratch
              --method M --config C --steps N --lr F --seed N --interval N
              --proj-bits N --no-adaptive --no-sr --save PATH
+             --dataflow (pipelined step graph; also QGALORE_DATAFLOW=1)
   finetune   fine-tune a checkpoint on a synthetic classification task
              --method M --config C --checkpoint PATH --steps N --labels N
              --task-salt N --seed N
@@ -54,7 +55,7 @@ fn main() -> Result<()> {
         return Ok(());
     }
     let cmd = argv[0].clone();
-    let args = Args::parse(&argv[1..], &["no-adaptive", "no-sr", "verbose"])?;
+    let args = Args::parse(&argv[1..], &["no-adaptive", "no-sr", "verbose", "dataflow"])?;
     let artifacts = args.str_or("artifacts", "artifacts");
     let threads = args.u64_or("threads", 0)?;
     if threads > 0 {
@@ -95,6 +96,7 @@ fn main() -> Result<()> {
                 },
                 log_every: (steps / 20).max(1),
                 quiet: false,
+                dataflow: args.bool("dataflow") || qgalore::coordinator::dataflow_default(),
             };
             let save = args.flag("save").map(|s| s.to_string());
             args.reject_unknown()?;

@@ -1,0 +1,165 @@
+//! Step-graph construction for the dataflow training step.
+//!
+//! [`StepGraphBuilder`] is a thin, fallibility-aware layer over
+//! [`WorkerPool::run_graph`]: optimizer code describes one step as nodes
+//! (per-tensor Adam calls, per-layer project→Adam8→update chains, refresh
+//! waves) wired by [`NodeId`] dependencies, and [`StepGraphBuilder::run`]
+//! executes the graph and converts any node failure — an artifact `Err` or
+//! a panic — into the step's single `anyhow::Result`.  That conversion is
+//! what lets a panic inside one layer's update chain resurface in
+//! `Trainer::step`'s `Result` while the pool survives
+//! (`tests/pool_stress.rs`).
+//!
+//! Determinism contract (shared by every `apply_update_dataflow`
+//! implementation and pinned by `tests/golden_trace.rs` /
+//! `tests/proptests.rs`): nodes may race, so everything a node touches
+//! must be either (a) state owned by exactly one chain — per-layer
+//! weights, moments, projections — so concurrent updates commute, or
+//! (b) pre-assigned during serial planning — SR noise seeds, sketch
+//! seeds — in the exact order the sequential walk would have consumed it.
+//! Cross-layer reductions (loss, scheduler recording) happen once, after
+//! the graph joins, in layer order.
+
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use anyhow::{anyhow, Error, Result};
+
+use crate::linalg::{GraphNode, WorkerPool};
+
+/// Handle to a node added to a [`StepGraphBuilder`]; used to declare
+/// dependencies of later nodes.  Only valid for the builder that issued it.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeId(usize);
+
+/// Builder for one training step's dependency graph.
+#[derive(Default)]
+pub struct StepGraphBuilder<'scope> {
+    nodes: Vec<GraphNode<'scope>>,
+}
+
+impl<'scope> StepGraphBuilder<'scope> {
+    pub fn new() -> Self {
+        StepGraphBuilder { nodes: Vec::new() }
+    }
+
+    /// Add an infallible node that starts after every node in `deps`.
+    pub fn node(&mut self, deps: &[NodeId], task: impl FnOnce() + Send + 'scope) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        self.nodes.push(GraphNode::new(deps.iter().map(|d| d.0).collect(), task));
+        id
+    }
+
+    /// Add a node whose task can fail.  An `Err` is carried to
+    /// [`StepGraphBuilder::run`]'s return value (via a typed panic the
+    /// graph executor's first-panic latch transports), aborting
+    /// not-yet-started nodes.
+    pub fn fallible(
+        &mut self,
+        deps: &[NodeId],
+        task: impl FnOnce() -> Result<()> + Send + 'scope,
+    ) -> NodeId {
+        self.node(deps, move || {
+            if let Err(e) = task() {
+                std::panic::panic_any(e);
+            }
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Execute the graph on `pool`; block until every node has settled.
+    /// The first node failure (Err or panic) becomes this call's `Err`.
+    pub fn run(self, pool: &WorkerPool) -> Result<()> {
+        let nodes = self.nodes;
+        match catch_unwind(AssertUnwindSafe(|| pool.run_graph(nodes))) {
+            Ok(()) => Ok(()),
+            Err(payload) => Err(payload_to_error(payload)),
+        }
+    }
+}
+
+/// Downcast a graph panic payload back into the step error: a `fallible`
+/// node's `anyhow::Error` passes through unchanged; genuine panics keep
+/// their message.
+fn payload_to_error(payload: Box<dyn Any + Send>) -> Error {
+    match payload.downcast::<Error>() {
+        Ok(e) => *e,
+        Err(payload) => match payload.downcast::<String>() {
+            Ok(s) => anyhow!("step task panicked: {s}"),
+            Err(payload) => match payload.downcast::<&'static str>() {
+                Ok(s) => anyhow!("step task panicked: {s}"),
+                Err(_) => anyhow!("step task panicked"),
+            },
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    #[test]
+    fn builder_wires_dependencies() {
+        let pool = WorkerPool::with_steal_seed(4, 1);
+        let log = Mutex::new(Vec::new());
+        let mut b = StepGraphBuilder::new();
+        let a = b.node(&[], || log.lock().unwrap().push(1));
+        let c = b.node(&[a], || log.lock().unwrap().push(2));
+        b.node(&[c], || log.lock().unwrap().push(3));
+        assert_eq!(b.len(), 3);
+        b.run(&pool).unwrap();
+        assert_eq!(*log.lock().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn fallible_err_becomes_run_err_and_skips_dependents() {
+        let pool = WorkerPool::with_steal_seed(4, 2);
+        let ran = AtomicUsize::new(0);
+        let mut b = StepGraphBuilder::new();
+        let bad = b.fallible(&[], || Err(anyhow!("layer 3 artifact rejected operand")));
+        b.node(&[bad], || {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        let err = b.run(&pool).expect_err("node Err must surface");
+        assert!(
+            err.to_string().contains("layer 3 artifact rejected operand"),
+            "error lost its message: {err}"
+        );
+        assert_eq!(ran.load(Ordering::Relaxed), 0, "dependent of failed node must not run");
+    }
+
+    #[test]
+    fn panic_payload_becomes_run_err() {
+        let pool = WorkerPool::with_steal_seed(2, 3);
+        let mut b = StepGraphBuilder::new();
+        b.node(&[], || panic!("chain blew up at step 7"));
+        b.node(&[], || {});
+        let err = b.run(&pool).expect_err("panic must surface as Err");
+        assert!(err.to_string().contains("chain blew up at step 7"), "got: {err}");
+        // the pool survives for the next step
+        let mut b2 = StepGraphBuilder::new();
+        let done = AtomicUsize::new(0);
+        b2.node(&[], || {
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+        b2.run(&pool).unwrap();
+        assert_eq!(done.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn empty_graph_is_ok() {
+        let pool = WorkerPool::with_steal_seed(1, 4);
+        let b = StepGraphBuilder::new();
+        assert!(b.is_empty());
+        b.run(&pool).unwrap();
+    }
+}

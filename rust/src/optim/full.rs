@@ -3,14 +3,14 @@
 
 use anyhow::Result;
 
-use crate::linalg::{engine, par_map, ParallelCtx};
+use crate::linalg::{engine, par_map, ParallelCtx, WorkerPool};
 use crate::manifest::ConfigEntry;
 use crate::quant::Adam8State;
 use crate::runtime::HostTensor;
 
 use super::{
-    run_adam_8bit, run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer,
-    StepCtx,
+    run_adam_8bit, run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer, StepCtx,
+    StepGraphBuilder,
 };
 
 /// Marshal the fp param tensors as artifact operands, cloning buffers in
@@ -60,7 +60,7 @@ impl Optimizer for FullAdam {
         clone_operands(self.pool, &self.fp, &self.lin)
     }
 
-    fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()> {
+    fn apply_update(&mut self, ctx: &StepCtx, grads: Vec<HostTensor>) -> Result<()> {
         let n_fp = self.fp.len();
         assert_eq!(grads.len(), n_fp + self.lin.len());
         for (i, g) in grads.into_iter().enumerate() {
@@ -73,6 +73,29 @@ impl Optimizer for FullAdam {
             run_adam_fp(ctx, w, st, &g)?;
         }
         Ok(())
+    }
+
+    fn apply_update_dataflow(
+        &mut self,
+        ctx: &StepCtx,
+        grads: Vec<HostTensor>,
+        pool: &WorkerPool,
+    ) -> Result<()> {
+        // Every tensor's Adam step owns disjoint (w, m, v) state, so the
+        // whole update is one flat layer of independent graph nodes.
+        let n_fp = self.fp.len();
+        assert_eq!(grads.len(), n_fp + self.lin.len());
+        let mut flat = Vec::with_capacity(grads.len());
+        for g in grads {
+            flat.push(g.into_f32()?);
+        }
+        let cx = *ctx;
+        let mut b = StepGraphBuilder::new();
+        let tensors = self.fp.iter_mut().chain(self.lin.iter_mut());
+        for ((w, st), g) in tensors.zip(self.states.iter_mut()).zip(flat) {
+            b.fallible(&[], move || run_adam_fp(&cx, w, st, &g));
+        }
+        b.run(pool)
     }
 
     fn live_bytes(&self) -> u64 {
@@ -131,7 +154,7 @@ impl Optimizer for Adam8bit {
         clone_operands(self.pool, &self.fp, &self.lin)
     }
 
-    fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()> {
+    fn apply_update(&mut self, ctx: &StepCtx, grads: Vec<HostTensor>) -> Result<()> {
         let n_fp = self.fp.len();
         for (i, g) in grads.into_iter().enumerate() {
             let g = g.into_f32()?;
@@ -143,6 +166,26 @@ impl Optimizer for Adam8bit {
             run_adam_8bit(ctx, w, st, &g)?;
         }
         Ok(())
+    }
+
+    fn apply_update_dataflow(
+        &mut self,
+        ctx: &StepCtx,
+        grads: Vec<HostTensor>,
+        pool: &WorkerPool,
+    ) -> Result<()> {
+        // Same flat fan-out as `FullAdam`: disjoint per-tensor 8-bit state.
+        let mut flat = Vec::with_capacity(grads.len());
+        for g in grads {
+            flat.push(g.into_f32()?);
+        }
+        let cx = *ctx;
+        let mut b = StepGraphBuilder::new();
+        let tensors = self.fp.iter_mut().chain(self.lin.iter_mut());
+        for ((w, st), g) in tensors.zip(self.states.iter_mut()).zip(flat) {
+            b.fallible(&[], move || run_adam_8bit(&cx, w, st, &g));
+        }
+        b.run(pool)
     }
 
     fn live_bytes(&self) -> u64 {

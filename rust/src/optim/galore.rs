@@ -21,9 +21,13 @@
 //! the fused `*_update_{m}x{n}_r{r}` HLO artifacts built from the L1
 //! Pallas kernels.
 
+use std::sync::Mutex;
+
 use anyhow::{anyhow, Result};
 
-use crate::linalg::{left_subspace_batched, par_map, subspace_overlap_with, Mat, ParallelCtx};
+use crate::linalg::{
+    left_subspace_batched, par_map, subspace_overlap_with, Mat, ParallelCtx, WorkerPool,
+};
 use crate::manifest::ConfigEntry;
 use crate::quant::{self, Adam8State, Quant4Tensor, QuantTensor};
 use crate::runtime::HostTensor;
@@ -31,8 +35,8 @@ use crate::scheduler::{SchedulerConfig, SubspaceScheduler};
 use crate::util::Pcg32;
 
 use super::{
-    run_adam_8bit, run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer,
-    StepCtx,
+    run_adam_8bit, run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer, StepCtx,
+    StepGraphBuilder,
 };
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -183,14 +187,55 @@ impl Galore {
         }
     }
 
-    fn update_artifact(&self, m: usize, n: usize) -> String {
-        let prefix = match self.kind {
-            GaloreKind::Fp => "galore_update",
-            GaloreKind::Bit8 => "galore8bit_update",
-            GaloreKind::Quantized if self.use_sr => "qgalore_update",
-            GaloreKind::Quantized => "qgalore_rtn_update",
-        };
-        format!("{prefix}_{m}x{n}_r{}", self.rank)
+    /// The immutable per-layer task parameters, detached from `&self` so
+    /// per-layer step-graph nodes can each carry a copy.
+    fn task_cfg(&self) -> LayerTaskCfg {
+        LayerTaskCfg {
+            kind: self.kind,
+            rank: self.rank,
+            proj_bits: self.proj_bits,
+            use_sr: self.use_sr,
+            pool: self.pool,
+        }
+    }
+
+    /// Draw the next stochastic-rounding noise seed, iff this optimizer
+    /// consumes one per layer update.  Both step paths draw through this
+    /// single counter — the sequential walk at update time, the dataflow
+    /// planner up front in the same order — so the noise stream is
+    /// identical between them.
+    fn next_sr_seed(&mut self) -> Option<i32> {
+        if self.kind == GaloreKind::Quantized && self.use_sr {
+            self.sr_seed = self.sr_seed.wrapping_add(1);
+            Some(self.sr_seed)
+        } else {
+            None
+        }
+    }
+
+    /// Group due layers by (m, n) in first-due order; each new group draws
+    /// ONE sketch seed from the optimizer RNG.  Serial by construction, so
+    /// the grouping and the seed stream are independent of worker count and
+    /// shared verbatim by the sequential and dataflow paths.
+    #[allow(clippy::type_complexity)]
+    fn group_due_layers(
+        &mut self,
+        due: Vec<(usize, Vec<f32>)>,
+    ) -> Vec<((usize, usize), u64, Vec<(usize, Vec<f32>)>)> {
+        let mut groups: Vec<((usize, usize), u64, Vec<(usize, Vec<f32>)>)> = Vec::new();
+        for (idx, g) in due {
+            let key = (self.layers[idx].m, self.layers[idx].n);
+            let gi = match groups.iter().position(|(k, _, _)| *k == key) {
+                Some(gi) => gi,
+                None => {
+                    let seed = self.rng.next_u64();
+                    groups.push((key, seed, Vec::new()));
+                    groups.len() - 1
+                }
+            };
+            groups[gi].2.push((idx, g));
+        }
+        groups
     }
 
     /// Step 1 of a layer update: fold `g` into the pre-refresh gradient
@@ -223,189 +268,219 @@ impl Galore {
         }
     }
 
-    /// Rotation-invariant overlap ||P_old^T P_new||_F^2 / r in [0, 1] with
-    /// the layer's outgoing projection (None before the first refresh) —
-    /// the quantity the paper's "cosine similarity between adjacent
-    /// projection matrices" measures modulo the within-subspace rotation
-    /// that randomized solvers leave free. INT4-stored projections go
-    /// through the fused `dequant4_t_matmul`, so the old basis is never
-    /// materialized in fp32.
-    fn overlap_with_old(&self, idx: usize, new_p: &Mat, pool: ParallelCtx) -> Option<f32> {
-        let layer = &self.layers[idx];
-        if let Some(p) = &layer.p_fp {
-            return Some(subspace_overlap_with(p, new_p, pool));
-        }
-        let overlap = |prod: Mat, r_old: usize| {
-            let f = prod.frobenius();
-            f * f / r_old.min(new_p.cols).max(1) as f32
-        };
-        if let Some(q) = &layer.p_q4 {
-            let r_old = q.numel() / layer.m;
-            return Some(overlap(
-                quant::dequant4_t_matmul(q, layer.m, r_old, new_p, pool),
-                r_old,
-            ));
-        }
-        // generic-bit ablation storage: same fused discipline, i8 codes
-        layer.p_q.as_ref().map(|q| {
-            let r_old = q.numel() / layer.m;
-            overlap(quant::dequant8_t_matmul(q, layer.m, r_old, new_p, pool), r_old)
-        })
-    }
+}
 
-    /// Store a freshly computed basis in the layer's storage format.
-    fn store_projection(&mut self, idx: usize, new_p: Mat) {
-        let layer = &mut self.layers[idx];
-        match self.kind {
-            GaloreKind::Fp | GaloreKind::Bit8 => layer.p_fp = Some(new_p),
-            GaloreKind::Quantized => {
-                if self.proj_bits >= 16 {
-                    layer.p_fp = Some(new_p);
-                } else if self.proj_bits == 4 {
-                    layer.p_q4 = Some(quant::quantize4(&new_p.data));
-                } else {
-                    // Figure 3 ablation bit widths (2 / 8): stored PACKED
-                    // as a generic QuantTensor and applied through the
-                    // fused dequant paths, so `live_bytes` reports the
-                    // packed size the ablation measures — not an fp32 copy.
-                    layer.p_q = Some(quant::quantize(&new_p.data, self.proj_bits));
-                }
+/// Immutable parameters of a single layer-update task, `Copy` so every
+/// node of the step graph carries its own (no `&self` into the graph).
+#[derive(Clone, Copy)]
+struct LayerTaskCfg {
+    kind: GaloreKind,
+    rank: usize,
+    proj_bits: u32,
+    use_sr: bool,
+    pool: ParallelCtx,
+}
+
+fn update_artifact(cfg: LayerTaskCfg, m: usize, n: usize) -> String {
+    let prefix = match cfg.kind {
+        GaloreKind::Fp => "galore_update",
+        GaloreKind::Bit8 => "galore8bit_update",
+        GaloreKind::Quantized if cfg.use_sr => "qgalore_update",
+        GaloreKind::Quantized => "qgalore_rtn_update",
+    };
+    format!("{prefix}_{m}x{n}_r{}", cfg.rank)
+}
+
+/// Rotation-invariant overlap ||P_old^T P_new||_F^2 / r in [0, 1] with
+/// the layer's outgoing projection (None before the first refresh) —
+/// the quantity the paper's "cosine similarity between adjacent
+/// projection matrices" measures modulo the within-subspace rotation
+/// that randomized solvers leave free. INT4-stored projections go
+/// through the fused `dequant4_t_matmul`, so the old basis is never
+/// materialized in fp32.
+fn overlap_with_old(layer: &Layer, new_p: &Mat, pool: ParallelCtx) -> Option<f32> {
+    if let Some(p) = &layer.p_fp {
+        return Some(subspace_overlap_with(p, new_p, pool));
+    }
+    let overlap = |prod: Mat, r_old: usize| {
+        let f = prod.frobenius();
+        f * f / r_old.min(new_p.cols).max(1) as f32
+    };
+    if let Some(q) = &layer.p_q4 {
+        let r_old = q.numel() / layer.m;
+        return Some(overlap(
+            quant::dequant4_t_matmul(q, layer.m, r_old, new_p, pool),
+            r_old,
+        ));
+    }
+    // generic-bit ablation storage: same fused discipline, i8 codes
+    layer.p_q.as_ref().map(|q| {
+        let r_old = q.numel() / layer.m;
+        overlap(quant::dequant8_t_matmul(q, layer.m, r_old, new_p, pool), r_old)
+    })
+}
+
+/// Store a freshly computed basis in the layer's storage format.
+fn store_projection(layer: &mut Layer, cfg: LayerTaskCfg, new_p: Mat) {
+    match cfg.kind {
+        GaloreKind::Fp | GaloreKind::Bit8 => layer.p_fp = Some(new_p),
+        GaloreKind::Quantized => {
+            if cfg.proj_bits >= 16 {
+                layer.p_fp = Some(new_p);
+            } else if cfg.proj_bits == 4 {
+                layer.p_q4 = Some(quant::quantize4(&new_p.data));
+            } else {
+                // Figure 3 ablation bit widths (2 / 8): stored PACKED
+                // as a generic QuantTensor and applied through the
+                // fused dequant paths, so `live_bytes` reports the
+                // packed size the ablation measures — not an fp32 copy.
+                layer.p_q = Some(quant::quantize(&new_p.data, cfg.proj_bits));
             }
         }
     }
+}
 
-    /// Step 2 of a layer update: the fused update step (hot path, HLO
-    /// artifact). The projection must already be current.
-    fn run_layer_update(&mut self, ctx: &mut StepCtx, idx: usize, g: Vec<f32>) -> Result<()> {
-        let (m, n) = (self.layers[idx].m, self.layers[idx].n);
-        let art = ctx.man.update(&self.update_artifact(m, n))?.clone();
-        let c = ctx.corrections();
-        let lr = ctx.lr_operand();
-        let layer = &mut self.layers[idx];
-        match self.kind {
-            GaloreKind::Fp => {
-                let p = layer.p_fp.as_ref().expect("refreshed above");
-                let st = layer.st_fp.as_mut().unwrap();
-                let w = layer.w_fp.as_mut().unwrap();
-                let outs = ctx.rt.execute(
-                    &art,
-                    &[
-                        HostTensor::F32(g),
-                        HostTensor::F32(p.data.clone()),
-                        HostTensor::F32(std::mem::take(&mut st.m)),
-                        HostTensor::F32(std::mem::take(&mut st.v)),
-                        HostTensor::F32(std::mem::take(&mut w.data)),
-                        c,
-                        lr,
-                    ],
-                )?;
-                let mut it = outs.into_iter();
-                w.data = it.next().unwrap().into_f32()?;
-                st.m = it.next().unwrap().into_f32()?;
-                st.v = it.next().unwrap().into_f32()?;
-            }
-            GaloreKind::Bit8 => {
-                let p = layer.p_fp.as_ref().expect("refreshed above");
-                let st = layer.st_8.as_mut().unwrap();
-                let w = layer.w_fp.as_mut().unwrap();
-                let outs = ctx.rt.execute(
-                    &art,
-                    &[
-                        HostTensor::F32(g),
-                        HostTensor::F32(p.data.clone()),
-                        HostTensor::I8(std::mem::take(&mut st.mq)),
-                        HostTensor::F32(std::mem::take(&mut st.ms)),
-                        HostTensor::U8(std::mem::take(&mut st.vq)),
-                        HostTensor::F32(std::mem::take(&mut st.vs)),
-                        HostTensor::F32(std::mem::take(&mut w.data)),
-                        c,
-                        lr,
-                    ],
-                )?;
-                let mut it = outs.into_iter();
-                w.data = it.next().unwrap().into_f32()?;
-                st.mq = match it.next().unwrap() {
-                    HostTensor::I8(v) => v,
-                    t => return Err(anyhow!("mq dtype {:?}", t.dtype())),
-                };
-                st.ms = it.next().unwrap().into_f32()?;
-                st.vq = match it.next().unwrap() {
-                    HostTensor::U8(v) => v,
-                    t => return Err(anyhow!("vq dtype {:?}", t.dtype())),
-                };
-                st.vs = it.next().unwrap().into_f32()?;
-            }
-            GaloreKind::Quantized => {
-                // The INT4 artifact path requires packed nibbles; the
-                // ablation storages (generic i8 codes or fp32) re-pack on
-                // the fly (hot path stays INT4 in the default config).
-                let (p4, ps, pz) = match (&layer.p_q4, &layer.p_q, &layer.p_fp) {
-                    (Some(q), _, _) => (q.packed.clone(), q.scale.clone(), q.zero.clone()),
-                    (None, Some(q), _) => {
-                        let q4 = quant::quantize4(&quant::dequantize(q));
-                        (q4.packed, q4.scale, q4.zero)
-                    }
-                    (None, None, Some(pf)) => {
-                        let q = quant::quantize4(&pf.data);
-                        (q.packed, q.scale, q.zero)
-                    }
-                    _ => return Err(anyhow!("layer {} has no projection", layer.name)),
-                };
-                let st = layer.st_8.as_mut().unwrap();
-                let w = layer.w_q.as_mut().unwrap();
-                let mut ops = vec![
+/// The fused update step of one layer (hot path, HLO artifact).  The
+/// projection must already be current, and for the SR variant the noise
+/// seed must have been drawn via `Galore::next_sr_seed` — a free function
+/// over ONE `&mut Layer` precisely so concurrent step-graph chains own
+/// disjoint state.
+fn run_layer_update(
+    layer: &mut Layer,
+    cfg: LayerTaskCfg,
+    ctx: &StepCtx,
+    g: Vec<f32>,
+    sr_seed: Option<i32>,
+) -> Result<()> {
+    let (m, n) = (layer.m, layer.n);
+    let art = ctx.man.update(&update_artifact(cfg, m, n))?.clone();
+    let c = ctx.corrections();
+    let lr = ctx.lr_operand();
+    match cfg.kind {
+        GaloreKind::Fp => {
+            let p = layer.p_fp.as_ref().expect("refreshed above");
+            let st = layer.st_fp.as_mut().unwrap();
+            let w = layer.w_fp.as_mut().unwrap();
+            let outs = ctx.rt.execute(
+                &art,
+                &[
                     HostTensor::F32(g),
-                    HostTensor::U8(p4),
-                    HostTensor::F32(ps),
-                    HostTensor::F32(pz),
+                    HostTensor::F32(p.data.clone()),
+                    HostTensor::F32(std::mem::take(&mut st.m)),
+                    HostTensor::F32(std::mem::take(&mut st.v)),
+                    HostTensor::F32(std::mem::take(&mut w.data)),
+                    c,
+                    lr,
+                ],
+            )?;
+            let mut it = outs.into_iter();
+            w.data = it.next().unwrap().into_f32()?;
+            st.m = it.next().unwrap().into_f32()?;
+            st.v = it.next().unwrap().into_f32()?;
+        }
+        GaloreKind::Bit8 => {
+            let p = layer.p_fp.as_ref().expect("refreshed above");
+            let st = layer.st_8.as_mut().unwrap();
+            let w = layer.w_fp.as_mut().unwrap();
+            let outs = ctx.rt.execute(
+                &art,
+                &[
+                    HostTensor::F32(g),
+                    HostTensor::F32(p.data.clone()),
                     HostTensor::I8(std::mem::take(&mut st.mq)),
                     HostTensor::F32(std::mem::take(&mut st.ms)),
                     HostTensor::U8(std::mem::take(&mut st.vq)),
                     HostTensor::F32(std::mem::take(&mut st.vs)),
-                    HostTensor::I8(std::mem::take(&mut w.q)),
-                    HostTensor::F32(std::mem::take(&mut w.scale)),
-                    HostTensor::F32(std::mem::take(&mut w.zero)),
+                    HostTensor::F32(std::mem::take(&mut w.data)),
                     c,
                     lr,
-                ];
-                if self.use_sr {
-                    // SR noise is generated host-side (counter-based PCG
-                    // keeps runs replayable; generating it in-graph with
-                    // threefry cost ~1.7x the whole GaLore update on this
-                    // backend — EXPERIMENTS.md §Perf), via the
-                    // chunk-streamed parallel fill so big layers fan the
-                    // fill over the worker pool without the result ever
-                    // depending on worker count.  The RTN ablation artifact
-                    // takes no noise operand.
-                    self.sr_seed = self.sr_seed.wrapping_add(1);
-                    ops.push(HostTensor::F32(quant::uniform_noise(
-                        m * n,
-                        self.sr_seed as u64,
-                        self.pool,
-                    )));
-                }
-                let outs = ctx.rt.execute(&art, &ops)?;
-                let mut it = outs.into_iter();
-                w.q = match it.next().unwrap() {
-                    HostTensor::I8(v) => v,
-                    t => return Err(anyhow!("wq dtype {:?}", t.dtype())),
-                };
-                w.scale = it.next().unwrap().into_f32()?;
-                w.zero = it.next().unwrap().into_f32()?;
-                st.mq = match it.next().unwrap() {
-                    HostTensor::I8(v) => v,
-                    t => return Err(anyhow!("mq dtype {:?}", t.dtype())),
-                };
-                st.ms = it.next().unwrap().into_f32()?;
-                st.vq = match it.next().unwrap() {
-                    HostTensor::U8(v) => v,
-                    t => return Err(anyhow!("vq dtype {:?}", t.dtype())),
-                };
-                st.vs = it.next().unwrap().into_f32()?;
-            }
+                ],
+            )?;
+            let mut it = outs.into_iter();
+            w.data = it.next().unwrap().into_f32()?;
+            st.mq = match it.next().unwrap() {
+                HostTensor::I8(v) => v,
+                t => return Err(anyhow!("mq dtype {:?}", t.dtype())),
+            };
+            st.ms = it.next().unwrap().into_f32()?;
+            st.vq = match it.next().unwrap() {
+                HostTensor::U8(v) => v,
+                t => return Err(anyhow!("vq dtype {:?}", t.dtype())),
+            };
+            st.vs = it.next().unwrap().into_f32()?;
         }
-        Ok(())
+        GaloreKind::Quantized => {
+            // The INT4 artifact path requires packed nibbles; the
+            // ablation storages (generic i8 codes or fp32) re-pack on
+            // the fly (hot path stays INT4 in the default config).
+            let (p4, ps, pz) = match (&layer.p_q4, &layer.p_q, &layer.p_fp) {
+                (Some(q), _, _) => (q.packed.clone(), q.scale.clone(), q.zero.clone()),
+                (None, Some(q), _) => {
+                    let q4 = quant::quantize4(&quant::dequantize(q));
+                    (q4.packed, q4.scale, q4.zero)
+                }
+                (None, None, Some(pf)) => {
+                    let q = quant::quantize4(&pf.data);
+                    (q.packed, q.scale, q.zero)
+                }
+                _ => return Err(anyhow!("layer {} has no projection", layer.name)),
+            };
+            let st = layer.st_8.as_mut().unwrap();
+            let w = layer.w_q.as_mut().unwrap();
+            let mut ops = vec![
+                HostTensor::F32(g),
+                HostTensor::U8(p4),
+                HostTensor::F32(ps),
+                HostTensor::F32(pz),
+                HostTensor::I8(std::mem::take(&mut st.mq)),
+                HostTensor::F32(std::mem::take(&mut st.ms)),
+                HostTensor::U8(std::mem::take(&mut st.vq)),
+                HostTensor::F32(std::mem::take(&mut st.vs)),
+                HostTensor::I8(std::mem::take(&mut w.q)),
+                HostTensor::F32(std::mem::take(&mut w.scale)),
+                HostTensor::F32(std::mem::take(&mut w.zero)),
+                c,
+                lr,
+            ];
+            if cfg.use_sr {
+                // SR noise is generated host-side (counter-based PCG
+                // keeps runs replayable; generating it in-graph with
+                // threefry cost ~1.7x the whole GaLore update on this
+                // backend — EXPERIMENTS.md §Perf), via the
+                // chunk-streamed parallel fill so big layers fan the
+                // fill over the worker pool without the result ever
+                // depending on worker count.  The seed was drawn from the
+                // optimizer's counter during (serial) planning — see
+                // `Galore::next_sr_seed`.  The RTN ablation artifact takes
+                // no noise operand.
+                let seed = sr_seed.expect("SR noise seed drawn during planning");
+                ops.push(HostTensor::F32(quant::uniform_noise(
+                    m * n,
+                    seed as u64,
+                    cfg.pool,
+                )));
+            }
+            let outs = ctx.rt.execute(&art, &ops)?;
+            let mut it = outs.into_iter();
+            w.q = match it.next().unwrap() {
+                HostTensor::I8(v) => v,
+                t => return Err(anyhow!("wq dtype {:?}", t.dtype())),
+            };
+            w.scale = it.next().unwrap().into_f32()?;
+            w.zero = it.next().unwrap().into_f32()?;
+            st.mq = match it.next().unwrap() {
+                HostTensor::I8(v) => v,
+                t => return Err(anyhow!("mq dtype {:?}", t.dtype())),
+            };
+            st.ms = it.next().unwrap().into_f32()?;
+            st.vq = match it.next().unwrap() {
+                HostTensor::U8(v) => v,
+                t => return Err(anyhow!("vq dtype {:?}", t.dtype())),
+            };
+            st.vs = it.next().unwrap().into_f32()?;
+        }
     }
+    Ok(())
 }
 
 impl Optimizer for Galore {
@@ -456,7 +531,7 @@ impl Optimizer for Galore {
         ops
     }
 
-    fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()> {
+    fn apply_update(&mut self, ctx: &StepCtx, grads: Vec<HostTensor>) -> Result<()> {
         let n_fp = self.fp.len();
         assert_eq!(grads.len(), n_fp + self.layers.len());
         // The fused-backward discipline: consume and drop each gradient
@@ -469,6 +544,7 @@ impl Optimizer for Galore {
         // the wave size = `pool.threads`, not the layer count, even at
         // step 0 when every layer refreshes at once.
         let pool = self.pool;
+        let tcfg = self.task_cfg();
         let mut due: Vec<(usize, Vec<f32>)> = Vec::new();
         for (i, g) in grads.into_iter().enumerate() {
             let g = g.into_f32()?;
@@ -484,35 +560,21 @@ impl Optimizer for Galore {
                 if self.pre_refresh(ctx.step, idx, &g) {
                     due.push((idx, g));
                 } else {
-                    self.run_layer_update(ctx, idx, g)?;
+                    let sr = self.next_sr_seed();
+                    run_layer_update(&mut self.layers[idx], tcfg, ctx, g, sr)?;
                 }
             }
         }
-        // Shape-batched refresh: due layers are grouped by (m, n) in
-        // first-due order, and each group draws ONE sketch seed —
-        // sequentially, so the grouping (and therefore the training trace)
-        // is independent of the worker count.  Groups are consumed in
-        // waves of at most `pool.threads` layers, which caps the wave's
+        // Shape-batched refresh (`group_due_layers`): groups are consumed
+        // in waves of at most `pool.threads` layers, which caps the wave's
         // live buffers (mean-gradient matrices, bases, iteration scratch)
-        // exactly as before — even at step 0 when every layer refreshes at
-        // once.  Every wave of a group re-derives the same omega from the
-        // group seed, so splitting a group into waves cannot change the
-        // projections (the `left_subspace_batched` contract).
+        // even at step 0 when every layer refreshes at once.  Every wave
+        // of a group re-derives the same omega from the group seed, so
+        // splitting a group into waves cannot change the projections (the
+        // `left_subspace_batched` contract).
         let rank = self.rank;
         let wave_size = pool.threads.max(1);
-        let mut groups: Vec<((usize, usize), u64, Vec<(usize, Vec<f32>)>)> = Vec::new();
-        for (idx, g) in due {
-            let key = (self.layers[idx].m, self.layers[idx].n);
-            let gi = match groups.iter().position(|(k, _, _)| *k == key) {
-                Some(gi) => gi,
-                None => {
-                    let seed = self.rng.next_u64();
-                    groups.push((key, seed, Vec::new()));
-                    groups.len() - 1
-                }
-            };
-            groups[gi].2.push((idx, g));
-        }
+        let groups = self.group_due_layers(due);
         for (_shape, seed, mut members) in groups {
             while !members.is_empty() {
                 let take = wave_size.min(members.len());
@@ -525,15 +587,163 @@ impl Optimizer for Galore {
                 drop(grefs);
                 drop(gms);
                 for ((idx, g), new_p) in wave.into_iter().zip(new_ps) {
-                    let sim = self.overlap_with_old(idx, &new_p, pool);
+                    let sim = overlap_with_old(&self.layers[idx], &new_p, pool);
                     if let Some(s) = sim {
                         self.sim_history[idx].push(s);
                     }
-                    self.store_projection(idx, new_p);
+                    store_projection(&mut self.layers[idx], tcfg, new_p);
                     self.sched.record_refresh(idx, ctx.step, sim);
-                    self.run_layer_update(ctx, idx, g)?;
+                    let sr = self.next_sr_seed();
+                    run_layer_update(&mut self.layers[idx], tcfg, ctx, g, sr)?;
                 }
             }
+        }
+        Ok(())
+    }
+
+    fn apply_update_dataflow(
+        &mut self,
+        ctx: &StepCtx,
+        grads: Vec<HostTensor>,
+        wpool: &WorkerPool,
+    ) -> Result<()> {
+        let n_fp = self.fp.len();
+        assert_eq!(grads.len(), n_fp + self.layers.len());
+        let pool = self.pool;
+        let tcfg = self.task_cfg();
+        let rank = self.rank;
+        let step = ctx.step;
+
+        // ---- Plan phase (serial).  Replays every decision the sequential
+        // walk makes against *shared* optimizer state — accumulator folds,
+        // due membership (snapshotted up front via `plan_due` so nothing
+        // mid-step can shift it), shape grouping, sketch seeds, SR noise
+        // seeds — in the exact order the sequential path consumes them.
+        // After this block, the racy graph below only ever touches state
+        // owned by a single chain.
+        let planned_due = self.sched.plan_due(step);
+        let mut fp_grads: Vec<Vec<f32>> = Vec::with_capacity(n_fp);
+        let mut now: Vec<(usize, Vec<f32>, Option<i32>)> = Vec::new();
+        let mut due: Vec<(usize, Vec<f32>)> = Vec::new();
+        for (i, g) in grads.into_iter().enumerate() {
+            let g = g.into_f32()?;
+            if i < n_fp {
+                fp_grads.push(g);
+            } else {
+                let idx = i - n_fp;
+                if self.pre_refresh(step, idx, &g) {
+                    debug_assert!(
+                        planned_due.contains(&idx),
+                        "due() drifted from the plan_due snapshot"
+                    );
+                    due.push((idx, g));
+                } else {
+                    let sr = self.next_sr_seed();
+                    now.push((idx, g, sr));
+                }
+            }
+        }
+        // Wave plans: mean gradients are folded out of the accumulators
+        // here (serially — they are shared state), so unlike the
+        // sequential path all due waves' mean matrices are resident at
+        // once; that is the price of letting waves run concurrently, and
+        // it is bounded by the same gradients the step already held.
+        struct WavePlan {
+            seed: u64,
+            members: Vec<(usize, Mat, Vec<f32>, Option<i32>)>,
+        }
+        let wave_size = pool.threads.max(1);
+        let groups = self.group_due_layers(due);
+        let mut waves: Vec<WavePlan> = Vec::new();
+        for (_shape, seed, mut members) in groups {
+            while !members.is_empty() {
+                let take = wave_size.min(members.len());
+                let mut wm = Vec::with_capacity(take);
+                for (idx, g) in members.drain(..take) {
+                    let gm = self.take_mean_grad(idx, &g);
+                    let sr = self.next_sr_seed();
+                    wm.push((idx, gm, g, sr));
+                }
+                waves.push(WavePlan { seed, members: wm });
+            }
+        }
+
+        // ---- Execute phase.  One independent node per fp tensor and per
+        // non-due layer; per wave, one basis node fanning into its member
+        // layers' update nodes.  Each node owns exactly one tensor/layer's
+        // `&mut` state, so concurrent chains commute.
+        let proj_slots: Vec<Vec<Mutex<Option<Mat>>>> = waves
+            .iter()
+            .map(|w| w.members.iter().map(|_| Mutex::new(None)).collect())
+            .collect();
+        let sim_slots: Vec<Vec<Mutex<Option<f32>>>> = waves
+            .iter()
+            .map(|w| w.members.iter().map(|_| Mutex::new(None)).collect())
+            .collect();
+        let mut recordings: Vec<(usize, usize, usize)> = Vec::new();
+        let cx = *ctx;
+        let mut b = StepGraphBuilder::new();
+        match self.kind {
+            GaloreKind::Fp => {
+                let states = self.fp_states_fp.iter_mut();
+                for ((w, st), g) in self.fp.iter_mut().zip(states).zip(fp_grads) {
+                    b.fallible(&[], move || run_adam_fp(&cx, w, st, &g));
+                }
+            }
+            _ => {
+                let states = self.fp_states_8.iter_mut();
+                for ((w, st), g) in self.fp.iter_mut().zip(states).zip(fp_grads) {
+                    b.fallible(&[], move || run_adam_8bit(&cx, w, st, &g));
+                }
+            }
+        }
+        let mut layer_slots: Vec<Option<&mut Layer>> = self.layers.iter_mut().map(Some).collect();
+        for (idx, g, sr) in now {
+            let layer = layer_slots[idx].take().expect("one chain per layer");
+            b.fallible(&[], move || run_layer_update(layer, tcfg, &cx, g, sr));
+        }
+        for (wi, wave) in waves.into_iter().enumerate() {
+            let seed = wave.seed;
+            let mut gms: Vec<Mat> = Vec::with_capacity(wave.members.len());
+            let mut rest: Vec<(usize, Vec<f32>, Option<i32>)> = Vec::new();
+            for (idx, gm, g, sr) in wave.members {
+                gms.push(gm);
+                rest.push((idx, g, sr));
+            }
+            let wave_out = &proj_slots[wi];
+            let basis = b.node(&[], move || {
+                let grefs: Vec<&Mat> = gms.iter().collect();
+                let mut rng = Pcg32::new(seed, 0x5eed);
+                let new_ps = left_subspace_batched(&grefs, rank, SUBSPACE_ITERS, &mut rng, pool);
+                for (slot, p) in wave_out.iter().zip(new_ps) {
+                    *slot.lock().unwrap() = Some(p);
+                }
+            });
+            for (mi, (idx, g, sr)) in rest.into_iter().enumerate() {
+                let layer = layer_slots[idx].take().expect("one chain per layer");
+                let pslot = &proj_slots[wi][mi];
+                let sslot = &sim_slots[wi][mi];
+                recordings.push((wi, mi, idx));
+                b.fallible(&[basis], move || {
+                    let new_p = pslot.lock().unwrap().take().expect("basis node filled slot");
+                    *sslot.lock().unwrap() = overlap_with_old(layer, &new_p, pool);
+                    store_projection(layer, tcfg, new_p);
+                    run_layer_update(layer, tcfg, &cx, g, sr)
+                });
+            }
+        }
+        b.run(wpool)?;
+
+        // ---- Join phase (serial, plan order).  The cross-layer reductions
+        // the chains must not race on: similarity history and scheduler
+        // recording happen once, here, in the order the sequential walk
+        // would have recorded them.
+        for (wi, mi, idx) in recordings {
+            let sim = *sim_slots[wi][mi].lock().unwrap();
+            if let Some(s) = sim {
+                self.sim_history[idx].push(s);
+            }
+            self.sched.record_refresh(idx, step, sim);
         }
         Ok(())
     }

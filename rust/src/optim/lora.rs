@@ -165,7 +165,10 @@ impl Optimizer for Lora {
         ops
     }
 
-    fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()> {
+    // NOTE: no `apply_update_dataflow` override — ReLoRA's merge couples
+    // every adapter to the base weights, so the default sequential
+    // fallback is the correct factoring for the LoRA family.
+    fn apply_update(&mut self, ctx: &StepCtx, grads: Vec<HostTensor>) -> Result<()> {
         // grads: (dU, dV) per adapter, in layer order
         assert_eq!(grads.len(), 2 * self.adapters.len());
         let mut it = grads.into_iter();
@@ -178,7 +181,7 @@ impl Optimizer for Lora {
         Ok(())
     }
 
-    fn on_step_end(&mut self, ctx: &mut StepCtx) -> Result<()> {
+    fn on_step_end(&mut self, ctx: &StepCtx) -> Result<()> {
         if self.method == Method::ReLoRa
             && self.merge_every > 0
             && ctx.step % self.merge_every == 0

@@ -5,12 +5,14 @@
 
 use anyhow::Result;
 
-use crate::linalg::{par_map, ParallelCtx};
+use crate::linalg::{par_map, ParallelCtx, WorkerPool};
 use crate::manifest::ConfigEntry;
 use crate::runtime::HostTensor;
 use crate::util::Pcg32;
 
-use super::{run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer, StepCtx};
+use super::{
+    run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer, StepCtx, StepGraphBuilder,
+};
 
 struct FactorPair {
     u: FpTensor, // (out, r)
@@ -83,7 +85,7 @@ impl Optimizer for LowRank {
         ops
     }
 
-    fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()> {
+    fn apply_update(&mut self, ctx: &StepCtx, grads: Vec<HostTensor>) -> Result<()> {
         let n_fp = self.fp.len();
         assert_eq!(grads.len(), n_fp + 2 * self.factors.len());
         let mut it = grads.into_iter();
@@ -98,6 +100,38 @@ impl Optimizer for LowRank {
             run_adam_fp(ctx, &mut f.v, &mut f.st_v, &gv)?;
         }
         Ok(())
+    }
+
+    fn apply_update_dataflow(
+        &mut self,
+        ctx: &StepCtx,
+        grads: Vec<HostTensor>,
+        pool: &WorkerPool,
+    ) -> Result<()> {
+        // U and V of one factor pair are separate tensors with separate
+        // Adam states (the bwd artifact emits g_u and g_v independently),
+        // so every factor contributes TWO independent graph nodes.
+        let n_fp = self.fp.len();
+        assert_eq!(grads.len(), n_fp + 2 * self.factors.len());
+        let mut flat = Vec::with_capacity(grads.len());
+        for g in grads {
+            flat.push(g.into_f32()?);
+        }
+        let mut it = flat.into_iter();
+        let cx = *ctx;
+        let mut b = StepGraphBuilder::new();
+        for (w, st) in self.fp.iter_mut().zip(self.fp_states.iter_mut()) {
+            let g = it.next().unwrap();
+            b.fallible(&[], move || run_adam_fp(&cx, w, st, &g));
+        }
+        for f in self.factors.iter_mut() {
+            let FactorPair { u, v, st_u, st_v } = f;
+            let gu = it.next().unwrap();
+            let gv = it.next().unwrap();
+            b.fallible(&[], move || run_adam_fp(&cx, u, st_u, &gu));
+            b.fallible(&[], move || run_adam_fp(&cx, v, st_v, &gv));
+        }
+        b.run(pool)
     }
 
     fn live_bytes(&self) -> u64 {

@@ -8,6 +8,7 @@
 //! execute per tensor.  All heavy math happens inside the artifacts (L1
 //! Pallas kernels); this module is buffer management and scheduling.
 
+pub mod dataflow;
 pub mod factory;
 pub mod full;
 pub mod galore;
@@ -15,11 +16,13 @@ pub mod lora;
 pub mod lowrank;
 pub mod method;
 
+pub use dataflow::StepGraphBuilder;
 pub use factory::{build, build_with_init, BuildOptions};
 pub use method::Method;
 
 use anyhow::Result;
 
+use crate::linalg::WorkerPool;
 use crate::manifest::{ArtifactSpec, Manifest};
 use crate::runtime::{HostTensor, Runtime};
 
@@ -30,8 +33,13 @@ use crate::runtime::{HostTensor, Runtime};
 /// step cannot mix two different worker budgets.  The ctx is a *handle*
 /// onto the persistent worker pool — copies share the same long-lived
 /// workers, so per-call dispatch is a queue push, not a thread spawn.
+///
+/// `Copy` (a shared `&Runtime` plus plain scalars): the dataflow step
+/// hands every per-layer update chain its own copy, and the runtime's
+/// interior mutability lets the chains execute artifacts concurrently.
+#[derive(Clone, Copy)]
 pub struct StepCtx<'a> {
-    pub rt: &'a mut Runtime,
+    pub rt: &'a Runtime,
     pub man: &'a Manifest,
     /// 1-based optimization step (Adam bias correction)
     pub step: u64,
@@ -84,7 +92,10 @@ impl AdamFp {
 }
 
 /// The interface the coordinator drives.
-pub trait Optimizer {
+///
+/// `Send` so the trainer can run the update phase as a pool task that
+/// overlaps with next-batch preparation.
+pub trait Optimizer: Send {
     fn method(&self) -> Method;
 
     /// Name of the model-level fwd/bwd artifact (key into
@@ -101,8 +112,28 @@ pub trait Optimizer {
     fn forward_operands(&self) -> Vec<HostTensor>;
 
     /// Consume the gradient results (everything after the loss) and update
-    /// parameters/states in place.
-    fn apply_update(&mut self, ctx: &mut StepCtx, grads: Vec<HostTensor>) -> Result<()>;
+    /// parameters/states in place, walking tensors sequentially.
+    fn apply_update(&mut self, ctx: &StepCtx, grads: Vec<HostTensor>) -> Result<()>;
+
+    /// Dataflow variant of [`Optimizer::apply_update`]: factor the step
+    /// into per-tensor/per-layer chains with disjoint state and run them
+    /// as a dependency graph on `pool` ([`WorkerPool::run_graph`]), so
+    /// independent layer updates overlap.
+    ///
+    /// Contract: bitwise-identical final state to the sequential walk for
+    /// any worker count, steal seed, and slab setting (pinned by
+    /// `tests/golden_trace.rs` / `tests/proptests.rs`).  The default falls
+    /// back to the sequential walk — correct for any optimizer, used by
+    /// methods whose updates have not been factored (e.g. LoRA's
+    /// merge-coupled adapters).
+    fn apply_update_dataflow(
+        &mut self,
+        ctx: &StepCtx,
+        grads: Vec<HostTensor>,
+        _pool: &WorkerPool,
+    ) -> Result<()> {
+        self.apply_update(ctx, grads)
+    }
 
     /// Actually-allocated bytes of params + optimizer state + projections.
     fn live_bytes(&self) -> u64;
@@ -118,7 +149,7 @@ pub trait Optimizer {
     }
 
     /// Method-specific periodic maintenance (e.g. ReLoRA merge).
-    fn on_step_end(&mut self, _ctx: &mut StepCtx) -> Result<()> {
+    fn on_step_end(&mut self, _ctx: &StepCtx) -> Result<()> {
         Ok(())
     }
 
@@ -143,7 +174,7 @@ pub(crate) fn adam8_artifact<'m>(man: &'m Manifest, numel: usize) -> Result<&'m 
 
 /// Run one fp Adam step on a flat tensor through its artifact.
 pub(crate) fn run_adam_fp(
-    ctx: &mut StepCtx,
+    ctx: &StepCtx,
     w: &mut FpTensor,
     st: &mut AdamFp,
     g: &[f32],
@@ -169,7 +200,7 @@ pub(crate) fn run_adam_fp(
 
 /// Run one blockwise 8-bit Adam step on a flat tensor through its artifact.
 pub(crate) fn run_adam_8bit(
-    ctx: &mut StepCtx,
+    ctx: &StepCtx,
     w: &mut FpTensor,
     st: &mut crate::quant::Adam8State,
     g: &[f32],

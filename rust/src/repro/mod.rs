@@ -63,6 +63,7 @@ fn tc(o: &ReproOptions, method: Method) -> TrainConfig {
         },
         log_every: (o.steps / 6).max(1),
         quiet: o.quiet,
+        dataflow: crate::coordinator::dataflow_default(),
     }
 }
 

@@ -5,6 +5,14 @@
 //! [`HostTensor`], a dtype-tagged host buffer that maps 1:1 onto the
 //! manifest's `TensorSpec`s.
 //!
+//! Since the dataflow training step, [`Runtime::execute`] takes `&self`:
+//! per-layer update chains run concurrently on the worker pool and all
+//! share one `&Runtime`.  The executable cache and the per-artifact
+//! execution counters sit behind mutexes, and cached executables are
+//! `Arc`-shared so the cache lock is held only for the lookup — never
+//! across an execution (holding it there would serialize every
+//! concurrently-updating layer on one mutex).
+//!
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`) — see
 //! DESIGN.md §2 for why serialized protos are rejected by xla_extension
 //! 0.5.1.
@@ -14,6 +22,7 @@ pub mod tensor;
 pub use tensor::HostTensor;
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -21,15 +30,19 @@ use crate::manifest::ArtifactSpec;
 
 pub struct Runtime {
     client: xla::PjRtClient,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     /// executions per artifact (perf accounting)
-    pub exec_counts: HashMap<String, u64>,
+    exec_counts: Mutex<HashMap<String, u64>>,
 }
 
 impl Runtime {
     pub fn new() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
-        Ok(Runtime { client, cache: HashMap::new(), exec_counts: HashMap::new() })
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            exec_counts: Mutex::new(HashMap::new()),
+        })
     }
 
     pub fn platform(&self) -> String {
@@ -37,9 +50,17 @@ impl Runtime {
     }
 
     /// Compile (or fetch the cached executable for) an artifact.
-    pub fn load(&mut self, spec: &ArtifactSpec) -> Result<()> {
-        if self.cache.contains_key(&spec.name) {
-            return Ok(());
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<()> {
+        self.executable(spec).map(|_| ())
+    }
+
+    /// The cached executable for `spec`, compiling on first use.  First-use
+    /// compilation happens under the cache lock, so two chains racing on a
+    /// cold artifact compile it once.
+    fn executable(&self, spec: &ArtifactSpec) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(&spec.name) {
+            return Ok(Arc::clone(exe));
         }
         let proto = xla::HloModuleProto::from_text_file(&spec.path)
             .map_err(|e| anyhow!("parsing {}: {e}", spec.path.display()))?;
@@ -48,27 +69,34 @@ impl Runtime {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
-        self.cache.insert(spec.name.clone(), exe);
-        Ok(())
+        let exe = Arc::new(exe);
+        cache.insert(spec.name.clone(), Arc::clone(&exe));
+        Ok(exe)
     }
 
     pub fn is_loaded(&self, name: &str) -> bool {
-        self.cache.contains_key(name)
+        self.cache.lock().unwrap().contains_key(name)
     }
 
     pub fn loaded_count(&self) -> usize {
-        self.cache.len()
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Executions recorded for one artifact (perf accounting).
+    pub fn exec_count(&self, name: &str) -> u64 {
+        self.exec_counts.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Snapshot of all per-artifact execution counters.
+    pub fn exec_counts(&self) -> HashMap<String, u64> {
+        self.exec_counts.lock().unwrap().clone()
     }
 
     /// Execute an artifact. Operand order/dtypes/shapes must match the
     /// manifest spec; results are unpacked from the output tuple in spec
-    /// order.
-    pub fn execute(
-        &mut self,
-        spec: &ArtifactSpec,
-        operands: &[HostTensor],
-    ) -> Result<Vec<HostTensor>> {
-        self.load(spec)?;
+    /// order.  `&self`: concurrent per-layer chains share one runtime.
+    pub fn execute(&self, spec: &ArtifactSpec, operands: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let exe = self.executable(spec)?;
         if operands.len() != spec.operands.len() {
             return Err(anyhow!(
                 "{}: got {} operands, manifest expects {}",
@@ -84,11 +112,10 @@ impl Runtime {
                     .with_context(|| format!("{}: operand {}", spec.name, s.name))?,
             );
         }
-        let exe = self.cache.get(&spec.name).expect("loaded above");
         let outs = exe
             .execute::<xla::Literal>(&literals)
             .map_err(|e| anyhow!("executing {}: {e}", spec.name))?;
-        *self.exec_counts.entry(spec.name.clone()).or_default() += 1;
+        *self.exec_counts.lock().unwrap().entry(spec.name.clone()).or_default() += 1;
         let first = outs
             .into_iter()
             .next()

@@ -96,6 +96,19 @@ impl SubspaceScheduler {
         }
     }
 
+    /// Snapshot of every layer index due at `step`, in layer order.
+    ///
+    /// Refresh *planning* must use this instead of polling [`Self::due`]
+    /// per layer while a wave is being recorded: `record_refresh` runs
+    /// per-layer inside a wave and can double a layer's interval (and set
+    /// `last_refresh = step`) mid-wave, so a late `due()` read would
+    /// observe a membership different from the one the wave was formed
+    /// with.  The dataflow step planner takes this snapshot once, before
+    /// any refresh of the step is recorded, and schedules waves from it.
+    pub fn plan_due(&self, step: u64) -> Vec<usize> {
+        (0..self.layers.len()).filter(|&idx| self.due(idx, step)).collect()
+    }
+
     /// Record a refresh of layer `idx` at `step` with similarity `sim`
     /// between the outgoing and incoming projection (pass `None` for the
     /// first refresh, when there is no previous projection).
@@ -334,6 +347,56 @@ mod tests {
         // clamped to window-of-1 semantics: one above-threshold sim doubles
         let iv = s.record_refresh(0, 60, Some(0.9));
         assert_eq!(iv, 20, "window=0 must act as window=1, not as never-double");
+    }
+
+    #[test]
+    fn plan_due_is_immune_to_mid_wave_recording() {
+        // the dataflow planning hazard: both layers are due, but recording
+        // layer 0's refresh (which marks it refreshed at `step` and, with a
+        // converged window, doubles its interval) must not change the
+        // membership the wave was planned from
+        let names: Vec<String> = (0..2).map(|i| format!("layer{i}")).collect();
+        let mut s = SubspaceScheduler::new(
+            &names,
+            SchedulerConfig {
+                base_interval: 10,
+                threshold: 0.4,
+                window: 1,
+                adaptive: true,
+                max_interval: 0,
+            },
+        );
+        s.record_refresh(0, 0, None);
+        s.record_refresh(1, 0, None);
+        let step = 10u64;
+        let plan = s.plan_due(step);
+        assert_eq!(plan, vec![0, 1], "both layers due before the wave");
+        // wave starts: layer 0's refresh lands (interval doubles, 10 -> 20)
+        let iv = s.record_refresh(0, step, Some(0.9));
+        assert_eq!(iv, 20);
+        // a naive mid-wave `due()` poll now disagrees with the plan...
+        assert!(!s.due(0, step), "due() flips as soon as the refresh is recorded");
+        // ...but re-planning the same membership is pure and repeatable:
+        // the snapshot taken before the wave is the scheduling contract
+        assert_eq!(plan, vec![0, 1]);
+        assert_eq!(s.plan_due(step), vec![1], "post-wave plan reflects the recording");
+    }
+
+    #[test]
+    fn plan_due_matches_due_for_every_layer() {
+        let mut s = sched(true);
+        s.record_refresh(0, 0, None);
+        s.record_refresh(1, 5, None);
+        for step in 0..30 {
+            let plan = s.plan_due(step);
+            for idx in 0..3 {
+                assert_eq!(
+                    plan.contains(&idx),
+                    s.due(idx, step),
+                    "plan/due mismatch at step {step} layer {idx}"
+                );
+            }
+        }
     }
 
     #[test]

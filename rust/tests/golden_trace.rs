@@ -21,10 +21,12 @@
 //! `PAR_MIN_FLOPS` (the parallel paths genuinely run) while the projection
 //! products sit below it (the serial gate is exercised in the same trace).
 
+use qgalore::coordinator::{HostDataflowTrainer, HostMethod, HostStepConfig};
 use qgalore::linalg::{
     engine, left_subspace_with, KernelPath, Mat, ParallelCtx, WorkerPool, STEAL_SEED_ENV,
 };
 use qgalore::quant;
+use qgalore::scheduler::SchedulerConfig;
 use qgalore::util::Pcg32;
 
 const STEPS: usize = 10;
@@ -95,9 +97,10 @@ fn golden_trace_locks_numerics() {
 
     // --- kernel-path stability --------------------------------------------
     // All bodies are bitwise interchangeable, so flipping the process
-    // override must leave the whole trace untouched.  This test file is its
-    // own binary and this is its only #[test], so the override cannot race
-    // another test's expectations; restore the prior setting regardless.
+    // override must leave the whole trace untouched.  The dataflow test in
+    // this binary may run concurrently, but it relies only on the bitwise
+    // interchangeability asserted here, so the flip cannot change what it
+    // observes; restore the prior setting regardless.
     let prev = engine::kernel_override();
     let mut paths = vec![KernelPath::Portable, KernelPath::Autovec];
     if engine::simd_kernel_available() {
@@ -144,10 +147,11 @@ fn golden_trace_locks_numerics() {
         let got = train_trace(ParallelCtx::with_pool(16, pool));
         assert_eq!(got, t1, "loss trace depends on steal order (seed {seed:#x})");
     }
-    // and once through the env knob (what CI sets process-wide): this file
-    // is its own test binary with a single #[test], so the set/restore pair
-    // cannot race another test's env reads.  Restore — not remove — so a
-    // CI-forced QGALORE_STEAL_SEED still governs pools built after this.
+    // and once through the env knob (what CI sets process-wide): the other
+    // #[test] in this binary builds only explicit-seed pools and never
+    // reads the env, so the set/restore pair cannot race it.  Restore —
+    // not remove — so a CI-forced QGALORE_STEAL_SEED still governs pools
+    // built after this.
     let prev_seed = std::env::var(STEAL_SEED_ENV).ok();
     std::env::set_var(STEAL_SEED_ENV, "314159");
     let pool = WorkerPool::leaked(8);
@@ -166,4 +170,108 @@ fn golden_trace_locks_numerics() {
         last < 0.9 * first,
         "rank-{RANK} projected training did not reduce loss ({first} -> {last})"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Dataflow step graph determinism
+// ---------------------------------------------------------------------------
+
+/// Layer shapes for the dataflow golden run.  The (128, 96) group sits
+/// ABOVE `PAR_MIN_FLOPS` (128*128*96 flops per grad product), so per-kernel
+/// fan-out runs NESTED inside graph nodes on the same pool; the (48, 32)
+/// group sits below the gate, so the serial path is exercised inside nodes
+/// of the same graph.  Two shape groups also force two independent
+/// shape-batched refresh waves per due step.
+const DF_SHAPES: [(usize, usize); 6] =
+    [(128, 96), (48, 32), (128, 96), (48, 32), (128, 96), (48, 32)];
+const DF_STEPS: usize = 8;
+
+fn df_config() -> HostStepConfig {
+    HostStepConfig {
+        method: HostMethod::Galore,
+        rank: 8,
+        lr: 0.2,
+        noise_eps: 1e-3,
+        // interval 3 + window 1 so refresh waves land mid-trace, not just
+        // at step 0, and the adaptive doubling path runs inside the window
+        sched: SchedulerConfig { base_interval: 3, window: 1, ..SchedulerConfig::default() },
+        seed: 41,
+    }
+}
+
+/// The strongest determinism contract in the repo: the DATAFLOW step —
+/// layer chains racing on the stealing pool, shape-batched refresh waves as
+/// graph nodes — must be bitwise identical to the sequential step, across
+/// worker counts, hostile steal seeds, and slab multipliers.  Per-step loss
+/// bits AND final weight bits are both compared.
+#[test]
+fn dataflow_step_graph_matches_sequential_bitwise() {
+    let cfg = df_config();
+    assert!(128 * 128 * 96 >= engine::PAR_MIN_FLOPS, "large group must fan out");
+    assert!(48 * 48 * 32 < engine::PAR_MIN_FLOPS, "small group must stay serial-gated");
+
+    // reference: the sequential step on the serial ctx
+    let mut reference = HostDataflowTrainer::new(&DF_SHAPES, cfg);
+    let want: Vec<u32> = (0..DF_STEPS)
+        .map(|_| reference.step_sequential(ParallelCtx::serial()).to_bits())
+        .collect();
+    let want_w: Vec<u32> = reference.export_weights().iter().map(|x| x.to_bits()).collect();
+
+    let check = |label: String, losses: Vec<u32>, trainer: &HostDataflowTrainer| {
+        assert_eq!(losses, want, "loss trace diverged: {label}");
+        let w: Vec<u32> = trainer.export_weights().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(w, want_w, "final weights diverged: {label}");
+    };
+
+    // sequential at parallel thread budgets: the refresh-wave partitioning
+    // changes with the budget, the bits must not
+    for t in [4usize, 8] {
+        let mut tr = HostDataflowTrainer::new(&DF_SHAPES, cfg);
+        let losses: Vec<u32> = (0..DF_STEPS)
+            .map(|_| tr.step_sequential(ParallelCtx::new(t)).to_bits())
+            .collect();
+        check(format!("sequential, {t} threads"), losses, &tr);
+    }
+
+    // dataflow across worker counts (explicit steal seeds only: this test
+    // must never read QGALORE_STEAL_SEED, see the env note above)
+    for workers in [1usize, 4, 8, 16] {
+        let pool = WorkerPool::leaked_with_steal_seed(workers, 0x00DF_5EED);
+        let ctx = ParallelCtx::with_pool(workers.max(4), pool);
+        let mut tr = HostDataflowTrainer::new(&DF_SHAPES, cfg);
+        let losses: Vec<u32> = (0..DF_STEPS)
+            .map(|_| tr.step_dataflow(ctx, pool).unwrap().to_bits())
+            .collect();
+        check(format!("dataflow, {workers} workers"), losses, &tr);
+    }
+
+    // hostile victim-choice seeds at 16 workers: if any bit depended on
+    // which worker stole which chain when, some seed here would flip it
+    for seed in [1u64, u64::MAX] {
+        let pool = WorkerPool::leaked_with_steal_seed(16, seed);
+        let ctx = ParallelCtx::with_pool(16, pool);
+        let mut tr = HostDataflowTrainer::new(&DF_SHAPES, cfg);
+        let losses: Vec<u32> = (0..DF_STEPS)
+            .map(|_| tr.step_dataflow(ctx, pool).unwrap().to_bits())
+            .collect();
+        check(format!("dataflow, hostile steal seed {seed:#x}"), losses, &tr);
+    }
+
+    // slab multipliers: over-decomposition inside graph nodes, from 1
+    // slab/worker to the 64 cap
+    for spw in [1usize, 2, 8, 64] {
+        let pool = WorkerPool::leaked_with_steal_seed(8, 0x00DF_5EED);
+        let ctx = ParallelCtx::with_pool(8, pool).with_slabs_per_worker(spw);
+        let mut tr = HostDataflowTrainer::new(&DF_SHAPES, cfg);
+        let losses: Vec<u32> = (0..DF_STEPS)
+            .map(|_| tr.step_dataflow(ctx, pool).unwrap().to_bits())
+            .collect();
+        check(format!("dataflow, {spw} slabs/worker"), losses, &tr);
+    }
+
+    // the trace is a real training signal, not a fixed point
+    let first = f32::from_bits(want[0]);
+    let last = f32::from_bits(want[DF_STEPS - 1]);
+    assert!(first.is_finite() && last.is_finite(), "non-finite loss in dataflow trace");
+    assert!(last < first, "host dataflow training did not reduce loss ({first} -> {last})");
 }

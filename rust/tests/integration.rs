@@ -259,6 +259,7 @@ fn qgalore_training_reduces_loss() {
             },
             log_every: 40,
             quiet: true,
+            dataflow: false,
         },
     )
     .unwrap();
@@ -300,6 +301,7 @@ fn all_methods_take_training_steps() {
                 },
                 log_every: 10,
                 quiet: true,
+                dataflow: false,
             },
         )
         .unwrap_or_else(|e| panic!("{method} failed: {e}"));
@@ -328,6 +330,7 @@ fn finetune_beats_chance() {
             opts: BuildOptions::default(),
             log_every: 100,
             quiet: true,
+            dataflow: false,
         },
     )
     .unwrap();

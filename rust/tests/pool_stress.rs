@@ -24,7 +24,9 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
+use qgalore::coordinator::{HostDataflowTrainer, HostMethod, HostStepConfig};
 use qgalore::linalg::{engine, par_map, Mat, ParallelCtx, WorkerPool};
+use qgalore::scheduler::SchedulerConfig;
 use qgalore::util::Pcg32;
 
 const SUBMITTERS: usize = 8;
@@ -171,4 +173,66 @@ fn panic_in_nested_inner_submission_reaches_the_outer_submitter() {
     let items: Vec<usize> = (0..8).collect();
     let doubled = par_map(ctx, &items, |&x| x * 2);
     assert_eq!(doubled, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+}
+
+#[test]
+fn dataflow_fault_injection_panic_resurfaces_and_pool_survives() {
+    // a panic inside ONE layer's chain of the dataflow step graph must
+    // surface as that step's Err (not poison the process or a worker),
+    // the step counter must not advance, the pool must stay live and
+    // bitwise-correct, and a FRESH trainer on the same pool must still
+    // match the sequential reference exactly
+    let pool: &'static WorkerPool = WorkerPool::leaked(4);
+    let ctx = ParallelCtx::with_pool(4, pool);
+    let shapes = [(16usize, 12usize), (16, 12), (12, 10), (12, 10)];
+    let cfg = HostStepConfig {
+        method: HostMethod::Galore,
+        rank: 2,
+        sched: SchedulerConfig { base_interval: 2, ..SchedulerConfig::default() },
+        seed: 33,
+        ..HostStepConfig::default()
+    };
+
+    // fault in a NON-DUE layer chain (at interval 2, nothing is due at
+    // step 1: the fused grad->update node panics)
+    let mut tr = HostDataflowTrainer::new(&shapes, cfg);
+    tr.fail_at = Some((1, 2));
+    tr.step_dataflow(ctx, pool).expect("step 0 must run clean");
+    let err = tr.step_dataflow(ctx, pool).expect_err("injected fault must surface");
+    assert!(
+        err.to_string().contains("injected dataflow fault at layer 2"),
+        "fault payload mangled: {err}"
+    );
+    assert_eq!(tr.current_step(), 1, "failed step must not advance the counter");
+
+    // fault in a DUE layer's refresh+update node (step 2: every layer is
+    // due again, so the panic fires downstream of a wave basis node)
+    let mut tr2 = HostDataflowTrainer::new(&shapes, cfg);
+    tr2.fail_at = Some((2, 1));
+    for _ in 0..2 {
+        tr2.step_dataflow(ctx, pool).expect("steps before the fault run clean");
+    }
+    let err2 = tr2.step_dataflow(ctx, pool).expect_err("due-chain fault must surface");
+    assert!(
+        err2.to_string().contains("injected dataflow fault at layer 1"),
+        "due-chain fault payload mangled: {err2}"
+    );
+
+    // the pool survives: still alive and bitwise-correct
+    let mut rng = Pcg32::seeded(123);
+    let a = Mat::randn(48, 32, &mut rng);
+    let b = Mat::randn(32, 24, &mut rng);
+    let want = engine::matmul_ungated(&a, &b, ParallelCtx::serial());
+    assert_eq!(engine::matmul_ungated(&a, &b, ctx).data, want.data, "pool unusable after fault");
+
+    // and a fresh trainer on the same pool still matches the sequential
+    // reference bit for bit — the aborted graph left no residue
+    let mut seq = HostDataflowTrainer::new(&shapes, cfg);
+    let mut df = HostDataflowTrainer::new(&shapes, cfg);
+    for s in 0..3 {
+        let a = seq.step_sequential(ParallelCtx::serial());
+        let b = df.step_dataflow(ctx, pool).expect("clean trainer must step");
+        assert_eq!(a.to_bits(), b.to_bits(), "post-fault trainer diverged at step {s}");
+    }
+    assert_eq!(seq.export_weights(), df.export_weights(), "post-fault weights diverged");
 }

@@ -6,6 +6,7 @@
 //! manual (re-run the printed case seed) but the coverage is the same idea:
 //! each property is checked across hundreds of randomized inputs.
 
+use qgalore::coordinator::{HostDataflowTrainer, HostMethod, HostStepConfig};
 use qgalore::data::{Batcher, Tokenizer};
 use qgalore::jsonx::Json;
 use qgalore::linalg::{
@@ -342,6 +343,74 @@ fn prop_fused_dequant_scheduler_equivalence_bitwise() {
                 want8t.data,
                 "dequant8_t_matmul {m}x{k}x{n} t={threads} diverged under {label}"
             );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// dataflow step-graph equivalence properties
+//
+// The trainer-layer extension of the scheduler-equivalence contract: an
+// ENTIRE training step — per-layer grad/update chains racing as graph
+// nodes, shape-batched refresh waves, adaptive scheduler recording —
+// must be bitwise identical to the sequential walk, for every update
+// method, random layer/shape mix, random refresh cadence (so waves
+// interleave with non-due chains mid-run), and every pool discipline.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dataflow_step_matches_sequential_bitwise() {
+    let pools = equivalence_pools();
+    cases(12, 42, |rng, seed| {
+        // layers drawn from 1..3 shape classes so refresh waves batch
+        // some layers together and split others across waves
+        let n_shapes = 1 + rng.below(3);
+        let shape_pool: Vec<(usize, usize)> =
+            (0..n_shapes).map(|_| (8 + rng.below(17), 8 + rng.below(17))).collect();
+        let n_layers = 1 + rng.below(6);
+        let shapes: Vec<(usize, usize)> =
+            (0..n_layers).map(|_| shape_pool[rng.below(n_shapes)]).collect();
+        let method = [HostMethod::Full, HostMethod::LowRank, HostMethod::Galore][rng.below(3)];
+        let cfg = HostStepConfig {
+            method,
+            rank: 2 + rng.below(3),
+            lr: 0.05,
+            noise_eps: 1e-3,
+            sched: SchedulerConfig {
+                base_interval: 1 + rng.below(4) as u64,
+                threshold: rng.next_f32(),
+                window: 1 + rng.below(2),
+                adaptive: rng.below(2) == 0,
+                max_interval: 0,
+            },
+            seed,
+        };
+        let steps = 3 + rng.below(4);
+        // reference: the sequential walk on the serial ctx
+        let mut want_tr = HostDataflowTrainer::new(&shapes, cfg);
+        let want_losses: Vec<u32> = (0..steps)
+            .map(|_| want_tr.step_sequential(ParallelCtx::serial()).to_bits())
+            .collect();
+        let want_w: Vec<u32> = want_tr.export_weights().iter().map(|x| x.to_bits()).collect();
+        let threads = 1 + rng.below(9);
+        let spw = 1 + rng.below(8);
+        for &(fifo, steal) in pools {
+            for (label, pool) in [("fifo-pool", fifo), ("steal-pool", steal)] {
+                let ctx = ParallelCtx::with_pool(threads, pool).with_slabs_per_worker(spw);
+                let mut tr = HostDataflowTrainer::new(&shapes, cfg);
+                let losses: Vec<u32> = (0..steps)
+                    .map(|_| tr.step_dataflow(ctx, pool).unwrap().to_bits())
+                    .collect();
+                assert_eq!(
+                    losses, want_losses,
+                    "{method:?} loss trace diverged under {label} t={threads} spw={spw}"
+                );
+                let w: Vec<u32> = tr.export_weights().iter().map(|x| x.to_bits()).collect();
+                assert_eq!(
+                    w, want_w,
+                    "{method:?} final weights diverged under {label} t={threads} spw={spw}"
+                );
+            }
         }
     });
 }
