@@ -22,7 +22,7 @@ use bench_harness::{bench, BenchResult};
 use qgalore::coordinator::trainer::{TrainConfig, Trainer};
 use qgalore::coordinator::{HostDataflowTrainer, HostMethod, HostStepConfig};
 use qgalore::jsonx::Json;
-use qgalore::linalg::{engine, KernelPath, Mat, ParallelCtx, WorkerPool};
+use qgalore::linalg::{engine, KernelPath, Mat, PanelPack, ParallelCtx, WorkerPool};
 use qgalore::manifest::Manifest;
 use qgalore::optim::{BuildOptions, Method};
 use qgalore::quant;
@@ -186,6 +186,149 @@ fn microkernel_benches() {
             println!("{line}");
         }
     }
+}
+
+/// Prepacked-panel campaign benches: per-call fused dequantize (decode the
+/// quantized projection inside every product) vs the cached `PanelPack`
+/// entry points that decode once at refresh time and replay the panel on
+/// every subsequent product.  Runs the three quantized ops on the
+/// projection shapes (dim 512, rank 128), asserts every prepacked result
+/// bitwise-identical to its fused twin, then adds dense kernel-path rows
+/// (Portable vs Simd vs Simd512) so AVX-512 vs AVX2 is visible where the
+/// hardware allows.  All rows land in `BENCH_kernels.json` alongside the
+/// step-throughput trajectory in `BENCH_step.json`.
+fn kernel_benches() {
+    println!("\n== prepacked panel cache vs per-call fused dequant (dim 512, rank 128) ==");
+    let mut rng = Pcg32::seeded(11);
+    let (m, rank, n) = (512usize, 128usize, 512usize);
+    let g = Mat::randn(m, n, &mut rng);
+    let r_in = Mat::randn(rank, n, &mut rng);
+    let p4 = quant::quantize4(&rng.normal_vec(m * rank, 0.0, 0.1));
+    let pk4 = PanelPack::pack4(&p4, m, rank);
+    let w8 = quant::quantize(&rng.normal_vec(m * rank, 0.0, 0.1), 8);
+    let pk8 = PanelPack::pack8(&w8, m, rank);
+    let mut rows: Vec<(String, usize, f64, f64)> = Vec::new();
+
+    // One bench loop shared by the three quantized ops; each caller hands
+    // in its fused and prepacked bodies as plain trait-object closures.
+    let mut run_op = |label: &str,
+                      flops: usize,
+                      fused: &dyn Fn(ParallelCtx) -> Mat,
+                      prepacked: &dyn Fn(ParallelCtx) -> Mat| {
+        for t in [1usize, 8] {
+            let ctx = ParallelCtx::new(t);
+            assert_eq!(
+                prepacked(ctx).data,
+                fused(ctx).data,
+                "{label} prepacked diverged from fused"
+            );
+            let r_fused = bench(&format!("{label} fused, {t} thr"), 2, 10, || {
+                black_box(fused(ctx));
+            });
+            let r_pre = bench(&format!("{label} prepacked, {t} thr"), 2, 10, || {
+                black_box(prepacked(ctx));
+            });
+            println!(
+                "    -> {label} t={t}: fused {:.2} GFLOP/s | prepacked {:.2} GFLOP/s ({:.2}x)",
+                gflops(flops, &r_fused),
+                gflops(flops, &r_pre),
+                r_fused.mean_ms / r_pre.mean_ms
+            );
+            rows.push((label.to_string(), t, gflops(flops, &r_fused), gflops(flops, &r_pre)));
+        }
+    };
+    let flops_proj = 2 * m * rank * n;
+    run_op(
+        "dequant4_t_matmul",
+        flops_proj,
+        &|ctx| quant::dequant4_t_matmul(&p4, m, rank, &g, ctx),
+        &|ctx| quant::dequant4_t_matmul_prepacked(&p4, &pk4, m, rank, &g, ctx),
+    );
+    run_op(
+        "dequant4_matmul",
+        flops_proj,
+        &|ctx| quant::dequant4_matmul(&p4, m, rank, &r_in, ctx),
+        &|ctx| quant::dequant4_matmul_prepacked(&p4, &pk4, m, rank, &r_in, ctx),
+    );
+    run_op(
+        "dequant8_matmul",
+        flops_proj,
+        &|ctx| quant::dequant8_matmul(&w8, m, rank, &r_in, ctx),
+        &|ctx| quant::dequant8_matmul_prepacked(&w8, &pk8, m, rank, &r_in, ctx),
+    );
+
+    // Dense kernel-path rows: the MR=4 x NR=8 AVX2 tile vs the MR=4 x NR=16
+    // AVX-512 tile (which degrades to the portable NR=16 body off-hardware,
+    // so the row always exists) vs the portable NR=8 tiling.
+    println!("\n== dense kernel paths: Portable vs Simd vs Simd512 (512x512x512) ==");
+    let a = Mat::randn(512, 512, &mut rng);
+    let b = Mat::randn(512, 512, &mut rng);
+    let flops_dense = 2 * 512usize * 512 * 512;
+    let want = a.matmul_naive(&b);
+    let mut dense_rows: Vec<(String, usize, f64)> = Vec::new();
+    let mut paths = vec![KernelPath::Portable];
+    if qgalore::linalg::simd_kernel_available() {
+        paths.push(KernelPath::Simd);
+    }
+    paths.push(KernelPath::Simd512);
+    for t in [1usize, 8] {
+        let ctx = ParallelCtx::new(t);
+        let mut line = format!("    -> t={t}:");
+        for &path in &paths {
+            let r = bench(&format!("dense 512^3 {path:?}, {t} thr"), 1, 5, || {
+                black_box(engine::matmul_with_kernel(&a, &b, ctx, path));
+            });
+            assert_eq!(
+                engine::matmul_with_kernel(&a, &b, ctx, path).data,
+                want.data,
+                "{path:?} diverged from naive"
+            );
+            let gf = gflops(flops_dense, &r);
+            line.push_str(&format!(" {path:?} {gf:.2} GFLOP/s |"));
+            dense_rows.push((format!("{path:?}"), t, gf));
+        }
+        line.pop();
+        println!("{line}");
+    }
+    if !qgalore::linalg::simd512_kernel_available() {
+        println!("    (avx512f not available: Simd512 rows ran the portable NR=16 fallback)");
+    }
+
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|(op, t, f, p)| {
+            let mut row = BTreeMap::new();
+            row.insert("op".to_string(), Json::Str(op.clone()));
+            row.insert("threads".to_string(), Json::Num(*t as f64));
+            row.insert("fused_gflops".to_string(), Json::Num(*f));
+            row.insert("prepacked_gflops".to_string(), Json::Num(*p));
+            row.insert("speedup".to_string(), Json::Num(p / f));
+            Json::Obj(row)
+        })
+        .collect();
+    let dense_arr: Vec<Json> = dense_rows
+        .iter()
+        .map(|(path, t, gf)| {
+            let mut row = BTreeMap::new();
+            row.insert("path".to_string(), Json::Str(path.clone()));
+            row.insert("threads".to_string(), Json::Num(*t as f64));
+            row.insert("gflops".to_string(), Json::Num(*gf));
+            Json::Obj(row)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("kernel_campaign".to_string()));
+    root.insert("dim".to_string(), Json::Num(m as f64));
+    root.insert("rank".to_string(), Json::Num(rank as f64));
+    root.insert(
+        "avx512_hardware".to_string(),
+        Json::Bool(qgalore::linalg::simd512_kernel_available()),
+    );
+    root.insert("prepacked_vs_fused".to_string(), Json::Arr(arr));
+    root.insert("dense_paths".to_string(), Json::Arr(dense_arr));
+    std::fs::write("BENCH_kernels.json", Json::Obj(root).dump())
+        .expect("write BENCH_kernels.json");
+    println!("    wrote BENCH_kernels.json");
 }
 
 /// Dispatch-overhead microbench: per-call latency on deliberately small
@@ -373,6 +516,7 @@ fn step_benches() {
 fn main() {
     engine_benches();
     microkernel_benches();
+    kernel_benches();
     dispatch_benches();
     contention_benches();
     step_benches();

@@ -1,0 +1,50 @@
+//! Toolchain capability sniff for the AVX-512 microkernel body.
+//!
+//! The `_mm512_*` f32 intrinsics the `KernelPath::Simd512` body uses
+//! stabilized in rustc 1.89; this crate's MSRV is older.  Rather than gate
+//! on a feature flag users would have to know about, probe the compiling
+//! rustc's version and emit `qgalore_avx512_intrinsics` when the body can
+//! compile.  On older toolchains `KernelPath::Simd512` still exists and
+//! runs the portable NR=16-tiling body — same bits, narrower registers.
+//!
+//! The `rustc-check-cfg` declaration (so `cfg(qgalore_avx512_intrinsics)`
+//! doesn't trip the unexpected-cfg lint under `-D warnings`) is itself
+//! only understood by cargo >= 1.80 — the same release the lint shipped
+//! in — so it is version-gated too: older toolchains neither declare nor
+//! lint the cfg.
+
+use std::process::Command;
+
+/// Minor version of the `rustc` that will compile this crate (`RUSTC` env
+/// when cargo sets it, plain `rustc` otherwise).  `None` when the version
+/// string is unparseable — treated as "old" so we never emit a cfg the
+/// compiler might reject.
+fn rustc_minor_version() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (29483883e 2025-08-04)" — take the second field,
+    // split on '.', strip any channel suffix ("89.0-beta.3" etc.)
+    let ver = text.split_whitespace().nth(1)?;
+    let mut parts = ver.split('.');
+    let major: u32 = parts.next()?.parse().ok()?;
+    if major > 1 {
+        // a hypothetical 2.x is newer than everything we gate on
+        return Some(u32::MAX);
+    }
+    let minor_field = parts.next()?;
+    let digits: String = minor_field.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    if let Some(minor) = rustc_minor_version() {
+        if minor >= 80 {
+            println!("cargo:rustc-check-cfg=cfg(qgalore_avx512_intrinsics)");
+        }
+        if minor >= 89 {
+            println!("cargo:rustc-cfg=qgalore_avx512_intrinsics");
+        }
+    }
+}

@@ -25,7 +25,9 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
-use crate::linalg::{left_subspace_batched, Mat, ParallelCtx, WorkerPool};
+use crate::linalg::{
+    left_subspace_batched, pack_cache_enabled, Mat, PanelCache, ParallelCtx, WorkerPool,
+};
 use crate::optim::StepGraphBuilder;
 use crate::quant;
 use crate::scheduler::{SchedulerConfig, SubspaceScheduler};
@@ -79,6 +81,10 @@ struct HostLayer {
     w: Mat, // (m, n), trained
     /// INT4-stored left basis (m, r), refreshed under the scheduler
     p4: Option<quant::Quant4Tensor>,
+    /// epoch-keyed panel pack of `p4` (built at refresh; the steady-state
+    /// projection matmuls skip per-call nibble decode through it — bits
+    /// are identical with the pack on or off)
+    pack: PanelCache,
     /// low-rank momentum (r, n); reset at every refresh
     momentum: Option<Mat>,
 }
@@ -112,12 +118,22 @@ fn layer_update(layer: &mut HostLayer, cfg: TaskCfg, ctr: u64, g: &Mat) {
         g.clone()
     } else {
         let p4 = layer.p4.as_ref().expect("projected layer refreshed at step 0");
-        let lowg = quant::dequant4_t_matmul(p4, m, cfg.rank, g, cfg.ctx);
+        // the pack (built at refresh) serves every step until the next
+        // refresh; when absent/stale (cache disabled) the fused per-call
+        // decode produces the same bits
+        let pack = layer.pack.get().filter(|pk| pk.matches4(p4, m, cfg.rank));
+        let lowg = match pack {
+            Some(pk) => quant::dequant4_t_matmul_prepacked(p4, pk, m, cfg.rank, g, cfg.ctx),
+            None => quant::dequant4_t_matmul(p4, m, cfg.rank, g, cfg.ctx),
+        };
         let mom = layer.momentum.as_mut().expect("momentum reset at refresh");
         for (me, ge) in mom.data.iter_mut().zip(&lowg.data) {
             *me = 0.9 * *me + 0.1 * ge;
         }
-        quant::dequant4_matmul(p4, m, cfg.rank, mom, cfg.ctx)
+        match pack {
+            Some(pk) => quant::dequant4_matmul_prepacked(p4, pk, m, cfg.rank, mom, cfg.ctx),
+            None => quant::dequant4_matmul(p4, m, cfg.rank, mom, cfg.ctx),
+        }
     };
     for ((we, ue), ne) in layer.w.data.iter_mut().zip(&update.data).zip(&noise) {
         *we -= cfg.lr * (ue + cfg.noise_eps * (ne - 0.5));
@@ -125,16 +141,30 @@ fn layer_update(layer: &mut HostLayer, cfg: TaskCfg, ctr: u64, g: &Mat) {
 }
 
 /// Install a freshly computed basis: overlap-vs-old similarity (None
-/// before the first refresh), INT4 storage, momentum reset.
+/// before the first refresh, computed through the OLD epoch's pack when
+/// current), INT4 storage, panel repack for the new epoch, momentum
+/// reset.  Runs inside the refresh wave's member node on the dataflow
+/// path, so pack cost lands on the wave.
 fn refresh_layer(layer: &mut HostLayer, cfg: TaskCfg, new_p: Mat) -> Option<f32> {
     let sim = layer.p4.as_ref().map(|old| {
         let r_old = old.numel() / layer.m;
-        let prod = quant::dequant4_t_matmul(old, layer.m, r_old, &new_p, cfg.ctx);
+        let prod = match layer.pack.get() {
+            Some(pk) if pk.matches4(old, layer.m, r_old) => {
+                quant::dequant4_t_matmul_prepacked(old, pk, layer.m, r_old, &new_p, cfg.ctx)
+            }
+            _ => quant::dequant4_t_matmul(old, layer.m, r_old, &new_p, cfg.ctx),
+        };
         let f = prod.frobenius();
         f * f / r_old.min(new_p.cols).max(1) as f32
     });
     layer.momentum = Some(Mat::zeros(new_p.cols, layer.n));
-    layer.p4 = Some(quant::quantize4(&new_p.data));
+    let r_new = new_p.cols;
+    let q = quant::quantize4(&new_p.data);
+    layer.pack.invalidate();
+    if pack_cache_enabled() {
+        layer.pack.get_or_pack4(&q, layer.m, r_new);
+    }
+    layer.p4 = Some(q);
     sim
 }
 
@@ -169,6 +199,7 @@ impl HostDataflowTrainer {
                     y: Mat::from_vec(m, n, drng.normal_vec(m * n, 0.0, 1.0)),
                     w: Mat::from_vec(m, n, drng.normal_vec(m * n, 0.0, 0.1)),
                     p4: None,
+                    pack: PanelCache::empty(),
                     momentum: None,
                 }
             })

@@ -16,21 +16,27 @@
 //! per-call dispatch is a lock-free deque push instead of a thread spawn
 //! and the dispatch path holds no mutex at any worker count.  Inside each
 //! panel a register-blocked SIMD microkernel
-//! ([`engine::KernelPath`]: AVX2 / portable, dispatched at runtime) does
-//! the accumulation in the naive reference's exact per-element order.
-//! Same-shape subspace refreshes batch into one stacked range-finder
-//! product ([`left_subspace_batched`]); the naive `*_naive` kernels remain
-//! as the bitwise reference the parity tests (and benches) compare against.
+//! ([`engine::KernelPath`]: AVX-512 / AVX2 / portable, dispatched at
+//! runtime) does the accumulation in the naive reference's exact
+//! per-element order.  Frozen quantized projections are additionally
+//! packed once per quantization epoch into microkernel-native panels
+//! ([`packing`]), so the steady-state projection matmuls skip per-call
+//! decode entirely.  Same-shape subspace refreshes batch into one stacked
+//! range-finder product ([`left_subspace_batched`]); the naive `*_naive`
+//! kernels remain as the bitwise reference the parity tests (and benches)
+//! compare against.
 
 pub mod engine;
+pub mod packing;
 pub mod pool;
 
 pub use engine::{
     clone_pool, global_slabs_per_worker, global_threads, kernel_override, par_map, par_rows,
     set_global_slabs_per_worker, set_global_threads, set_kernel_override,
-    simd_kernel_available, KernelPath, ParallelCtx, DEFAULT_SLABS_PER_WORKER, KERNEL_ENV,
-    MAX_SLABS_PER_WORKER, SLABS_ENV, THREADS_ENV,
+    simd512_kernel_available, simd_kernel_available, KernelPath, ParallelCtx,
+    DEFAULT_SLABS_PER_WORKER, KERNEL_ENV, MAX_SLABS_PER_WORKER, SLABS_ENV, THREADS_ENV,
 };
+pub use packing::{pack_cache_enabled, set_pack_cache, PanelCache, PanelPack, PACK_CACHE_ENV};
 pub use pool::{global_pool, GraphNode, PoolStats, WorkerPool, STEAL_SEED_ENV};
 
 use crate::util::Pcg32;

@@ -1,0 +1,330 @@
+//! Prepacked dequantized panels for the steady-state projection matmuls.
+//!
+//! Q-GaLore's training loop multiplies the *same* frozen quantized
+//! projection matrix hundreds of steps in a row — subspaces converge, so
+//! refreshes are rare — yet the fused kernels in [`crate::quant`] re-decode
+//! every code and re-lay out every panel on every call.  This module packs
+//! the dequantized matrix **once per quantization epoch** into the exact
+//! slice layouts the microkernel consumes, so the hot path degenerates to
+//! plain dense panel matmuls over cached `f32` rows.
+//!
+//! # Panel layouts
+//!
+//! A [`PanelPack`] holds both orientations the trainer needs:
+//!
+//! * `fwd` — the dequantized matrix itself, `(rows, cols)` row-major.  The
+//!   prepacked forward path hands `fwd[r0*cols .. r1*cols]` straight to
+//!   `engine::panel_matmul` for each row slab, exactly where the fused path
+//!   hands its per-call scratch tile.
+//! * `tpose` — the transpose, `(cols, rows)` row-major.  The prepacked
+//!   `Pᵀ·x` path slices `tpose[j0*rows .. j1*rows]` per column slab, the
+//!   same layout the fused transpose path decodes per call.
+//!
+//! # Why bits are preserved
+//!
+//! Packing uses the tensors' own `dequant_at` — literally the same
+//! `(code − zero) × scale` expression the fused closures evaluate — and the
+//! fused bodies' row-group loops only *partition* rows, never reorder the
+//! ascending-k accumulation inside the microkernel.  Handing the microkernel
+//! a cached panel instead of a freshly decoded one therefore yields
+//! bit-identical outputs by construction; `tests/parity.rs` and the golden
+//! trace pin this across the tail-class sweep and whole training runs.
+//!
+//! # The epoch protocol
+//!
+//! Every quantized tensor is stamped with a process-unique epoch at
+//! creation ([`crate::quant`]'s `fresh_epoch`), and a [`PanelPack`] records
+//! the epoch it was built from.  `matches*` compares epoch **and** shape,
+//! so a refreshed projection (new tensor, new epoch) can never be served a
+//! stale pack — even if its values happen to coincide.  [`PanelCache`] is
+//! the one-slot memo built on that check: `get_or_pack*` repacks exactly
+//! when the epoch or shape moved, and is a cache hit otherwise.
+//!
+//! The cache is a pure speed artifact: [`pack_cache_enabled`] (env
+//! [`PACK_CACHE_ENV`], default on) lets CI and benches force the per-call
+//! decode path, and the golden trace runs both settings to prove the bits
+//! don't care.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::quant::{Quant2Tensor, Quant4Tensor, QuantTensor};
+use crate::util::env_parse;
+
+/// Env var disabling the projection panel cache process-wide (`0`/`off`/
+/// `false`); default is enabled.  A malformed value warns and keeps the
+/// default, via the shared warn-on-malformed env parser.
+pub const PACK_CACHE_ENV: &str = "QGALORE_PACK_CACHE";
+
+const CACHE_UNSET: u8 = 0;
+const CACHE_ON: u8 = 1;
+const CACHE_OFF: u8 = 2;
+
+/// Process-global cache switch; `CACHE_UNSET` until first resolution
+/// (which consults [`PACK_CACHE_ENV`]), mirroring the engine's
+/// `KERNEL_OVERRIDE` resolve-once protocol.
+static PACK_CACHE: AtomicU8 = AtomicU8::new(CACHE_UNSET);
+
+/// `QGALORE_PACK_CACHE`-style value -> enabled flag, if well-formed.
+fn parse_pack_cache(s: &str) -> Option<bool> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "1" | "on" | "true" | "yes" => Some(true),
+        "0" | "off" | "false" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+/// Force the panel cache on or off process-wide (overrides the env var;
+/// the golden trace uses this to pin cache-on == cache-off bitwise).
+pub fn set_pack_cache(enabled: bool) {
+    PACK_CACHE.store(if enabled { CACHE_ON } else { CACHE_OFF }, Ordering::Relaxed);
+}
+
+/// Whether projection consumers should build/use [`PanelCache`] packs
+/// (resolving [`PACK_CACHE_ENV`] on first use; default `true`).  Bits are
+/// identical either way — this only trades pack memory for decode time.
+pub fn pack_cache_enabled() -> bool {
+    match PACK_CACHE.load(Ordering::Relaxed) {
+        CACHE_UNSET => {
+            let on = env_parse(PACK_CACHE_ENV, "on|off|1|0|true|false", parse_pack_cache)
+                .unwrap_or(true);
+            let code = if on { CACHE_ON } else { CACHE_OFF };
+            // racing first-callers agree on the env value; an explicit
+            // set_pack_cache always wins afterwards
+            let _ =
+                PACK_CACHE.compare_exchange(CACHE_UNSET, code, Ordering::Relaxed, Ordering::Relaxed);
+            PACK_CACHE.load(Ordering::Relaxed) == CACHE_ON
+        }
+        c => c == CACHE_ON,
+    }
+}
+
+/// A dequantized projection packed into the microkernel's slice layouts,
+/// in both orientations, stamped with the source tensor's epoch.
+#[derive(Clone)]
+pub struct PanelPack {
+    rows: usize,
+    cols: usize,
+    epoch: u64,
+    /// `(rows, cols)` row-major — the dequantized matrix itself.
+    fwd: Vec<f32>,
+    /// `(cols, rows)` row-major — the dequantized transpose.
+    tpose: Vec<f32>,
+}
+
+impl std::fmt::Debug for PanelPack {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PanelPack")
+            .field("rows", &self.rows)
+            .field("cols", &self.cols)
+            .field("epoch", &self.epoch)
+            .finish_non_exhaustive()
+    }
+}
+
+impl PanelPack {
+    /// Decode-once shared body: `deq(idx)` over the row-major index space.
+    fn build(rows: usize, cols: usize, epoch: u64, deq: impl Fn(usize) -> f32) -> Self {
+        let mut fwd = vec![0f32; rows * cols];
+        let mut tpose = vec![0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = deq(r * cols + c);
+                fwd[r * cols + c] = v;
+                tpose[c * rows + r] = v;
+            }
+        }
+        PanelPack { rows, cols, epoch, fwd, tpose }
+    }
+
+    /// Pack an INT4 tensor viewed as a `(rows, cols)` row-major matrix.
+    pub fn pack4(w: &Quant4Tensor, rows: usize, cols: usize) -> Self {
+        assert_eq!(w.numel(), rows * cols, "pack4 shape mismatch");
+        Self::build(rows, cols, w.epoch(), |idx| w.dequant_at(idx))
+    }
+
+    /// Pack an INT8/INT2-coded [`QuantTensor`] (unpacked i8 codes).
+    pub fn pack8(w: &QuantTensor, rows: usize, cols: usize) -> Self {
+        assert_eq!(w.q.len(), rows * cols, "pack8 shape mismatch");
+        Self::build(rows, cols, w.epoch(), |idx| w.dequant_at(idx))
+    }
+
+    /// Pack a sub-byte 2-bit tensor viewed as `(rows, cols)` row-major.
+    pub fn pack2(w: &Quant2Tensor, rows: usize, cols: usize) -> Self {
+        assert_eq!(w.numel(), rows * cols, "pack2 shape mismatch");
+        Self::build(rows, cols, w.epoch(), |idx| w.dequant_at(idx))
+    }
+
+    /// The dequantized matrix, `(rows, cols)` row-major.
+    pub fn fwd(&self) -> &[f32] {
+        &self.fwd
+    }
+
+    /// The dequantized transpose, `(cols, rows)` row-major.
+    pub fn tpose(&self) -> &[f32] {
+        &self.tpose
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Epoch of the tensor this pack was decoded from.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Whether this pack is current for `w` viewed as `(rows, cols)`.
+    pub fn matches4(&self, w: &Quant4Tensor, rows: usize, cols: usize) -> bool {
+        self.epoch == w.epoch() && self.rows == rows && self.cols == cols
+    }
+
+    /// Whether this pack is current for `w` viewed as `(rows, cols)`.
+    pub fn matches8(&self, w: &QuantTensor, rows: usize, cols: usize) -> bool {
+        self.epoch == w.epoch() && self.rows == rows && self.cols == cols
+    }
+
+    /// Whether this pack is current for `w` viewed as `(rows, cols)`.
+    pub fn matches2(&self, w: &Quant2Tensor, rows: usize, cols: usize) -> bool {
+        self.epoch == w.epoch() && self.rows == rows && self.cols == cols
+    }
+
+    /// Heap bytes held by the pack (both orientations).
+    pub fn pack_bytes(&self) -> usize {
+        (self.fwd.len() + self.tpose.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// One-slot epoch-keyed memo of the current [`PanelPack`] for a layer's
+/// projection.  Repacks exactly when the source tensor's epoch or shape
+/// moved (i.e. at subspace refreshes); every other step is a cache hit.
+#[derive(Clone, Debug, Default)]
+pub struct PanelCache {
+    slot: Option<PanelPack>,
+}
+
+impl PanelCache {
+    /// An empty cache (packs on first use).
+    pub const fn empty() -> Self {
+        PanelCache { slot: None }
+    }
+
+    /// The cached pack for `w`, repacking if stale or absent.
+    pub fn get_or_pack4(&mut self, w: &Quant4Tensor, rows: usize, cols: usize) -> &PanelPack {
+        if !self.slot.as_ref().is_some_and(|p| p.matches4(w, rows, cols)) {
+            self.slot = Some(PanelPack::pack4(w, rows, cols));
+        }
+        self.slot.as_ref().unwrap()
+    }
+
+    /// The cached pack for `w`, repacking if stale or absent.
+    pub fn get_or_pack8(&mut self, w: &QuantTensor, rows: usize, cols: usize) -> &PanelPack {
+        if !self.slot.as_ref().is_some_and(|p| p.matches8(w, rows, cols)) {
+            self.slot = Some(PanelPack::pack8(w, rows, cols));
+        }
+        self.slot.as_ref().unwrap()
+    }
+
+    /// The cached pack for `w`, repacking if stale or absent.
+    pub fn get_or_pack2(&mut self, w: &Quant2Tensor, rows: usize, cols: usize) -> &PanelPack {
+        if !self.slot.as_ref().is_some_and(|p| p.matches2(w, rows, cols)) {
+            self.slot = Some(PanelPack::pack2(w, rows, cols));
+        }
+        self.slot.as_ref().unwrap()
+    }
+
+    /// The current pack, if any (no staleness check — pair with `matches*`).
+    pub fn get(&self) -> Option<&PanelPack> {
+        self.slot.as_ref()
+    }
+
+    /// Drop the cached pack (next `get_or_pack*` rebuilds).
+    pub fn invalidate(&mut self) {
+        self.slot = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{dequantize, dequantize2, dequantize4, quantize, quantize2, quantize4};
+    use crate::util::Pcg32;
+
+    fn vals(n: usize, seed: u64) -> Vec<f32> {
+        Pcg32::seeded(seed).normal_vec(n, 0.0, 0.5)
+    }
+
+    #[test]
+    fn pack_matches_dequantize_reference() {
+        let (rows, cols) = (16, 16);
+        let x = vals(rows * cols, 1);
+        let q4 = quantize4(&x);
+        let p = PanelPack::pack4(&q4, rows, cols);
+        let ref4 = dequantize4(&q4);
+        assert_eq!(p.fwd(), &ref4[..], "fwd is the dequantized matrix, bitwise");
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(p.tpose()[c * rows + r], ref4[r * cols + c]);
+            }
+        }
+        let q8 = quantize(&x, 8);
+        assert_eq!(PanelPack::pack8(&q8, rows, cols).fwd(), &dequantize(&q8)[..]);
+        let q2 = quantize2(&x);
+        assert_eq!(PanelPack::pack2(&q2, rows, cols).fwd(), &dequantize2(&q2)[..]);
+        assert_eq!(p.rows(), rows);
+        assert_eq!(p.cols(), cols);
+        assert_eq!(p.epoch(), q4.epoch());
+        assert_eq!(p.pack_bytes(), 2 * rows * cols * 4);
+    }
+
+    #[test]
+    fn cache_hits_on_same_epoch_and_repacks_on_refresh() {
+        let (rows, cols) = (16, 16);
+        let x = vals(rows * cols, 2);
+        let q = quantize4(&x);
+        let mut cache = PanelCache::empty();
+        assert!(cache.get().is_none());
+        let ptr = cache.get_or_pack4(&q, rows, cols).fwd().as_ptr();
+        // same tensor, same epoch: a hit — the allocation must not move
+        assert_eq!(cache.get_or_pack4(&q, rows, cols).fwd().as_ptr(), ptr);
+        assert!(cache.get().unwrap().matches4(&q, rows, cols));
+        // a refresh re-quantizes: new tensor, new epoch, even for the SAME
+        // values — the stale pack must be replaced
+        let refreshed = quantize4(&x);
+        assert!(!cache.get().unwrap().matches4(&refreshed, rows, cols));
+        let repacked = cache.get_or_pack4(&refreshed, rows, cols);
+        assert_eq!(repacked.epoch(), refreshed.epoch());
+        // in-place mutation protocol: bump_epoch invalidates too
+        let mut q = quantize4(&x);
+        let mut cache = PanelCache::empty();
+        cache.get_or_pack4(&q, rows, cols);
+        q.bump_epoch();
+        assert!(!cache.get().unwrap().matches4(&q, rows, cols));
+    }
+
+    #[test]
+    fn cache_repacks_on_shape_change() {
+        let q = quantize4(&vals(256, 3));
+        let mut cache = PanelCache::empty();
+        cache.get_or_pack4(&q, 16, 16);
+        assert!(!cache.get().unwrap().matches4(&q, 32, 8), "same tensor, new view");
+        let p = cache.get_or_pack4(&q, 32, 8);
+        assert_eq!((p.rows(), p.cols()), (32, 8));
+        cache.invalidate();
+        assert!(cache.get().is_none());
+    }
+
+    #[test]
+    fn pack_cache_env_parsing() {
+        for on in ["1", "on", "true", "yes", " ON\n"] {
+            assert_eq!(parse_pack_cache(on), Some(true), "{on:?}");
+        }
+        for off in ["0", "off", "false", "no", " Off\n"] {
+            assert_eq!(parse_pack_cache(off), Some(false), "{off:?}");
+        }
+        assert_eq!(parse_pack_cache("maybe"), None);
+    }
+}

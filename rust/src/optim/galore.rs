@@ -26,10 +26,11 @@ use std::sync::Mutex;
 use anyhow::{anyhow, Result};
 
 use crate::linalg::{
-    left_subspace_batched, par_map, subspace_overlap_with, Mat, ParallelCtx, WorkerPool,
+    left_subspace_batched, pack_cache_enabled, par_map, subspace_overlap_with, Mat, PanelCache,
+    ParallelCtx, WorkerPool,
 };
 use crate::manifest::ConfigEntry;
-use crate::quant::{self, Adam8State, Quant4Tensor, QuantTensor};
+use crate::quant::{self, Adam8State, Quant2Tensor, Quant4Tensor, QuantTensor};
 use crate::runtime::HostTensor;
 use crate::scheduler::{SchedulerConfig, SubspaceScheduler};
 use crate::util::Pcg32;
@@ -67,11 +68,17 @@ struct Layer {
     w_fp: Option<FpTensor>,
     w_q: Option<QuantTensor>,
     // projection storage (at most one is Some): fp for GaLore / the 16-bit
-    // ablation, nibble-packed INT4 for default Q-GaLore, generic i8-coded
-    // QuantTensor for the 2-/8-bit Figure-3 ablation widths
+    // ablation, nibble-packed INT4 for default Q-GaLore, sub-byte-packed
+    // 2-bit for the Figure-3 stress width, generic i8-coded QuantTensor
+    // for the 8-bit ablation width
     p_fp: Option<Mat>,
     p_q4: Option<Quant4Tensor>,
+    p_q2: Option<Quant2Tensor>,
     p_q: Option<QuantTensor>,
+    // epoch-keyed dequantized panel pack of the current projection (speed
+    // cache only — rebuilt at refresh, not counted by `live_bytes`, and
+    // never consulted when stale, so bits are pack-independent)
+    pack: PanelCache,
     // low-rank Adam state storage
     st_fp: Option<AdamFp>,
     st_8: Option<Adam8State>,
@@ -126,7 +133,9 @@ impl Galore {
                     w_q: None,
                     p_fp: None,
                     p_q4: None,
+                    p_q2: None,
                     p_q: None,
+                    pack: PanelCache::empty(),
                     st_fp: Some(AdamFp::zeros(state_numel)),
                     st_8: None,
                 },
@@ -138,7 +147,9 @@ impl Galore {
                     w_q: None,
                     p_fp: None,
                     p_q4: None,
+                    p_q2: None,
                     p_q: None,
+                    pack: PanelCache::empty(),
                     st_fp: None,
                     st_8: Some(Adam8State::zeros(state_numel)),
                 },
@@ -150,7 +161,9 @@ impl Galore {
                     w_q: Some(quant::quantize(&t.data, 8)),
                     p_fp: None,
                     p_q4: None,
+                    p_q2: None,
                     p_q: None,
+                    pack: PanelCache::empty(),
                     st_fp: None,
                     st_8: Some(Adam8State::zeros(state_numel)),
                 },
@@ -295,9 +308,11 @@ fn update_artifact(cfg: LayerTaskCfg, m: usize, n: usize) -> String {
 /// the layer's outgoing projection (None before the first refresh) —
 /// the quantity the paper's "cosine similarity between adjacent
 /// projection matrices" measures modulo the within-subspace rotation
-/// that randomized solvers leave free. INT4-stored projections go
-/// through the fused `dequant4_t_matmul`, so the old basis is never
-/// materialized in fp32.
+/// that randomized solvers leave free. Quantized-stored projections go
+/// through the fused `dequant*_t_matmul`, so the old basis is never
+/// materialized in fp32 — except via the layer's panel pack when one is
+/// current (built at the *previous* refresh), which skips even the
+/// per-call decode.
 fn overlap_with_old(layer: &Layer, new_p: &Mat, pool: ParallelCtx) -> Option<f32> {
     if let Some(p) = &layer.p_fp {
         return Some(subspace_overlap_with(p, new_p, pool));
@@ -308,33 +323,74 @@ fn overlap_with_old(layer: &Layer, new_p: &Mat, pool: ParallelCtx) -> Option<f32
     };
     if let Some(q) = &layer.p_q4 {
         let r_old = q.numel() / layer.m;
-        return Some(overlap(
-            quant::dequant4_t_matmul(q, layer.m, r_old, new_p, pool),
-            r_old,
-        ));
+        let prod = match layer.pack.get() {
+            Some(pk) if pk.matches4(q, layer.m, r_old) => {
+                quant::dequant4_t_matmul_prepacked(q, pk, layer.m, r_old, new_p, pool)
+            }
+            _ => quant::dequant4_t_matmul(q, layer.m, r_old, new_p, pool),
+        };
+        return Some(overlap(prod, r_old));
     }
-    // generic-bit ablation storage: same fused discipline, i8 codes
+    if let Some(q) = &layer.p_q2 {
+        let r_old = q.numel() / layer.m;
+        let prod = match layer.pack.get() {
+            Some(pk) if pk.matches2(q, layer.m, r_old) => {
+                quant::dequant2_t_matmul_prepacked(q, pk, layer.m, r_old, new_p, pool)
+            }
+            _ => quant::dequant2_t_matmul(q, layer.m, r_old, new_p, pool),
+        };
+        return Some(overlap(prod, r_old));
+    }
+    // 8-bit ablation storage: same fused discipline, i8 codes
     layer.p_q.as_ref().map(|q| {
         let r_old = q.numel() / layer.m;
-        overlap(quant::dequant8_t_matmul(q, layer.m, r_old, new_p, pool), r_old)
+        let prod = match layer.pack.get() {
+            Some(pk) if pk.matches8(q, layer.m, r_old) => {
+                quant::dequant8_t_matmul_prepacked(q, pk, layer.m, r_old, new_p, pool)
+            }
+            _ => quant::dequant8_t_matmul(q, layer.m, r_old, new_p, pool),
+        };
+        overlap(prod, r_old)
     })
 }
 
-/// Store a freshly computed basis in the layer's storage format.
+/// Store a freshly computed basis in the layer's storage format, and
+/// rebuild the layer's panel pack for the new epoch (unless the cache is
+/// disabled).  Runs once per refresh — inside the refresh wave's member
+/// node on the dataflow path, so the pack cost lands on the wave, not on
+/// the steady-state steps that reap it.
 fn store_projection(layer: &mut Layer, cfg: LayerTaskCfg, new_p: Mat) {
+    let r_new = new_p.cols;
+    layer.pack.invalidate();
     match cfg.kind {
         GaloreKind::Fp | GaloreKind::Bit8 => layer.p_fp = Some(new_p),
         GaloreKind::Quantized => {
             if cfg.proj_bits >= 16 {
                 layer.p_fp = Some(new_p);
             } else if cfg.proj_bits == 4 {
-                layer.p_q4 = Some(quant::quantize4(&new_p.data));
+                let q = quant::quantize4(&new_p.data);
+                if pack_cache_enabled() {
+                    layer.pack.get_or_pack4(&q, layer.m, r_new);
+                }
+                layer.p_q4 = Some(q);
+            } else if cfg.proj_bits == 2 {
+                // Figure 3 stress width: sub-byte packed, 4 codes/byte,
+                // so `live_bytes` reports a quarter of the i8 footprint.
+                let q = quant::quantize2(&new_p.data);
+                if pack_cache_enabled() {
+                    layer.pack.get_or_pack2(&q, layer.m, r_new);
+                }
+                layer.p_q2 = Some(q);
             } else {
-                // Figure 3 ablation bit widths (2 / 8): stored PACKED
-                // as a generic QuantTensor and applied through the
-                // fused dequant paths, so `live_bytes` reports the
-                // packed size the ablation measures — not an fp32 copy.
-                layer.p_q = Some(quant::quantize(&new_p.data, cfg.proj_bits));
+                // 8-bit ablation width: stored PACKED as a generic
+                // QuantTensor and applied through the fused dequant
+                // paths, so `live_bytes` reports the packed size the
+                // ablation measures — not an fp32 copy.
+                let q = quant::quantize(&new_p.data, cfg.proj_bits);
+                if pack_cache_enabled() {
+                    layer.pack.get_or_pack8(&q, layer.m, r_new);
+                }
+                layer.p_q = Some(q);
             }
         }
     }
@@ -411,15 +467,20 @@ fn run_layer_update(
         }
         GaloreKind::Quantized => {
             // The INT4 artifact path requires packed nibbles; the
-            // ablation storages (generic i8 codes or fp32) re-pack on
-            // the fly (hot path stays INT4 in the default config).
-            let (p4, ps, pz) = match (&layer.p_q4, &layer.p_q, &layer.p_fp) {
-                (Some(q), _, _) => (q.packed.clone(), q.scale.clone(), q.zero.clone()),
-                (None, Some(q), _) => {
+            // ablation storages (sub-byte 2-bit, generic i8 codes, or
+            // fp32) re-pack on the fly (hot path stays INT4 in the
+            // default config).
+            let (p4, ps, pz) = match (&layer.p_q4, &layer.p_q2, &layer.p_q, &layer.p_fp) {
+                (Some(q), _, _, _) => (q.packed.clone(), q.scale.clone(), q.zero.clone()),
+                (None, Some(q), _, _) => {
+                    let q4 = quant::quantize4(&quant::dequantize2(q));
+                    (q4.packed, q4.scale, q4.zero)
+                }
+                (None, None, Some(q), _) => {
                     let q4 = quant::quantize4(&quant::dequantize(q));
                     (q4.packed, q4.scale, q4.zero)
                 }
-                (None, None, Some(pf)) => {
+                (None, None, None, Some(pf)) => {
                     let q = quant::quantize4(&pf.data);
                     (q.packed, q.scale, q.zero)
                 }
@@ -769,9 +830,16 @@ impl Optimizer for Galore {
             if let Some(p) = &l.p_q4 {
                 b += p.storage_bytes() as u64;
             }
+            if let Some(p) = &l.p_q2 {
+                b += p.storage_bytes() as u64;
+            }
             if let Some(p) = &l.p_q {
                 b += p.storage_bytes() as u64;
             }
+            // l.pack is deliberately NOT counted: the paper's memory
+            // accounting measures what training *requires* resident;
+            // the panel pack is an optional speed cache (off via
+            // QGALORE_PACK_CACHE=0 with identical bits).
             if let Some(s) = &l.st_fp {
                 b += s.bytes();
             }

@@ -11,9 +11,52 @@
 //! loops use reciprocal-multiply and magic-number rounding; both can differ
 //! from the oracle by one code at exact tie boundaries, which every
 //! cross-check (tests, integration) budgets for.
+//!
+//! # Storage formats and the epoch protocol
+//!
+//! Three packed formats carry the paper's bit-width matrix: [`QuantTensor`]
+//! (i8 codes, the INT8 weight / 8-bit ablation format), [`Quant4Tensor`]
+//! (two nibble codes per byte, the §3.3 projection format), and
+//! [`Quant2Tensor`] (four 2-bit codes per byte, the Figure-3 2-bit
+//! ablation).  Every tensor carries a process-unique **quantization epoch**
+//! stamped at construction (each `quantize*` call draws a fresh one; an
+//! in-place mutation must call `bump_epoch`).  The epoch is how derived
+//! caches — the [`crate::linalg::packing`] panel packs — know whether they
+//! still describe the tensor's contents: a subspace refresh produces a new
+//! tensor with a new epoch, so a pack keyed to the old epoch can never be
+//! read against the new codes (the `*_prepacked` entry points assert the
+//! match).  `Clone` keeps the epoch: identical codes, identical decode.
+//!
+//! # Fused vs prepacked application
+//!
+//! The `dequant*_matmul` family applies packed tensors without a full fp32
+//! copy, decoding bounded tiles per worker (see the fused section below).
+//! In Q-GaLore's steady state the SAME frozen projection multiplies
+//! hundreds of consecutive gradients between refreshes, so the
+//! `*_prepacked` variants skip even the per-call decode: a
+//! [`crate::linalg::packing::PanelPack`] decodes once at refresh time
+//! (both orientations, identical `(code - zero) * scale` arithmetic via
+//! `dequant_at`) and every later call feeds the microkernel the cached
+//! panels directly.  Decode timing never touches per-element accumulation
+//! order, so fused and prepacked results are bitwise identical — asserted
+//! across the tail-class shape sweep in `tests/parity.rs` and the
+//! scheduler-equivalence properties in `tests/proptests.rs`.
 
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::linalg::packing::PanelPack;
 use crate::linalg::{engine, Mat, ParallelCtx};
 use crate::util::Pcg32;
+
+/// Monotone source of quantization epochs.  Starts at 1 so 0 can never
+/// collide with a real epoch (handy as a sentinel in caches).
+static NEXT_EPOCH: AtomicU64 = AtomicU64::new(1);
+
+/// Draw a process-unique epoch for a freshly produced code buffer.
+fn fresh_epoch() -> u64 {
+    NEXT_EPOCH.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Paper §3.1: block size 256 everywhere; tensors smaller than one block use
 /// a single block of their own size.
@@ -71,9 +114,19 @@ pub struct QuantTensor {
     pub zero: Vec<f32>,
     pub bits: u32,
     pub block: usize,
+    /// Quantization epoch (see the module docs): private so no code buffer
+    /// can change identity without the epoch moving with it.
+    epoch: u64,
 }
 
 impl QuantTensor {
+    /// Assemble a tensor from raw parts (checkpoint IO, artifact outputs).
+    /// Stamps a fresh epoch — the parts are a new code buffer as far as
+    /// any panel cache is concerned.
+    pub fn new(q: Vec<i8>, scale: Vec<f32>, zero: Vec<f32>, bits: u32, block: usize) -> Self {
+        QuantTensor { q, scale, zero, bits, block, epoch: fresh_epoch() }
+    }
+
     pub fn numel(&self) -> usize {
         self.q.len()
     }
@@ -85,6 +138,27 @@ impl QuantTensor {
     /// Storage bytes actually held by this tensor (codes + per-block stats).
     pub fn storage_bytes(&self) -> usize {
         self.q.len() + self.scale.len() * 4 + self.zero.len() * 4
+    }
+
+    /// The quantization epoch this code buffer was stamped with.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Re-stamp after an in-place mutation of codes or stats, so stale
+    /// panel packs keyed to the old epoch can never be read against the
+    /// new contents.
+    pub fn bump_epoch(&mut self) {
+        self.epoch = fresh_epoch();
+    }
+
+    /// Decode the element at flat index `idx` — THE decode arithmetic
+    /// (`(code - zero) * scale`), shared verbatim by the fused kernels and
+    /// the panel packer so they cannot drift.
+    #[inline]
+    pub fn dequant_at(&self, idx: usize) -> f32 {
+        let bi = idx / self.block;
+        (self.q[idx] as f32 - self.zero[bi]) * self.scale[bi]
     }
 }
 
@@ -109,7 +183,7 @@ pub fn quantize(x: &[f32], bits: u32) -> QuantTensor {
         scale.push(s);
         zero.push(z);
     }
-    QuantTensor { q, scale, zero, bits, block }
+    QuantTensor { q, scale, zero, bits, block, epoch: fresh_epoch() }
 }
 
 /// Stochastic-rounding quantization (paper §3.4): floor(v + u), u ~ U[0,1).
@@ -153,7 +227,7 @@ pub fn sr_quantize_with(x: &[f32], bits: u32, rng: &mut Pcg32, ctx: ParallelCtx)
             .collect()
     });
     let q: Vec<i8> = chunks.into_iter().flatten().collect();
-    QuantTensor { q, scale, zero, bits, block }
+    QuantTensor { q, scale, zero, bits, block, epoch: fresh_epoch() }
 }
 
 /// Chunk width of [`uniform_noise`]: each chunk draws from its own PCG
@@ -205,6 +279,8 @@ pub struct Quant4Tensor {
     pub block: usize,
     /// logical element count (odd-length tensors pad the final high nibble)
     pub numel: usize,
+    /// Quantization epoch (see the module docs).
+    epoch: u64,
 }
 
 impl Quant4Tensor {
@@ -214,6 +290,24 @@ impl Quant4Tensor {
 
     pub fn storage_bytes(&self) -> usize {
         self.packed.len() + self.scale.len() * 4 + self.zero.len() * 4
+    }
+
+    /// The quantization epoch this code buffer was stamped with.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Re-stamp after an in-place mutation (see [`QuantTensor::bump_epoch`]).
+    pub fn bump_epoch(&mut self) {
+        self.epoch = fresh_epoch();
+    }
+
+    /// Decode the element at flat index `idx` — shared by the fused
+    /// kernels and the panel packer (one arithmetic, zero drift).
+    #[inline]
+    pub fn dequant_at(&self, idx: usize) -> f32 {
+        let bi = idx / self.block;
+        (code4_at(&self.packed, idx) as f32 - self.zero[bi]) * self.scale[bi]
     }
 }
 
@@ -249,11 +343,115 @@ pub fn quantize4(x: &[f32]) -> Quant4Tensor {
         zero: t.zero,
         block: t.block,
         numel: x.len(),
+        epoch: fresh_epoch(),
     }
 }
 
 pub fn dequantize4(t: &Quant4Tensor) -> Vec<f32> {
     let mut codes = unpack_int4(&t.packed);
+    codes.truncate(t.numel);
+    let mut out = Vec::with_capacity(codes.len());
+    for (bi, blk) in codes.chunks(t.block).enumerate() {
+        let (s, z) = (t.scale[bi], t.zero[bi]);
+        for &c in blk {
+            out.push((c as f32 - z) * s);
+        }
+    }
+    out
+}
+
+/// 2-bit sub-byte-packed tensor: four codes per byte, ascending element
+/// index from the least-significant bit pair, offset-binary within the
+/// pair (code + 2, so codes −2..=1 pack as 0..=3).  The Figure-3 2-bit
+/// ablation projection format — previously stored one i8 per code, 4× the
+/// bytes this layout needs.
+#[derive(Clone, Debug)]
+pub struct Quant2Tensor {
+    pub packed: Vec<u8>,
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+    pub block: usize,
+    /// logical element count (lengths not divisible by 4 pad the final
+    /// byte's high pairs with code 0)
+    pub numel: usize,
+    /// Quantization epoch (see the module docs).
+    epoch: u64,
+}
+
+impl Quant2Tensor {
+    pub fn numel(&self) -> usize {
+        self.numel
+    }
+
+    pub fn nblocks(&self) -> usize {
+        self.scale.len()
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.packed.len() + self.scale.len() * 4 + self.zero.len() * 4
+    }
+
+    /// The quantization epoch this code buffer was stamped with.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Re-stamp after an in-place mutation (see [`QuantTensor::bump_epoch`]).
+    pub fn bump_epoch(&mut self) {
+        self.epoch = fresh_epoch();
+    }
+
+    /// Decode the element at flat index `idx` — shared by the fused
+    /// kernels and the panel packer.
+    #[inline]
+    pub fn dequant_at(&self, idx: usize) -> f32 {
+        let bi = idx / self.block;
+        (code2_at(&self.packed, idx) as f32 - self.zero[bi]) * self.scale[bi]
+    }
+}
+
+/// Pack 2-bit codes four to a byte (codes must lie in −2..=1, the
+/// `qrange(2)` interval).  Lengths not divisible by 4 pad trailing pairs
+/// with code 0; `unpack_int2` therefore returns a multiple of 4 and
+/// callers truncate to the logical length.
+pub fn pack_int2(codes: &[i8]) -> Vec<u8> {
+    codes
+        .chunks(4)
+        .map(|p| {
+            let mut byte = 0u8;
+            for (i, &c) in p.iter().enumerate() {
+                byte |= (((c + 2) as u8) & 0x3) << (2 * i);
+            }
+            byte
+        })
+        .collect()
+}
+
+pub fn unpack_int2(packed: &[u8]) -> Vec<i8> {
+    let mut out = Vec::with_capacity(packed.len() * 4);
+    for &b in packed {
+        for i in 0..4 {
+            out.push(((b >> (2 * i)) & 0x3) as i8 - 2);
+        }
+    }
+    out
+}
+
+/// Quantize to 2 bits and sub-byte-pack (the Figure-3 ablation format).
+pub fn quantize2(x: &[f32]) -> Quant2Tensor {
+    let t = quantize(x, 2);
+    Quant2Tensor {
+        packed: pack_int2(&t.q),
+        scale: t.scale,
+        zero: t.zero,
+        block: t.block,
+        numel: x.len(),
+        epoch: fresh_epoch(),
+    }
+}
+
+pub fn dequantize2(t: &Quant2Tensor) -> Vec<f32> {
+    let mut codes = unpack_int2(&t.packed);
     codes.truncate(t.numel);
     let mut out = Vec::with_capacity(codes.len());
     for (bi, blk) in codes.chunks(t.block).enumerate() {
@@ -277,20 +475,30 @@ pub fn dequantize4(t: &Quant4Tensor) -> Vec<f32> {
 //
 // Submission rides `engine::par_rows`, which hands the work-stealing pool
 // one task per disjoint output slab — over-decomposed since the Chase-Lev
-// rewrite (~`slabs_per_worker` slabs per budgeted worker), so a straggler
-// dequant slab is stolen rather than serializing the wave.  Each task owns
-// its slab AND its own dequant scratch (allocated inside the task body),
-// so a stolen task dequantizes into thread-local scratch wherever it lands
-// and no steal interleaving can alias another worker's panel.  The `deq`
-// closures index PACKED storage by absolute flat element index and the
-// row-group/sub-panel walks below are keyed by absolute output position,
-// so slab boundaries change only who decodes which rows — never a decoded
-// value or the per-element ascending-k accumulation order, both of which
-// match `dequantize* -> Mat::*_naive`.  Parity with the unfused reference
-// is therefore bitwise for any worker count, any slab count, queue
-// discipline (FIFO / mutex-deque baselines or Chase-Lev stealing), and
-// steal order (asserted by tests/parity.rs and the scheduler-equivalence
-// property in tests/proptests.rs).
+// rewrite (cost-model slab counts, or the pinned `slabs_per_worker`
+// multiplier), so a straggler dequant slab is stolen rather than
+// serializing the wave.  Each task owns its slab AND dequantizes into a
+// per-thread scratch buffer (`with_dequant_scratch`: one thread-local
+// allocation reused across every task a worker ever runs, instead of a
+// fresh Vec per stolen slab), so wherever a task lands it writes only
+// that thread's scratch and no steal interleaving can alias another
+// worker's panel.  Every scratch element a tile reads is overwritten
+// first, so reuse is invisible in the values.  The `deq` closures decode
+// PACKED storage by absolute flat element index (via the tensors'
+// `dequant_at`) and the row-group/sub-panel walks below are keyed by
+// absolute output position, so slab boundaries change only who decodes
+// which rows — never a decoded value or the per-element ascending-k
+// accumulation order, both of which match `dequantize* -> Mat::*_naive`.
+// Parity with the unfused reference is therefore bitwise for any worker
+// count, any slab count, queue discipline (FIFO / mutex-deque baselines
+// or Chase-Lev stealing), and steal order (asserted by tests/parity.rs
+// and the scheduler-equivalence property in tests/proptests.rs).
+//
+// The `*_prepacked` variants skip the decode entirely: a PanelPack built
+// at refresh time (same `dequant_at` arithmetic, epoch-checked against
+// the tensor) IS the decoded panel, in both orientations, so each call
+// reduces to `par_rows` + the microkernel over cached rows.  Identical
+// panel values + identical accumulation order = identical bits.
 // ---------------------------------------------------------------------------
 
 /// Decode the INT4 code at flat index `idx` from a nibble-packed buffer.
@@ -301,10 +509,43 @@ fn code4_at(packed: &[u8], idx: usize) -> i8 {
     nib as i8 - 8
 }
 
+/// Decode the 2-bit code at flat index `idx` from a sub-byte-packed buffer.
+#[inline]
+fn code2_at(packed: &[u8], idx: usize) -> i8 {
+    let b = packed[idx / 4];
+    ((b >> (2 * (idx % 4))) & 0x3) as i8 - 2
+}
+
 /// Rows of dequantized scratch a plain-orientation worker feeds the
 /// microkernel at once — a multiple of [`engine::MR`] so the kernel forms
 /// full register tiles, bounded so scratch stays at O(tile * cols) floats.
 const DEQUANT_ROW_TILE: usize = 8 * engine::MR;
+
+thread_local! {
+    /// Per-thread dequant scratch, reused across every fused-kernel task a
+    /// worker (or helping submitter) ever runs.  Sized by the largest tile
+    /// seen so far — bounded by [`DEQUANT_ROW_TILE`] / [`DEQUANT_PANEL_COLS`]
+    /// times the operand's inner dimension — so steady-state training does
+    /// zero allocator round-trips on the dequant path, where every stolen
+    /// slab used to allocate (and free) its own Vec.
+    static DEQUANT_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` on this thread's dequant scratch, grown to at least `len`
+/// elements.  The slice may hold stale values from a previous task — every
+/// caller fully overwrites the prefix it feeds the microkernel, so reuse
+/// is invisible in the output bits.  Not reentrant: `f` must not dispatch
+/// back into a fused dequant body on the same thread (the task bodies
+/// below only decode + call the serial microkernel, so they cannot).
+fn with_dequant_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    DEQUANT_SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
+}
 
 /// Shared body of the plain-orientation fused paths:
 /// `deq(A) (rows, cols) @ x (cols, n)` where `deq` decodes the flat
@@ -322,24 +563,25 @@ fn dequant_rows_matmul(
     let n = x.cols;
     let ctx = engine::effective(ctx, rows, cols, n);
     let data = engine::par_rows(ctx, rows, n, |r0, r1, out| {
-        let mut tile = vec![0f32; DEQUANT_ROW_TILE.min(r1 - r0) * cols];
-        let mut rs = r0;
-        while rs < r1 {
-            let re = (rs + DEQUANT_ROW_TILE).min(r1);
-            let tw = re - rs;
-            let base = rs * cols;
-            for (t, tb) in tile[..tw * cols].iter_mut().enumerate() {
-                *tb = deq(base + t);
+        with_dequant_scratch(DEQUANT_ROW_TILE.min(r1 - r0) * cols, |tile| {
+            let mut rs = r0;
+            while rs < r1 {
+                let re = (rs + DEQUANT_ROW_TILE).min(r1);
+                let tw = re - rs;
+                let base = rs * cols;
+                for (t, tb) in tile[..tw * cols].iter_mut().enumerate() {
+                    *tb = deq(base + t);
+                }
+                engine::panel_matmul(
+                    &tile[..tw * cols],
+                    tw,
+                    cols,
+                    x,
+                    &mut out[(rs - r0) * n..(re - r0) * n],
+                );
+                rs = re;
             }
-            engine::panel_matmul(
-                &tile[..tw * cols],
-                tw,
-                cols,
-                x,
-                &mut out[(rs - r0) * n..(re - r0) * n],
-            );
-            rs = re;
-        }
+        });
     });
     Mat { rows, cols: n, data }
 }
@@ -354,10 +596,29 @@ pub fn dequant8_matmul(
 ) -> Mat {
     assert_eq!(w.q.len(), rows * cols, "dequant8_matmul: shape mismatch");
     assert_eq!(x.rows, cols, "dequant8_matmul: inner dim mismatch");
-    dequant_rows_matmul(rows, cols, x, ctx, |idx| {
-        let bi = idx / w.block;
-        (w.q[idx] as f32 - w.zero[bi]) * w.scale[bi]
-    })
+    dequant_rows_matmul(rows, cols, x, ctx, |idx| w.dequant_at(idx))
+}
+
+/// [`dequant8_matmul`] against a panel pack built at refresh time: the
+/// per-call decode disappears.  Bitwise identical to the fused path (the
+/// pack holds the same `dequant_at` values; the accumulation order never
+/// changes).  Panics if `pack` does not match `w`'s epoch and shape — a
+/// stale pack is a cache-invalidation bug, never silently read.
+pub fn dequant8_matmul_prepacked(
+    w: &QuantTensor,
+    pack: &PanelPack,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    assert_eq!(w.q.len(), rows * cols, "dequant8_matmul_prepacked: shape mismatch");
+    assert_eq!(x.rows, cols, "dequant8_matmul_prepacked: inner dim mismatch");
+    assert!(
+        pack.matches8(w, rows, cols),
+        "dequant8_matmul_prepacked: stale panel pack (epoch/shape mismatch)"
+    );
+    prepacked_rows_matmul(pack, rows, cols, x, ctx)
 }
 
 /// `dequant(P) (rows, cols) @ x (cols, n)` for nibble-packed INT4 `p` —
@@ -371,10 +632,81 @@ pub fn dequant4_matmul(
 ) -> Mat {
     assert_eq!(p.numel(), rows * cols, "dequant4_matmul: shape mismatch");
     assert_eq!(x.rows, cols, "dequant4_matmul: inner dim mismatch");
-    dequant_rows_matmul(rows, cols, x, ctx, |idx| {
-        let bi = idx / p.block;
-        (code4_at(&p.packed, idx) as f32 - p.zero[bi]) * p.scale[bi]
-    })
+    dequant_rows_matmul(rows, cols, x, ctx, |idx| p.dequant_at(idx))
+}
+
+/// [`dequant4_matmul`] against a panel pack — the up-projection `P u` with
+/// zero per-call nibble decode (see [`dequant8_matmul_prepacked`] for the
+/// contract; bitwise identical to the fused path, panics on a stale pack).
+pub fn dequant4_matmul_prepacked(
+    p: &Quant4Tensor,
+    pack: &PanelPack,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    assert_eq!(p.numel(), rows * cols, "dequant4_matmul_prepacked: shape mismatch");
+    assert_eq!(x.rows, cols, "dequant4_matmul_prepacked: inner dim mismatch");
+    assert!(
+        pack.matches4(p, rows, cols),
+        "dequant4_matmul_prepacked: stale panel pack (epoch/shape mismatch)"
+    );
+    prepacked_rows_matmul(pack, rows, cols, x, ctx)
+}
+
+/// `dequant(P) (rows, cols) @ x (cols, n)` for sub-byte-packed 2-bit `p`
+/// (the Figure-3 ablation applied straight from storage).
+pub fn dequant2_matmul(
+    p: &Quant2Tensor,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    assert_eq!(p.numel(), rows * cols, "dequant2_matmul: shape mismatch");
+    assert_eq!(x.rows, cols, "dequant2_matmul: inner dim mismatch");
+    dequant_rows_matmul(rows, cols, x, ctx, |idx| p.dequant_at(idx))
+}
+
+/// [`dequant2_matmul`] against a panel pack (see
+/// [`dequant8_matmul_prepacked`] for the contract).
+pub fn dequant2_matmul_prepacked(
+    p: &Quant2Tensor,
+    pack: &PanelPack,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    assert_eq!(p.numel(), rows * cols, "dequant2_matmul_prepacked: shape mismatch");
+    assert_eq!(x.rows, cols, "dequant2_matmul_prepacked: inner dim mismatch");
+    assert!(
+        pack.matches2(p, rows, cols),
+        "dequant2_matmul_prepacked: stale panel pack (epoch/shape mismatch)"
+    );
+    prepacked_rows_matmul(pack, rows, cols, x, ctx)
+}
+
+/// Shared body of the plain-orientation prepacked paths: the pack's
+/// forward panel IS `deq(A)`, so each slab goes straight to the
+/// microkernel.  Same `par_rows` decomposition as the fused body — the
+/// row-group loop there only partitioned rows, which never affects any
+/// element's ascending-k accumulation — so bits match the fused path.
+fn prepacked_rows_matmul(
+    pack: &PanelPack,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    let n = x.cols;
+    let ctx = engine::effective(ctx, rows, cols, n);
+    let fwd = pack.fwd();
+    let data = engine::par_rows(ctx, rows, n, |r0, r1, out| {
+        engine::panel_matmul(&fwd[r0 * cols..r1 * cols], r1 - r0, cols, x, out);
+    });
+    Mat { rows, cols: n, data }
 }
 
 /// Max columns of dequantized transposed scratch a transposed-orientation
@@ -397,26 +729,27 @@ fn dequant_cols_t_matmul(
     let n = x.cols;
     let ctx = engine::effective(ctx, cols, rows, n);
     let data = engine::par_rows(ctx, cols, n, |j0, j1, out| {
-        let mut panel = vec![0f32; DEQUANT_PANEL_COLS.min(j1 - j0) * rows];
-        let mut js = j0;
-        while js < j1 {
-            let je = (js + DEQUANT_PANEL_COLS).min(j1);
-            let pw = je - js;
-            for i in 0..rows {
-                let base = i * cols;
-                for j in js..je {
-                    panel[(j - js) * rows + i] = deq(base + j);
+        with_dequant_scratch(DEQUANT_PANEL_COLS.min(j1 - j0) * rows, |panel| {
+            let mut js = j0;
+            while js < j1 {
+                let je = (js + DEQUANT_PANEL_COLS).min(j1);
+                let pw = je - js;
+                for i in 0..rows {
+                    let base = i * cols;
+                    for j in js..je {
+                        panel[(j - js) * rows + i] = deq(base + j);
+                    }
                 }
+                engine::panel_matmul(
+                    &panel[..pw * rows],
+                    pw,
+                    rows,
+                    x,
+                    &mut out[(js - j0) * n..(je - j0) * n],
+                );
+                js = je;
             }
-            engine::panel_matmul(
-                &panel[..pw * rows],
-                pw,
-                rows,
-                x,
-                &mut out[(js - j0) * n..(je - j0) * n],
-            );
-            js = je;
-        }
+        });
     });
     Mat { rows: cols, cols: n, data }
 }
@@ -432,10 +765,83 @@ pub fn dequant4_t_matmul(
 ) -> Mat {
     assert_eq!(p.numel(), rows * cols, "dequant4_t_matmul: shape mismatch");
     assert_eq!(x.rows, rows, "dequant4_t_matmul: inner dim mismatch");
-    dequant_cols_t_matmul(rows, cols, x, ctx, |idx| {
-        let bi = idx / p.block;
-        (code4_at(&p.packed, idx) as f32 - p.zero[bi]) * p.scale[bi]
-    })
+    dequant_cols_t_matmul(rows, cols, x, ctx, |idx| p.dequant_at(idx))
+}
+
+/// [`dequant4_t_matmul`] against a panel pack: the down-projection
+/// `P^T g` with zero per-call decode AND zero per-call transposition —
+/// the pack stores the transposed orientation too.  Bitwise identical to
+/// the fused path; panics on a stale pack.
+pub fn dequant4_t_matmul_prepacked(
+    p: &Quant4Tensor,
+    pack: &PanelPack,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    assert_eq!(p.numel(), rows * cols, "dequant4_t_matmul_prepacked: shape mismatch");
+    assert_eq!(x.rows, rows, "dequant4_t_matmul_prepacked: inner dim mismatch");
+    assert!(
+        pack.matches4(p, rows, cols),
+        "dequant4_t_matmul_prepacked: stale panel pack (epoch/shape mismatch)"
+    );
+    prepacked_cols_t_matmul(pack, rows, cols, x, ctx)
+}
+
+/// `dequant(P)^T @ x` for sub-byte-packed 2-bit `p` logically
+/// (rows, cols), `x (rows, n)` — the 2-bit analogue of
+/// [`dequant4_t_matmul`].
+pub fn dequant2_t_matmul(
+    p: &Quant2Tensor,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    assert_eq!(p.numel(), rows * cols, "dequant2_t_matmul: shape mismatch");
+    assert_eq!(x.rows, rows, "dequant2_t_matmul: inner dim mismatch");
+    dequant_cols_t_matmul(rows, cols, x, ctx, |idx| p.dequant_at(idx))
+}
+
+/// [`dequant2_t_matmul`] against a panel pack (see
+/// [`dequant4_t_matmul_prepacked`] for the contract).
+pub fn dequant2_t_matmul_prepacked(
+    p: &Quant2Tensor,
+    pack: &PanelPack,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    assert_eq!(p.numel(), rows * cols, "dequant2_t_matmul_prepacked: shape mismatch");
+    assert_eq!(x.rows, rows, "dequant2_t_matmul_prepacked: inner dim mismatch");
+    assert!(
+        pack.matches2(p, rows, cols),
+        "dequant2_t_matmul_prepacked: stale panel pack (epoch/shape mismatch)"
+    );
+    prepacked_cols_t_matmul(pack, rows, cols, x, ctx)
+}
+
+/// Shared body of the transposed prepacked paths: the pack's transposed
+/// panel IS `deq(A)^T`, laid out row-major, so each slab goes straight to
+/// the microkernel (see [`prepacked_rows_matmul`] for the bitwise
+/// argument; the fused body's sub-panel loop also only partitioned
+/// output rows).
+fn prepacked_cols_t_matmul(
+    pack: &PanelPack,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    let n = x.cols;
+    let ctx = engine::effective(ctx, cols, rows, n);
+    let tpose = pack.tpose();
+    let data = engine::par_rows(ctx, cols, n, |j0, j1, out| {
+        engine::panel_matmul(&tpose[j0 * rows..j1 * rows], j1 - j0, rows, x, out);
+    });
+    Mat { rows: cols, cols: n, data }
 }
 
 /// `dequant(P)^T @ x` for a generic i8-coded blockwise `p` logically
@@ -451,10 +857,26 @@ pub fn dequant8_t_matmul(
 ) -> Mat {
     assert_eq!(p.q.len(), rows * cols, "dequant8_t_matmul: shape mismatch");
     assert_eq!(x.rows, rows, "dequant8_t_matmul: inner dim mismatch");
-    dequant_cols_t_matmul(rows, cols, x, ctx, |idx| {
-        let bi = idx / p.block;
-        (p.q[idx] as f32 - p.zero[bi]) * p.scale[bi]
-    })
+    dequant_cols_t_matmul(rows, cols, x, ctx, |idx| p.dequant_at(idx))
+}
+
+/// [`dequant8_t_matmul`] against a panel pack (bitwise identical to the
+/// fused path; panics on a stale pack).
+pub fn dequant8_t_matmul_prepacked(
+    p: &QuantTensor,
+    pack: &PanelPack,
+    rows: usize,
+    cols: usize,
+    x: &Mat,
+    ctx: ParallelCtx,
+) -> Mat {
+    assert_eq!(p.q.len(), rows * cols, "dequant8_t_matmul_prepacked: shape mismatch");
+    assert_eq!(x.rows, rows, "dequant8_t_matmul_prepacked: inner dim mismatch");
+    assert!(
+        pack.matches8(p, rows, cols),
+        "dequant8_t_matmul_prepacked: stale panel pack (epoch/shape mismatch)"
+    );
+    prepacked_cols_t_matmul(pack, rows, cols, x, ctx)
 }
 
 /// Blockwise 8-bit Adam state (m: symmetric i8, v: non-negative u8), the
@@ -690,6 +1112,131 @@ mod tests {
         assert_eq!(t8.storage_bytes(), 1024 + 4 * 4 + 4 * 4);
         let t4 = quantize4(&x);
         assert_eq!(t4.storage_bytes(), 512 + 4 * 4 + 4 * 4);
+        // 2-bit packs four codes per byte: a quarter of the i8 bytes
+        let t2 = quantize2(&x);
+        assert_eq!(t2.storage_bytes(), 256 + 4 * 4 + 4 * 4);
+    }
+
+    #[test]
+    fn epochs_are_unique_and_bumpable() {
+        let x = randvec(512, 30);
+        let a = quantize(&x, 8);
+        let b = quantize(&x, 8);
+        assert_ne!(a.epoch(), b.epoch(), "identical values are distinct code buffers");
+        let c = a.clone();
+        assert_eq!(a.epoch(), c.epoch(), "a clone holds identical codes");
+        let mut d = quantize4(&x);
+        let d0 = d.epoch();
+        d.bump_epoch();
+        assert_ne!(d.epoch(), d0, "bump must re-stamp");
+        let mut e = quantize2(&x);
+        let e0 = e.epoch();
+        e.bump_epoch();
+        assert_ne!(e.epoch(), e0);
+        let g = QuantTensor::new(vec![0i8; 256], vec![1.0], vec![0.0], 8, 256);
+        assert!(g.epoch() > 0, "constructor stamps a real epoch");
+    }
+
+    #[test]
+    fn int2_pack_roundtrip() {
+        let x = randvec(512, 31);
+        let t = quantize(&x, 2);
+        let packed = pack_int2(&t.q);
+        assert_eq!(packed.len(), 128);
+        assert_eq!(unpack_int2(&packed), t.q);
+    }
+
+    #[test]
+    fn int2_odd_length_roundtrip() {
+        let codes: Vec<i8> = (0..7i32).map(|i| ((i % 4) - 2) as i8).collect();
+        let packed = pack_int2(&codes);
+        assert_eq!(packed.len(), 2);
+        let unpacked = unpack_int2(&packed);
+        assert_eq!(&unpacked[..7], &codes[..]);
+        // quantize2 round-trips non-multiple-of-4 lengths via numel
+        let x = randvec(91, 32);
+        let t = quantize2(&x);
+        assert_eq!(t.numel(), 91);
+        assert_eq!(dequantize2(&t).len(), 91);
+    }
+
+    #[test]
+    fn quantize2_matches_quantize_then_pack() {
+        let x = randvec(512, 33);
+        let t2 = quantize2(&x);
+        let t = quantize(&x, 2);
+        assert_eq!(t2.packed, pack_int2(&t.q));
+        assert_eq!(dequantize2(&t2), dequantize(&t));
+    }
+
+    #[test]
+    fn dequant2_matmuls_match_unfused() {
+        let mut rng = Pcg32::seeded(26);
+        for (m, r, n) in [(1usize, 1usize, 1usize), (13, 7, 5), (64, 16, 9), (128, 32, 65)] {
+            let p = quantize2(&rng.normal_vec(m * r, 0.0, 0.3));
+            let pd = Mat::from_vec(m, r, dequantize2(&p));
+            let xt = Mat::randn(m, n, &mut rng);
+            let want_t = pd.t_matmul_naive(&xt);
+            let x = Mat::randn(r, n, &mut rng);
+            let want = pd.matmul_naive(&x);
+            for t in [1usize, 2, 8] {
+                let got_t = dequant2_t_matmul(&p, m, r, &xt, ParallelCtx::new(t));
+                assert!(got_t.rel_frobenius(&want_t) <= 1e-5, "t_matmul {m}x{r}x{n} t={t}");
+                let got = dequant2_matmul(&p, m, r, &x, ParallelCtx::new(t));
+                assert!(got.rel_frobenius(&want) <= 1e-5, "matmul {m}x{r}x{n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_paths_match_fused_bitwise() {
+        // the full tail-class sweep lives in tests/parity.rs; this is the
+        // in-module smoke for all six prepacked/fused pairings
+        let mut rng = Pcg32::seeded(27);
+        let (m, r, n) = (64usize, 16usize, 9usize);
+        let p4 = quantize4(&rng.normal_vec(m * r, 0.0, 0.3));
+        let p8 = quantize(&rng.normal_vec(m * r, 0.0, 0.3), 8);
+        let pack4 = PanelPack::pack4(&p4, m, r);
+        let pack8 = PanelPack::pack8(&p8, m, r);
+        let x = Mat::randn(r, n, &mut rng);
+        let xt = Mat::randn(m, n, &mut rng);
+        for t in [1usize, 8] {
+            let ctx = ParallelCtx::new(t);
+            assert_eq!(
+                dequant4_matmul_prepacked(&p4, &pack4, m, r, &x, ctx).data,
+                dequant4_matmul(&p4, m, r, &x, ctx).data,
+                "int4 fwd t={t}"
+            );
+            assert_eq!(
+                dequant4_t_matmul_prepacked(&p4, &pack4, m, r, &xt, ctx).data,
+                dequant4_t_matmul(&p4, m, r, &xt, ctx).data,
+                "int4 tpose t={t}"
+            );
+            assert_eq!(
+                dequant8_matmul_prepacked(&p8, &pack8, m, r, &x, ctx).data,
+                dequant8_matmul(&p8, m, r, &x, ctx).data,
+                "int8 fwd t={t}"
+            );
+            assert_eq!(
+                dequant8_t_matmul_prepacked(&p8, &pack8, m, r, &xt, ctx).data,
+                dequant8_t_matmul(&p8, m, r, &xt, ctx).data,
+                "int8 tpose t={t}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "stale panel pack")]
+    fn stale_pack_is_never_read() {
+        let mut rng = Pcg32::seeded(28);
+        let vals = rng.normal_vec(64, 0.0, 0.3);
+        let old = quantize4(&vals);
+        let pack = PanelPack::pack4(&old, 8, 8);
+        // a refresh produces a NEW tensor (fresh epoch) — the old pack
+        // must refuse to be read against it even with identical values
+        let refreshed = quantize4(&vals);
+        let x = Mat::randn(8, 3, &mut rng);
+        let _ = dequant4_matmul_prepacked(&refreshed, &pack, 8, 8, &x, ParallelCtx::serial());
     }
 
     #[test]

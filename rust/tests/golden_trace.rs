@@ -11,11 +11,13 @@
 //! * across worker counts (1 vs 4 vs 8) — the `--threads` contract;
 //! * across over-decomposition slab multipliers (1 slab/worker up to the
 //!   64 cap) — the `QGALORE_SLABS_PER_WORKER` contract;
-//! * across kernel bodies (AVX2 / portable / the autovec baseline) via the
-//!   process-global [`engine::set_kernel_override`] hook;
+//! * across kernel bodies (AVX-512 / AVX2 / portable / the autovec
+//!   baseline) via the process-global [`engine::set_kernel_override`] hook;
 //! * across the work-stealing pool at 1/4/8/16 workers and under hostile
 //!   victim-choice seeds (explicit + the `QGALORE_STEAL_SEED` env knob) —
-//!   the bits cannot depend on which thread stole which task when.
+//!   the bits cannot depend on which thread stole which task when;
+//! * with the projection panel cache on vs off (prepacked application vs
+//!   per-call fused decode) — the `QGALORE_PACK_CACHE` contract.
 //!
 //! The problem sizes are chosen so the forward/gradient products sit ABOVE
 //! `PAR_MIN_FLOPS` (the parallel paths genuinely run) while the projection
@@ -23,7 +25,8 @@
 
 use qgalore::coordinator::{HostDataflowTrainer, HostMethod, HostStepConfig};
 use qgalore::linalg::{
-    engine, left_subspace_with, KernelPath, Mat, ParallelCtx, WorkerPool, STEAL_SEED_ENV,
+    engine, left_subspace_with, set_pack_cache, KernelPath, Mat, PanelPack, ParallelCtx,
+    WorkerPool, STEAL_SEED_ENV,
 };
 use qgalore::quant;
 use qgalore::scheduler::SchedulerConfig;
@@ -38,6 +41,17 @@ const RANK: usize = 16;
 /// One fixed-seed training run; returns the per-step loss trace as raw f32
 /// bit patterns (bitwise comparison, not tolerance).
 fn train_trace(ctx: ParallelCtx) -> Vec<u32> {
+    train_trace_impl(ctx, false)
+}
+
+/// The same run applying the projection through an explicit [`PanelPack`]
+/// built at each refresh (the panel-cache steady state): must be bitwise
+/// identical to the per-call fused trace.
+fn train_trace_packed(ctx: ParallelCtx) -> Vec<u32> {
+    train_trace_impl(ctx, true)
+}
+
+fn train_trace_impl(ctx: ParallelCtx, use_pack: bool) -> Vec<u32> {
     let mut rng = Pcg32::seeded(77);
     // fixed data, built serially so the trace alone reflects `ctx`
     let x = Mat::randn(DIM, DIM, &mut rng);
@@ -46,6 +60,7 @@ fn train_trace(ctx: ParallelCtx) -> Vec<u32> {
 
     let mut w = Mat::zeros(DIM, DIM);
     let mut p4: Option<quant::Quant4Tensor> = None;
+    let mut pack: Option<PanelPack> = None;
     let mut momentum = Mat::zeros(RANK, DIM);
     let mut sketch_rng = Pcg32::seeded(123);
     let lr = 1.0 / (4.0 * DIM as f32);
@@ -62,19 +77,28 @@ fn train_trace(ctx: ParallelCtx) -> Vec<u32> {
         // Q-GaLore storage format)
         if step % REFRESH_EVERY == 0 {
             let p = left_subspace_with(&g, RANK, 2, &mut sketch_rng, ctx);
-            p4 = Some(quant::quantize4(&p.data));
+            let q = quant::quantize4(&p.data);
+            pack = use_pack.then(|| PanelPack::pack4(&q, DIM, RANK));
+            p4 = Some(q);
             // momentum lives in projected coordinates; a new basis means a
             // fresh accumulator
             momentum = Mat::zeros(RANK, DIM);
         }
         let proj = p4.as_ref().expect("projection refreshed at step 0");
         // low-rank step: R = P^T G, EMA momentum, U = P M, W -= lr U —
-        // both projection products run fused from INT4 storage
-        let r = quant::dequant4_t_matmul(proj, DIM, RANK, &g, ctx);
+        // both projection products run fused from INT4 storage, or through
+        // the refresh-time panel pack in the packed variant
+        let r = match &pack {
+            Some(pk) => quant::dequant4_t_matmul_prepacked(proj, pk, DIM, RANK, &g, ctx),
+            None => quant::dequant4_t_matmul(proj, DIM, RANK, &g, ctx),
+        };
         for (m, rv) in momentum.data.iter_mut().zip(&r.data) {
             *m = 0.9 * *m + 0.1 * rv;
         }
-        let u = quant::dequant4_matmul(proj, DIM, RANK, &momentum, ctx);
+        let u = match &pack {
+            Some(pk) => quant::dequant4_matmul_prepacked(proj, pk, DIM, RANK, &momentum, ctx),
+            None => quant::dequant4_matmul(proj, DIM, RANK, &momentum, ctx),
+        };
         for (wv, uv) in w.data.iter_mut().zip(&u.data) {
             *wv -= lr * uv;
         }
@@ -102,7 +126,9 @@ fn golden_trace_locks_numerics() {
     // interchangeability asserted here, so the flip cannot change what it
     // observes; restore the prior setting regardless.
     let prev = engine::kernel_override();
-    let mut paths = vec![KernelPath::Portable, KernelPath::Autovec];
+    // Simd512 is unconditional: without avx512f it degrades to the portable
+    // NR=16 body inside the dispatch, which must also hold the trace bits
+    let mut paths = vec![KernelPath::Portable, KernelPath::Autovec, KernelPath::Simd512];
     if engine::simd_kernel_available() {
         paths.push(KernelPath::Simd);
     }
@@ -169,6 +195,53 @@ fn golden_trace_locks_numerics() {
     assert!(
         last < 0.9 * first,
         "rank-{RANK} projected training did not reduce loss ({first} -> {last})"
+    );
+}
+
+/// The panel-cache golden pin: the SAME training loop applying its
+/// projection through refresh-time [`PanelPack`]s must reproduce the fused
+/// per-call trace bit for bit, across worker counts and hostile steal
+/// seeds — and the dataflow trainer's bits must not change when the
+/// process-global cache is forced off.
+#[test]
+fn golden_trace_panel_cache_invariant() {
+    let t1 = train_trace(ParallelCtx::new(1));
+    for workers in [1usize, 4, 8, 16] {
+        for seed in [0xDEAD_BEEF_u64, u64::MAX] {
+            let pool = WorkerPool::leaked_with_steal_seed(workers, seed);
+            // budget >= 4 so a 1-worker pool still gets real dispatch
+            let got = train_trace_packed(ParallelCtx::with_pool(workers.max(4), pool));
+            assert_eq!(
+                got, t1,
+                "packed trace diverged at {workers} workers (steal seed {seed:#x})"
+            );
+        }
+    }
+
+    // cache ON vs OFF through the dataflow trainer (which consults the
+    // process-global switch at refresh time).  Other tests in this binary
+    // may run concurrently, but they rely only on the bitwise identity
+    // asserted here, so the flip cannot change what they observe; restore
+    // the default-on setting regardless.
+    let cfg = df_config();
+    let pool = WorkerPool::leaked_with_steal_seed(8, 0x00DF_5EED);
+    let ctx = ParallelCtx::with_pool(8, pool);
+    set_pack_cache(true);
+    let mut on_tr = HostDataflowTrainer::new(&DF_SHAPES, cfg);
+    let on: Vec<u32> = (0..DF_STEPS)
+        .map(|_| on_tr.step_dataflow(ctx, pool).unwrap().to_bits())
+        .collect();
+    set_pack_cache(false);
+    let mut off_tr = HostDataflowTrainer::new(&DF_SHAPES, cfg);
+    let off: Vec<u32> = (0..DF_STEPS)
+        .map(|_| off_tr.step_dataflow(ctx, pool).unwrap().to_bits())
+        .collect();
+    set_pack_cache(true);
+    assert_eq!(off, on, "panel cache on/off changed the dataflow loss bits");
+    assert_eq!(
+        off_tr.export_weights(),
+        on_tr.export_weights(),
+        "panel cache on/off changed the dataflow weight bits"
     );
 }
 

@@ -216,13 +216,13 @@ fn qgalore_update_with_zero_lr_preserves_weights() {
         .unwrap();
     // with lr = 0 the only change is the SR requantization round-trip:
     // dequantized weights must agree within one quantization step.
-    let wq2 = quant::QuantTensor {
-        q: outs[0].as_i8().unwrap().to_vec(),
-        scale: outs[1].as_f32().unwrap().to_vec(),
-        zero: outs[2].as_f32().unwrap().to_vec(),
-        bits: 8,
-        block: wq.block,
-    };
+    let wq2 = quant::QuantTensor::new(
+        outs[0].as_i8().unwrap().to_vec(),
+        outs[1].as_f32().unwrap().to_vec(),
+        outs[2].as_f32().unwrap().to_vec(),
+        8,
+        wq.block,
+    );
     let w_after = quant::dequantize(&wq2);
     let w_before = quant::dequantize(&wq);
     for (bi, (a, b)) in w_after

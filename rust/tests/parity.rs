@@ -9,10 +9,11 @@
 //! The microkernel sweep (`microkernel_*`, `fused_dequant_bitwise_*`)
 //! asserts the register-blocked kernel's stronger contract directly: for
 //! every (m, n) tail class up to two MRxNR register tiles, k values
-//! straddling the KC stripe boundary, every kernel body (AVX2 / portable /
-//! the autovec baseline) and 1/2/8 workers, results are BITWISE equal to
-//! the naive reference — and the fused INT4/INT8 paths are bitwise equal
-//! to dequantize-then-reference, nibble tails included.
+//! straddling the KC stripe boundary, every kernel body (AVX-512 / AVX2 /
+//! portable / the autovec baseline) and 1/2/8 workers, results are BITWISE
+//! equal to the naive reference — the fused INT4/INT8/2-bit paths are
+//! bitwise equal to dequantize-then-reference, nibble tails included, and
+//! every `*_prepacked` path is bitwise equal to its fused twin.
 //!
 //! The persistent worker-pool tests at the bottom assert the analogous
 //! pool contract: results are BITWISE equal to serial for any pool size
@@ -29,9 +30,11 @@ const THREADS: [usize; 3] = [1, 2, 8];
 const TOL: f32 = 1e-5;
 
 /// Every explicit kernel body this machine can run (Simd only where the
-/// CPU has avx2+fma; Autovec is the PR-1/2 baseline).
+/// CPU has avx2+fma; Autovec is the PR-1/2 baseline).  Simd512 is always
+/// included: without avx512f (or on an old toolchain) it degrades to the
+/// portable NR=16 body inside the dispatch, which must ALSO be bitwise.
 fn kernel_paths() -> Vec<KernelPath> {
-    let mut v = vec![KernelPath::Portable, KernelPath::Autovec];
+    let mut v = vec![KernelPath::Portable, KernelPath::Autovec, KernelPath::Simd512];
     if qgalore::linalg::simd_kernel_available() {
         v.push(KernelPath::Simd);
     }
@@ -233,9 +236,18 @@ fn microkernel_t_matmul_shape_sweep_bitwise() {
 #[test]
 fn microkernel_larger_shapes_bitwise_across_paths() {
     // multi-tile interiors plus tails, larger than the sweep's 2-tile
-    // bound: every path must agree with the reference AND each other
+    // bound: every path must agree with the reference AND each other.
+    // n = 31/32/33 straddle the Simd512 NR=16 tile boundary at two tiles
+    // (the 1..=17 sweep above already covers every n % 16 tail class once)
     let mut rng = Pcg32::seeded(302);
-    for (m, k, n) in [(33usize, 129usize, 47usize), (64, 300, 64), (129, 513, 65)] {
+    for (m, k, n) in [
+        (33usize, 129usize, 47usize),
+        (64, 300, 64),
+        (129, 513, 65),
+        (64, 300, 31),
+        (40, 257, 32),
+        (96, 200, 33),
+    ] {
         let a = Mat::randn(m, k, &mut rng);
         let b = Mat::randn(k, n, &mut rng);
         let want = a.matmul_naive(&b);
@@ -295,6 +307,68 @@ fn fused_dequant_bitwise_vs_unfused() {
                 quant::dequant8_t_matmul(&w8, m, c, &xt, ctx).data,
                 want8t.data,
                 "dequant8_t_matmul {m}x{c}x{n} t={t} not bitwise"
+            );
+        }
+    }
+}
+
+#[test]
+fn prepacked_bitwise_vs_fused_across_tail_classes() {
+    // Every *_prepacked entry point against its fused per-call-decode
+    // twin, across the same tail-class sweep (odd INT4 nibble tails, odd
+    // 2-bit tails, row-tile crossings, multi-block shapes): a PanelPack
+    // built once at "refresh" must yield BITWISE the fused path's output
+    // for every format, orientation, and worker count.
+    let mut rng = Pcg32::seeded(304);
+    for (m, c, n) in [
+        (1usize, 1usize, 1usize),
+        (5, 7, 9),
+        (3, 33, 5),    // odd cols, single block
+        (9, 21, 17),   // odd cols, crosses a row-tile boundary
+        (256, 3, 9),   // odd cols, multi-block, many row tiles
+        (64, 64, 33),
+        (128, 256, 65),
+    ] {
+        let raw = rng.normal_vec(m * c, 0.0, 0.3);
+        let p4 = quant::quantize4(&raw);
+        let w8 = quant::quantize(&raw, 8);
+        let p2 = quant::quantize2(&raw);
+        let pk4 = qgalore::linalg::PanelPack::pack4(&p4, m, c);
+        let pk8 = qgalore::linalg::PanelPack::pack8(&w8, m, c);
+        let pk2 = qgalore::linalg::PanelPack::pack2(&p2, m, c);
+        let x = Mat::randn(c, n, &mut rng);
+        let xt = Mat::randn(m, n, &mut rng);
+        for t in THREADS {
+            let ctx = ParallelCtx::new(t);
+            assert_eq!(
+                quant::dequant4_matmul_prepacked(&p4, &pk4, m, c, &x, ctx).data,
+                quant::dequant4_matmul(&p4, m, c, &x, ctx).data,
+                "dequant4_matmul_prepacked {m}x{c}x{n} t={t} not bitwise"
+            );
+            assert_eq!(
+                quant::dequant4_t_matmul_prepacked(&p4, &pk4, m, c, &xt, ctx).data,
+                quant::dequant4_t_matmul(&p4, m, c, &xt, ctx).data,
+                "dequant4_t_matmul_prepacked {m}x{c}x{n} t={t} not bitwise"
+            );
+            assert_eq!(
+                quant::dequant8_matmul_prepacked(&w8, &pk8, m, c, &x, ctx).data,
+                quant::dequant8_matmul(&w8, m, c, &x, ctx).data,
+                "dequant8_matmul_prepacked {m}x{c}x{n} t={t} not bitwise"
+            );
+            assert_eq!(
+                quant::dequant8_t_matmul_prepacked(&w8, &pk8, m, c, &xt, ctx).data,
+                quant::dequant8_t_matmul(&w8, m, c, &xt, ctx).data,
+                "dequant8_t_matmul_prepacked {m}x{c}x{n} t={t} not bitwise"
+            );
+            assert_eq!(
+                quant::dequant2_matmul_prepacked(&p2, &pk2, m, c, &x, ctx).data,
+                quant::dequant2_matmul(&p2, m, c, &x, ctx).data,
+                "dequant2_matmul_prepacked {m}x{c}x{n} t={t} not bitwise"
+            );
+            assert_eq!(
+                quant::dequant2_t_matmul_prepacked(&p2, &pk2, m, c, &xt, ctx).data,
+                quant::dequant2_t_matmul(&p2, m, c, &xt, ctx).data,
+                "dequant2_t_matmul_prepacked {m}x{c}x{n} t={t} not bitwise"
             );
         }
     }

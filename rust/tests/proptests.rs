@@ -72,6 +72,46 @@ fn prop_int4_pack_unpack_identity() {
 }
 
 #[test]
+fn prop_int2_pack_unpack_identity() {
+    // 4 codes per byte, LSB-first, offset-binary +2; tail positions of the
+    // last byte stay 0 and decode to the offset's floor (-2) — dequantize2
+    // truncates to numel, so pads never surface in values
+    cases(200, 14, |rng, _| {
+        let n = 1 + rng.below(1024);
+        let codes: Vec<i8> = (0..n).map(|_| (rng.below(4) as i8) - 2).collect();
+        let packed = quant::pack_int2(&codes);
+        assert_eq!(packed.len(), n.div_ceil(4));
+        let unpacked = quant::unpack_int2(&packed);
+        assert_eq!(unpacked.len(), packed.len() * 4);
+        assert_eq!(&unpacked[..n], &codes[..]);
+        for (i, &pad) in unpacked[n..].iter().enumerate() {
+            assert_eq!(pad, -2, "pad position {i} must decode to the offset floor");
+        }
+    });
+}
+
+#[test]
+fn prop_quant2_roundtrip_matches_unpacked_path() {
+    // quantize2 must be exactly quantize(x, 2) in sub-byte storage: same
+    // codes, same scales/zeros, same dequantized values, both parities
+    cases(120, 15, |rng, _| {
+        let n = if rng.below(2) == 0 {
+            1 + rng.below(255)
+        } else {
+            256 * (1 + rng.below(4))
+        };
+        let x = rng.normal_vec(n, 0.0, 1.0);
+        let t2 = quant::quantize2(&x);
+        let t = quant::quantize(&x, 2);
+        assert_eq!(t2.numel(), n);
+        assert_eq!(t2.packed, quant::pack_int2(&t.q));
+        assert_eq!(t2.scale, t.scale);
+        assert_eq!(t2.zero, t.zero);
+        assert_eq!(quant::dequantize2(&t2), quant::dequantize(&t));
+    });
+}
+
+#[test]
 fn prop_quant4_roundtrip_tracks_numel() {
     cases(120, 13, |rng, _| {
         // single-block (possibly odd) and multi-block sizes
@@ -342,6 +382,63 @@ fn prop_fused_dequant_scheduler_equivalence_bitwise() {
                 quant::dequant8_t_matmul(&w8, m, k, &xt, ctx).data,
                 want8t.data,
                 "dequant8_t_matmul {m}x{k}x{n} t={threads} diverged under {label}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_prepacked_scheduler_equivalence_bitwise() {
+    // the prepacked paths under every scheduler, against the SERIAL FUSED
+    // reference: one PanelPack built at "refresh time" must reproduce the
+    // per-call-decode bits for any pool discipline, thread budget, and
+    // slab multiplier — the panel cache cannot be observable in values
+    let pools = equivalence_pools();
+    cases(8, 43, |rng, _seed| {
+        let above_gate = rng.below(2) == 0;
+        let (m, k) = if above_gate {
+            (256, 64 + rng.below(64))
+        } else {
+            (1 + rng.below(16), 1 + rng.below(16))
+        };
+        let n = if above_gate { 64 } else { 1 + rng.below(24) };
+        let threads = 2 + rng.below(7);
+        let spw = 1 + rng.below(8);
+        let p4 = quant::quantize4(&rng.normal_vec(m * k, 0.0, 0.3));
+        let p2 = quant::quantize2(&rng.normal_vec(m * k, 0.0, 0.3));
+        let pk4 = qgalore::linalg::PanelPack::pack4(&p4, m, k);
+        let pk2 = qgalore::linalg::PanelPack::pack2(&p2, m, k);
+        let x = Mat::randn(k, n, rng);
+        let xt = Mat::randn(m, n, rng);
+        let serial = ParallelCtx::serial();
+        let want4 = quant::dequant4_matmul(&p4, m, k, &x, serial);
+        let want4t = quant::dequant4_t_matmul(&p4, m, k, &xt, serial);
+        let want2 = quant::dequant2_matmul(&p2, m, k, &x, serial);
+        let want2t = quant::dequant2_t_matmul(&p2, m, k, &xt, serial);
+        let scoped = std::iter::once(("scoped", ParallelCtx::scoped(threads)));
+        let pooled = pools
+            .iter()
+            .flat_map(|&(fifo, steal)| schedulers(threads, spw, fifo, steal));
+        for (label, ctx) in scoped.chain(pooled) {
+            assert_eq!(
+                quant::dequant4_matmul_prepacked(&p4, &pk4, m, k, &x, ctx).data,
+                want4.data,
+                "dequant4_matmul_prepacked {m}x{k}x{n} t={threads} diverged under {label}"
+            );
+            assert_eq!(
+                quant::dequant4_t_matmul_prepacked(&p4, &pk4, m, k, &xt, ctx).data,
+                want4t.data,
+                "dequant4_t_matmul_prepacked {m}x{k}x{n} t={threads} diverged under {label}"
+            );
+            assert_eq!(
+                quant::dequant2_matmul_prepacked(&p2, &pk2, m, k, &x, ctx).data,
+                want2.data,
+                "dequant2_matmul_prepacked {m}x{k}x{n} t={threads} diverged under {label}"
+            );
+            assert_eq!(
+                quant::dequant2_t_matmul_prepacked(&p2, &pk2, m, k, &xt, ctx).data,
+                want2t.data,
+                "dequant2_t_matmul_prepacked {m}x{k}x{n} t={threads} diverged under {label}"
             );
         }
     });
