@@ -20,7 +20,9 @@ use std::hint::black_box;
 
 use bench_harness::{bench, BenchResult};
 use qgalore::coordinator::trainer::{TrainConfig, Trainer};
-use qgalore::coordinator::{HostDataflowTrainer, HostMethod, HostStepConfig};
+use qgalore::coordinator::{
+    HostDataflowTrainer, HostMethod, HostStepConfig, MultiJobConfig, MultiJobCoordinator,
+};
 use qgalore::jsonx::Json;
 use qgalore::linalg::{engine, KernelPath, Mat, PanelPack, ParallelCtx, WorkerPool};
 use qgalore::manifest::Manifest;
@@ -513,6 +515,63 @@ fn step_benches() {
     println!("    wrote BENCH_step.json");
 }
 
+/// Multi-tenant fine-tune serving bench: N concurrent jobs sharing one
+/// base arena and one 16-worker pool, stepped in fair round-robin rounds
+/// (`MultiJobCoordinator::round`).  The serving-economics question is
+/// job-steps/sec as tenancy grows — per-job low-rank work is tiny, so
+/// throughput should hold (or improve, as independent jobs fill worker
+/// idle time) until the pool saturates.  Rows land in
+/// `BENCH_multijob.json`.
+fn multijob_benches() {
+    println!("\n== multi-job coordinator: job-steps/s vs tenancy (16 workers) ==");
+    let shapes: Vec<(usize, usize)> =
+        (0..6).map(|i| if i % 3 == 2 { (32, 96) } else { (64, 64) }).collect();
+    let cfg = MultiJobConfig {
+        rank: 8,
+        sched: SchedulerConfig { base_interval: 10, ..Default::default() },
+        ..Default::default()
+    };
+    let workers = 16usize;
+    let pool = WorkerPool::leaked(workers);
+    let ctx = ParallelCtx::with_pool(workers, pool);
+    let mut rows = Vec::new();
+    for jobs in [1usize, 4, 16, 64] {
+        let mut co = MultiJobCoordinator::new(&shapes, cfg, ctx);
+        for j in 0..jobs {
+            co.add_job(1000 + j as u64);
+        }
+        let r = bench(&format!("round, {jobs} jobs x {workers} workers"), 3, 15, || {
+            black_box(co.round(pool).unwrap());
+        });
+        let jps = jobs as f64 / (r.mean_ms / 1e3);
+        println!(
+            "    -> {jobs:>2} jobs: {:.2} ms/round | {jps:.1} job-steps/s | delta/job {}",
+            r.mean_ms,
+            qgalore::util::human_bytes(co.job(0).delta_bytes())
+        );
+        rows.push((jobs, r.mean_ms, jps));
+    }
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|&(j, ms, jps)| {
+            let mut row = BTreeMap::new();
+            row.insert("jobs".to_string(), Json::Num(j as f64));
+            row.insert("round_ms".to_string(), Json::Num(ms));
+            row.insert("job_steps_per_sec".to_string(), Json::Num(jps));
+            Json::Obj(row)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("multijob_serving".to_string()));
+    root.insert("workers".to_string(), Json::Num(workers as f64));
+    root.insert("layers".to_string(), Json::Num(shapes.len() as f64));
+    root.insert("rank".to_string(), Json::Num(8.0));
+    root.insert("rows".to_string(), Json::Arr(arr));
+    std::fs::write("BENCH_multijob.json", Json::Obj(root).dump())
+        .expect("write BENCH_multijob.json");
+    println!("    wrote BENCH_multijob.json");
+}
+
 fn main() {
     engine_benches();
     microkernel_benches();
@@ -520,6 +579,7 @@ fn main() {
     dispatch_benches();
     contention_benches();
     step_benches();
+    multijob_benches();
 
     let man = match Manifest::load("artifacts") {
         Ok(m) => m,

@@ -1,12 +1,34 @@
-//! Checkpoint IO: flat little-endian f32 params (ABI order, the
-//! `Optimizer::export_flat` format) plus a JSON sidecar with metadata.
+//! Checkpoint IO.
+//!
+//! Two on-disk formats share this module:
+//!
+//! * **Flat checkpoints** ([`save`] / [`load`]): every model parameter as
+//!   little-endian f32 in the `Optimizer::export_flat` ABI order, plus a
+//!   JSON sidecar with metadata.  Size = full model; the pre-train /
+//!   fine-tune handoff format.
+//! * **Delta checkpoints** ([`save_delta`] / [`load_delta`]): the per-user
+//!   personalization state of one fine-tune job — low-rank factors, the
+//!   INT4-packed projection, quantized Adam moments, scheduler/counter
+//!   state — as named, typed, shaped sections behind a versioned binary
+//!   header (magic `QGDC`).  A few hundred KB per user instead of a full
+//!   flat dump; the storage format of the fine-tune-as-a-service
+//!   coordinator (`coordinator::multijob`) and of
+//!   `Optimizer::export_delta`.
+//!
+//! Both formats write **atomically**: payload and sidecar each go to
+//! `<file>.tmp` and are renamed into place, payload strictly before
+//! sidecar.  A crash mid-save therefore leaves either the old pair, a
+//! stray `.tmp`, or a new payload without its sidecar — never a sidecar
+//! describing a torn payload.  Loaders treat a missing/invalid sidecar as
+//! an error, so the half-written states are all unloadable.
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::jsonx::Json;
+use crate::optim::FpTensor;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct CheckpointMeta {
@@ -14,6 +36,30 @@ pub struct CheckpointMeta {
     pub method: String,
     pub step: u64,
     pub val_loss: f32,
+}
+
+/// Write `bytes` to `path` atomically: `<path>.tmp` + rename.  Readers
+/// never observe a torn file — they see the old content or the new.
+fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
+}
+
+/// Parse a JSON number field as u64 without a lossy `usize` round-trip
+/// (`as_usize` truncates above 2^32 on 32-bit hosts).
+fn get_u64(j: &Json, key: &str) -> Option<u64> {
+    let f = j.get(key).and_then(Json::as_f64)?;
+    if f.fract() == 0.0 && (0.0..=u64::MAX as f64).contains(&f) {
+        Some(f as u64)
+    } else {
+        None
+    }
 }
 
 pub fn save(
@@ -26,15 +72,17 @@ pub fn save(
     for p in params {
         bytes.extend_from_slice(&p.to_le_bytes());
     }
-    std::fs::write(path, &bytes)
-        .with_context(|| format!("writing {}", path.display()))?;
+    // payload before sidecar: a crash between the two renames leaves a
+    // payload without metadata (unloadable), never metadata blessing a
+    // payload that was not fully committed
+    atomic_write(path, &bytes)?;
     let mut obj = BTreeMap::new();
     obj.insert("cfg_name".into(), Json::Str(meta.cfg_name.clone()));
     obj.insert("method".into(), Json::Str(meta.method.clone()));
     obj.insert("step".into(), Json::Num(meta.step as f64));
     obj.insert("val_loss".into(), Json::Num(meta.val_loss as f64));
     obj.insert("numel".into(), Json::Num(params.len() as f64));
-    std::fs::write(sidecar(path), Json::Obj(obj).dump())?;
+    atomic_write(&sidecar(path), Json::Obj(obj).dump().as_bytes())?;
     Ok(())
 }
 
@@ -49,9 +97,18 @@ pub fn load(path: impl AsRef<Path>) -> Result<(Vec<f32>, CheckpointMeta)> {
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
-    let meta_raw = std::fs::read_to_string(sidecar(path))?;
-    let j = Json::parse(&meta_raw).map_err(|e| anyhow!("{e}"))?;
-    let numel = j.get("numel").and_then(Json::as_usize).unwrap_or(params.len());
+    let sc = sidecar(path);
+    let meta_raw = std::fs::read_to_string(&sc)
+        .with_context(|| format!("reading sidecar {}", sc.display()))?;
+    let j = Json::parse(&meta_raw)
+        .map_err(|e| anyhow!("sidecar {}: {e}", sc.display()))?;
+    // a sidecar without the size guard is indistinguishable from one
+    // describing a different payload — reject instead of defaulting the
+    // guard to whatever length the payload happens to have
+    let numel = j
+        .get("numel")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("sidecar {} is missing numel", sc.display()))?;
     if numel != params.len() {
         return Err(anyhow!("checkpoint numel mismatch: {} vs {}", numel, params.len()));
     }
@@ -62,34 +119,366 @@ pub fn load(path: impl AsRef<Path>) -> Result<(Vec<f32>, CheckpointMeta)> {
             .unwrap_or_default()
             .to_string(),
         method: j.get("method").and_then(Json::as_str).unwrap_or_default().to_string(),
-        step: j.get("step").and_then(Json::as_usize).unwrap_or(0) as u64,
+        step: get_u64(&j, "step").unwrap_or(0),
         val_loss: j.get("val_loss").and_then(Json::as_f64).unwrap_or(0.0) as f32,
     };
     Ok((params, meta))
 }
 
-fn sidecar(path: &Path) -> std::path::PathBuf {
+fn sidecar(path: &Path) -> PathBuf {
     let mut s = path.as_os_str().to_os_string();
     s.push(".json");
-    std::path::PathBuf::from(s)
+    PathBuf::from(s)
+}
+
+// ---------------------------------------------------------------------------
+// Delta checkpoints (magic QGDC, version 1)
+// ---------------------------------------------------------------------------
+
+/// On-disk magic of the delta payload.
+const DELTA_MAGIC: [u8; 4] = *b"QGDC";
+/// Current delta format version.  Loaders reject anything else: the format
+/// carries optimizer state whose silent misinterpretation would corrupt a
+/// user's personalization, so there is no cross-version leniency.
+pub const DELTA_VERSION: u32 = 1;
+
+/// Typed payload of one delta section.  The variants cover every storage
+/// format a per-user delta holds: f32 low-rank factors and block scales,
+/// i8/u8 quantized codes, u64 counters and scheduler state.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SectionData {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    U8(Vec<u8>),
+    U64(Vec<u64>),
+}
+
+impl SectionData {
+    pub fn len(&self) -> usize {
+        match self {
+            SectionData::F32(v) => v.len(),
+            SectionData::I8(v) => v.len(),
+            SectionData::U8(v) => v.len(),
+            SectionData::U64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn byte_len(&self) -> usize {
+        match self {
+            SectionData::F32(v) => v.len() * 4,
+            SectionData::I8(v) => v.len(),
+            SectionData::U8(v) => v.len(),
+            SectionData::U64(v) => v.len() * 8,
+        }
+    }
+
+    fn dtype_tag(&self) -> u8 {
+        match self {
+            SectionData::F32(_) => 0,
+            SectionData::I8(_) => 1,
+            SectionData::U8(_) => 2,
+            SectionData::U64(_) => 3,
+        }
+    }
+}
+
+/// One named, shaped, typed section of a delta checkpoint (a low-rank
+/// factor, a packed projection, one Adam moment buffer, ...).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeltaSection {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: SectionData,
+}
+
+/// A per-user delta checkpoint: metadata plus named sections.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeltaCheckpoint {
+    pub meta: CheckpointMeta,
+    pub sections: Vec<DeltaSection>,
+}
+
+impl DeltaCheckpoint {
+    /// Look a section up by name (load paths: a missing section is a
+    /// format error, not a default).
+    pub fn section(&self, name: &str) -> Result<&DeltaSection> {
+        self.sections
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow!("delta checkpoint is missing section {name:?}"))
+    }
+
+    /// Total payload bytes this checkpoint serializes to (header included).
+    pub fn payload_bytes(&self) -> usize {
+        let mut n = 4 + 4 + 4; // magic + version + n_sections
+        for s in &self.sections {
+            n += 4 + s.name.len(); // name_len + name
+            n += 1; // dtype tag
+            n += 4 + 8 * s.shape.len(); // ndim + dims
+            n += 8 + s.data.byte_len(); // byte_len + payload
+        }
+        n
+    }
+}
+
+/// Wrap an `Optimizer::export_delta` tensor list (LoRA adapters, LowRank
+/// factor pairs) as a delta checkpoint — one f32 section per tensor, names
+/// and shapes preserved.
+pub fn delta_from_tensors(meta: CheckpointMeta, tensors: &[FpTensor]) -> DeltaCheckpoint {
+    let sections = tensors
+        .iter()
+        .map(|t| DeltaSection {
+            name: t.name.clone(),
+            shape: t.shape.clone(),
+            data: SectionData::F32(t.data.clone()),
+        })
+        .collect();
+    DeltaCheckpoint { meta, sections }
+}
+
+/// Unwrap a tensor-only delta checkpoint (written via
+/// [`delta_from_tensors`]) back into the `Optimizer::import_delta` list.
+/// Sections of any non-f32 dtype are a format error — those belong to the
+/// multijob coordinator's richer layout, not the optimizer-trait one.
+pub fn tensors_from_delta(ckpt: &DeltaCheckpoint) -> Result<Vec<FpTensor>> {
+    ckpt.sections
+        .iter()
+        .map(|s| match &s.data {
+            SectionData::F32(v) => Ok(FpTensor {
+                name: s.name.clone(),
+                shape: s.shape.clone(),
+                data: v.clone(),
+            }),
+            other => Err(anyhow!(
+                "delta section {:?} has non-f32 data ({} elems) — not an \
+                 optimizer tensor delta",
+                s.name,
+                other.len()
+            )),
+        })
+        .collect()
+}
+
+/// Serialize and atomically write a delta checkpoint: binary payload at
+/// `path` (magic `QGDC`, version, named sections), JSON sidecar at
+/// `<path>.json` (metadata + payload size guard), payload strictly first.
+pub fn save_delta(path: impl AsRef<Path>, ckpt: &DeltaCheckpoint) -> Result<()> {
+    let path = path.as_ref();
+    let mut bytes = Vec::with_capacity(ckpt.payload_bytes());
+    bytes.extend_from_slice(&DELTA_MAGIC);
+    bytes.extend_from_slice(&DELTA_VERSION.to_le_bytes());
+    bytes.extend_from_slice(&(ckpt.sections.len() as u32).to_le_bytes());
+    for s in &ckpt.sections {
+        let numel: usize = s.shape.iter().product();
+        if numel != s.data.len() {
+            bail!(
+                "delta section {:?}: shape {:?} ({numel} elems) vs {} data elems",
+                s.name,
+                s.shape,
+                s.data.len()
+            );
+        }
+        bytes.extend_from_slice(&(s.name.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(s.name.as_bytes());
+        bytes.push(s.data.dtype_tag());
+        bytes.extend_from_slice(&(s.shape.len() as u32).to_le_bytes());
+        for &d in &s.shape {
+            bytes.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        bytes.extend_from_slice(&(s.data.byte_len() as u64).to_le_bytes());
+        match &s.data {
+            SectionData::F32(v) => {
+                for x in v {
+                    bytes.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            SectionData::I8(v) => bytes.extend(v.iter().map(|&x| x as u8)),
+            SectionData::U8(v) => bytes.extend_from_slice(v),
+            SectionData::U64(v) => {
+                for x in v {
+                    bytes.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    atomic_write(path, &bytes)?;
+    let mut obj = BTreeMap::new();
+    obj.insert("format".into(), Json::Str("qgalore-delta".into()));
+    obj.insert("version".into(), Json::Num(DELTA_VERSION as f64));
+    obj.insert("cfg_name".into(), Json::Str(ckpt.meta.cfg_name.clone()));
+    obj.insert("method".into(), Json::Str(ckpt.meta.method.clone()));
+    obj.insert("step".into(), Json::Num(ckpt.meta.step as f64));
+    obj.insert("val_loss".into(), Json::Num(ckpt.meta.val_loss as f64));
+    obj.insert("n_sections".into(), Json::Num(ckpt.sections.len() as f64));
+    obj.insert("payload_bytes".into(), Json::Num(bytes.len() as f64));
+    atomic_write(&sidecar(path), Json::Obj(obj).dump().as_bytes())?;
+    Ok(())
+}
+
+/// Bounds-checked cursor over the delta payload — every read that would
+/// run past the end is a clean truncation error, never a panic.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .off
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| {
+                anyhow!(
+                    "delta payload truncated: need {n} bytes at offset {}, have {}",
+                    self.off,
+                    self.bytes.len().saturating_sub(self.off)
+                )
+            })?;
+        let s = &self.bytes[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+/// Load and validate a delta checkpoint written by [`save_delta`].
+///
+/// Rejects: missing/unparseable/partial sidecar, sidecar whose
+/// `payload_bytes`/`n_sections`/`version` disagree with the payload, bad
+/// magic, unknown version, truncated payload, shape/byte-length
+/// mismatches, and trailing garbage.
+pub fn load_delta(path: impl AsRef<Path>) -> Result<DeltaCheckpoint> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading delta checkpoint {}", path.display()))?;
+    let sc = sidecar(path);
+    let meta_raw = std::fs::read_to_string(&sc)
+        .with_context(|| format!("reading delta sidecar {}", sc.display()))?;
+    let j = Json::parse(&meta_raw)
+        .map_err(|e| anyhow!("delta sidecar {}: {e}", sc.display()))?;
+    let side_version = get_u64(&j, "version")
+        .ok_or_else(|| anyhow!("delta sidecar {} is missing version", sc.display()))?;
+    let side_bytes = get_u64(&j, "payload_bytes")
+        .ok_or_else(|| anyhow!("delta sidecar {} is missing payload_bytes", sc.display()))?;
+    let side_sections = get_u64(&j, "n_sections")
+        .ok_or_else(|| anyhow!("delta sidecar {} is missing n_sections", sc.display()))?;
+    if side_bytes != bytes.len() as u64 {
+        bail!(
+            "delta payload size mismatch: sidecar says {side_bytes} bytes, file has {}",
+            bytes.len()
+        );
+    }
+
+    let mut c = Cursor { bytes: &bytes, off: 0 };
+    let magic = c.take(4)?;
+    if magic != DELTA_MAGIC {
+        bail!("not a delta checkpoint (bad magic {magic:02x?})");
+    }
+    let version = c.u32()?;
+    if version != DELTA_VERSION || side_version != DELTA_VERSION as u64 {
+        bail!(
+            "unsupported delta format version {version} (sidecar {side_version}, \
+             this build reads {DELTA_VERSION})"
+        );
+    }
+    let n_sections = c.u32()? as usize;
+    if side_sections != n_sections as u64 {
+        bail!("delta section count mismatch: sidecar {side_sections}, payload {n_sections}");
+    }
+    let mut sections = Vec::with_capacity(n_sections);
+    for si in 0..n_sections {
+        let name_len = c.u32()? as usize;
+        let name = std::str::from_utf8(c.take(name_len)?)
+            .map_err(|_| anyhow!("delta section {si}: name is not utf8"))?
+            .to_string();
+        let dtype = c.take(1)?[0];
+        let ndim = c.u32()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(c.u64()? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let byte_len = c.u64()? as usize;
+        let elem = match dtype {
+            0 => 4,
+            1 | 2 => 1,
+            3 => 8,
+            t => bail!("delta section {name:?}: unknown dtype tag {t}"),
+        };
+        if byte_len != numel * elem {
+            bail!(
+                "delta section {name:?}: shape {shape:?} wants {} bytes, header says {byte_len}",
+                numel * elem
+            );
+        }
+        let raw = c.take(byte_len)?;
+        let data = match dtype {
+            0 => SectionData::F32(
+                raw.chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect(),
+            ),
+            1 => SectionData::I8(raw.iter().map(|&b| b as i8).collect()),
+            2 => SectionData::U8(raw.to_vec()),
+            3 => SectionData::U64(
+                raw.chunks_exact(8)
+                    .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+                    .collect(),
+            ),
+            _ => unreachable!("dtype validated above"),
+        };
+        sections.push(DeltaSection { name, shape, data });
+    }
+    if c.off != bytes.len() {
+        bail!("delta payload has {} trailing bytes", bytes.len() - c.off);
+    }
+    let meta = CheckpointMeta {
+        cfg_name: j
+            .get("cfg_name")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        method: j.get("method").and_then(Json::as_str).unwrap_or_default().to_string(),
+        step: get_u64(&j, "step").unwrap_or(0),
+        val_loss: j.get("val_loss").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+    };
+    Ok(DeltaCheckpoint { meta, sections })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::unique_temp_dir;
 
-    #[test]
-    fn roundtrip() {
-        let dir = std::env::temp_dir().join("qgalore_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("test.ckpt");
-        let params: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
-        let meta = CheckpointMeta {
+    fn meta() -> CheckpointMeta {
+        CheckpointMeta {
             cfg_name: "llama-tiny".into(),
             method: "Q-GaLore".into(),
             step: 123,
             val_loss: 4.5,
-        };
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = unique_temp_dir("ckpt");
+        let p = dir.join("test.ckpt");
+        let params: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        let meta = meta();
         save(&p, &params, &meta).unwrap();
         let (got, gmeta) = load(&p).unwrap();
         assert_eq!(got, params);
@@ -97,11 +486,163 @@ mod tests {
     }
 
     #[test]
+    fn save_leaves_no_tmp_files() {
+        let dir = unique_temp_dir("ckpt");
+        let p = dir.join("clean.ckpt");
+        save(&p, &[1.0, 2.0], &meta()).unwrap();
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(stray.is_empty(), "stray tmp files after save: {stray:?}");
+    }
+
+    #[test]
+    fn step_survives_u32_overflow() {
+        let dir = unique_temp_dir("ckpt");
+        let p = dir.join("big.ckpt");
+        let m = CheckpointMeta { step: 5_000_000_000, ..meta() };
+        save(&p, &[0.0; 4], &m).unwrap();
+        assert_eq!(load(&p).unwrap().1.step, 5_000_000_000);
+    }
+
+    #[test]
     fn rejects_truncated() {
-        let dir = std::env::temp_dir().join("qgalore_ckpt_test2");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = unique_temp_dir("ckpt");
         let p = dir.join("bad.ckpt");
         std::fs::write(&p, [0u8; 7]).unwrap();
         assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_sidecar() {
+        let dir = unique_temp_dir("ckpt");
+        let p = dir.join("orphan.ckpt");
+        // the state an interrupted save leaves: payload committed, no
+        // sidecar yet
+        std::fs::write(&p, 1.0f32.to_le_bytes()).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_sidecar_without_numel() {
+        let dir = unique_temp_dir("ckpt");
+        let p = dir.join("nonumel.ckpt");
+        save(&p, &[1.0, 2.0], &meta()).unwrap();
+        // strip the size guard: load must fail, not default it to the
+        // payload length (which made the guard vacuous)
+        std::fs::write(sidecar(&p), r#"{"cfg_name": "x", "step": 1}"#).unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("numel"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_partial_sidecar() {
+        let dir = unique_temp_dir("ckpt");
+        let p = dir.join("torn.ckpt");
+        save(&p, &[1.0, 2.0], &meta()).unwrap();
+        let full = std::fs::read_to_string(sidecar(&p)).unwrap();
+        std::fs::write(sidecar(&p), &full[..full.len() / 2]).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    fn delta() -> DeltaCheckpoint {
+        DeltaCheckpoint {
+            meta: meta(),
+            sections: vec![
+                DeltaSection {
+                    name: "layer0.lowrank".into(),
+                    shape: vec![2, 3],
+                    data: SectionData::F32(vec![0.5, -1.25, 3.0, f32::MIN_POSITIVE, 0.0, -0.0]),
+                },
+                DeltaSection {
+                    name: "layer0.proj.packed".into(),
+                    shape: vec![4],
+                    data: SectionData::U8(vec![0x12, 0x34, 0x56, 0x78]),
+                },
+                DeltaSection {
+                    name: "layer0.adam8.mq".into(),
+                    shape: vec![3],
+                    data: SectionData::I8(vec![-128, 0, 127]),
+                },
+                DeltaSection {
+                    name: "job".into(),
+                    shape: vec![3],
+                    data: SectionData::U64(vec![u64::MAX, 0, 42]),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn delta_roundtrip_bitwise() {
+        let dir = unique_temp_dir("delta");
+        let p = dir.join("user.delta");
+        let ck = delta();
+        save_delta(&p, &ck).unwrap();
+        let got = load_delta(&p).unwrap();
+        assert_eq!(got, ck);
+        // f32 sections must round-trip bitwise, not just by value
+        let SectionData::F32(a) = &ck.sections[0].data else { unreachable!() };
+        let SectionData::F32(b) = &got.sections[0].data else { unreachable!() };
+        let abits: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+        let bbits: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(abits, bbits);
+    }
+
+    #[test]
+    fn delta_rejects_missing_sidecar() {
+        let dir = unique_temp_dir("delta");
+        let p = dir.join("orphan.delta");
+        save_delta(&p, &delta()).unwrap();
+        std::fs::remove_file(sidecar(&p)).unwrap();
+        assert!(load_delta(&p).is_err());
+    }
+
+    #[test]
+    fn delta_rejects_partial_sidecar() {
+        let dir = unique_temp_dir("delta");
+        let p = dir.join("torn.delta");
+        save_delta(&p, &delta()).unwrap();
+        let full = std::fs::read_to_string(sidecar(&p)).unwrap();
+        std::fs::write(sidecar(&p), &full[..full.len() / 2]).unwrap();
+        assert!(load_delta(&p).is_err());
+    }
+
+    #[test]
+    fn delta_rejects_truncated_payload() {
+        let dir = unique_temp_dir("delta");
+        let p = dir.join("trunc.delta");
+        save_delta(&p, &delta()).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 3]).unwrap();
+        let err = load_delta(&p).unwrap_err().to_string();
+        // size guard fires before the parser even runs
+        assert!(err.contains("size mismatch"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn delta_rejects_bad_magic_and_version() {
+        let dir = unique_temp_dir("delta");
+        let p = dir.join("magic.delta");
+        save_delta(&p, &delta()).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_delta(&p).unwrap_err().to_string().contains("magic"));
+        bytes[0] = b'Q';
+        bytes[4] = 99; // version
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_delta(&p).unwrap_err().to_string().contains("version"));
+    }
+
+    #[test]
+    fn delta_save_rejects_shape_mismatch() {
+        let dir = unique_temp_dir("delta");
+        let p = dir.join("shape.delta");
+        let mut ck = delta();
+        ck.sections[0].shape = vec![7];
+        assert!(save_delta(&p, &ck).is_err());
     }
 }

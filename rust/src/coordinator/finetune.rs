@@ -8,8 +8,11 @@
 //! every label prefix and the model must assign the true label the lowest
 //! per-row loss (executed through the `eval_rows_fp` artifact).
 
-use anyhow::{anyhow, Result};
+use std::path::PathBuf;
 
+use anyhow::{anyhow, ensure, Result};
+
+use super::checkpoint::{self, CheckpointMeta};
 use crate::data::{tokenizer::BYTE_BASE, CorpusGenerator, Tokenizer};
 use crate::manifest::Manifest;
 use crate::optim::{self, BuildOptions, Method, StepCtx};
@@ -30,6 +33,15 @@ pub struct FinetuneConfig {
     pub n_eval_examples: usize,
     pub opts: BuildOptions,
     pub quiet: bool,
+    /// write the trained adapter/factor delta (QGDC format) here after the
+    /// last step — only methods with a frozen/in-place base split support
+    /// this (`Optimizer::export_delta`)
+    pub save_delta: Option<PathBuf>,
+    /// import a previously saved delta before training and continue from
+    /// its recorded step.  The synthetic data stream restarts from
+    /// `seed` (the bitwise resume guarantee lives in
+    /// `coordinator::multijob`, not here).
+    pub resume_delta: Option<PathBuf>,
 }
 
 impl Default for FinetuneConfig {
@@ -45,6 +57,8 @@ impl Default for FinetuneConfig {
             n_eval_examples: 32,
             opts: BuildOptions::default(),
             quiet: true,
+            save_delta: None,
+            resume_delta: None,
         }
     }
 }
@@ -98,7 +112,10 @@ fn label_window(
     rng: &mut Pcg32,
     label: usize,
     seq: usize,
-) -> (Vec<i32>, Vec<i32>) {
+) -> Result<(Vec<i32>, Vec<i32>)> {
+    // seq = 0 underflows the fill loop's bound and seq = 1 leaves no
+    // content token before the answer slot (content[1..] would panic)
+    ensure!(seq >= 2, "label window needs seq >= 2 (content + answer slot), got {seq}");
     let mut content: Vec<i32> = Vec::with_capacity(2 * seq);
     while content.len() < seq - 1 {
         let s = gen.labeled_example(rng, label);
@@ -112,7 +129,22 @@ fn label_window(
     let mut targets = content[1..].to_vec();
     targets.push(label_token(label));
     targets.push(crate::data::tokenizer::EOS as i32);
-    (tokens, targets)
+    Ok((tokens, targets))
+}
+
+/// Index of the smallest per-row loss, NaN-safe.  The old
+/// `partial_cmp(..).unwrap()` panicked on any NaN row, and a raw
+/// `f32::total_cmp` argmin is no better: negative NaN sorts *below* -inf
+/// under total order, so one poisoned row would win every comparison and
+/// be scored as the prediction.  NaN rows are excluded instead; returns
+/// `None` when the slice is empty or every row is NaN.
+pub(crate) fn argmin_loss(losses: &[f32]) -> Option<usize> {
+    losses
+        .iter()
+        .enumerate()
+        .filter(|(_, x)| !x.is_nan())
+        .min_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
 }
 
 pub fn finetune(
@@ -174,9 +206,36 @@ pub fn finetune(
         .ok_or_else(|| anyhow!("missing artifact {}", opt.fwd_artifact()))?
         .clone();
 
+    // ---- optional delta resume ----
+    let mut start_step = 0u64;
+    if let Some(path) = &cfg.resume_delta {
+        let ckpt = checkpoint::load_delta(path)?;
+        ensure!(
+            ckpt.meta.cfg_name == cfg.cfg_name,
+            "delta checkpoint is for config {:?}, this run uses {:?}",
+            ckpt.meta.cfg_name,
+            cfg.cfg_name
+        );
+        ensure!(
+            ckpt.meta.method == cfg.method.to_string(),
+            "delta checkpoint was trained with {}, this run uses {}",
+            ckpt.meta.method,
+            cfg.method
+        );
+        opt.import_delta(checkpoint::tensors_from_delta(&ckpt)?)?;
+        start_step = ckpt.meta.step.min(cfg.steps);
+        if !cfg.quiet {
+            println!(
+                "[ft {:>8}] resumed delta {} at step {start_step}",
+                cfg.method.to_string(),
+                path.display()
+            );
+        }
+    }
+
     // ---- fine-tune loop ----
     let mut train_losses = Vec::new();
-    for step in 0..cfg.steps {
+    for step in start_step..cfg.steps {
         let mut tokens = Vec::with_capacity(batch * seq);
         let mut targets = Vec::with_capacity(batch * seq);
         for bi in 0..batch {
@@ -200,6 +259,27 @@ pub fn finetune(
         let ctx = StepCtx { rt: &rt, man, step: step + 1, lr: cfg.lr };
         opt.apply_update(&ctx, grads)?;
         opt.on_step_end(&ctx)?;
+    }
+
+    // ---- optional delta save (before eval, so eval failures cannot lose
+    // the trained state) ----
+    if let Some(path) = &cfg.save_delta {
+        let meta = CheckpointMeta {
+            cfg_name: cfg.cfg_name.clone(),
+            method: cfg.method.to_string(),
+            step: cfg.steps,
+            val_loss: train_losses.last().map(|&(_, l)| l).unwrap_or(0.0),
+        };
+        let ckpt = checkpoint::delta_from_tensors(meta, &opt.export_delta()?);
+        checkpoint::save_delta(path, &ckpt)?;
+        if !cfg.quiet {
+            println!(
+                "[ft {:>8}] saved delta {} ({} bytes)",
+                cfg.method.to_string(),
+                path.display(),
+                ckpt.payload_bytes()
+            );
+        }
     }
 
     // ---- accuracy eval: label-prefix scoring over exported params ----
@@ -228,7 +308,7 @@ pub fn finetune(
         let true_label = ex % cfg.n_labels;
         // held-out content generated under the true label
         let (content_tokens, content_targets) =
-            label_window(&gen, &tok, &mut eval_rng, true_label, seq);
+            label_window(&gen, &tok, &mut eval_rng, true_label, seq)?;
         // batch: identical content, each row scored under candidate label j
         // (tokens/targets differ only at the answer slot, so argmin of the
         // per-row loss is argmax p(label_j | content))
@@ -254,12 +334,9 @@ pub fn finetune(
                 &losses[..cfg.n_labels]
             );
         }
-        let pred = losses[..cfg.n_labels]
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap();
+        let pred = argmin_loss(&losses[..cfg.n_labels]).ok_or_else(|| {
+            anyhow!("eval example {ex}: every candidate-row loss is NaN")
+        })?;
         total[true_label] += 1;
         if pred == true_label {
             correct[true_label] += 1;
@@ -280,4 +357,36 @@ pub fn finetune(
         train_losses,
         live_bytes: opt.live_bytes(),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmin_is_nan_safe() {
+        assert_eq!(argmin_loss(&[3.0, 1.0, 2.0]), Some(1));
+        assert_eq!(argmin_loss(&[f32::NAN, 1.0, 0.5]), Some(2));
+        // negative NaN sorts below -inf under total order; it must still lose
+        assert_eq!(argmin_loss(&[-f32::NAN, 7.0]), Some(1));
+        assert_eq!(argmin_loss(&[f32::NEG_INFINITY, 0.0]), Some(0));
+        assert_eq!(argmin_loss(&[f32::NAN, f32::NAN]), None);
+        assert_eq!(argmin_loss(&[]), None);
+    }
+
+    #[test]
+    fn label_window_rejects_degenerate_seq() {
+        let gen = CorpusGenerator::new(3);
+        let mut rng = Pcg32::new(1, 2);
+        let docs: Vec<String> = (0..16).map(|_| gen.labeled_example(&mut rng, 0)).collect();
+        let tok = Tokenizer::train(&docs, 64);
+        for seq in [0usize, 1] {
+            let err = label_window(&gen, &tok, &mut rng, 0, seq).unwrap_err();
+            assert!(err.to_string().contains("seq >= 2"), "seq {seq}: {err}");
+        }
+        let (t, g) = label_window(&gen, &tok, &mut rng, 0, 8).unwrap();
+        assert_eq!((t.len(), g.len()), (8, 8));
+        assert_eq!(*t.last().unwrap(), label_token(0));
+        assert_eq!(g[6], label_token(0));
+    }
 }

@@ -5,16 +5,31 @@
 //!   validation, metrics.
 //! * [`finetune`] — synthetic classification fine-tuning (the GLUE/MMLU
 //!   substitute): label-conditioned corpora, label-prefix scoring accuracy.
-//! * [`checkpoint`] — flat-f32 checkpoint save/load with JSON sidecar.
+//! * [`checkpoint`] — checkpoint formats: the flat-f32 dump (full model,
+//!   JSON sidecar) and the versioned `QGDC` per-user **delta** container
+//!   (low-rank factors + quantized state, a few hundred KB per tenant).
+//!   Both write atomically: `<path>.tmp` + rename, payload strictly
+//!   before sidecar, so a crash can never leave a loadable-but-corrupt
+//!   pair.
 //! * [`dataflow`] — host-side reference dataflow trainer: the step-graph
 //!   discipline of `Trainer::step` on in-process layers, so determinism /
 //!   fault-injection tests and benches run without an executing runtime.
+//! * [`multijob`] — multi-tenant fine-tune-as-a-service coordinator:
+//!   N concurrent jobs share one `WorkerPool` and one immutable
+//!   INT8-quantized base arena; per-job state is only the INT4
+//!   projection + low-rank factor + Adam8 moments.  Each round advances
+//!   every job one step through a single combined step graph
+//!   (round-robin fair), and each job's trace is bitwise-identical to
+//!   running it alone — see the module docs for the determinism contract
+//!   and the delta checkpoint layout.
 
 pub mod checkpoint;
 pub mod dataflow;
 pub mod finetune;
+pub mod multijob;
 pub mod trainer;
 
 pub use dataflow::{HostDataflowTrainer, HostMethod, HostStepConfig};
 pub use finetune::{finetune, FinetuneConfig, FinetuneResult};
+pub use multijob::{BaseArena, JobState, MultiJobConfig, MultiJobCoordinator};
 pub use trainer::{dataflow_default, pretrain, TrainConfig, TrainResult, DATAFLOW_ENV};

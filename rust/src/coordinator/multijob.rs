@@ -1,0 +1,1004 @@
+//! Multi-job fine-tune-as-a-service coordinator.
+//!
+//! The paper's fine-tuning claim (Q-GaLore matches QLoRA at equal memory)
+//! is a serving-economics claim: millions of users each own a tiny
+//! low-rank personalization on top of ONE shared quantized base.  This
+//! module is that shape as a host-side subsystem:
+//!
+//! * [`BaseArena`] — the shared base: per layer, input statistics `X`, the
+//!   INT8-quantized base weights `W0`, and the precomputed base response
+//!   `X·W0`.  Built once, **read-only forever** — every concurrent job
+//!   reads it, none may write it, so N tenants cost one base.
+//! * [`JobState`] — everything a tenant owns: per layer an INT4-packed
+//!   projection `P` (m×r), a trainable low-rank factor `L` (r×n), and
+//!   blockwise 8-bit Adam moments on `L`; plus the job's lazy subspace
+//!   scheduler and its private seed/counter streams.  The tenant's model
+//!   is `W0 + P·L` — a few hundred KB of delta against a shared base.
+//! * [`MultiJobCoordinator`] — N jobs × one `WorkerPool`.  Each call to
+//!   [`MultiJobCoordinator::round`] advances **every** job by exactly one
+//!   step (round-robin fairness: no job can starve another, a job's step
+//!   count is always within one of any co-tenant's) by building ONE
+//!   combined dependency graph over all jobs' per-layer chains and
+//!   executing it with a single `WorkerPool::run_graph` — co-tenants'
+//!   chains interleave freely on the stealing pool.
+//!
+//! # Per-job determinism contract
+//!
+//! A job's loss trace and final delta are **bitwise identical** whether it
+//! runs alone or alongside any number of co-tenants, for any worker
+//! count, steal seed, and slab setting (`tests/multijob.rs` fences this
+//! in the PR-6 golden style).  The discipline is the same one
+//! `HostDataflowTrainer` and `Galore::apply_update_dataflow` follow:
+//!
+//! * every value a step consumes is either owned by exactly one chain
+//!   (one node per (job, layer)) or read-only shared (the arena);
+//! * everything order-sensitive — update-noise counters, subspace sketch
+//!   seeds — is drawn **serially in the plan phase** from job-local
+//!   counters keyed only by the job's own seed, so co-tenants cannot
+//!   perturb each other's streams;
+//! * cross-layer reductions (loss sum, scheduler recording) happen
+//!   serially at the join, in layer-index / plan order.
+//!
+//! [`MultiJobCoordinator::round_sequential`] executes the identical plans
+//! serially; `round` must match it bitwise.
+//!
+//! # Delta checkpoints
+//!
+//! [`MultiJobCoordinator::export_delta`] serializes one job into the
+//! versioned `QGDC` container of [`checkpoint`] (low-rank factors, packed
+//! INT4 projection, Adam8 moments, scheduler + counter state);
+//! [`MultiJobCoordinator::import_job`] restores it onto a compatible
+//! arena such that save → load → resume reproduces the uninterrupted run
+//! bitwise.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::coordinator::checkpoint::{
+    CheckpointMeta, DeltaCheckpoint, DeltaSection, SectionData,
+};
+use crate::linalg::{
+    left_subspace_batched, pack_cache_enabled, Mat, PanelCache, ParallelCtx, WorkerPool,
+};
+use crate::optim::StepGraphBuilder;
+use crate::quant::{self, Adam8State, Quant4Tensor, QuantTensor};
+use crate::scheduler::{SchedulerConfig, SubspaceScheduler};
+use crate::util::Pcg32;
+
+/// Power-iteration count at refresh time (mirrors the optimizer's).
+const SUBSPACE_ITERS: usize = 2;
+/// Domain salts separating a job's derived seed streams from each other.
+const NOISE_SALT: u64 = 0x6e6f_6973_655f_6d6a; // "noise_mj"
+const SKETCH_SALT: u64 = 0x736b_6574_6368_6d6a; // "sketchmj"
+/// Stream id for per-job target data.
+const DATA_STREAM: u64 = 0x0b5e;
+
+/// splitmix64 over a (salted seed, counter) pair: the counter-addressable
+/// seed derivation that makes every per-job random stream a pure function
+/// of (job seed, counter value) — resumable from two u64s, untouchable by
+/// co-tenants.
+fn mix_seed(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct MultiJobConfig {
+    /// subspace rank of every job's delta (clamped per layer to min(m, n))
+    pub rank: usize,
+    pub lr: f32,
+    /// weight of the counter-seeded uniform noise folded into each update
+    /// (stands in for Q-GaLore's stochastic-rounding noise operand)
+    pub noise_eps: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub sched: SchedulerConfig,
+    /// seed of the shared base arena (X, W0) — part of the service
+    /// identity: deltas only make sense against the arena they trained on
+    pub arena_seed: u64,
+}
+
+impl Default for MultiJobConfig {
+    fn default() -> Self {
+        MultiJobConfig {
+            rank: 8,
+            lr: 1e-2,
+            noise_eps: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            sched: SchedulerConfig::default(),
+            arena_seed: 0,
+        }
+    }
+}
+
+/// One layer of the shared base: read-only after construction.
+struct BaseLayer {
+    m: usize,
+    n: usize,
+    /// input statistics (m, m)
+    x: Mat,
+    /// INT8 base weights — the storage format the service keeps resident
+    /// once for all tenants
+    w0q: QuantTensor,
+    /// precomputed base response X·dequant(W0) (m, n): every job's
+    /// residual starts from this shared term
+    xw0: Mat,
+}
+
+/// The shared immutable base arena.
+pub struct BaseArena {
+    layers: Vec<BaseLayer>,
+}
+
+impl BaseArena {
+    /// Build the base from layer shapes and the arena seed.  `ctx` only
+    /// sets the worker budget of the setup matmuls — results are
+    /// bits-invariant to it (engine contract).
+    pub fn new(shapes: &[(usize, usize)], arena_seed: u64, ctx: ParallelCtx) -> Self {
+        let mut rng = Pcg32::new(arena_seed, 0xba5e);
+        let layers = shapes
+            .iter()
+            .map(|&(m, n)| {
+                let xs = 1.0 / (m as f32).sqrt();
+                let x = Mat::from_vec(m, m, rng.normal_vec(m * m, 0.0, xs));
+                let w0 = rng.normal_vec(m * n, 0.0, 0.1);
+                let w0q = quant::quantize(&w0, 8);
+                let w0d = Mat::from_vec(m, n, quant::dequantize(&w0q));
+                let xw0 = x.matmul_with(&w0d, ctx);
+                BaseLayer { m, n, x, w0q, xw0 }
+            })
+            .collect();
+        BaseArena { layers }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        self.layers.iter().map(|l| (l.m, l.n)).collect()
+    }
+
+    /// Resident bytes of the shared base (INT8 weights + f32 statistics).
+    pub fn base_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.w0q.storage_bytes() as u64 + (l.x.data.len() + l.xw0.data.len()) as u64 * 4
+            })
+            .sum()
+    }
+}
+
+/// One layer of one tenant's delta state.
+struct JobLayer {
+    /// INT4-stored projection basis (m, r); None until the first refresh
+    p4: Option<Quant4Tensor>,
+    /// epoch-keyed panel pack of `p4` (speed cache; bits-neutral)
+    pack: PanelCache,
+    /// trainable low-rank factor (r, n) — the personalization itself
+    l: Mat,
+    /// blockwise 8-bit Adam moments on `l`
+    st: Adam8State,
+}
+
+/// Everything one fine-tune job owns.
+pub struct JobState {
+    /// tenant identity: keys the job's target data and every derived
+    /// random stream
+    pub seed: u64,
+    layers: Vec<JobLayer>,
+    /// per-layer targets (m, n) — the job's "dataset"
+    y: Vec<Mat>,
+    pub sched: SubspaceScheduler,
+    /// update-noise draw counter (consumed serially in walk order)
+    noise_ctr: u64,
+    /// sketch-seed draw counter (one per refresh shape-group)
+    refresh_ctr: u64,
+    step: u64,
+    /// mean loss per completed step — the trace the golden tests pin
+    pub loss_trace: Vec<f32>,
+}
+
+impl JobState {
+    fn new(arena: &BaseArena, cfg: &MultiJobConfig, seed: u64) -> Self {
+        let mut yrng = Pcg32::new(seed, DATA_STREAM);
+        let mut layers = Vec::with_capacity(arena.layers.len());
+        let mut y = Vec::with_capacity(arena.layers.len());
+        for bl in &arena.layers {
+            let r = cfg.rank.min(bl.m).min(bl.n);
+            y.push(Mat::from_vec(bl.m, bl.n, yrng.normal_vec(bl.m * bl.n, 0.0, 1.0)));
+            layers.push(JobLayer {
+                p4: None,
+                pack: PanelCache::empty(),
+                l: Mat::zeros(r, bl.n),
+                st: Adam8State::zeros(r * bl.n),
+            });
+        }
+        let names: Vec<String> =
+            (0..layers.len()).map(|i| format!("job{seed}.l{i}")).collect();
+        JobState {
+            seed,
+            layers,
+            y,
+            sched: SubspaceScheduler::new(&names, cfg.sched),
+            noise_ctr: 0,
+            refresh_ctr: 0,
+            step: 0,
+            loss_trace: Vec::new(),
+        }
+    }
+
+    fn next_noise_ctr(&mut self) -> u64 {
+        self.noise_ctr += 1;
+        self.noise_ctr
+    }
+
+    fn next_sketch_seed(&mut self) -> u64 {
+        self.refresh_ctr += 1;
+        mix_seed(self.seed ^ SKETCH_SALT, self.refresh_ctr)
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.step
+    }
+
+    /// Resident bytes of this tenant's delta (projection + factor +
+    /// moments) — the quantity the serving-economics story is about.
+    pub fn delta_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|jl| {
+                jl.p4.as_ref().map_or(0, |p| p.storage_bytes() as u64)
+                    + jl.l.data.len() as u64 * 4
+                    + jl.st.storage_bytes() as u64
+            })
+            .sum()
+    }
+}
+
+/// Immutable per-node task parameters (one per job per step): `Copy` into
+/// every graph node of that job's chains.
+#[derive(Clone, Copy)]
+struct StepTaskCfg {
+    lr: f32,
+    noise_eps: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    /// Adam bias corrections of this job's (1-based) step
+    c1: f32,
+    c2: f32,
+    job_seed: u64,
+    ctx: ParallelCtx,
+}
+
+/// Residual, loss, and full-rank gradient of one (job, layer):
+/// `resid = (X·W0 + X·(P·L)) − Y`, `g = Xᵀ·resid`.
+fn layer_grad(base: &BaseLayer, jl: &JobLayer, y: &Mat, ctx: ParallelCtx) -> (Mat, f32) {
+    let (m, n) = (base.m, base.n);
+    let resid = match &jl.p4 {
+        Some(p4) => {
+            let r = jl.l.rows;
+            let pack = jl.pack.get().filter(|pk| pk.matches4(p4, m, r));
+            let pl = match pack {
+                Some(pk) => quant::dequant4_matmul_prepacked(p4, pk, m, r, &jl.l, ctx),
+                None => quant::dequant4_matmul(p4, m, r, &jl.l, ctx),
+            };
+            let xd = base.x.matmul_with(&pl, ctx);
+            let mut data = Vec::with_capacity(m * n);
+            for i in 0..m * n {
+                data.push(base.xw0.data[i] + xd.data[i] - y.data[i]);
+            }
+            Mat::from_vec(m, n, data)
+        }
+        None => base.xw0.sub(y),
+    };
+    let f = resid.frobenius();
+    let loss = f * f / (m * n) as f32;
+    let g = base.x.t_matmul_with(&resid, ctx);
+    (g, loss)
+}
+
+/// One low-rank delta update: down-project the gradient through the
+/// job's INT4 basis, blockwise 8-bit Adam on the factor, apply with
+/// counter-seeded noise (the SR-noise stand-in).
+fn layer_update(jl: &mut JobLayer, base: &BaseLayer, cfg: StepTaskCfg, ctr: u64, g: &Mat) {
+    let m = base.m;
+    let p4 = jl.p4.as_ref().expect("projected layer refreshed at step 0");
+    let r = jl.l.rows;
+    let pack = jl.pack.get().filter(|pk| pk.matches4(p4, m, r));
+    let gl = match pack {
+        Some(pk) => quant::dequant4_t_matmul_prepacked(p4, pk, m, r, g, cfg.ctx),
+        None => quant::dequant4_t_matmul(p4, m, r, g, cfg.ctx),
+    };
+    let u = quant::adam8_step_host(
+        &gl.data, &mut jl.st, cfg.c1, cfg.c2, cfg.beta1, cfg.beta2, cfg.eps,
+    );
+    let noise = quant::uniform_noise(
+        jl.l.data.len(),
+        mix_seed(cfg.job_seed ^ NOISE_SALT, ctr),
+        cfg.ctx,
+    );
+    for ((le, ue), ne) in jl.l.data.iter_mut().zip(&u).zip(&noise) {
+        *le -= cfg.lr * (ue + cfg.noise_eps * (ne - 0.5));
+    }
+}
+
+/// Install a freshly computed basis: overlap-vs-old similarity, INT4
+/// storage + panel repack, and — because the base is immutable — the
+/// personalization is *carried across the subspace change* by
+/// re-expressing the old delta in the new basis (`L' = P'ᵀ·(P·L)`).
+/// Moments reset with the subspace, as in the host dataflow trainer.
+fn refresh_layer(jl: &mut JobLayer, base: &BaseLayer, cfg: StepTaskCfg, new_p: Mat) -> Option<f32> {
+    let (m, n) = (base.m, base.n);
+    let old_state = jl.p4.as_ref().map(|old| {
+        let r_old = jl.l.rows;
+        let pack = jl.pack.get().filter(|pk| pk.matches4(old, m, r_old));
+        let prod = match pack {
+            Some(pk) => quant::dequant4_t_matmul_prepacked(old, pk, m, r_old, &new_p, cfg.ctx),
+            None => quant::dequant4_t_matmul(old, m, r_old, &new_p, cfg.ctx),
+        };
+        let f = prod.frobenius();
+        let sim = f * f / r_old.min(new_p.cols).max(1) as f32;
+        let delta = match pack {
+            Some(pk) => quant::dequant4_matmul_prepacked(old, pk, m, r_old, &jl.l, cfg.ctx),
+            None => quant::dequant4_matmul(old, m, r_old, &jl.l, cfg.ctx),
+        };
+        (sim, delta)
+    });
+    let r_new = new_p.cols;
+    let q = quant::quantize4(&new_p.data);
+    jl.pack.invalidate();
+    if pack_cache_enabled() {
+        jl.pack.get_or_pack4(&q, m, r_new);
+    }
+    jl.l = match &old_state {
+        Some((_, delta)) => {
+            let pack = jl.pack.get().filter(|pk| pk.matches4(&q, m, r_new));
+            match pack {
+                Some(pk) => quant::dequant4_t_matmul_prepacked(&q, pk, m, r_new, delta, cfg.ctx),
+                None => quant::dequant4_t_matmul(&q, m, r_new, delta, cfg.ctx),
+            }
+        }
+        None => Mat::zeros(r_new, n),
+    };
+    jl.st = Adam8State::zeros(r_new * n);
+    jl.p4 = Some(q);
+    old_state.map(|(sim, _)| sim)
+}
+
+/// The serially pre-assigned plan of one job's next step: every shared
+/// decision (due membership, sketch seeds, noise counters) drawn from
+/// job-local state in the sequential walk order.
+struct JobPlan {
+    step: u64,
+    cfg: StepTaskCfg,
+    /// non-due layers: (layer idx, noise counter), walk order
+    now: Vec<(usize, u64)>,
+    /// refresh waves: one per shape group, first-due order
+    waves: Vec<WavePlan>,
+}
+
+struct WavePlan {
+    seed: u64,
+    /// (layer idx, noise counter), group walk order
+    members: Vec<(usize, u64)>,
+}
+
+pub struct MultiJobCoordinator {
+    pub cfg: MultiJobConfig,
+    arena: BaseArena,
+    jobs: Vec<JobState>,
+    ctx: ParallelCtx,
+}
+
+impl MultiJobCoordinator {
+    pub fn new(shapes: &[(usize, usize)], cfg: MultiJobConfig, ctx: ParallelCtx) -> Self {
+        MultiJobCoordinator {
+            arena: BaseArena::new(shapes, cfg.arena_seed, ctx),
+            cfg,
+            jobs: Vec::new(),
+            ctx,
+        }
+    }
+
+    pub fn arena(&self) -> &BaseArena {
+        &self.arena
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn job(&self, ji: usize) -> &JobState {
+        &self.jobs[ji]
+    }
+
+    /// Admit a new tenant; returns its job index.
+    pub fn add_job(&mut self, seed: u64) -> usize {
+        self.jobs.push(JobState::new(&self.arena, &self.cfg, seed));
+        self.jobs.len() - 1
+    }
+
+    /// Flat bit pattern of one job's trained factors — what the golden
+    /// tests compare between solo and co-tenant runs.
+    pub fn export_factors(&self, ji: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        for jl in &self.jobs[ji].layers {
+            out.extend_from_slice(&jl.l.data);
+        }
+        out
+    }
+
+    /// Plan one step of job `ji` (serial; draws the job's counters).
+    fn plan_job(&mut self, ji: usize) -> JobPlan {
+        let cfg = self.cfg;
+        let ctx = self.ctx;
+        let job = &mut self.jobs[ji];
+        let step = job.step;
+        let t = (step + 1) as i32;
+        let tcfg = StepTaskCfg {
+            lr: cfg.lr,
+            noise_eps: cfg.noise_eps,
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            eps: cfg.eps,
+            c1: 1.0 / (1.0 - cfg.beta1.powi(t)),
+            c2: 1.0 / (1.0 - cfg.beta2.powi(t)),
+            job_seed: job.seed,
+            ctx,
+        };
+        let due = job.sched.plan_due(step);
+        let nl = job.layers.len();
+        let mut now = Vec::new();
+        for idx in 0..nl {
+            if !due.contains(&idx) {
+                let ctr = job.next_noise_ctr();
+                now.push((idx, ctr));
+            }
+        }
+        // shape groups in first-due order, ONE sketch seed per group
+        let mut groups: Vec<((usize, usize), u64, Vec<usize>)> = Vec::new();
+        for &idx in &due {
+            let key = (self.arena.layers[idx].m, self.arena.layers[idx].n);
+            let gi = match groups.iter().position(|(k, _, _)| *k == key) {
+                Some(gi) => gi,
+                None => {
+                    let seed = job.next_sketch_seed();
+                    groups.push((key, seed, Vec::new()));
+                    groups.len() - 1
+                }
+            };
+            groups[gi].2.push(idx);
+        }
+        let waves = groups
+            .into_iter()
+            .map(|(_k, seed, members)| WavePlan {
+                seed,
+                members: members.into_iter().map(|idx| (idx, job.next_noise_ctr())).collect(),
+            })
+            .collect();
+        JobPlan { step, cfg: tcfg, now, waves }
+    }
+
+    /// Advance every job one step, serially (the arbiter the graph path
+    /// must match bitwise).  Returns each job's mean loss, job order.
+    pub fn round_sequential(&mut self) -> Vec<f32> {
+        let rank = self.cfg.rank;
+        let mut out = Vec::with_capacity(self.jobs.len());
+        for ji in 0..self.jobs.len() {
+            let plan = self.plan_job(ji);
+            let arena = &self.arena;
+            let job = &mut self.jobs[ji];
+            let nl = job.layers.len();
+            let mut losses = vec![0f32; nl];
+            for &(idx, ctr) in &plan.now {
+                let (g, loss) = layer_grad(&arena.layers[idx], &job.layers[idx], &job.y[idx], plan.cfg.ctx);
+                losses[idx] = loss;
+                layer_update(&mut job.layers[idx], &arena.layers[idx], plan.cfg, ctr, &g);
+            }
+            for wave in &plan.waves {
+                let mut grads = Vec::with_capacity(wave.members.len());
+                for &(idx, _ctr) in &wave.members {
+                    let (g, loss) =
+                        layer_grad(&arena.layers[idx], &job.layers[idx], &job.y[idx], plan.cfg.ctx);
+                    losses[idx] = loss;
+                    grads.push(g);
+                }
+                let grefs: Vec<&Mat> = grads.iter().collect();
+                let mut rng = Pcg32::new(wave.seed, 0x5eed);
+                let new_ps =
+                    left_subspace_batched(&grefs, rank, SUBSPACE_ITERS, &mut rng, plan.cfg.ctx);
+                drop(grefs);
+                for ((&(idx, ctr), g), new_p) in
+                    wave.members.iter().zip(&grads).zip(new_ps)
+                {
+                    let sim =
+                        refresh_layer(&mut job.layers[idx], &arena.layers[idx], plan.cfg, new_p);
+                    job.sched.record_refresh(idx, plan.step, sim);
+                    layer_update(&mut job.layers[idx], &arena.layers[idx], plan.cfg, ctr, g);
+                }
+            }
+            let total: f32 = losses.iter().sum();
+            let mean = total / nl as f32;
+            job.loss_trace.push(mean);
+            job.step += 1;
+            out.push(mean);
+        }
+        out
+    }
+
+    /// Advance every job one step as ONE combined dependency graph on
+    /// `pool` — the fair-scheduled service step.  Bitwise identical to
+    /// [`Self::round_sequential`] per job, for any worker count / steal
+    /// seed / co-tenant set.  A panic in any chain surfaces as this
+    /// round's `Err`; no job's step counter advances.
+    pub fn round(&mut self, pool: &WorkerPool) -> Result<Vec<f32>> {
+        let njobs = self.jobs.len();
+        if njobs == 0 {
+            return Ok(Vec::new());
+        }
+        let rank = self.cfg.rank;
+        let nl = self.arena.layers.len();
+
+        // ---- plan phase (serial, job order; each job's plan reads only
+        // its own state, so the plan stream is co-tenant-independent)
+        let plans: Vec<JobPlan> = (0..njobs).map(|ji| self.plan_job(ji)).collect();
+
+        // ---- execute phase: one combined graph over all jobs.  Scoped in
+        // a block so the relay borrows of `self.jobs` end before the join
+        // phase mutates job state; only plain data crosses out.
+        let mut sim_records: Vec<(usize, usize, Option<f32>)> = Vec::new();
+        let job_losses: Vec<Vec<f32>>;
+        {
+        let loss_slots: Vec<Vec<Mutex<Option<f32>>>> = (0..njobs)
+            .map(|_| (0..nl).map(|_| Mutex::new(None)).collect())
+            .collect();
+        #[allow(clippy::type_complexity)]
+        let g_slots: Vec<Vec<Vec<Mutex<Option<Mat>>>>> = plans
+            .iter()
+            .map(|p| {
+                p.waves
+                    .iter()
+                    .map(|w| w.members.iter().map(|_| Mutex::new(None)).collect())
+                    .collect()
+            })
+            .collect();
+        #[allow(clippy::type_complexity)]
+        let proj_slots: Vec<Vec<Vec<Mutex<Option<Mat>>>>> = plans
+            .iter()
+            .map(|p| {
+                p.waves
+                    .iter()
+                    .map(|w| w.members.iter().map(|_| Mutex::new(None)).collect())
+                    .collect()
+            })
+            .collect();
+        let sim_slots: Vec<Vec<Vec<Mutex<Option<f32>>>>> = plans
+            .iter()
+            .map(|p| {
+                p.waves
+                    .iter()
+                    .map(|w| w.members.iter().map(|_| Mutex::new(None)).collect())
+                    .collect()
+            })
+            .collect();
+        #[allow(clippy::type_complexity)]
+        let relay_slots: Vec<Vec<Vec<Mutex<Option<&mut JobLayer>>>>> = plans
+            .iter()
+            .map(|p| {
+                p.waves
+                    .iter()
+                    .map(|w| w.members.iter().map(|_| Mutex::new(None)).collect())
+                    .collect()
+            })
+            .collect();
+        let mut recordings: Vec<(usize, usize, usize, usize)> = Vec::new();
+        let arena = &self.arena;
+        let mut b = StepGraphBuilder::new();
+        for (ji, (job, plan)) in self.jobs.iter_mut().zip(&plans).enumerate() {
+            let mut layer_slots: Vec<Option<&mut JobLayer>> =
+                job.layers.iter_mut().map(Some).collect();
+            let ys: &Vec<Mat> = &job.y;
+            let cfg = plan.cfg;
+            for &(idx, ctr) in &plan.now {
+                let jl = layer_slots[idx].take().expect("one chain per (job, layer)");
+                let bl = &arena.layers[idx];
+                let y = &ys[idx];
+                let lslot = &loss_slots[ji][idx];
+                b.node(&[], move || {
+                    let (g, loss) = layer_grad(bl, jl, y, cfg.ctx);
+                    *lslot.lock().unwrap() = Some(loss);
+                    layer_update(jl, bl, cfg, ctr, &g);
+                });
+            }
+            for (wi, wave) in plan.waves.iter().enumerate() {
+                let mut grad_ids = Vec::with_capacity(wave.members.len());
+                for (mi, &(idx, _ctr)) in wave.members.iter().enumerate() {
+                    let jl = layer_slots[idx].take().expect("one chain per (job, layer)");
+                    let bl = &arena.layers[idx];
+                    let y = &ys[idx];
+                    let lslot = &loss_slots[ji][idx];
+                    let gslot = &g_slots[ji][wi][mi];
+                    let rslot = &relay_slots[ji][wi][mi];
+                    grad_ids.push(b.node(&[], move || {
+                        let (g, loss) = layer_grad(bl, jl, y, cfg.ctx);
+                        *lslot.lock().unwrap() = Some(loss);
+                        *gslot.lock().unwrap() = Some(g);
+                        *rslot.lock().unwrap() = Some(jl);
+                    }));
+                }
+                let seed = wave.seed;
+                let wave_g = &g_slots[ji][wi];
+                let wave_p = &proj_slots[ji][wi];
+                let basis = b.node(&grad_ids, move || {
+                    let guards: Vec<_> = wave_g.iter().map(|s| s.lock().unwrap()).collect();
+                    let grefs: Vec<&Mat> = guards
+                        .iter()
+                        .map(|gu| gu.as_ref().expect("grad node filled slot"))
+                        .collect();
+                    let mut rng = Pcg32::new(seed, 0x5eed);
+                    let new_ps =
+                        left_subspace_batched(&grefs, rank, SUBSPACE_ITERS, &mut rng, cfg.ctx);
+                    drop(grefs);
+                    drop(guards);
+                    for (slot, p) in wave_p.iter().zip(new_ps) {
+                        *slot.lock().unwrap() = Some(p);
+                    }
+                });
+                for (mi, &(idx, ctr)) in wave.members.iter().enumerate() {
+                    recordings.push((ji, wi, mi, idx));
+                    let bl = &arena.layers[idx];
+                    let gslot = &g_slots[ji][wi][mi];
+                    let rslot = &relay_slots[ji][wi][mi];
+                    let pslot = &proj_slots[ji][wi][mi];
+                    let sslot = &sim_slots[ji][wi][mi];
+                    b.node(&[basis], move || {
+                        let jl = rslot.lock().unwrap().take().expect("grad node relayed layer");
+                        let g = gslot.lock().unwrap().take().expect("grad node filled slot");
+                        let new_p =
+                            pslot.lock().unwrap().take().expect("basis node filled slot");
+                        *sslot.lock().unwrap() = refresh_layer(jl, bl, cfg, new_p);
+                        layer_update(jl, bl, cfg, ctr, &g);
+                    });
+                }
+            }
+        }
+        b.run(pool)?;
+        job_losses = loss_slots
+            .iter()
+            .map(|slots| {
+                slots
+                    .iter()
+                    .map(|s| s.lock().unwrap().expect("every chain recorded its loss"))
+                    .collect()
+            })
+            .collect();
+        for (ji, wi, mi, idx) in recordings {
+            sim_records.push((ji, idx, *sim_slots[ji][wi][mi].lock().unwrap()));
+        }
+        }
+
+        // ---- join phase (serial): scheduler recording in plan order,
+        // then per-job loss reduction in layer-index order — exactly the
+        // orders the sequential walk uses
+        for &(ji, idx, sim) in &sim_records {
+            self.jobs[ji].sched.record_refresh(idx, plans[ji].step, sim);
+        }
+        let mut out = Vec::with_capacity(njobs);
+        for (ji, job) in self.jobs.iter_mut().enumerate() {
+            let total: f32 = job_losses[ji].iter().sum();
+            let mean = total / nl as f32;
+            job.loss_trace.push(mean);
+            job.step += 1;
+            out.push(mean);
+        }
+        Ok(out)
+    }
+
+    // -----------------------------------------------------------------
+    // Delta checkpoints
+    // -----------------------------------------------------------------
+
+    /// Serialize job `ji` into a delta checkpoint (see the module docs
+    /// for the determinism contract save → load → resume honors).
+    pub fn export_delta(&self, ji: usize, cfg_name: &str) -> Result<DeltaCheckpoint> {
+        let job = self.jobs.get(ji).ok_or_else(|| anyhow!("no job {ji}"))?;
+        let mut sections = Vec::new();
+        sections.push(DeltaSection {
+            name: "job".into(),
+            shape: vec![5],
+            data: SectionData::U64(vec![
+                job.seed,
+                job.step,
+                job.noise_ctr,
+                job.refresh_ctr,
+                self.cfg.rank as u64,
+            ]),
+        });
+        for (i, jl) in job.layers.iter().enumerate() {
+            let bl = &self.arena.layers[i];
+            let has_proj = jl.p4.is_some() as u64;
+            sections.push(DeltaSection {
+                name: format!("layer{i}.meta"),
+                shape: vec![4],
+                data: SectionData::U64(vec![bl.m as u64, bl.n as u64, jl.l.rows as u64, has_proj]),
+            });
+            sections.push(DeltaSection {
+                name: format!("layer{i}.lowrank"),
+                shape: vec![jl.l.rows, jl.l.cols],
+                data: SectionData::F32(jl.l.data.clone()),
+            });
+            if let Some(p4) = &jl.p4 {
+                sections.push(DeltaSection {
+                    name: format!("layer{i}.proj.packed"),
+                    shape: vec![p4.packed.len()],
+                    data: SectionData::U8(p4.packed.clone()),
+                });
+                sections.push(DeltaSection {
+                    name: format!("layer{i}.proj.scale"),
+                    shape: vec![p4.scale.len()],
+                    data: SectionData::F32(p4.scale.clone()),
+                });
+                sections.push(DeltaSection {
+                    name: format!("layer{i}.proj.zero"),
+                    shape: vec![p4.zero.len()],
+                    data: SectionData::F32(p4.zero.clone()),
+                });
+                sections.push(DeltaSection {
+                    name: format!("layer{i}.proj.meta"),
+                    shape: vec![2],
+                    data: SectionData::U64(vec![p4.block as u64, p4.numel() as u64]),
+                });
+            }
+            sections.push(DeltaSection {
+                name: format!("layer{i}.adam8.mq"),
+                shape: vec![jl.st.mq.len()],
+                data: SectionData::I8(jl.st.mq.clone()),
+            });
+            sections.push(DeltaSection {
+                name: format!("layer{i}.adam8.ms"),
+                shape: vec![jl.st.ms.len()],
+                data: SectionData::F32(jl.st.ms.clone()),
+            });
+            sections.push(DeltaSection {
+                name: format!("layer{i}.adam8.vq"),
+                shape: vec![jl.st.vq.len()],
+                data: SectionData::U8(jl.st.vq.clone()),
+            });
+            sections.push(DeltaSection {
+                name: format!("layer{i}.adam8.vs"),
+                shape: vec![jl.st.vs.len()],
+                data: SectionData::F32(jl.st.vs.clone()),
+            });
+            sections.push(DeltaSection {
+                name: format!("layer{i}.adam8.meta"),
+                shape: vec![1],
+                data: SectionData::U64(vec![jl.st.block as u64]),
+            });
+            let ls = job.sched.layer(i);
+            sections.push(DeltaSection {
+                name: format!("layer{i}.sched"),
+                shape: vec![3],
+                data: SectionData::U64(vec![
+                    ls.interval,
+                    // Option<u64> as value+1, 0 = None
+                    ls.last_refresh.map_or(0, |s| s + 1),
+                    ls.svd_count,
+                ]),
+            });
+            sections.push(DeltaSection {
+                name: format!("layer{i}.sims"),
+                shape: vec![ls.recent_sims.len()],
+                data: SectionData::F32(ls.recent_sims.clone()),
+            });
+        }
+        Ok(DeltaCheckpoint {
+            meta: CheckpointMeta {
+                cfg_name: cfg_name.to_string(),
+                method: "multijob-delta".to_string(),
+                step: job.step,
+                val_loss: job.loss_trace.last().copied().unwrap_or(0.0),
+            },
+            sections,
+        })
+    }
+
+    /// Restore a job from a delta checkpoint onto this arena; returns the
+    /// new job index.  Resuming the restored job reproduces the
+    /// uninterrupted run bitwise (the counters, scheduler state, and
+    /// quantized buffers all round-trip exactly).
+    pub fn import_job(&mut self, ckpt: &DeltaCheckpoint) -> Result<usize> {
+        fn u64s(ck: &DeltaCheckpoint, name: &str) -> Result<Vec<u64>> {
+            match &ck.section(name)?.data {
+                SectionData::U64(v) => Ok(v.clone()),
+                other => bail!("section {name:?}: expected u64 data, got {other:?}"),
+            }
+        }
+        fn f32s(ck: &DeltaCheckpoint, name: &str) -> Result<Vec<f32>> {
+            match &ck.section(name)?.data {
+                SectionData::F32(v) => Ok(v.clone()),
+                other => bail!("section {name:?}: expected f32 data, got {other:?}"),
+            }
+        }
+        let jobv = u64s(ckpt, "job")?;
+        ensure!(jobv.len() == 5, "job section has {} fields, want 5", jobv.len());
+        let [seed, step, noise_ctr, refresh_ctr, rank] =
+            [jobv[0], jobv[1], jobv[2], jobv[3], jobv[4]];
+        ensure!(
+            rank as usize == self.cfg.rank,
+            "delta rank {rank} vs coordinator rank {}",
+            self.cfg.rank
+        );
+        let mut job = JobState::new(&self.arena, &self.cfg, seed);
+        job.step = step;
+        job.noise_ctr = noise_ctr;
+        job.refresh_ctr = refresh_ctr;
+        for (i, jl) in job.layers.iter_mut().enumerate() {
+            let bl = &self.arena.layers[i];
+            let meta = u64s(ckpt, &format!("layer{i}.meta"))?;
+            ensure!(meta.len() == 4, "layer{i}.meta has {} fields, want 4", meta.len());
+            ensure!(
+                meta[0] as usize == bl.m && meta[1] as usize == bl.n,
+                "layer{i} shape mismatch: delta ({}, {}) vs arena ({}, {})",
+                meta[0],
+                meta[1],
+                bl.m,
+                bl.n
+            );
+            let r = meta[2] as usize;
+            let lr_sec = ckpt.section(&format!("layer{i}.lowrank"))?;
+            ensure!(
+                lr_sec.shape == [r, bl.n],
+                "layer{i}.lowrank shape {:?} vs ({r}, {})",
+                lr_sec.shape,
+                bl.n
+            );
+            jl.l = Mat::from_vec(r, bl.n, f32s(ckpt, &format!("layer{i}.lowrank"))?);
+            if meta[3] != 0 {
+                let pmeta = u64s(ckpt, &format!("layer{i}.proj.meta"))?;
+                ensure!(pmeta.len() == 2, "layer{i}.proj.meta wants 2 fields");
+                let packed = match &ckpt.section(&format!("layer{i}.proj.packed"))?.data {
+                    SectionData::U8(v) => v.clone(),
+                    other => bail!("layer{i}.proj.packed: expected u8, got {other:?}"),
+                };
+                let numel = pmeta[1] as usize;
+                ensure!(
+                    numel == bl.m * r,
+                    "layer{i} projection numel {numel} vs m*r {}",
+                    bl.m * r
+                );
+                let q = Quant4Tensor::from_parts(
+                    packed,
+                    f32s(ckpt, &format!("layer{i}.proj.scale"))?,
+                    f32s(ckpt, &format!("layer{i}.proj.zero"))?,
+                    pmeta[0] as usize,
+                    numel,
+                )?;
+                jl.pack = PanelCache::empty();
+                if pack_cache_enabled() {
+                    jl.pack.get_or_pack4(&q, bl.m, r);
+                }
+                jl.p4 = Some(q);
+            }
+            let mq = match &ckpt.section(&format!("layer{i}.adam8.mq"))?.data {
+                SectionData::I8(v) => v.clone(),
+                other => bail!("layer{i}.adam8.mq: expected i8, got {other:?}"),
+            };
+            let vq = match &ckpt.section(&format!("layer{i}.adam8.vq"))?.data {
+                SectionData::U8(v) => v.clone(),
+                other => bail!("layer{i}.adam8.vq: expected u8, got {other:?}"),
+            };
+            let ms = f32s(ckpt, &format!("layer{i}.adam8.ms"))?;
+            let vs = f32s(ckpt, &format!("layer{i}.adam8.vs"))?;
+            let ameta = u64s(ckpt, &format!("layer{i}.adam8.meta"))?;
+            ensure!(ameta.len() == 1, "layer{i}.adam8.meta wants 1 field");
+            let block = ameta[0] as usize;
+            ensure!(
+                mq.len() == r * bl.n && vq.len() == r * bl.n,
+                "layer{i} moment numel {} vs r*n {}",
+                mq.len(),
+                r * bl.n
+            );
+            ensure!(
+                block > 0 && mq.len() % block == 0 && ms.len() == mq.len() / block
+                    && vs.len() == mq.len() / block,
+                "layer{i} moment block layout invalid (block {block}, {} scales)",
+                ms.len()
+            );
+            jl.st = Adam8State { mq, ms, vq, vs, block };
+            let sched = u64s(ckpt, &format!("layer{i}.sched"))?;
+            ensure!(sched.len() == 3, "layer{i}.sched wants 3 fields");
+            let ls = &mut job.sched.layers[i];
+            ls.interval = sched[0];
+            ls.last_refresh = if sched[1] == 0 { None } else { Some(sched[1] - 1) };
+            ls.svd_count = sched[2];
+            ls.recent_sims = f32s(ckpt, &format!("layer{i}.sims"))?;
+        }
+        self.jobs.push(job);
+        Ok(self.jobs.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // shapes chosen so every quantized buffer (m*n INT8 base, m*r INT4
+    // projection, r*n Adam8 moments) satisfies the blockwise-quantization
+    // divisibility invariant at rank 8
+    pub(super) fn shapes() -> Vec<(usize, usize)> {
+        vec![(64, 64), (64, 64), (32, 96), (96, 32)]
+    }
+
+    pub(super) fn cfg() -> MultiJobConfig {
+        MultiJobConfig {
+            rank: 8,
+            sched: SchedulerConfig { base_interval: 3, ..SchedulerConfig::default() },
+            ..MultiJobConfig::default()
+        }
+    }
+
+    #[test]
+    fn round_matches_sequential_bitwise() {
+        let ctx = ParallelCtx::serial();
+        let mut a = MultiJobCoordinator::new(&shapes(), cfg(), ctx);
+        let mut b = MultiJobCoordinator::new(&shapes(), cfg(), ctx);
+        for seed in [7u64, 21, 900] {
+            a.add_job(seed);
+            b.add_job(seed);
+        }
+        let pool = WorkerPool::with_steal_seed(4, 13);
+        for step in 0..7 {
+            let la = a.round_sequential();
+            let lb = b.round(&pool).unwrap();
+            let la: Vec<u32> = la.iter().map(|x| x.to_bits()).collect();
+            let lb: Vec<u32> = lb.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(la, lb, "losses diverged at round {step}");
+        }
+        for ji in 0..a.n_jobs() {
+            assert_eq!(
+                a.export_factors(ji),
+                b.export_factors(ji),
+                "job {ji} factors diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn losses_decrease() {
+        let ctx = ParallelCtx::serial();
+        let mut c = MultiJobCoordinator::new(&shapes(), cfg(), ctx);
+        c.add_job(3);
+        let pool = WorkerPool::with_steal_seed(2, 5);
+        let first = c.round(&pool).unwrap()[0];
+        let mut last = first;
+        for _ in 0..11 {
+            last = c.round(&pool).unwrap()[0];
+        }
+        assert!(
+            last < first,
+            "job loss did not improve over 12 rounds: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn import_rejects_rank_mismatch() {
+        let ctx = ParallelCtx::serial();
+        let mut c = MultiJobCoordinator::new(&shapes(), cfg(), ctx);
+        c.add_job(1);
+        let pool = WorkerPool::with_steal_seed(2, 5);
+        c.round(&pool).unwrap();
+        let ck = c.export_delta(0, "test").unwrap();
+        let mut other =
+            MultiJobCoordinator::new(&shapes(), MultiJobConfig { rank: 4, ..cfg() }, ctx);
+        assert!(other.import_job(&ck).is_err());
+    }
+}

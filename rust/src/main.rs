@@ -6,7 +6,10 @@
 use anyhow::{anyhow, Result};
 
 use qgalore::cli::Args;
-use qgalore::coordinator::{checkpoint, finetune, pretrain, FinetuneConfig, TrainConfig};
+use qgalore::coordinator::{
+    checkpoint, finetune, pretrain, FinetuneConfig, MultiJobConfig, MultiJobCoordinator,
+    TrainConfig,
+};
 use qgalore::linalg::{global_pool, set_global_threads, ParallelCtx};
 use qgalore::manifest::Manifest;
 use qgalore::memory;
@@ -32,6 +35,11 @@ COMMANDS
   finetune   fine-tune a checkpoint on a synthetic classification task
              --method M --config C --checkpoint PATH --steps N --labels N
              --task-salt N --seed N
+             --save-delta PATH (write adapter/factor delta, QGDC format)
+             --delta PATH      (resume from a saved delta)
+  multijob   serve N concurrent fine-tune jobs on one shared base arena
+             --jobs N --rounds N --layers N --dim N --rank N --lr F
+             --seed N --interval N --delta-dir DIR (save per-job deltas)
   repro      regenerate a paper table/figure
              <table1|table2|table3|table4|fig2|fig3|fig5|fig6|fig7|all>
              --steps N --out DIR --config C --seed N --verbose
@@ -141,6 +149,8 @@ fn main() -> Result<()> {
                 n_eval_examples: 40,
                 opts: BuildOptions { seed, ..Default::default() },
                 quiet: false,
+                save_delta: args.flag("save-delta").map(Into::into),
+                resume_delta: args.flag("delta").map(Into::into),
             };
             args.reject_unknown()?;
             let init = match ckpt {
@@ -157,6 +167,72 @@ fn main() -> Result<()> {
                     .collect::<Vec<_>>(),
                 human_bytes(r.live_bytes)
             );
+        }
+        "multijob" => {
+            let jobs = args.usize_or("jobs", 4)?;
+            let rounds = args.u64_or("rounds", 50)?;
+            let n_layers = args.usize_or("layers", 4)?;
+            let dim = args.usize_or("dim", 64)?;
+            let rank = args.usize_or("rank", 8)?;
+            let seed = args.u64_or("seed", 0)?;
+            let cfg = MultiJobConfig {
+                rank,
+                lr: args.f32_or("lr", 0.01)?,
+                arena_seed: seed,
+                sched: SchedulerConfig {
+                    base_interval: args.u64_or("interval", 25)?,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let delta_dir = args.flag("delta-dir").map(std::path::PathBuf::from);
+            args.reject_unknown()?;
+            if jobs == 0 || n_layers == 0 {
+                return Err(anyhow!("multijob needs at least one job and one layer"));
+            }
+            // blockwise-quantized buffers (base, projection, moments) need
+            // numel <= 256 or a multiple of 256
+            for numel in [dim * dim, rank * dim] {
+                if numel > 256 && numel % 256 != 0 {
+                    return Err(anyhow!(
+                        "dim {dim} / rank {rank} give a quantized buffer of {numel} \
+                         elems; need <= 256 or a multiple of 256"
+                    ));
+                }
+            }
+            let shapes = vec![(dim, dim); n_layers];
+            let mut co = MultiJobCoordinator::new(&shapes, cfg, ParallelCtx::global());
+            for j in 0..jobs {
+                // distinct, seed-derived job identities
+                co.add_job(seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(j as u64 + 1));
+            }
+            println!(
+                "multijob: {jobs} jobs x {n_layers} layers ({dim}x{dim}, rank {rank}) | \
+                 shared base {} | delta/job {}",
+                human_bytes(co.arena().base_bytes()),
+                human_bytes(co.job(0).delta_bytes())
+            );
+            let pool = global_pool();
+            let t0 = std::time::Instant::now();
+            let mut losses = Vec::new();
+            for _ in 0..rounds {
+                losses = co.round(pool)?;
+            }
+            let dt = t0.elapsed().as_secs_f64().max(1e-9);
+            println!(
+                "{rounds} rounds in {dt:.2}s | {:.1} job-steps/s | final losses {:?}",
+                (jobs as u64 * rounds) as f64 / dt,
+                losses.iter().map(|l| format!("{l:.4}")).collect::<Vec<_>>()
+            );
+            if let Some(dir) = delta_dir {
+                std::fs::create_dir_all(&dir)?;
+                for ji in 0..co.n_jobs() {
+                    let path = dir.join(format!("job{ji}.delta"));
+                    let ck = co.export_delta(ji, "multijob")?;
+                    checkpoint::save_delta(&path, &ck)?;
+                    println!("saved {} ({})", path.display(), human_bytes(ck.payload_bytes() as u64));
+                }
+            }
         }
         "repro" => {
             let man = Manifest::load(&artifacts)?;

@@ -62,7 +62,12 @@ impl Optimizer for FullAdam {
 
     fn apply_update(&mut self, ctx: &StepCtx, grads: Vec<HostTensor>) -> Result<()> {
         let n_fp = self.fp.len();
-        assert_eq!(grads.len(), n_fp + self.lin.len());
+        anyhow::ensure!(
+            grads.len() == n_fp + self.lin.len(),
+            "full-rank update: {} gradient tensors for {} params",
+            grads.len(),
+            n_fp + self.lin.len()
+        );
         for (i, g) in grads.into_iter().enumerate() {
             let g = g.into_f32()?;
             let (w, st) = if i < n_fp {
@@ -84,7 +89,12 @@ impl Optimizer for FullAdam {
         // Every tensor's Adam step owns disjoint (w, m, v) state, so the
         // whole update is one flat layer of independent graph nodes.
         let n_fp = self.fp.len();
-        assert_eq!(grads.len(), n_fp + self.lin.len());
+        anyhow::ensure!(
+            grads.len() == n_fp + self.lin.len(),
+            "full-rank dataflow update: {} gradient tensors for {} params",
+            grads.len(),
+            n_fp + self.lin.len()
+        );
         let mut flat = Vec::with_capacity(grads.len());
         for g in grads {
             flat.push(g.into_f32()?);

@@ -23,7 +23,7 @@
 
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::linalg::{
     left_subspace_batched, pack_cache_enabled, par_map, subspace_overlap_with, Mat, PanelCache,
@@ -36,8 +36,8 @@ use crate::scheduler::{SchedulerConfig, SubspaceScheduler};
 use crate::util::Pcg32;
 
 use super::{
-    run_adam_8bit, run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer, StepCtx,
-    StepGraphBuilder,
+    next_out, run_adam_8bit, run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer,
+    StepCtx, StepGraphBuilder,
 };
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -430,9 +430,9 @@ fn run_layer_update(
                 ],
             )?;
             let mut it = outs.into_iter();
-            w.data = it.next().unwrap().into_f32()?;
-            st.m = it.next().unwrap().into_f32()?;
-            st.v = it.next().unwrap().into_f32()?;
+            w.data = next_out(&mut it, "updated weights")?.into_f32()?;
+            st.m = next_out(&mut it, "Adam m")?.into_f32()?;
+            st.v = next_out(&mut it, "Adam v")?.into_f32()?;
         }
         GaloreKind::Bit8 => {
             let p = layer.p_fp.as_ref().expect("refreshed above");
@@ -453,17 +453,17 @@ fn run_layer_update(
                 ],
             )?;
             let mut it = outs.into_iter();
-            w.data = it.next().unwrap().into_f32()?;
-            st.mq = match it.next().unwrap() {
+            w.data = next_out(&mut it, "updated weights")?.into_f32()?;
+            st.mq = match next_out(&mut it, "Adam8 mq")? {
                 HostTensor::I8(v) => v,
                 t => return Err(anyhow!("mq dtype {:?}", t.dtype())),
             };
-            st.ms = it.next().unwrap().into_f32()?;
-            st.vq = match it.next().unwrap() {
+            st.ms = next_out(&mut it, "Adam8 ms")?.into_f32()?;
+            st.vq = match next_out(&mut it, "Adam8 vq")? {
                 HostTensor::U8(v) => v,
                 t => return Err(anyhow!("vq dtype {:?}", t.dtype())),
             };
-            st.vs = it.next().unwrap().into_f32()?;
+            st.vs = next_out(&mut it, "Adam8 vs")?.into_f32()?;
         }
         GaloreKind::Quantized => {
             // The INT4 artifact path requires packed nibbles; the
@@ -523,22 +523,22 @@ fn run_layer_update(
             }
             let outs = ctx.rt.execute(&art, &ops)?;
             let mut it = outs.into_iter();
-            w.q = match it.next().unwrap() {
+            w.q = match next_out(&mut it, "updated INT8 weights")? {
                 HostTensor::I8(v) => v,
                 t => return Err(anyhow!("wq dtype {:?}", t.dtype())),
             };
-            w.scale = it.next().unwrap().into_f32()?;
-            w.zero = it.next().unwrap().into_f32()?;
-            st.mq = match it.next().unwrap() {
+            w.scale = next_out(&mut it, "weight scales")?.into_f32()?;
+            w.zero = next_out(&mut it, "weight zeros")?.into_f32()?;
+            st.mq = match next_out(&mut it, "Adam8 mq")? {
                 HostTensor::I8(v) => v,
                 t => return Err(anyhow!("mq dtype {:?}", t.dtype())),
             };
-            st.ms = it.next().unwrap().into_f32()?;
-            st.vq = match it.next().unwrap() {
+            st.ms = next_out(&mut it, "Adam8 ms")?.into_f32()?;
+            st.vq = match next_out(&mut it, "Adam8 vq")? {
                 HostTensor::U8(v) => v,
                 t => return Err(anyhow!("vq dtype {:?}", t.dtype())),
             };
-            st.vs = it.next().unwrap().into_f32()?;
+            st.vs = next_out(&mut it, "Adam8 vs")?.into_f32()?;
         }
     }
     Ok(())
@@ -594,7 +594,13 @@ impl Optimizer for Galore {
 
     fn apply_update(&mut self, ctx: &StepCtx, grads: Vec<HostTensor>) -> Result<()> {
         let n_fp = self.fp.len();
-        assert_eq!(grads.len(), n_fp + self.layers.len());
+        ensure!(
+            grads.len() == n_fp + self.layers.len(),
+            "GaLore update: {} gradient tensors for {} fp params + {} layers",
+            grads.len(),
+            n_fp,
+            self.layers.len()
+        );
         // The fused-backward discipline: consume and drop each gradient
         // right after its tensor's update (paper §3.5). Layers whose
         // subspace refresh falls due this step park their gradient — a
@@ -669,7 +675,13 @@ impl Optimizer for Galore {
         wpool: &WorkerPool,
     ) -> Result<()> {
         let n_fp = self.fp.len();
-        assert_eq!(grads.len(), n_fp + self.layers.len());
+        ensure!(
+            grads.len() == n_fp + self.layers.len(),
+            "GaLore dataflow update: {} gradient tensors for {} fp params + {} layers",
+            grads.len(),
+            n_fp,
+            self.layers.len()
+        );
         let pool = self.pool;
         let tcfg = self.task_cfg();
         let rank = self.rank;
@@ -877,5 +889,72 @@ impl Optimizer for Galore {
             }
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{ConfigEntry, Manifest};
+    use crate::model::ModelConfig;
+    use crate::optim::StepCtx;
+
+    fn galore(kind: GaloreKind) -> Galore {
+        let entry = ConfigEntry {
+            model: ModelConfig {
+                name: "galore-test".into(),
+                vocab_size: 8,
+                dim: 4,
+                n_layers: 1,
+                n_heads: 2,
+                ffn_dim: 8,
+                max_seq_len: 4,
+                rank: 2,
+                tied_head: true,
+            },
+            fp_params: vec![("emb".into(), vec![8, 4])],
+            linear_params: vec![("l0.w".into(), vec![4, 4])],
+            artifacts: Default::default(),
+            init_path: std::path::PathBuf::new(),
+            init_numel: 8 * 4 + 4 * 4,
+        };
+        let init: Vec<f32> = (0..entry.init_numel).map(|i| i as f32 * 0.01).collect();
+        Galore::new(kind, &entry, &init, SchedulerConfig::default(), 5, ParallelCtx::serial())
+    }
+
+    #[test]
+    fn update_with_short_grad_list_is_error_not_panic() {
+        // regression for the positional-consumption panics: a truncated
+        // gradient list must surface as Err for every GaLore variant
+        let man = Manifest {
+            dir: std::path::PathBuf::new(),
+            block: 256,
+            galore_scale: 0.25,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            lora_alpha: 16.0,
+            batch: 1,
+            configs: Default::default(),
+            updates: Default::default(),
+        };
+        let rt = crate::runtime::Runtime::new().unwrap();
+        let ctx = StepCtx { rt: &rt, man: &man, step: 1, lr: 1e-3 };
+        for kind in [GaloreKind::Fp, GaloreKind::Bit8, GaloreKind::Quantized] {
+            let mut g = galore(kind);
+            let err = g.apply_update(&ctx, Vec::new()).unwrap_err();
+            assert!(err.to_string().contains("gradient tensors"), "{kind:?}: {err}");
+            let pool = WorkerPool::with_steal_seed(2, 3);
+            let mut g = galore(kind);
+            let err = g.apply_update_dataflow(&ctx, Vec::new(), &pool).unwrap_err();
+            assert!(err.to_string().contains("gradient tensors"), "{kind:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn base_in_place_methods_refuse_delta_io() {
+        let mut g = galore(GaloreKind::Quantized);
+        assert!(g.export_delta().is_err(), "Q-GaLore has no base/delta split");
+        assert!(g.import_delta(Vec::new()).is_err());
     }
 }

@@ -7,7 +7,7 @@
 //! * ReLoRA: LoRA plus a periodic merge: base += (alpha/r)·U·V, adapters
 //!   re-initialized, adapter optimizer states reset (Lialin et al. 2023).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::linalg::{Mat, ParallelCtx};
 use crate::manifest::ConfigEntry;
@@ -15,7 +15,7 @@ use crate::quant::{self, QuantTensor};
 use crate::runtime::HostTensor;
 use crate::util::Pcg32;
 
-use super::{run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer, StepCtx};
+use super::{next_out, run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer, StepCtx};
 
 struct AdapterPair {
     name: String,
@@ -170,11 +170,16 @@ impl Optimizer for Lora {
     // fallback is the correct factoring for the LoRA family.
     fn apply_update(&mut self, ctx: &StepCtx, grads: Vec<HostTensor>) -> Result<()> {
         // grads: (dU, dV) per adapter, in layer order
-        assert_eq!(grads.len(), 2 * self.adapters.len());
+        ensure!(
+            grads.len() == 2 * self.adapters.len(),
+            "LoRA update: {} gradient tensors for {} adapters (want 2 per adapter)",
+            grads.len(),
+            self.adapters.len()
+        );
         let mut it = grads.into_iter();
         for ad in self.adapters.iter_mut() {
-            let gu = it.next().unwrap().into_f32()?;
-            let gv = it.next().unwrap().into_f32()?;
+            let gu = next_out(&mut it, "adapter dU")?.into_f32()?;
+            let gv = next_out(&mut it, "adapter dV")?.into_f32()?;
             run_adam_fp(ctx, &mut ad.u, &mut ad.st_u, &gu)?;
             run_adam_fp(ctx, &mut ad.v, &mut ad.st_v, &gv)?;
         }
@@ -220,5 +225,142 @@ impl Optimizer for Lora {
             out.extend(base.iter().zip(prod.data).map(|(b, p)| b + scale * p));
         }
         Ok(out)
+    }
+
+    /// LoRA's delta IS the adapter set: (U, V) per layer, base untouched.
+    fn export_delta(&self) -> Result<Vec<FpTensor>> {
+        let mut out = Vec::with_capacity(2 * self.adapters.len());
+        for ad in &self.adapters {
+            out.push(ad.u.clone());
+            out.push(ad.v.clone());
+        }
+        Ok(out)
+    }
+
+    /// Install adapters from a delta export.  Adapter Adam moments reset
+    /// (see the trait docs); ReLoRA's merge counter is untouched — the
+    /// delta describes adapter state, not merge history.
+    fn import_delta(&mut self, deltas: Vec<FpTensor>) -> Result<()> {
+        ensure!(
+            deltas.len() == 2 * self.adapters.len(),
+            "LoRA delta import: {} tensors for {} adapters (want 2 per adapter)",
+            deltas.len(),
+            self.adapters.len()
+        );
+        let mut it = deltas.into_iter();
+        for ad in self.adapters.iter_mut() {
+            let u = it.next().expect("length checked above");
+            let v = it.next().expect("length checked above");
+            ensure!(
+                u.name == ad.u.name && v.name == ad.v.name,
+                "LoRA delta import: tensor names ({}, {}) do not match adapter ({}, {})",
+                u.name,
+                v.name,
+                ad.u.name,
+                ad.v.name
+            );
+            ensure!(
+                u.shape == ad.u.shape && v.shape == ad.v.shape,
+                "LoRA delta import: {} shapes {:?}/{:?} do not match {:?}/{:?}",
+                ad.name,
+                u.shape,
+                v.shape,
+                ad.u.shape,
+                ad.v.shape
+            );
+            ad.u = u;
+            ad.v = v;
+            ad.st_u = AdamFp::zeros(ad.out * self.rank);
+            ad.st_v = AdamFp::zeros(self.rank * ad.inn);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{ConfigEntry, Manifest};
+    use crate::model::ModelConfig;
+
+    fn entry() -> ConfigEntry {
+        ConfigEntry {
+            model: ModelConfig {
+                name: "lora-test".into(),
+                vocab_size: 8,
+                dim: 4,
+                n_layers: 1,
+                n_heads: 2,
+                ffn_dim: 8,
+                max_seq_len: 4,
+                rank: 2,
+                tied_head: true,
+            },
+            fp_params: vec![("emb".into(), vec![8, 4])],
+            linear_params: vec![("l0.w".into(), vec![4, 4])],
+            artifacts: Default::default(),
+            init_path: std::path::PathBuf::new(),
+            init_numel: 8 * 4 + 4 * 4,
+        }
+    }
+
+    fn manifest() -> Manifest {
+        Manifest {
+            dir: std::path::PathBuf::new(),
+            block: 256,
+            galore_scale: 0.25,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            lora_alpha: 16.0,
+            batch: 1,
+            configs: Default::default(),
+            updates: Default::default(),
+        }
+    }
+
+    fn lora() -> Lora {
+        let e = entry();
+        let n: usize = 8 * 4 + 4 * 4;
+        let init: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+        Lora::new(Method::LoRa, &e, &init, 16.0, 7, ParallelCtx::serial())
+    }
+
+    #[test]
+    fn delta_roundtrip_restores_adapters() {
+        let mut a = lora();
+        // perturb the adapters so the roundtrip moves real state
+        for ad in a.adapters.iter_mut() {
+            for x in ad.u.data.iter_mut() {
+                *x += 0.25;
+            }
+        }
+        let delta = a.export_delta().unwrap();
+        let mut b = lora();
+        assert_ne!(a.adapters[0].u.data, b.adapters[0].u.data);
+        b.import_delta(delta).unwrap();
+        assert_eq!(a.adapters[0].u.data, b.adapters[0].u.data);
+        assert_eq!(a.adapters[0].v.data, b.adapters[0].v.data);
+    }
+
+    #[test]
+    fn import_rejects_short_list_and_wrong_names() {
+        let mut l = lora();
+        assert!(l.import_delta(Vec::new()).is_err(), "short list must be an error");
+        let mut delta = l.export_delta().unwrap();
+        delta[0].name = "someone.else.lora_u".into();
+        assert!(l.import_delta(delta).is_err(), "wrong names must be an error");
+    }
+
+    #[test]
+    fn update_with_short_grad_list_is_error_not_panic() {
+        // regression for the `it.next().unwrap()` chain: a truncated
+        // gradient list must surface as Err
+        let man = manifest();
+        let rt = crate::runtime::Runtime::new().unwrap();
+        let ctx = StepCtx { rt: &rt, man: &man, step: 1, lr: 1e-3 };
+        let mut l = lora();
+        let err = l.apply_update(&ctx, Vec::new()).unwrap_err();
+        assert!(err.to_string().contains("gradient tensors"), "{err}");
     }
 }

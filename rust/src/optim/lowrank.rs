@@ -3,7 +3,7 @@
 //! no frozen base, which is why the paper's Table 1 shows it degrading
 //! sharply at scale — the model simply has no full-rank expressivity.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::linalg::{par_map, ParallelCtx, WorkerPool};
 use crate::manifest::ConfigEntry;
@@ -11,7 +11,8 @@ use crate::runtime::HostTensor;
 use crate::util::Pcg32;
 
 use super::{
-    run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer, StepCtx, StepGraphBuilder,
+    next_out, run_adam_fp, split_init, AdamFp, FpTensor, Method, Optimizer, StepCtx,
+    StepGraphBuilder,
 };
 
 struct FactorPair {
@@ -87,15 +88,21 @@ impl Optimizer for LowRank {
 
     fn apply_update(&mut self, ctx: &StepCtx, grads: Vec<HostTensor>) -> Result<()> {
         let n_fp = self.fp.len();
-        assert_eq!(grads.len(), n_fp + 2 * self.factors.len());
+        ensure!(
+            grads.len() == n_fp + 2 * self.factors.len(),
+            "LowRank update: {} gradient tensors for {} fp params + {} factor pairs",
+            grads.len(),
+            n_fp,
+            self.factors.len()
+        );
         let mut it = grads.into_iter();
         for i in 0..n_fp {
-            let g = it.next().unwrap().into_f32()?;
+            let g = next_out(&mut it, "fp param grad")?.into_f32()?;
             run_adam_fp(ctx, &mut self.fp[i], &mut self.fp_states[i], &g)?;
         }
         for f in self.factors.iter_mut() {
-            let gu = it.next().unwrap().into_f32()?;
-            let gv = it.next().unwrap().into_f32()?;
+            let gu = next_out(&mut it, "factor dU")?.into_f32()?;
+            let gv = next_out(&mut it, "factor dV")?.into_f32()?;
             run_adam_fp(ctx, &mut f.u, &mut f.st_u, &gu)?;
             run_adam_fp(ctx, &mut f.v, &mut f.st_v, &gv)?;
         }
@@ -112,7 +119,13 @@ impl Optimizer for LowRank {
         // Adam states (the bwd artifact emits g_u and g_v independently),
         // so every factor contributes TWO independent graph nodes.
         let n_fp = self.fp.len();
-        assert_eq!(grads.len(), n_fp + 2 * self.factors.len());
+        ensure!(
+            grads.len() == n_fp + 2 * self.factors.len(),
+            "LowRank dataflow update: {} gradient tensors for {} fp params + {} factor pairs",
+            grads.len(),
+            n_fp,
+            self.factors.len()
+        );
         let mut flat = Vec::with_capacity(grads.len());
         for g in grads {
             flat.push(g.into_f32()?);
@@ -121,13 +134,13 @@ impl Optimizer for LowRank {
         let cx = *ctx;
         let mut b = StepGraphBuilder::new();
         for (w, st) in self.fp.iter_mut().zip(self.fp_states.iter_mut()) {
-            let g = it.next().unwrap();
+            let g = it.next().expect("length checked above");
             b.fallible(&[], move || run_adam_fp(&cx, w, st, &g));
         }
         for f in self.factors.iter_mut() {
             let FactorPair { u, v, st_u, st_v } = f;
-            let gu = it.next().unwrap();
-            let gv = it.next().unwrap();
+            let gu = it.next().expect("length checked above");
+            let gv = it.next().expect("length checked above");
             b.fallible(&[], move || run_adam_fp(&cx, u, st_u, &gu));
             b.fallible(&[], move || run_adam_fp(&cx, v, st_v, &gv));
         }
@@ -157,5 +170,132 @@ impl Optimizer for LowRank {
             out.extend(u.matmul_with(&v, self.pool).data);
         }
         Ok(out)
+    }
+
+    /// LowRank's trainable linear state is exactly the factor pairs.
+    /// The fp params (embedding, norms) train too, so this delta is only
+    /// the low-rank portion — documented asymmetry with LoRA's adapters.
+    fn export_delta(&self) -> Result<Vec<FpTensor>> {
+        let mut out = Vec::with_capacity(2 * self.factors.len());
+        for f in &self.factors {
+            out.push(f.u.clone());
+            out.push(f.v.clone());
+        }
+        Ok(out)
+    }
+
+    /// Install factor pairs from a delta export; Adam moments reset (see
+    /// the trait docs).
+    fn import_delta(&mut self, deltas: Vec<FpTensor>) -> Result<()> {
+        ensure!(
+            deltas.len() == 2 * self.factors.len(),
+            "LowRank delta import: {} tensors for {} factor pairs (want 2 per pair)",
+            deltas.len(),
+            self.factors.len()
+        );
+        let mut it = deltas.into_iter();
+        for f in self.factors.iter_mut() {
+            let u = it.next().expect("length checked above");
+            let v = it.next().expect("length checked above");
+            ensure!(
+                u.name == f.u.name && v.name == f.v.name,
+                "LowRank delta import: tensor names ({}, {}) do not match factors ({}, {})",
+                u.name,
+                v.name,
+                f.u.name,
+                f.v.name
+            );
+            ensure!(
+                u.shape == f.u.shape && v.shape == f.v.shape,
+                "LowRank delta import: shapes {:?}/{:?} do not match {:?}/{:?}",
+                u.shape,
+                v.shape,
+                f.u.shape,
+                f.v.shape
+            );
+            f.st_u = AdamFp::zeros(u.data.len());
+            f.st_v = AdamFp::zeros(v.data.len());
+            f.u = u;
+            f.v = v;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{ConfigEntry, Manifest};
+    use crate::model::ModelConfig;
+
+    fn lowrank() -> LowRank {
+        let entry = ConfigEntry {
+            model: ModelConfig {
+                name: "lowrank-test".into(),
+                vocab_size: 8,
+                dim: 4,
+                n_layers: 1,
+                n_heads: 2,
+                ffn_dim: 8,
+                max_seq_len: 4,
+                rank: 2,
+                tied_head: true,
+            },
+            fp_params: vec![("emb".into(), vec![8, 4])],
+            linear_params: vec![("l0.w".into(), vec![4, 4])],
+            artifacts: Default::default(),
+            init_path: std::path::PathBuf::new(),
+            init_numel: 8 * 4 + 4 * 4,
+        };
+        let init: Vec<f32> = (0..entry.init_numel).map(|i| i as f32 * 0.01).collect();
+        LowRank::new(&entry, &init, 11, ParallelCtx::serial())
+    }
+
+    #[test]
+    fn delta_roundtrip_restores_factors() {
+        let mut a = lowrank();
+        for f in a.factors.iter_mut() {
+            for x in f.u.data.iter_mut() {
+                *x += 0.5;
+            }
+        }
+        let delta = a.export_delta().unwrap();
+        let mut b = lowrank();
+        assert_ne!(a.factors[0].u.data, b.factors[0].u.data);
+        b.import_delta(delta).unwrap();
+        assert_eq!(a.factors[0].u.data, b.factors[0].u.data);
+        assert_eq!(a.factors[0].v.data, b.factors[0].v.data);
+    }
+
+    #[test]
+    fn import_rejects_short_list() {
+        let mut l = lowrank();
+        let err = l.import_delta(Vec::new()).unwrap_err();
+        assert!(err.to_string().contains("2 per pair"), "{err}");
+    }
+
+    #[test]
+    fn update_with_short_grad_list_is_error_not_panic() {
+        let man = Manifest {
+            dir: std::path::PathBuf::new(),
+            block: 256,
+            galore_scale: 0.25,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            lora_alpha: 16.0,
+            batch: 1,
+            configs: Default::default(),
+            updates: Default::default(),
+        };
+        let rt = crate::runtime::Runtime::new().unwrap();
+        let ctx = StepCtx { rt: &rt, man: &man, step: 1, lr: 1e-3 };
+        let mut l = lowrank();
+        let err = l.apply_update(&ctx, Vec::new()).unwrap_err();
+        assert!(err.to_string().contains("gradient tensors"), "{err}");
+        let err = l
+            .apply_update_dataflow(&ctx, Vec::new(), &WorkerPool::with_steal_seed(2, 3))
+            .unwrap_err();
+        assert!(err.to_string().contains("gradient tensors"), "{err}");
     }
 }

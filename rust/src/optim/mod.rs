@@ -158,11 +158,49 @@ pub trait Optimizer: Send {
     /// adapters merged into the base, factor pairs multiplied out.  This is
     /// the checkpoint format shared across methods (fine-tuning handoff).
     fn export_flat(&self) -> Result<Vec<f32>>;
+
+    /// Export this method's *delta state* — the per-user personalization
+    /// that rides on top of a shared base (LoRA adapters, low-rank
+    /// factors) — as named, shaped f32 tensors for the `QGDC` delta
+    /// checkpoint (`coordinator::checkpoint::save_delta`).  Methods that
+    /// train the base weights in place have no base/delta split and
+    /// return `Err` — callers fall back to [`Optimizer::export_flat`].
+    fn export_delta(&self) -> Result<Vec<FpTensor>> {
+        Err(anyhow::anyhow!(
+            "{} trains the base in place; it has no delta state to export",
+            self.method()
+        ))
+    }
+
+    /// Import delta state previously produced by
+    /// [`Optimizer::export_delta`] (tensor names, count, and shapes are
+    /// validated; any mismatch is an `Err`, never a partial import).
+    /// Optimizer moments reset to zero: the flat delta stores the
+    /// personalization only — resumable moment state lives in the richer
+    /// multijob delta sections (`coordinator::multijob`).
+    fn import_delta(&mut self, _deltas: Vec<FpTensor>) -> Result<()> {
+        Err(anyhow::anyhow!(
+            "{} trains the base in place; it cannot import delta state",
+            self.method()
+        ))
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Shared artifact-driving helpers.
 // ---------------------------------------------------------------------------
+
+/// Pull the next artifact output, or fail with a structured error naming
+/// the missing tensor.  Update paths consume result lists positionally; a
+/// truncated list (artifact/ABI drift, a stub backend returning partial
+/// results) must surface as this step's `Err`, not a panic mid-update.
+pub(crate) fn next_out(
+    it: &mut impl Iterator<Item = HostTensor>,
+    what: &str,
+) -> Result<HostTensor> {
+    it.next()
+        .ok_or_else(|| anyhow::anyhow!("artifact returned too few outputs: missing {what}"))
+}
 
 pub(crate) fn adam_artifact<'m>(man: &'m Manifest, numel: usize) -> Result<&'m ArtifactSpec> {
     man.update(&format!("adam_step_{numel}"))
@@ -192,9 +230,9 @@ pub(crate) fn run_adam_fp(
         ],
     )?;
     let mut it = outs.into_iter();
-    w.data = it.next().unwrap().into_f32()?;
-    st.m = it.next().unwrap().into_f32()?;
-    st.v = it.next().unwrap().into_f32()?;
+    w.data = next_out(&mut it, "updated weights")?.into_f32()?;
+    st.m = next_out(&mut it, "Adam m")?.into_f32()?;
+    st.v = next_out(&mut it, "Adam v")?.into_f32()?;
     Ok(())
 }
 
@@ -220,17 +258,17 @@ pub(crate) fn run_adam_8bit(
         ],
     )?;
     let mut it = outs.into_iter();
-    w.data = it.next().unwrap().into_f32()?;
-    match it.next().unwrap() {
+    w.data = next_out(&mut it, "updated weights")?.into_f32()?;
+    match next_out(&mut it, "Adam8 mq")? {
         HostTensor::I8(v) => st.mq = v,
         other => return Err(anyhow::anyhow!("mq dtype {:?}", other.dtype())),
     }
-    st.ms = it.next().unwrap().into_f32()?;
-    match it.next().unwrap() {
+    st.ms = next_out(&mut it, "Adam8 ms")?.into_f32()?;
+    match next_out(&mut it, "Adam8 vq")? {
         HostTensor::U8(v) => st.vq = v,
         other => return Err(anyhow::anyhow!("vq dtype {:?}", other.dtype())),
     }
-    st.vs = it.next().unwrap().into_f32()?;
+    st.vs = next_out(&mut it, "Adam8 vs")?.into_f32()?;
     Ok(())
 }
 
@@ -279,5 +317,17 @@ mod tests {
         let fp = vec![("a".to_string(), vec![2usize])];
         let init = vec![0.0; 3];
         split_init(&init, &fp, &[]);
+    }
+
+    #[test]
+    fn next_out_short_list_is_error_not_panic() {
+        let outs = vec![HostTensor::F32(vec![1.0])];
+        let mut it = outs.into_iter();
+        assert!(next_out(&mut it, "updated weights").is_ok());
+        let err = next_out(&mut it, "Adam m").unwrap_err();
+        assert!(
+            err.to_string().contains("missing Adam m"),
+            "error should name the missing tensor: {err}"
+        );
     }
 }

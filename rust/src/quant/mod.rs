@@ -302,6 +302,32 @@ impl Quant4Tensor {
         self.epoch = fresh_epoch();
     }
 
+    /// Reassemble a tensor from serialized parts (the delta-checkpoint
+    /// load path).  Stamps a fresh epoch — any panel pack keyed to the
+    /// tensor this was saved from is correctly treated as stale.
+    pub fn from_parts(
+        packed: Vec<u8>,
+        scale: Vec<f32>,
+        zero: Vec<f32>,
+        block: usize,
+        numel: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            packed.len() == numel.div_ceil(2),
+            "quant4 from_parts: {} packed bytes for {numel} elems",
+            packed.len()
+        );
+        anyhow::ensure!(block > 0, "quant4 from_parts: zero block size");
+        let nb = numel.div_ceil(block);
+        anyhow::ensure!(
+            scale.len() == nb && zero.len() == nb,
+            "quant4 from_parts: {}/{} scale/zero blocks for {nb} expected",
+            scale.len(),
+            zero.len()
+        );
+        Ok(Quant4Tensor { packed, scale, zero, block, numel, epoch: fresh_epoch() })
+    }
+
     /// Decode the element at flat index `idx` — shared by the fused
     /// kernels and the panel packer (one arithmetic, zero drift).
     #[inline]

@@ -108,7 +108,9 @@ mod tests {
 
     #[test]
     fn csv_written() {
-        let p = std::env::temp_dir().join("qgalore_report_test.csv");
+        // unique dir: a fixed path collides when test binaries run in
+        // parallel (CI runs the suite at several thread counts at once)
+        let p = crate::util::unique_temp_dir("report").join("qgalore_report_test.csv");
         write_csv(&p, &["step", "loss"], &[vec!["1".into(), "2.5".into()]]).unwrap();
         let s = std::fs::read_to_string(&p).unwrap();
         assert_eq!(s, "step,loss\n1,2.5\n");

@@ -145,6 +145,27 @@ pub fn mean(xs: &[f32]) -> f32 {
     xs.iter().sum::<f32>() / xs.len() as f32
 }
 
+/// A fresh, collision-free scratch directory under the system temp dir
+/// (pid + per-process counter), created before return.
+///
+/// Tests that write files must each use their own directory: fixed
+/// `temp_dir()` subdir names collide between concurrently running test
+/// binaries (lib + integration suites run in parallel processes) and
+/// between a live run and a stale crashed one, turning unrelated tests
+/// flaky.  The pid decorrelates processes, the counter decorrelates tests
+/// within one process.
+pub fn unique_temp_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "qgalore_{tag}_{}_{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).expect("create unique temp dir");
+    dir
+}
+
 /// Bytes -> human-readable string (GiB with paper-style "G" suffix).
 pub fn human_bytes(b: u64) -> String {
     let g = b as f64 / 1e9;

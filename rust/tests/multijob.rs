@@ -1,0 +1,177 @@
+//! Multi-tenant coordinator golden fencing.
+//!
+//! The serving contract of `coordinator::multijob` is PR-6-style bitwise
+//! determinism, extended to co-tenancy: a job's training trajectory is a
+//! pure function of its own seed and the shared base arena.  Concretely,
+//! the per-round loss bits and final factor bits of a job must be
+//! IDENTICAL whether it runs alone or among 15 co-tenants, on any worker
+//! count, under hostile steal seeds — and a job checkpointed to a delta
+//! file, reloaded into a *different* coordinator, and resumed must emit
+//! the same bits as its uninterrupted twin.
+//!
+//! Shapes mix one group above `PAR_MIN_FLOPS` (128x128: gradient products
+//! genuinely fan out inside graph nodes) with serial-gated groups, so the
+//! invariance covers both engine paths, as in tests/golden_trace.rs.
+
+use qgalore::coordinator::{checkpoint, MultiJobConfig, MultiJobCoordinator};
+use qgalore::linalg::{ParallelCtx, WorkerPool};
+use qgalore::scheduler::SchedulerConfig;
+use qgalore::util::unique_temp_dir;
+
+const ROUNDS: usize = 6;
+
+fn shapes() -> Vec<(usize, usize)> {
+    // every quantized buffer (m*n base, m*r projection, r*n moments at
+    // rank 8) is <= 256 elems or a multiple of 256
+    vec![(128, 128), (64, 64), (32, 96), (96, 32)]
+}
+
+fn cfg() -> MultiJobConfig {
+    MultiJobConfig {
+        rank: 8,
+        // interval 3 so subspace refreshes land mid-trace, not just at
+        // round 0
+        sched: SchedulerConfig { base_interval: 3, ..SchedulerConfig::default() },
+        ..MultiJobConfig::default()
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// (loss-trace bits, exported-factor bits) of job `ji`.
+fn job_bits(co: &MultiJobCoordinator, ji: usize) -> (Vec<u32>, Vec<u32>) {
+    (bits(&co.job(ji).loss_trace), bits(&co.export_factors(ji)))
+}
+
+#[test]
+fn cotenant_trace_is_bitwise_invariant() {
+    // reference: the job alone, sequential rounds, serial compute
+    let mut rf = MultiJobCoordinator::new(&shapes(), cfg(), ParallelCtx::serial());
+    rf.add_job(42);
+    for _ in 0..ROUNDS {
+        rf.round_sequential();
+    }
+    let want = job_bits(&rf, 0);
+    assert_eq!(want.0.len(), ROUNDS);
+
+    for &(workers, steal_seed) in &[(1usize, 13u64), (4, 999_331), (16, u64::MAX)] {
+        let pool = WorkerPool::leaked_with_steal_seed(workers, steal_seed);
+        // thread budget >= 4 so a 1-worker pool still gets real dispatch
+        let ctx = ParallelCtx::with_pool(workers.max(4), pool);
+
+        // the same job alone, on the stealing pool
+        let mut solo = MultiJobCoordinator::new(&shapes(), cfg(), ctx);
+        solo.add_job(42);
+        for _ in 0..ROUNDS {
+            solo.round(pool).unwrap();
+        }
+        assert_eq!(
+            job_bits(&solo, 0),
+            want,
+            "solo trace diverged at {workers} workers (steal seed {steal_seed:#x})"
+        );
+
+        // the same job among 15 co-tenants with unrelated seeds
+        let mut co = MultiJobCoordinator::new(&shapes(), cfg(), ctx);
+        let mut target = usize::MAX;
+        for j in 0..16u64 {
+            let ji = co.add_job(if j == 5 { 42 } else { 1_000 + 7 * j });
+            if j == 5 {
+                target = ji;
+            }
+        }
+        for _ in 0..ROUNDS {
+            co.round(pool).unwrap();
+        }
+        assert_eq!(
+            job_bits(&co, target),
+            want,
+            "co-tenant trace diverged at {workers} workers (steal seed {steal_seed:#x})"
+        );
+    }
+
+    // the trace is a real training signal, not a fixed point
+    let first = f32::from_bits(want.0[0]);
+    let last = f32::from_bits(want.0[ROUNDS - 1]);
+    assert!(first.is_finite() && last.is_finite(), "non-finite loss in trace");
+    assert!(last < first, "job did not learn over {ROUNDS} rounds ({first} -> {last})");
+}
+
+#[test]
+fn delta_resume_matches_uninterrupted_bitwise() {
+    let dir = unique_temp_dir("multijob");
+    let path = dir.join("job42.delta");
+    let pool = WorkerPool::leaked_with_steal_seed(4, 11);
+    let ctx = ParallelCtx::with_pool(4, pool);
+
+    // uninterrupted twin: 4 + 4 rounds straight through
+    let mut full = MultiJobCoordinator::new(&shapes(), cfg(), ctx);
+    full.add_job(42);
+    for _ in 0..4 {
+        full.round(pool).unwrap();
+    }
+
+    // interrupted run: identical first half, checkpointed and dropped
+    {
+        let mut half = MultiJobCoordinator::new(&shapes(), cfg(), ctx);
+        half.add_job(42);
+        for _ in 0..4 {
+            half.round(pool).unwrap();
+        }
+        checkpoint::save_delta(&path, &half.export_delta(0, "itest").unwrap()).unwrap();
+    }
+
+    // resume into a coordinator already serving an unrelated tenant
+    let mut resumed = MultiJobCoordinator::new(&shapes(), cfg(), ctx);
+    resumed.add_job(7);
+    let ck = checkpoint::load_delta(&path).unwrap();
+    let ji = resumed.import_job(&ck).unwrap();
+    assert_eq!(
+        resumed.job(ji).current_step(),
+        full.job(0).current_step(),
+        "imported job resumed at the wrong step"
+    );
+
+    let mut tail_full = Vec::new();
+    let mut tail_res = Vec::new();
+    for _ in 0..4 {
+        tail_full.push(full.round(pool).unwrap()[0]);
+        tail_res.push(resumed.round(pool).unwrap()[ji]);
+    }
+    assert_eq!(bits(&tail_full), bits(&tail_res), "post-resume losses diverged");
+    assert_eq!(
+        bits(&full.export_factors(0)),
+        bits(&resumed.export_factors(ji)),
+        "post-resume factors diverged"
+    );
+}
+
+/// The CI stress shape: full tenancy on a 16-worker pool with a hostile
+/// steal seed.  Every job must stay finite and the fleet must learn.
+#[test]
+fn sixteen_tenants_learn_under_hostile_stealing() {
+    let pool = WorkerPool::leaked_with_steal_seed(16, 999_331);
+    let ctx = ParallelCtx::with_pool(16, pool);
+    let mut co = MultiJobCoordinator::new(&shapes(), cfg(), ctx);
+    for j in 0..16u64 {
+        co.add_job(2_000 + j);
+    }
+    let first = co.round(pool).unwrap();
+    let mut last = first.clone();
+    for _ in 0..9 {
+        last = co.round(pool).unwrap();
+    }
+    for (ji, (&f, &l)) in first.iter().zip(&last).enumerate() {
+        assert!(f.is_finite() && l.is_finite(), "job {ji} went non-finite: {f} -> {l}");
+    }
+    let mean_first = first.iter().sum::<f32>() / first.len() as f32;
+    let mean_last = last.iter().sum::<f32>() / last.len() as f32;
+    assert!(
+        mean_last < mean_first,
+        "fleet mean loss did not improve over 10 rounds: {mean_first} -> {mean_last}"
+    );
+    let improved = first.iter().zip(&last).filter(|(f, l)| l < f).count();
+    assert!(improved >= 12, "only {improved}/16 jobs improved over 10 rounds");
+}
