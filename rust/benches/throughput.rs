@@ -21,10 +21,11 @@ use std::hint::black_box;
 use bench_harness::{bench, BenchResult};
 use qgalore::coordinator::trainer::{TrainConfig, Trainer};
 use qgalore::coordinator::{
-    HostDataflowTrainer, HostMethod, HostStepConfig, MultiJobConfig, MultiJobCoordinator,
+    serve, HostDataflowTrainer, HostMethod, HostStepConfig, MultiJobConfig, MultiJobCoordinator,
+    ServeConfig, ServeEngine, ServeModel,
 };
 use qgalore::jsonx::Json;
-use qgalore::linalg::{engine, KernelPath, Mat, PanelPack, ParallelCtx, WorkerPool};
+use qgalore::linalg::{engine, KernelPath, Mat, PanelCache, PanelPack, ParallelCtx, WorkerPool};
 use qgalore::manifest::Manifest;
 use qgalore::optim::{BuildOptions, Method};
 use qgalore::quant;
@@ -572,14 +573,112 @@ fn multijob_benches() {
     println!("    wrote BENCH_multijob.json");
 }
 
+/// Batched serving bench: the heavy-traffic measurement.  One loaded,
+/// prepacked model serving mixed score/generate request streams on a
+/// 16-worker pool at growing concurrency; rows (requests/sec + p50/p99
+/// completion latency) land in `BENCH_serve.json`.
+fn serve_benches() {
+    println!("\n== batched serving: requests/s and latency vs concurrency (16 workers) ==");
+    let cfg = ServeConfig { vocab: 128, dim: 32, n_layers: 3, seed: 42 };
+    let workers = 16usize;
+    let pool = WorkerPool::leaked(workers);
+    let ctx = ParallelCtx::with_pool(workers, pool);
+    let engine = ServeEngine::new(ServeModel::from_seed(cfg).unwrap(), ctx);
+    let mut rows = Vec::new();
+    for n in [1usize, 8, 64, 256, 1000] {
+        let reqs = serve::synth_requests(cfg.vocab, n, 77);
+        let iters = if n >= 256 { 3 } else { 5 };
+        let r = bench(&format!("serve batch, {n} requests x {workers} workers"), 1, iters, || {
+            black_box(engine.serve_batch(&reqs, pool).unwrap());
+        });
+        let (_, lat) = engine.serve_batch_timed(&reqs, pool).unwrap();
+        let rps = n as f64 / (r.mean_ms / 1e3);
+        let p50 = serve::percentile(&lat, 50.0);
+        let p99 = serve::percentile(&lat, 99.0);
+        println!(
+            "    -> {n:>4} concurrent: {:.2} ms/batch | {rps:.0} req/s | p50 {p50:.2} ms p99 {p99:.2} ms",
+            r.mean_ms
+        );
+        rows.push((n, r.mean_ms, rps, p50, p99));
+    }
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|&(n, ms, rps, p50, p99)| {
+            let mut row = BTreeMap::new();
+            row.insert("concurrency".to_string(), Json::Num(n as f64));
+            row.insert("batch_ms".to_string(), Json::Num(ms));
+            row.insert("requests_per_sec".to_string(), Json::Num(rps));
+            row.insert("p50_ms".to_string(), Json::Num(p50));
+            row.insert("p99_ms".to_string(), Json::Num(p99));
+            Json::Obj(row)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("serve".to_string()));
+    root.insert("workers".to_string(), Json::Num(workers as f64));
+    root.insert("vocab".to_string(), Json::Num(cfg.vocab as f64));
+    root.insert("dim".to_string(), Json::Num(cfg.dim as f64));
+    root.insert("layers".to_string(), Json::Num(cfg.n_layers as f64));
+    root.insert("rows".to_string(), Json::Arr(arr));
+    std::fs::write("BENCH_serve.json", Json::Obj(root).dump()).expect("write BENCH_serve.json");
+    println!("    wrote BENCH_serve.json");
+}
+
+/// Pack-cache refresh-storm contention bench (PR-7 follow-on): many
+/// tenants' panel packs rebuilt at once — the worst case for serving-time
+/// pack churn (mass delta reloads, synchronized refresh waves).  Serial
+/// rebuild vs concurrent submitter threads, each tenant repacking into
+/// its own fresh `PanelCache`.
+fn pack_storm_benches() {
+    println!("\n== pack-cache refresh storm: 32 tenants repacking (256x32 INT4 panels) ==");
+    let mut rng = Pcg32::seeded(21);
+    let (m, rank) = (256usize, 32usize);
+    let tenants: Vec<quant::Quant4Tensor> =
+        (0..32).map(|_| quant::quantize4(&rng.normal_vec(m * rank, 0.0, 0.1))).collect();
+    let r_serial = bench("pack storm, serial", 2, 10, || {
+        for t in &tenants {
+            let mut c = PanelCache::empty();
+            black_box(c.get_or_pack4(t, m, rank));
+        }
+    });
+    println!(
+        "    -> serial: {:.3} ms for {} repacks ({:.1} us/pack)",
+        r_serial.mean_ms,
+        tenants.len(),
+        r_serial.mean_ms * 1e3 / tenants.len() as f64
+    );
+    for submitters in [4usize, 8] {
+        let chunk = tenants.len().div_ceil(submitters);
+        let r = bench(&format!("pack storm, {submitters} submitters"), 2, 10, || {
+            std::thread::scope(|s| {
+                for ch in tenants.chunks(chunk) {
+                    s.spawn(move || {
+                        for t in ch {
+                            let mut c = PanelCache::empty();
+                            black_box(c.get_or_pack4(t, m, rank));
+                        }
+                    });
+                }
+            });
+        });
+        println!(
+            "    -> {submitters} submitters: {:.3} ms ({:.2}x vs serial)",
+            r.mean_ms,
+            r_serial.mean_ms / r.mean_ms
+        );
+    }
+}
+
 fn main() {
     engine_benches();
     microkernel_benches();
     kernel_benches();
     dispatch_benches();
     contention_benches();
+    pack_storm_benches();
     step_benches();
     multijob_benches();
+    serve_benches();
 
     let man = match Manifest::load("artifacts") {
         Ok(m) => m,

@@ -22,14 +22,27 @@
 //!   (round-robin fair), and each job's trace is bitwise-identical to
 //!   running it alone — see the module docs for the determinism contract
 //!   and the delta checkpoint layout.
+//! * [`serve`] — forward-only batched scoring/generation engine, the
+//!   first piece of the heavy-traffic axis.  Request lifecycle: validate
+//!   every request up front, coalesce into shape-uniform waves (kind +
+//!   token length + decode budget), run all waves as one
+//!   `StepGraphBuilder` DAG on the shared pool, return responses in
+//!   submission order.  Loads a checkpoint (+ optional per-user `QGDC`
+//!   delta) and packs every quantized matrix into the panel cache once
+//!   at load time.  Determinism contract, extended to serving: a
+//!   request's scores/tokens are bitwise identical served alone vs
+//!   batched among N strangers, at any worker count, under hostile
+//!   steal seeds (`tests/serve.rs`).
 
 pub mod checkpoint;
 pub mod dataflow;
 pub mod finetune;
 pub mod multijob;
+pub mod serve;
 pub mod trainer;
 
 pub use dataflow::{HostDataflowTrainer, HostMethod, HostStepConfig};
 pub use finetune::{finetune, FinetuneConfig, FinetuneResult};
 pub use multijob::{BaseArena, JobState, MultiJobConfig, MultiJobCoordinator};
+pub use serve::{ServeConfig, ServeEngine, ServeModel, ServeRequest, ServeResponse};
 pub use trainer::{dataflow_default, pretrain, TrainConfig, TrainResult, DATAFLOW_ENV};

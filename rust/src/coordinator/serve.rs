@@ -1,0 +1,844 @@
+//! Forward-only batched scoring/generation serving engine.
+//!
+//! The second consumer of the quantized microkernel beyond training: an
+//! INT8 base model (embedding + square tanh-MLP layers, the same family
+//! `finetune`/`multijob` train) loaded from a [`super::checkpoint`] file
+//! (or synthesized from a seed), optionally specialized by a per-user
+//! `QGDC` delta (the INT4 projection + low-rank factor pair
+//! `coordinator::multijob` exports), answering two request kinds:
+//!
+//! * **Score** — `finetune.rs`'s label-prefix protocol: run the content
+//!   tokens, read the logits of the label-prefix tokens, return per-label
+//!   NLL and the argmin prediction.
+//! * **Generate** — greedy decoding: run the prompt, then repeatedly emit
+//!   the argmax token and feed it back, `max_new` times.
+//!
+//! # Request lifecycle
+//!
+//! `serve_batch` validates every request up front (fail the batch loudly,
+//! never partially), **coalesces** requests into shape-uniform waves
+//! (same kind + same token length + same decode budget — the shapes the
+//! batched matmuls need), builds one [`StepGraphBuilder`] DAG with a
+//! node chain per wave (prefill → readout for scoring; prefill → one
+//! node per decode step → readout for generation), and runs the whole
+//! graph on the shared [`WorkerPool`].  Waves race each other; inside a
+//! wave the chain is sequential.  Responses come back in submission
+//! order regardless of wave assignment.
+//!
+//! # Determinism contract (serving extension)
+//!
+//! A request's scores/tokens are **bitwise identical** served alone vs
+//! batched among N strangers, at any worker count, under hostile steal
+//! seeds.  This holds by construction: batching only widens the
+//! activation matrix with more *columns*, and every kernel in the path
+//! computes each output element from its own row and column with a fixed
+//! ascending-k accumulation — neighboring columns never mix.  All
+//! per-request readouts (embedding gather, log-sum-exp, argmax, NLL) are
+//! per-column loops.  `tests/serve.rs` pins batched-vs-solo parity
+//! across worker counts and steal seeds.
+//!
+//! Forward matmuls route through the PR-7 prepacked panel cache
+//! ([`PanelCache`]): the base weights and any delta projection are
+//! packed **once at load time**, so steady-state serving never decodes a
+//! quantization code (when [`pack_cache_enabled`]; the fused fallback is
+//! bitwise identical).
+
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::checkpoint::{self, CheckpointMeta, DeltaCheckpoint, SectionData};
+use super::finetune::argmin_loss;
+use crate::data::tokenizer::BYTE_BASE;
+use crate::linalg::{pack_cache_enabled, Mat, PanelCache, ParallelCtx, WorkerPool};
+use crate::optim::StepGraphBuilder;
+use crate::quant::{self, Quant4Tensor, QuantTensor};
+use crate::util::Pcg32;
+
+/// Label prefix token for class `l` — the same byte-fallback slot
+/// `finetune`'s training windows use, so served scores line up with
+/// fine-tuned checkpoints.
+pub fn label_token(l: usize) -> u32 {
+    BYTE_BASE + 1 + l as u32
+}
+
+/// Shape of the served model.  Must match the checkpoint it loads.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    /// Seed for [`ServeModel::from_seed`] (ignored on the checkpoint path).
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    /// Parameter count of the flat weight vector this config expects.
+    pub fn n_params(&self) -> usize {
+        self.vocab * self.dim + self.n_layers * self.dim * self.dim
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.dim >= 1, "serve config: dim must be >= 1");
+        ensure!(self.n_layers >= 1, "serve config: n_layers must be >= 1");
+        ensure!(
+            self.vocab > (BYTE_BASE + 1) as usize,
+            "serve config: vocab {} leaves no room for label tokens (need > {})",
+            self.vocab,
+            BYTE_BASE + 1
+        );
+        for (what, numel) in [
+            ("vocab*dim embedding", self.vocab * self.dim),
+            ("dim*dim layer", self.dim * self.dim),
+        ] {
+            ensure!(
+                numel <= 256 || numel % 256 == 0,
+                "serve config: {what} ({numel} values) must be <= 256 or a \
+                 multiple of 256 (blockwise quantization constraint)"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// A per-user low-rank delta for one layer: the INT4 up-projection `P`
+/// `(dim, rank)` and the f32 low-rank factor `L` `(rank, dim)`, applied
+/// as `y += P (L z)` — exactly the factorization `multijob` trains.
+struct LayerDelta {
+    p4: Quant4Tensor,
+    rank: usize,
+    pack: PanelCache,
+    l: Mat,
+}
+
+impl LayerDelta {
+    /// `P @ lz` with the prepacked fast path and fused fallback.
+    fn apply_up(&self, d: usize, lz: &Mat, ctx: ParallelCtx) -> Mat {
+        match self.pack.get().filter(|pk| pk.matches4(&self.p4, d, self.rank)) {
+            Some(pk) => quant::dequant4_matmul_prepacked(&self.p4, pk, d, self.rank, lz, ctx),
+            None => quant::dequant4_matmul(&self.p4, d, self.rank, lz, ctx),
+        }
+    }
+}
+
+/// One frozen INT8 base layer plus its optional per-user delta.
+struct ServeLayer {
+    w0q: QuantTensor,
+    pack: PanelCache,
+    delta: Option<LayerDelta>,
+}
+
+impl ServeLayer {
+    /// `dequant(W0) @ z` with the prepacked fast path and fused fallback.
+    fn forward_base(&self, z: &Mat, d: usize, ctx: ParallelCtx) -> Mat {
+        match self.pack.get().filter(|pk| pk.matches8(&self.w0q, d, d)) {
+            Some(pk) => quant::dequant8_matmul_prepacked(&self.w0q, pk, d, d, z, ctx),
+            None => quant::dequant8_matmul(&self.w0q, d, d, z, ctx),
+        }
+    }
+}
+
+/// A loaded, quantized, prepacked model ready to serve.  Immutable after
+/// load (`apply_delta` is part of loading), so waves share it freely.
+pub struct ServeModel {
+    cfg: ServeConfig,
+    /// `(vocab, dim)` tied embedding/readout matrix, blockwise INT8.
+    emb: QuantTensor,
+    emb_pack: PanelCache,
+    layers: Vec<ServeLayer>,
+}
+
+impl ServeModel {
+    pub fn cfg(&self) -> ServeConfig {
+        self.cfg
+    }
+
+    /// Quantize a flat f32 parameter vector (embedding first, then each
+    /// layer) into a served model, packing panels once if the pack cache
+    /// is enabled.
+    pub fn from_flat(cfg: ServeConfig, w: &[f32]) -> Result<Self> {
+        cfg.validate()?;
+        let want = cfg.n_params();
+        ensure!(
+            w.len() == want,
+            "flat weights: {} values for a config wanting {want} \
+             (vocab {} x dim {} + {} layers x dim^2)",
+            w.len(),
+            cfg.vocab,
+            cfg.dim,
+            cfg.n_layers
+        );
+        let (v, d) = (cfg.vocab, cfg.dim);
+        let emb = quant::quantize(&w[..v * d], 8);
+        let mut emb_pack = PanelCache::empty();
+        if pack_cache_enabled() {
+            emb_pack.get_or_pack8(&emb, v, d);
+        }
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let off = v * d + i * d * d;
+            let w0q = quant::quantize(&w[off..off + d * d], 8);
+            let mut pack = PanelCache::empty();
+            if pack_cache_enabled() {
+                pack.get_or_pack8(&w0q, d, d);
+            }
+            layers.push(ServeLayer { w0q, pack, delta: None });
+        }
+        Ok(ServeModel { cfg, emb, emb_pack, layers })
+    }
+
+    /// A reproducible synthetic model (benches, tests, demo serving).
+    pub fn from_seed(cfg: ServeConfig) -> Result<Self> {
+        cfg.validate()?;
+        let mut rng = Pcg32::new(cfg.seed, 0x5e4e);
+        let scale = 1.0 / (cfg.dim as f32).sqrt();
+        let w = rng.normal_vec(cfg.n_params(), 0.0, scale);
+        Self::from_flat(cfg, &w)
+    }
+
+    /// Load base weights from a [`super::checkpoint`] file.
+    pub fn from_checkpoint(
+        path: impl AsRef<Path>,
+        cfg: ServeConfig,
+    ) -> Result<(Self, CheckpointMeta)> {
+        let (params, meta) = checkpoint::load(path)?;
+        let model = Self::from_flat(cfg, &params)?;
+        Ok((model, meta))
+    }
+
+    /// Apply a per-user `QGDC` delta (the format `multijob::export_delta`
+    /// writes): per layer, the INT4 projection `P (dim, rank)` and the
+    /// low-rank factor `L (rank, dim)`.  Layers the job never refreshed
+    /// (`has_proj == 0`) stay base-only.  Shape mismatches fail loudly —
+    /// a delta trained against a different base must never be served.
+    pub fn apply_delta(&mut self, ckpt: &DeltaCheckpoint) -> Result<()> {
+        fn u64s(ck: &DeltaCheckpoint, name: &str) -> Result<Vec<u64>> {
+            match &ck.section(name)?.data {
+                SectionData::U64(v) => Ok(v.clone()),
+                other => bail!("section {name:?}: expected u64 data, got {other:?}"),
+            }
+        }
+        fn f32s(ck: &DeltaCheckpoint, name: &str) -> Result<Vec<f32>> {
+            match &ck.section(name)?.data {
+                SectionData::F32(v) => Ok(v.clone()),
+                other => bail!("section {name:?}: expected f32 data, got {other:?}"),
+            }
+        }
+        let d = self.cfg.dim;
+        let jobv = u64s(ckpt, "job")?;
+        ensure!(jobv.len() == 5, "job section has {} fields, want 5", jobv.len());
+        let rank = jobv[4] as usize;
+        ensure!(
+            ckpt.section(&format!("layer{}.meta", self.cfg.n_layers)).is_err(),
+            "delta has more layers than the serve model's {}",
+            self.cfg.n_layers
+        );
+        let mut deltas = Vec::with_capacity(self.layers.len());
+        for i in 0..self.layers.len() {
+            let meta = u64s(ckpt, &format!("layer{i}.meta"))?;
+            ensure!(meta.len() == 4, "layer{i}.meta wants 4 fields");
+            let (m, n, r) = (meta[0] as usize, meta[1] as usize, meta[2] as usize);
+            ensure!(m == d && n == d, "layer{i}: delta trained for ({m}, {n}), serve dim is {d}");
+            ensure!(r == rank, "layer{i}: rank {r} disagrees with job rank {rank}");
+            if meta[3] == 0 {
+                deltas.push(None);
+                continue;
+            }
+            let lsec = ckpt.section(&format!("layer{i}.lowrank"))?;
+            ensure!(
+                lsec.shape == [r, d],
+                "layer{i}.lowrank shape {:?}, want [{r}, {d}]",
+                lsec.shape
+            );
+            let ldata = match &lsec.data {
+                SectionData::F32(v) => v.clone(),
+                other => bail!("layer{i}.lowrank: expected f32 data, got {other:?}"),
+            };
+            let l = Mat::from_vec(r, d, ldata);
+            let packed = match &ckpt.section(&format!("layer{i}.proj.packed"))?.data {
+                SectionData::U8(v) => v.clone(),
+                other => bail!("layer{i}.proj.packed: expected u8 data, got {other:?}"),
+            };
+            let scale = f32s(ckpt, &format!("layer{i}.proj.scale"))?;
+            let zero = f32s(ckpt, &format!("layer{i}.proj.zero"))?;
+            let pmeta = u64s(ckpt, &format!("layer{i}.proj.meta"))?;
+            ensure!(pmeta.len() == 2, "layer{i}.proj.meta wants 2 fields");
+            let numel = pmeta[1] as usize;
+            ensure!(numel == d * r, "layer{i}: projection numel {numel}, want d*r = {}", d * r);
+            let p4 = Quant4Tensor::from_parts(packed, scale, zero, pmeta[0] as usize, numel)?;
+            let mut pack = PanelCache::empty();
+            if pack_cache_enabled() {
+                pack.get_or_pack4(&p4, d, r);
+            }
+            deltas.push(Some(LayerDelta { p4, rank: r, pack, l }));
+        }
+        for (layer, delta) in self.layers.iter_mut().zip(deltas) {
+            layer.delta = delta;
+        }
+        Ok(())
+    }
+
+    /// Whether any layer carries a per-user delta.
+    pub fn has_delta(&self) -> bool {
+        self.layers.iter().any(|l| l.delta.is_some())
+    }
+
+    /// Quantized storage held by the frozen base (codes + block params +
+    /// panel packs).
+    pub fn base_bytes(&self) -> usize {
+        let packs = |c: &PanelCache| c.get().map_or(0, |p| p.pack_bytes());
+        self.emb.storage_bytes()
+            + packs(&self.emb_pack)
+            + self
+                .layers
+                .iter()
+                .map(|l| l.w0q.storage_bytes() + packs(&l.pack))
+                .sum::<usize>()
+    }
+
+    /// Storage held by the applied delta (zero when serving base-only).
+    pub fn delta_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .filter_map(|l| l.delta.as_ref())
+            .map(|dl| {
+                dl.p4.storage_bytes()
+                    + dl.l.data.len() * std::mem::size_of::<f32>()
+                    + dl.pack.get().map_or(0, |p| p.pack_bytes())
+            })
+            .sum()
+    }
+
+    /// One recurrent step over a batch: add each stream's token embedding
+    /// to its own column, then run every layer (`tanh(W0 z [+ P L z])`).
+    /// Columns never mix, so a column's values are independent of the
+    /// batch it rides in — the serving determinism contract.
+    pub fn step_tokens(&self, h: &Mat, toks: &[u32], ctx: ParallelCtx) -> Mat {
+        let d = self.cfg.dim;
+        let bsz = h.cols;
+        assert_eq!(h.rows, d, "step_tokens: hidden state has {} rows, want {d}", h.rows);
+        assert_eq!(toks.len(), bsz, "step_tokens: {} tokens for batch {bsz}", toks.len());
+        let mut z = h.clone();
+        for (col, &tk) in toks.iter().enumerate() {
+            let base = tk as usize * d;
+            for j in 0..d {
+                z.data[j * bsz + col] += self.emb.dequant_at(base + j);
+            }
+        }
+        for layer in &self.layers {
+            let mut y = layer.forward_base(&z, d, ctx);
+            if let Some(delta) = &layer.delta {
+                let lz = delta.l.matmul_with(&z, ctx);
+                let pz = delta.apply_up(d, &lz, ctx);
+                for (yv, pv) in y.data.iter_mut().zip(&pz.data) {
+                    *yv += *pv;
+                }
+            }
+            for v in y.data.iter_mut() {
+                *v = v.tanh();
+            }
+            z = y;
+        }
+        z
+    }
+
+    /// Run a shape-uniform wave of token streams from the zero state;
+    /// returns the final hidden state `(dim, streams.len())`.
+    pub fn prefill(&self, streams: &[&[u32]], ctx: ParallelCtx) -> Mat {
+        assert!(!streams.is_empty(), "prefill: empty wave");
+        let len = streams[0].len();
+        assert!(len > 0, "prefill: empty stream");
+        assert!(
+            streams.iter().all(|s| s.len() == len),
+            "prefill: wave streams must be shape-uniform"
+        );
+        let mut h = Mat::zeros(self.cfg.dim, streams.len());
+        let mut toks = vec![0u32; streams.len()];
+        for t in 0..len {
+            for (col, s) in streams.iter().enumerate() {
+                toks[col] = s[t];
+            }
+            h = self.step_tokens(&h, &toks, ctx);
+        }
+        h
+    }
+
+    /// Readout logits `(vocab, batch)` through the tied embedding.
+    pub fn logits(&self, h: &Mat, ctx: ParallelCtx) -> Mat {
+        let (v, d) = (self.cfg.vocab, self.cfg.dim);
+        match self.emb_pack.get().filter(|pk| pk.matches8(&self.emb, v, d)) {
+            Some(pk) => quant::dequant8_matmul_prepacked(&self.emb, pk, v, d, h, ctx),
+            None => quant::dequant8_matmul(&self.emb, v, d, h, ctx),
+        }
+    }
+
+    /// Label-prefix scoring readout for one batch column: per-label NLL
+    /// (`lse − logit(label_token)`) and the NaN-safe argmin prediction.
+    pub fn score_readout(
+        &self,
+        logits: &Mat,
+        col: usize,
+        labels: usize,
+    ) -> (Vec<f32>, Option<usize>) {
+        let lse = column_lse(logits, col);
+        let bsz = logits.cols;
+        let nll: Vec<f32> = (0..labels)
+            .map(|l| lse - logits.data[label_token(l) as usize * bsz + col])
+            .collect();
+        let pred = argmin_loss(&nll);
+        (nll, pred)
+    }
+}
+
+/// Per-column log-sum-exp (max-shifted, ascending-row accumulation — one
+/// fixed order, so batched equals solo bitwise).
+fn column_lse(logits: &Mat, col: usize) -> f32 {
+    let bsz = logits.cols;
+    let mut mx = f32::NEG_INFINITY;
+    for r in 0..logits.rows {
+        mx = mx.max(logits.data[r * bsz + col]);
+    }
+    let mut s = 0f32;
+    for r in 0..logits.rows {
+        s += (logits.data[r * bsz + col] - mx).exp();
+    }
+    mx + s.ln()
+}
+
+/// Greedy token for one batch column: strict `>` scan, so ties go to the
+/// lowest token id — deterministic at any batch width.
+fn argmax_col(logits: &Mat, col: usize) -> u32 {
+    let bsz = logits.cols;
+    let mut best = 0usize;
+    let mut bestv = logits.data[col];
+    for r in 1..logits.rows {
+        let v = logits.data[r * bsz + col];
+        if v > bestv {
+            best = r;
+            bestv = v;
+        }
+    }
+    best as u32
+}
+
+/// One serving request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeRequest {
+    /// Label-prefix scoring over `content`, reading `labels` classes.
+    Score { content: Vec<u32>, labels: usize },
+    /// Greedy generation: run `prompt`, then emit `max_new` tokens.
+    Generate { prompt: Vec<u32>, max_new: usize },
+}
+
+/// The response to a [`ServeRequest`], same variant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeResponse {
+    Score { nll: Vec<f32>, pred: Option<usize> },
+    Generate { tokens: Vec<u32> },
+}
+
+/// Coalescing key: requests sharing a key run as columns of one wave.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WaveKey {
+    Score { len: usize },
+    Generate { len: usize, max_new: usize },
+}
+
+fn wave_key(req: &ServeRequest) -> WaveKey {
+    match req {
+        ServeRequest::Score { content, .. } => WaveKey::Score { len: content.len() },
+        ServeRequest::Generate { prompt, max_new } => {
+            WaveKey::Generate { len: prompt.len(), max_new: *max_new }
+        }
+    }
+}
+
+/// Group request indices into shape-uniform waves, first-seen order.
+/// Inside a wave, members keep submission order (they become columns in
+/// that order — stable, so responses are reproducible).
+fn coalesce(reqs: &[ServeRequest]) -> Vec<(WaveKey, Vec<usize>)> {
+    let mut waves: Vec<(WaveKey, Vec<usize>)> = Vec::new();
+    for (i, r) in reqs.iter().enumerate() {
+        let k = wave_key(r);
+        match waves.iter_mut().find(|(wk, _)| *wk == k) {
+            Some((_, members)) => members.push(i),
+            None => waves.push((k, vec![i])),
+        }
+    }
+    waves
+}
+
+/// In-flight decode state for one generation wave.
+struct GenState {
+    h: Mat,
+    out: Vec<Vec<u32>>,
+}
+
+/// Response plus completion latency (ms from batch start), per request.
+type OutSlot = Mutex<Option<(ServeResponse, f64)>>;
+
+/// The batched serving engine: a loaded model plus the parallelism
+/// context its kernels run with.
+pub struct ServeEngine {
+    model: ServeModel,
+    ctx: ParallelCtx,
+}
+
+impl ServeEngine {
+    pub fn new(model: ServeModel, ctx: ParallelCtx) -> Self {
+        ServeEngine { model, ctx }
+    }
+
+    pub fn model(&self) -> &ServeModel {
+        &self.model
+    }
+
+    fn validate(&self, i: usize, req: &ServeRequest) -> Result<()> {
+        let vocab = self.model.cfg.vocab;
+        match req {
+            ServeRequest::Score { content, labels } => {
+                ensure!(!content.is_empty(), "request {i}: empty content");
+                ensure!(*labels >= 1, "request {i}: need at least one label");
+                let top = label_token(*labels - 1);
+                ensure!(
+                    (top as usize) < vocab,
+                    "request {i}: label {} maps to token {top}, outside vocab {vocab}",
+                    *labels - 1
+                );
+                for &tk in content {
+                    ensure!((tk as usize) < vocab, "request {i}: token {tk} outside vocab {vocab}");
+                }
+            }
+            ServeRequest::Generate { prompt, max_new } => {
+                ensure!(!prompt.is_empty(), "request {i}: empty prompt");
+                ensure!(*max_new >= 1, "request {i}: max_new must be >= 1");
+                for &tk in prompt {
+                    ensure!((tk as usize) < vocab, "request {i}: token {tk} outside vocab {vocab}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve a single request, solo — the reference the batched path must
+    /// match bitwise.
+    pub fn serve_one(&self, req: &ServeRequest) -> Result<ServeResponse> {
+        self.validate(0, req)?;
+        match req {
+            ServeRequest::Score { content, labels } => {
+                let h = self.model.prefill(&[content.as_slice()], self.ctx);
+                let logits = self.model.logits(&h, self.ctx);
+                let (nll, pred) = self.model.score_readout(&logits, 0, *labels);
+                Ok(ServeResponse::Score { nll, pred })
+            }
+            ServeRequest::Generate { prompt, max_new } => {
+                let mut h = self.model.prefill(&[prompt.as_slice()], self.ctx);
+                let mut tokens = Vec::with_capacity(*max_new);
+                for t in 0..*max_new {
+                    let logits = self.model.logits(&h, self.ctx);
+                    let tk = argmax_col(&logits, 0);
+                    tokens.push(tk);
+                    if t + 1 < *max_new {
+                        h = self.model.step_tokens(&h, &[tk], self.ctx);
+                    }
+                }
+                Ok(ServeResponse::Generate { tokens })
+            }
+        }
+    }
+
+    /// Serve requests one at a time (no batching, no graph) — the solo
+    /// baseline for parity tests and benches.
+    pub fn serve_sequential(&self, reqs: &[ServeRequest]) -> Result<Vec<ServeResponse>> {
+        reqs.iter().map(|r| self.serve_one(r)).collect()
+    }
+
+    /// Batched serving: responses in submission order.
+    pub fn serve_batch(
+        &self,
+        reqs: &[ServeRequest],
+        pool: &WorkerPool,
+    ) -> Result<Vec<ServeResponse>> {
+        Ok(self.serve_batch_timed(reqs, pool)?.0)
+    }
+
+    /// Batched serving, also reporting each request's completion latency
+    /// in ms from batch start (its wave's finish time).  Latencies are
+    /// wall-clock and NOT part of the determinism contract; responses are.
+    pub fn serve_batch_timed(
+        &self,
+        reqs: &[ServeRequest],
+        pool: &WorkerPool,
+    ) -> Result<(Vec<ServeResponse>, Vec<f64>)> {
+        for (i, r) in reqs.iter().enumerate() {
+            self.validate(i, r)?;
+        }
+        let waves = coalesce(reqs);
+        let ctx = self.ctx;
+        let model = &self.model;
+        let out_slots: Vec<OutSlot> = reqs.iter().map(|_| Mutex::new(None)).collect();
+        // Per-wave relay slots; allocated up front so node closures can
+        // borrow them for the whole graph's lifetime.
+        let relays: Vec<Mutex<Option<Mat>>> = (0..waves.len()).map(|_| Mutex::new(None)).collect();
+        let gen_states: Vec<Mutex<Option<GenState>>> =
+            (0..waves.len()).map(|_| Mutex::new(None)).collect();
+
+        let t0 = Instant::now();
+        let mut b = StepGraphBuilder::new();
+        for (wi, (key, members)) in waves.iter().enumerate() {
+            match *key {
+                WaveKey::Score { .. } => {
+                    let streams: Vec<&[u32]> = members
+                        .iter()
+                        .map(|&ri| match &reqs[ri] {
+                            ServeRequest::Score { content, .. } => content.as_slice(),
+                            _ => unreachable!("score wave holds score requests"),
+                        })
+                        .collect();
+                    let relay = &relays[wi];
+                    let prefill = b.node(&[], move || {
+                        *relay.lock().unwrap() = Some(model.prefill(&streams, ctx));
+                    });
+                    let members = members.clone();
+                    let out = &out_slots;
+                    b.node(&[prefill], move || {
+                        let h = relay.lock().unwrap().take().unwrap();
+                        let logits = model.logits(&h, ctx);
+                        let ms = t0.elapsed().as_secs_f64() * 1e3;
+                        for (col, &ri) in members.iter().enumerate() {
+                            let labels = match &reqs[ri] {
+                                ServeRequest::Score { labels, .. } => *labels,
+                                _ => unreachable!("score wave holds score requests"),
+                            };
+                            let (nll, pred) = model.score_readout(&logits, col, labels);
+                            *out[ri].lock().unwrap() =
+                                Some((ServeResponse::Score { nll, pred }, ms));
+                        }
+                    });
+                }
+                WaveKey::Generate { max_new, .. } => {
+                    let prompts: Vec<&[u32]> = members
+                        .iter()
+                        .map(|&ri| match &reqs[ri] {
+                            ServeRequest::Generate { prompt, .. } => prompt.as_slice(),
+                            _ => unreachable!("generate wave holds generate requests"),
+                        })
+                        .collect();
+                    let bsz = members.len();
+                    let state = &gen_states[wi];
+                    let mut prev = b.node(&[], move || {
+                        let h = model.prefill(&prompts, ctx);
+                        *state.lock().unwrap() =
+                            Some(GenState { h, out: vec![Vec::new(); bsz] });
+                    });
+                    for t in 0..max_new {
+                        let last = t + 1 == max_new;
+                        prev = b.node(&[prev], move || {
+                            let mut st = state.lock().unwrap().take().unwrap();
+                            let logits = model.logits(&st.h, ctx);
+                            let toks: Vec<u32> =
+                                (0..st.out.len()).map(|col| argmax_col(&logits, col)).collect();
+                            for (col, &tk) in toks.iter().enumerate() {
+                                st.out[col].push(tk);
+                            }
+                            if !last {
+                                st.h = model.step_tokens(&st.h, &toks, ctx);
+                            }
+                            *state.lock().unwrap() = Some(st);
+                        });
+                    }
+                    let members = members.clone();
+                    let out = &out_slots;
+                    b.node(&[prev], move || {
+                        let st = state.lock().unwrap().take().unwrap();
+                        let ms = t0.elapsed().as_secs_f64() * 1e3;
+                        for (col, &ri) in members.iter().enumerate() {
+                            *out[ri].lock().unwrap() =
+                                Some((ServeResponse::Generate { tokens: st.out[col].clone() }, ms));
+                        }
+                    });
+                }
+            }
+        }
+        b.run(pool)?;
+
+        let mut responses = Vec::with_capacity(reqs.len());
+        let mut latencies = Vec::with_capacity(reqs.len());
+        for (i, slot) in out_slots.into_iter().enumerate() {
+            let (resp, ms) = slot
+                .into_inner()
+                .unwrap()
+                .ok_or_else(|| anyhow!("request {i} left unserved (graph node skipped)"))?;
+            responses.push(resp);
+            latencies.push(ms);
+        }
+        Ok((responses, latencies))
+    }
+}
+
+/// Nearest-rank percentile (`p` in 0..=100) over unsorted samples; NaN
+/// for an empty slice.  Shared by the serve bench and the CLI report.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
+/// A reproducible mixed request stream (3 scoring : 1 generation, a few
+/// distinct shapes so coalescing always has multiple waves to build).
+pub fn synth_requests(vocab: usize, n: usize, seed: u64) -> Vec<ServeRequest> {
+    assert!(vocab > label_token(3) as usize, "synth_requests wants room for 4 labels");
+    let mut rng = Pcg32::new(seed, 0x5eed);
+    (0..n)
+        .map(|i| {
+            if i % 4 == 3 {
+                let plen = if (i / 4) % 2 == 0 { 4 } else { 8 };
+                let prompt = (0..plen).map(|_| rng.below(vocab) as u32).collect();
+                ServeRequest::Generate { prompt, max_new: 6 }
+            } else {
+                let len = [6, 10, 14][i % 3];
+                let content = (0..len).map(|_| rng.below(vocab) as u32).collect();
+                ServeRequest::Score { content, labels: 4 }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> ServeModel {
+        ServeModel::from_seed(ServeConfig { vocab: 8, dim: 4, n_layers: 2, seed: 7 }).unwrap()
+    }
+
+    #[test]
+    fn coalesce_groups_by_shape_first_seen() {
+        let reqs = vec![
+            ServeRequest::Score { content: vec![1, 2], labels: 2 },
+            ServeRequest::Generate { prompt: vec![1], max_new: 3 },
+            ServeRequest::Score { content: vec![3, 4], labels: 4 },
+            ServeRequest::Score { content: vec![1, 2, 3], labels: 2 },
+            ServeRequest::Generate { prompt: vec![2], max_new: 3 },
+            ServeRequest::Generate { prompt: vec![2], max_new: 4 },
+        ];
+        let waves = coalesce(&reqs);
+        assert_eq!(waves.len(), 4);
+        assert_eq!(waves[0], (WaveKey::Score { len: 2 }, vec![0, 2]));
+        assert_eq!(waves[1], (WaveKey::Generate { len: 1, max_new: 3 }, vec![1, 4]));
+        assert_eq!(waves[2], (WaveKey::Score { len: 3 }, vec![3]));
+        assert_eq!(waves[3], (WaveKey::Generate { len: 1, max_new: 4 }, vec![5]));
+    }
+
+    #[test]
+    fn invalid_configs_and_requests_are_rejected() {
+        // vocab*dim = 300: neither <= 256 nor a multiple of 256
+        assert!(ServeModel::from_seed(ServeConfig { vocab: 75, dim: 4, n_layers: 1, seed: 1 })
+            .is_err());
+        // no room for even one label token
+        assert!(ServeModel::from_seed(ServeConfig { vocab: 4, dim: 4, n_layers: 1, seed: 1 })
+            .is_err());
+        // flat length mismatch
+        assert!(ServeModel::from_flat(
+            ServeConfig { vocab: 8, dim: 4, n_layers: 1, seed: 1 },
+            &[0.0; 10]
+        )
+        .is_err());
+
+        let engine = ServeEngine::new(tiny_model(), ParallelCtx::serial());
+        let bad = [
+            ServeRequest::Score { content: vec![], labels: 1 },
+            ServeRequest::Score { content: vec![1], labels: 0 },
+            // label_token(4) = 8, outside vocab 8
+            ServeRequest::Score { content: vec![1], labels: 5 },
+            ServeRequest::Score { content: vec![9], labels: 1 },
+            ServeRequest::Generate { prompt: vec![], max_new: 1 },
+            ServeRequest::Generate { prompt: vec![1], max_new: 0 },
+            ServeRequest::Generate { prompt: vec![8], max_new: 1 },
+        ];
+        for req in &bad {
+            assert!(engine.serve_one(req).is_err(), "must reject {req:?}");
+            assert!(
+                engine
+                    .serve_batch(std::slice::from_ref(req), &WorkerPool::with_steal_seed(1, 5))
+                    .is_err(),
+                "batch must reject {req:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_matches_sequential() {
+        let engine = ServeEngine::new(tiny_model(), ParallelCtx::serial());
+        let reqs = synth_requests(8, 10, 3);
+        let solo = engine.serve_sequential(&reqs).unwrap();
+        let pool = WorkerPool::with_steal_seed(3, 41);
+        let (batched, lat) = engine.serve_batch_timed(&reqs, &pool).unwrap();
+        assert_eq!(solo, batched);
+        assert_eq!(lat.len(), reqs.len());
+        assert!(lat.iter().all(|ms| ms.is_finite() && *ms >= 0.0));
+    }
+
+    #[test]
+    fn score_and_generate_shapes() {
+        let engine = ServeEngine::new(tiny_model(), ParallelCtx::serial());
+        match engine
+            .serve_one(&ServeRequest::Score { content: vec![1, 2, 3], labels: 3 })
+            .unwrap()
+        {
+            ServeResponse::Score { nll, pred } => {
+                assert_eq!(nll.len(), 3);
+                assert!(nll.iter().all(|x| x.is_finite()));
+                let want = argmin_loss(&nll);
+                assert_eq!(pred, want);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        match engine
+            .serve_one(&ServeRequest::Generate { prompt: vec![5, 1], max_new: 4 })
+            .unwrap()
+        {
+            ServeResponse::Generate { tokens } => {
+                assert_eq!(tokens.len(), 4);
+                assert!(tokens.iter().all(|&tk| (tk as usize) < 8));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_ok() {
+        let engine = ServeEngine::new(tiny_model(), ParallelCtx::serial());
+        let pool = WorkerPool::with_steal_seed(2, 9);
+        let (resps, lat) = engine.serve_batch_timed(&[], &pool).unwrap();
+        assert!(resps.is_empty() && lat.is_empty());
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = vec![4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 99.0), 4.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn synth_requests_are_reproducible_and_valid() {
+        let a = synth_requests(8, 20, 11);
+        let b = synth_requests(8, 20, 11);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|r| matches!(r, ServeRequest::Generate { .. })));
+        assert!(a.iter().any(|r| matches!(r, ServeRequest::Score { .. })));
+        let engine = ServeEngine::new(tiny_model(), ParallelCtx::serial());
+        for (i, r) in a.iter().enumerate() {
+            engine.validate(i, r).unwrap();
+        }
+    }
+}

@@ -4,7 +4,10 @@
 //! `artifacts/manifest.json`, run configuration files, and metric logs.
 //! Rather than pull serde into the dependency budget we implement the small
 //! recursive-descent parser below (strings, numbers, bools, null, arrays,
-//! objects; `\uXXXX` escapes; no trailing commas — i.e. strict JSON).
+//! objects; `\uXXXX` escapes including UTF-16 surrogate pairs; strict RFC
+//! 8259 number grammar — no trailing commas, no leading zeros, no bare `1.`
+//! — i.e. strict JSON).  A lone/unpaired surrogate escape decodes to U+FFFD
+//! rather than erroring, matching how lossy decoders treat broken UTF-16.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -105,7 +108,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; `format!` would emit
+                    // one and silently corrupt the document.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -205,16 +212,33 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Strict RFC 8259 grammar: `-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?`.
+    /// `f64::parse` tolerates forms JSON forbids (`1.`, `01`, `+1`), so the
+    /// scanner must validate the shape itself before handing the text over.
     fn number(&mut self) -> Result<Json, ParseError> {
         let start = self.i;
         if self.peek() == Some(b'-') {
             self.i += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.i += 1;
+        match self.peek() {
+            Some(b'0') => {
+                self.i += 1;
+                if matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    return Err(self.err("leading zero in number"));
+                }
+            }
+            Some(c) if c.is_ascii_digit() => {
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.i += 1;
+                }
+            }
+            _ => return Err(self.err("expected digit")),
         }
         if self.peek() == Some(b'.') {
             self.i += 1;
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("expected digit after decimal point"));
+            }
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.i += 1;
             }
@@ -224,6 +248,9 @@ impl<'a> Parser<'a> {
             if matches!(self.peek(), Some(b'+' | b'-')) {
                 self.i += 1;
             }
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("expected digit in exponent"));
+            }
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.i += 1;
             }
@@ -232,6 +259,26 @@ impl<'a> Parser<'a> {
         txt.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
+    }
+
+    /// Read four hex digits starting at byte offset `at`.  Strict: every
+    /// byte must be an ASCII hex digit (`from_str_radix` would also accept
+    /// a leading `+`, which JSON forbids).
+    fn hex4(&self, at: usize) -> Result<u32, ParseError> {
+        if at + 4 > self.b.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let mut v = 0u32;
+        for &c in &self.b[at..at + 4] {
+            let d = match c {
+                b'0'..=b'9' => c - b'0',
+                b'a'..=b'f' => c - b'a' + 10,
+                b'A'..=b'F' => c - b'A' + 10,
+                _ => return Err(self.err("bad \\u escape")),
+            };
+            v = v * 16 + u32::from(d);
+        }
+        Ok(v)
     }
 
     fn string(&mut self) -> Result<String, ParseError> {
@@ -256,16 +303,37 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            // `self.i` is on the 'u'; hex digits follow it.
+                            let cp = self.hex4(self.i + 1)?;
                             self.i += 4;
+                            let c = if (0xD800..0xDC00).contains(&cp) {
+                                // High surrogate: a non-BMP char is escaped
+                                // as a `\uD8xx\uDCxx` pair split across two
+                                // escapes — peek for the low half and stitch
+                                // the UTF-16 units back into one scalar.
+                                let low = if self.b.get(self.i + 1) == Some(&b'\\')
+                                    && self.b.get(self.i + 2) == Some(&b'u')
+                                {
+                                    self.hex4(self.i + 3).ok()
+                                } else {
+                                    None
+                                };
+                                match low {
+                                    Some(lo) if (0xDC00..0xE000).contains(&lo) => {
+                                        self.i += 6; // the low half's `\uXXXX`
+                                        let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                        char::from_u32(c).unwrap_or('\u{fffd}')
+                                    }
+                                    // Unpaired high surrogate (next escape is
+                                    // not a low half): lossy, don't consume.
+                                    _ => '\u{fffd}',
+                                }
+                            } else if (0xDC00..0xE000).contains(&cp) {
+                                '\u{fffd}' // lone low surrogate
+                            } else {
+                                char::from_u32(cp).unwrap_or('\u{fffd}')
+                            };
+                            out.push(c);
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -372,6 +440,84 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn unicode_escape_surrogate_pair() {
+        // U+1F600 😀 = \uD83D\uDE00 — the pair is split across two escapes,
+        // which is the only legal JSON spelling of a non-BMP char.
+        assert_eq!(Json::parse("\"\\ud83d\\ude00\"").unwrap(), Json::Str("😀".into()));
+        assert_eq!(Json::parse("\"\\uD83D\\uDE00\"").unwrap(), Json::Str("😀".into()));
+        assert_eq!(Json::parse("\"a\\uD83D\\uDE00b\"").unwrap(), Json::Str("a😀b".into()));
+        // two consecutive pairs
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\\ud83e\\udd80\"").unwrap(),
+            Json::Str("😀🦀".into())
+        );
+    }
+
+    #[test]
+    fn unicode_escape_lone_high_surrogate() {
+        assert_eq!(Json::parse("\"\\ud83d\"").unwrap(), Json::Str("\u{fffd}".into()));
+        assert_eq!(Json::parse("\"\\ud83dx\"").unwrap(), Json::Str("\u{fffd}x".into()));
+        // high surrogate followed by a non-surrogate escape: the high half
+        // is lossy, the following escape decodes normally
+        assert_eq!(Json::parse("\"\\ud83d\\u0041\"").unwrap(), Json::Str("\u{fffd}A".into()));
+        // high-high-low: the first high is unpaired, the second pairs up
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ud83d\\ude00\"").unwrap(),
+            Json::Str("\u{fffd}😀".into())
+        );
+    }
+
+    #[test]
+    fn unicode_escape_lone_low_surrogate() {
+        assert_eq!(Json::parse("\"\\ude00\"").unwrap(), Json::Str("\u{fffd}".into()));
+        assert_eq!(Json::parse("\"x\\ude00y\"").unwrap(), Json::Str("x\u{fffd}y".into()));
+    }
+
+    #[test]
+    fn unicode_escape_malformed_still_errors() {
+        assert!(Json::parse("\"\\u12\"").is_err()); // truncated hex
+        assert!(Json::parse("\"\\u12g4\"").is_err()); // non-hex digit
+        assert!(Json::parse("\"\\u+123\"").is_err()); // from_str_radix would take this
+        assert!(Json::parse("\"\\ud83d\\u12\"").is_err()); // bad escape after lone high
+    }
+
+    #[test]
+    fn number_grammar_accepts() {
+        for (src, want) in [
+            ("0", 0.0),
+            ("-0", -0.0),
+            ("7", 7.0),
+            ("10", 10.0),
+            ("0.5", 0.5),
+            ("-0.5", -0.5),
+            ("1e3", 1000.0),
+            ("1E+3", 1000.0),
+            ("1.25e-2", 0.0125),
+            ("0e0", 0.0),
+            ("123.456e2", 12345.6),
+        ] {
+            assert_eq!(Json::parse(src).unwrap(), Json::Num(want), "accept {src}");
+        }
+    }
+
+    #[test]
+    fn number_grammar_rejects() {
+        for src in [
+            "1.", "01", "-01", "00", ".5", "-", "-.5", "1e", "1e+", "1.e3", "0x1", "+1",
+            "1.2.3", "--1", "Infinity", "NaN", "1_000",
+        ] {
+            assert!(Json::parse(src).is_err(), "reject {src}");
+        }
+    }
+
+    #[test]
+    fn dump_non_finite_as_null() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).dump(), "null");
     }
 
     #[test]

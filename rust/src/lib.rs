@@ -28,7 +28,7 @@
 //! | [`runtime`]   | PJRT client wrapper: load/compile/execute HLO-text artifacts |
 //! | [`optim`]     | optimizer zoo: Full, 8-bit Adam, Low-Rank, LoRA, ReLoRA, QLoRA, GaLore, 8-bit GaLore, Q-GaLore |
 //! | [`scheduler`] | lazy layer-wise subspace update scheduler |
-//! | [`coordinator`] | trainer: step loop, eval, fine-tune driver, metrics, checkpoints |
+//! | [`coordinator`] | trainer: step loop, eval, fine-tune driver, multi-job coordinator, batched serving engine, metrics, checkpoints |
 //! | [`report`]    | markdown/CSV renderers for the repro harness |
 //! | [`repro`]     | regenerates every table and figure of the paper |
 

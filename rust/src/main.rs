@@ -7,8 +7,8 @@ use anyhow::{anyhow, Result};
 
 use qgalore::cli::Args;
 use qgalore::coordinator::{
-    checkpoint, finetune, pretrain, FinetuneConfig, MultiJobConfig, MultiJobCoordinator,
-    TrainConfig,
+    checkpoint, finetune, pretrain, serve, FinetuneConfig, MultiJobConfig, MultiJobCoordinator,
+    ServeConfig, ServeEngine, ServeModel, ServeRequest, ServeResponse, TrainConfig,
 };
 use qgalore::linalg::{global_pool, set_global_threads, ParallelCtx};
 use qgalore::manifest::Manifest;
@@ -40,6 +40,10 @@ COMMANDS
   multijob   serve N concurrent fine-tune jobs on one shared base arena
              --jobs N --rounds N --layers N --dim N --rank N --lr F
              --seed N --interval N --delta-dir DIR (save per-job deltas)
+  serve      batched forward-only scoring/generation on a loaded model
+             --requests N --layers N --dim N --vocab N --seed N
+             --ckpt PATH (base checkpoint; synthetic model if omitted)
+             --delta PATH (per-user QGDC delta from finetune/multijob)
   repro      regenerate a paper table/figure
              <table1|table2|table3|table4|fig2|fig3|fig5|fig6|fig7|all>
              --steps N --out DIR --config C --seed N --verbose
@@ -231,6 +235,73 @@ fn main() -> Result<()> {
                     let ck = co.export_delta(ji, "multijob")?;
                     checkpoint::save_delta(&path, &ck)?;
                     println!("saved {} ({})", path.display(), human_bytes(ck.payload_bytes() as u64));
+                }
+            }
+        }
+        "serve" => {
+            let requests = args.usize_or("requests", 64)?;
+            let cfg = ServeConfig {
+                vocab: args.usize_or("vocab", 320)?,
+                dim: args.usize_or("dim", 64)?,
+                n_layers: args.usize_or("layers", 3)?,
+                seed: args.u64_or("seed", 0)?,
+            };
+            let ckpt = args.flag("ckpt").map(|s| s.to_string());
+            let delta = args.flag("delta").map(|s| s.to_string());
+            args.reject_unknown()?;
+            let mut model = match &ckpt {
+                Some(p) => {
+                    let (m, meta) = ServeModel::from_checkpoint(p, cfg)?;
+                    println!(
+                        "loaded {p}: cfg {} method {} step {} val_loss {:.4}",
+                        meta.cfg_name, meta.method, meta.step, meta.val_loss
+                    );
+                    m
+                }
+                None => ServeModel::from_seed(cfg)?,
+            };
+            if let Some(p) = &delta {
+                model.apply_delta(&checkpoint::load_delta(p)?)?;
+                println!(
+                    "applied per-user delta {p} ({})",
+                    human_bytes(model.delta_bytes() as u64)
+                );
+            }
+            println!(
+                "serve: {} layers x {}x{}, vocab {} | base {} (packed)",
+                cfg.n_layers,
+                cfg.dim,
+                cfg.dim,
+                cfg.vocab,
+                human_bytes(model.base_bytes() as u64)
+            );
+            let engine = ServeEngine::new(model, ParallelCtx::global());
+            let reqs = serve::synth_requests(cfg.vocab, requests, cfg.seed ^ 0xcafe);
+            let pool = global_pool();
+            let t0 = std::time::Instant::now();
+            let (resps, lat) = engine.serve_batch_timed(&reqs, pool)?;
+            let dt = t0.elapsed().as_secs_f64().max(1e-9);
+            println!(
+                "{requests} requests in {:.1} ms | {:.1} req/s | p50 {:.2} ms p99 {:.2} ms",
+                dt * 1e3,
+                requests as f64 / dt,
+                serve::percentile(&lat, 50.0),
+                serve::percentile(&lat, 99.0)
+            );
+            for (r, resp) in reqs.iter().zip(&resps).take(4) {
+                match (r, resp) {
+                    (
+                        ServeRequest::Score { labels, .. },
+                        ServeResponse::Score { nll, pred },
+                    ) => println!(
+                        "  score: pred {pred:?} of {labels} labels | nll {:?}",
+                        nll.iter().map(|x| format!("{x:.3}")).collect::<Vec<_>>()
+                    ),
+                    (
+                        ServeRequest::Generate { max_new, .. },
+                        ServeResponse::Generate { tokens },
+                    ) => println!("  generate: {max_new} new tokens -> {tokens:?}"),
+                    _ => {}
                 }
             }
         }

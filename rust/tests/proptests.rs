@@ -517,13 +517,27 @@ fn prop_dataflow_step_matches_sequential_bitwise() {
 // ---------------------------------------------------------------------------
 
 fn random_json(rng: &mut Pcg32, depth: usize) -> Json {
+    // string palette exercises escapes (quote, backslash, control bytes)
+    // and multi-byte UTF-8 up to astral-plane emoji — the surrogate-pair
+    // regression surface
+    const CHARS: [char; 16] = [
+        'a', 'z', 'Q', '7', ' ', '"', '\\', '\n', '\t', '\u{8}', '\u{1}', 'é', '—', '∞', '😀',
+        '🦀',
+    ];
     match if depth == 0 { rng.below(4) } else { rng.below(6) } {
         0 => Json::Null,
         1 => Json::Bool(rng.below(2) == 0),
-        2 => Json::Num((rng.next_f32() * 2000.0 - 1000.0) as f64),
+        // mix of integers, round floats, and awkward fractions so both
+        // the integer and decimal printers feed the strict number grammar
+        2 => Json::Num(match rng.below(4) {
+            0 => (rng.below(2001) as f64) - 1000.0,
+            1 => (rng.next_f32() * 2000.0 - 1000.0) as f64,
+            2 => ((rng.next_f32() - 0.5) / 1000.0) as f64,
+            _ => 0.0,
+        }),
         3 => Json::Str(
             (0..rng.below(12))
-                .map(|_| char::from(b'a' + rng.below(26) as u8))
+                .map(|_| CHARS[rng.below(CHARS.len())])
                 .collect(),
         ),
         4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
@@ -542,6 +556,32 @@ fn prop_json_roundtrip() {
         let parsed = Json::parse(&v.dump()).expect("roundtrip parse");
         // floats survive via shortest-representation printing
         assert_eq!(parsed.dump(), v.dump());
+    });
+}
+
+#[test]
+fn prop_json_unicode_escape_forms() {
+    // every scalar value round-trips through the \uXXXX escape form,
+    // including surrogate pairs for astral-plane chars
+    cases(400, 81, |rng, _| {
+        let c = loop {
+            if let Some(c) = char::from_u32(rng.next_u32() % 0x11_0000) {
+                break c;
+            }
+        };
+        let mut buf = [0u16; 2];
+        let escaped: String = c
+            .encode_utf16(&mut buf)
+            .iter()
+            .map(|u| format!("\\u{u:04x}"))
+            .collect();
+        let parsed = Json::parse(&format!("\"{escaped}\"")).expect("escape form must parse");
+        assert_eq!(
+            parsed,
+            Json::Str(c.to_string()),
+            "\\u form of {c:?} (U+{:04X}) decoded wrong",
+            c as u32
+        );
     });
 }
 

@@ -1,0 +1,196 @@
+//! Serving determinism fencing.
+//!
+//! The serving extension of the repo's determinism contract: a request's
+//! scores/tokens are BITWISE identical served alone vs batched among N
+//! strangers, at any worker count, under hostile steal seeds.  Batching
+//! only widens the activation matrices with more columns, and every
+//! kernel on the forward path computes each output element from its own
+//! row/column in a fixed ascending-k order — these tests pin that the
+//! implementation actually keeps the promise, on both the base-only and
+//! the delta-applied paths.
+
+use qgalore::coordinator::serve::{self, ServeConfig, ServeEngine, ServeModel, ServeResponse};
+use qgalore::coordinator::{MultiJobConfig, MultiJobCoordinator};
+use qgalore::linalg::{ParallelCtx, WorkerPool};
+use qgalore::scheduler::SchedulerConfig;
+
+/// Bitwise comparison key: f32 NLLs by bit pattern, tokens/pred verbatim.
+fn resp_key(r: &ServeResponse) -> (Vec<u32>, Vec<u32>, Option<usize>) {
+    match r {
+        ServeResponse::Score { nll, pred } => {
+            (nll.iter().map(|x| x.to_bits()).collect(), Vec::new(), *pred)
+        }
+        ServeResponse::Generate { tokens } => (Vec::new(), tokens.clone(), None),
+    }
+}
+
+fn keys(rs: &[ServeResponse]) -> Vec<(Vec<u32>, Vec<u32>, Option<usize>)> {
+    rs.iter().map(resp_key).collect()
+}
+
+fn serve_cfg() -> ServeConfig {
+    // vocab*dim = 20480 and dim*dim = 4096: both multiples of 256, so the
+    // blockwise quantizer accepts them; vocab leaves room for 4 labels
+    ServeConfig { vocab: 320, dim: 64, n_layers: 3, seed: 5 }
+}
+
+#[test]
+fn batched_equals_solo_bitwise_across_pools() {
+    let cfg = serve_cfg();
+    let reqs = serve::synth_requests(cfg.vocab, 24, 9);
+
+    // reference: serial compute, one request at a time
+    let reference = ServeEngine::new(ServeModel::from_seed(cfg).unwrap(), ParallelCtx::serial());
+    let want = keys(&reference.serve_sequential(&reqs).unwrap());
+
+    for &(workers, steal_seed) in &[(1usize, 13u64), (4, 999_331), (16, u64::MAX)] {
+        let pool = WorkerPool::leaked_with_steal_seed(workers, steal_seed);
+        // thread budget >= 4 so a 1-worker pool still gets real dispatch
+        let ctx = ParallelCtx::with_pool(workers.max(4), pool);
+        let engine = ServeEngine::new(ServeModel::from_seed(cfg).unwrap(), ctx);
+
+        let batched = keys(&engine.serve_batch(&reqs, pool).unwrap());
+        assert_eq!(
+            batched, want,
+            "batched != solo-serial at {workers} workers (steal seed {steal_seed:#x})"
+        );
+
+        // each request served completely alone on the same engine: the
+        // strongest form of the contract (batch of 1 vs batch of 24)
+        for (i, req) in reqs.iter().enumerate() {
+            let solo = resp_key(&engine.serve_one(req).unwrap());
+            assert_eq!(
+                solo, want[i],
+                "request {i} alone diverged at {workers} workers (steal seed {steal_seed:#x})"
+            );
+            let single = keys(&engine.serve_batch(std::slice::from_ref(req), pool).unwrap());
+            assert_eq!(single[0], want[i], "singleton batch diverged for request {i}");
+        }
+    }
+}
+
+#[test]
+fn batch_composition_does_not_leak_between_requests() {
+    // the same request embedded in two different stranger batches must
+    // come back identical — wave membership is invisible to a column
+    let cfg = serve_cfg();
+    let engine = ServeEngine::new(ServeModel::from_seed(cfg).unwrap(), ParallelCtx::serial());
+    let pool = WorkerPool::leaked_with_steal_seed(4, 31);
+
+    let a = serve::synth_requests(cfg.vocab, 16, 1);
+    let b = serve::synth_requests(cfg.vocab, 16, 2);
+    let probe = serve::synth_requests(cfg.vocab, 4, 3);
+
+    let mut batch_a = a.clone();
+    batch_a.extend(probe.iter().cloned());
+    let mut batch_b = b;
+    batch_b.extend(probe.iter().cloned());
+
+    let in_a = keys(&engine.serve_batch(&batch_a, pool).unwrap());
+    let in_b = keys(&engine.serve_batch(&batch_b, pool).unwrap());
+    assert_eq!(
+        &in_a[a.len()..],
+        &in_b[16..],
+        "probe responses changed with the strangers batched around them"
+    );
+}
+
+#[test]
+fn delta_applied_diverges_from_base_and_stays_deterministic() {
+    // train a real per-user delta with the multijob coordinator
+    let dim = 64usize;
+    let shapes = vec![(dim, dim); 3];
+    let mcfg = MultiJobConfig {
+        rank: 8,
+        // interval 2 so subspace refreshes (which materialize the INT4
+        // projection) land well inside 6 rounds
+        sched: SchedulerConfig { base_interval: 2, ..SchedulerConfig::default() },
+        ..MultiJobConfig::default()
+    };
+    let pool = WorkerPool::leaked_with_steal_seed(4, 7);
+    let ctx = ParallelCtx::with_pool(4, pool);
+    let mut co = MultiJobCoordinator::new(&shapes, mcfg, ctx);
+    co.add_job(4242);
+    for _ in 0..6 {
+        co.round(pool).unwrap();
+    }
+    let delta = co.export_delta(0, "serve-test").unwrap();
+
+    let cfg = serve_cfg();
+    let reqs = serve::synth_requests(cfg.vocab, 12, 3);
+
+    let base = ServeEngine::new(ServeModel::from_seed(cfg).unwrap(), ParallelCtx::serial());
+    let base_keys = keys(&base.serve_sequential(&reqs).unwrap());
+
+    let mut model = ServeModel::from_seed(cfg).unwrap();
+    model.apply_delta(&delta).unwrap();
+    assert!(model.has_delta(), "6 rounds at interval 2 must refresh at least one layer");
+    assert!(model.delta_bytes() > 0);
+    let served = ServeEngine::new(model, ParallelCtx::serial());
+    let delta_solo = served.serve_sequential(&reqs).unwrap();
+    assert_ne!(
+        keys(&delta_solo),
+        base_keys,
+        "applying a trained delta must change served outputs"
+    );
+
+    // the determinism contract holds on the delta path too
+    for &(workers, steal_seed) in &[(1usize, 13u64), (4, 999_331), (16, u64::MAX)] {
+        let wpool = WorkerPool::leaked_with_steal_seed(workers, steal_seed);
+        let batched = served.serve_batch(&reqs, wpool).unwrap();
+        assert_eq!(
+            keys(&batched),
+            keys(&delta_solo),
+            "delta-applied batched != solo at {workers} workers (steal seed {steal_seed:#x})"
+        );
+    }
+}
+
+#[test]
+fn delta_shape_mismatch_is_rejected() {
+    // a delta trained at a different layer geometry must never be served
+    let mcfg = MultiJobConfig {
+        rank: 8,
+        sched: SchedulerConfig { base_interval: 2, ..SchedulerConfig::default() },
+        ..MultiJobConfig::default()
+    };
+    let pool = WorkerPool::leaked_with_steal_seed(2, 3);
+    let ctx = ParallelCtx::with_pool(2, pool);
+    let mut co = MultiJobCoordinator::new(&[(32, 96), (32, 96), (32, 96)], mcfg, ctx);
+    co.add_job(1);
+    co.round(pool).unwrap();
+    let delta = co.export_delta(0, "mismatch").unwrap();
+
+    let mut model = ServeModel::from_seed(serve_cfg()).unwrap();
+    let err = model.apply_delta(&delta).expect_err("(32, 96) delta vs dim-64 model must fail");
+    assert!(
+        err.to_string().contains("serve dim"),
+        "error should name the shape mismatch: {err}"
+    );
+    assert!(!model.has_delta(), "failed apply must not leave a partial delta");
+}
+
+/// The CI stress shape: a 64-request mixed stream on a 16-worker pool
+/// with a hostile steal seed must match the solo-serial reference and
+/// stay finite.  (The 1000-request point runs in the serve bench.)
+#[test]
+fn serve_stress_sixteen_workers() {
+    let cfg = serve_cfg();
+    let reqs = serve::synth_requests(cfg.vocab, 64, 17);
+    let reference = ServeEngine::new(ServeModel::from_seed(cfg).unwrap(), ParallelCtx::serial());
+    let want = keys(&reference.serve_sequential(&reqs).unwrap());
+
+    let pool = WorkerPool::leaked_with_steal_seed(16, 999_331);
+    let ctx = ParallelCtx::with_pool(16, pool);
+    let engine = ServeEngine::new(ServeModel::from_seed(cfg).unwrap(), ctx);
+    let (resps, lat) = engine.serve_batch_timed(&reqs, pool).unwrap();
+    assert_eq!(keys(&resps), want, "stress batch diverged from solo-serial");
+    assert_eq!(lat.len(), reqs.len());
+    assert!(lat.iter().all(|ms| ms.is_finite() && *ms >= 0.0));
+    for r in &resps {
+        if let ServeResponse::Score { nll, pred } = r {
+            assert!(nll.iter().all(|x| x.is_finite()), "non-finite NLL in stress batch");
+            assert!(pred.is_some());
+        }
+    }
+}
