@@ -42,6 +42,9 @@ fn main() {
     if let Some(minor) = rustc_minor_version() {
         if minor >= 80 {
             println!("cargo:rustc-check-cfg=cfg(qgalore_avx512_intrinsics)");
+            // set externally (RUSTFLAGS="--cfg qgalore_modelcheck") to route
+            // linalg::sync through the shadow atomics for schedule exploration
+            println!("cargo:rustc-check-cfg=cfg(qgalore_modelcheck)");
         }
         if minor >= 89 {
             println!("cargo:rustc-cfg=qgalore_avx512_intrinsics");

@@ -31,6 +31,12 @@
 //! | [`coordinator`] | trainer: step loop, eval, fine-tune driver, multi-job coordinator, batched serving engine, metrics, checkpoints |
 //! | [`report`]    | markdown/CSV renderers for the repro harness |
 //! | [`repro`]     | regenerates every table and figure of the paper |
+//! | [`modelcheck`] | bounded-schedule model checker for the pool/run_graph concurrency core + repo-invariant lint pass |
+
+// Every `unsafe` operation must sit in an explicit `unsafe {}` block — even
+// inside `unsafe fn` — so the lint pass can demand a SAFETY comment per
+// block and none hide behind an unsafe-fn signature.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod cli;
 pub mod coordinator;
@@ -40,6 +46,7 @@ pub mod linalg;
 pub mod manifest;
 pub mod memory;
 pub mod model;
+pub mod modelcheck;
 pub mod optim;
 pub mod report;
 pub mod repro;

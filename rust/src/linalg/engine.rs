@@ -944,49 +944,54 @@ mod simd {
         b: &Mat,
         out: &mut [f32],
     ) {
-        let n = b.cols;
-        let r_main = rows - rows % MR;
-        let n_main = n - n % NR;
-        let mut kb = 0;
-        while kb < k {
-            let kend = (kb + KC).min(k);
-            let mut i = 0;
-            while i < r_main {
-                let mut j = 0;
-                while j < n_main {
-                    let o = out.as_mut_ptr();
-                    let mut acc0 = _mm256_loadu_ps(o.add(i * n + j));
-                    let mut acc1 = _mm256_loadu_ps(o.add((i + 1) * n + j));
-                    let mut acc2 = _mm256_loadu_ps(o.add((i + 2) * n + j));
-                    let mut acc3 = _mm256_loadu_ps(o.add((i + 3) * n + j));
-                    let bp = b.data.as_ptr();
-                    let ap = panel.as_ptr();
-                    for kk in kb..kend {
-                        let bv = _mm256_loadu_ps(bp.add(kk * n + j));
-                        let a0 = _mm256_set1_ps(*ap.add(i * k + kk));
-                        let a1 = _mm256_set1_ps(*ap.add((i + 1) * k + kk));
-                        let a2 = _mm256_set1_ps(*ap.add((i + 2) * k + kk));
-                        let a3 = _mm256_set1_ps(*ap.add((i + 3) * k + kk));
-                        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(a0, bv));
-                        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(a1, bv));
-                        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(a2, bv));
-                        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(a3, bv));
+        // SAFETY: the contract above (target features verified by the
+        // caller, pointer arithmetic bounded by the loop limits) covers
+        // every intrinsic and raw-pointer dereference below.
+        unsafe {
+            let n = b.cols;
+            let r_main = rows - rows % MR;
+            let n_main = n - n % NR;
+            let mut kb = 0;
+            while kb < k {
+                let kend = (kb + KC).min(k);
+                let mut i = 0;
+                while i < r_main {
+                    let mut j = 0;
+                    while j < n_main {
+                        let o = out.as_mut_ptr();
+                        let mut acc0 = _mm256_loadu_ps(o.add(i * n + j));
+                        let mut acc1 = _mm256_loadu_ps(o.add((i + 1) * n + j));
+                        let mut acc2 = _mm256_loadu_ps(o.add((i + 2) * n + j));
+                        let mut acc3 = _mm256_loadu_ps(o.add((i + 3) * n + j));
+                        let bp = b.data.as_ptr();
+                        let ap = panel.as_ptr();
+                        for kk in kb..kend {
+                            let bv = _mm256_loadu_ps(bp.add(kk * n + j));
+                            let a0 = _mm256_set1_ps(*ap.add(i * k + kk));
+                            let a1 = _mm256_set1_ps(*ap.add((i + 1) * k + kk));
+                            let a2 = _mm256_set1_ps(*ap.add((i + 2) * k + kk));
+                            let a3 = _mm256_set1_ps(*ap.add((i + 3) * k + kk));
+                            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(a0, bv));
+                            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(a1, bv));
+                            acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(a2, bv));
+                            acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(a3, bv));
+                        }
+                        _mm256_storeu_ps(o.add(i * n + j), acc0);
+                        _mm256_storeu_ps(o.add((i + 1) * n + j), acc1);
+                        _mm256_storeu_ps(o.add((i + 2) * n + j), acc2);
+                        _mm256_storeu_ps(o.add((i + 3) * n + j), acc3);
+                        j += NR;
                     }
-                    _mm256_storeu_ps(o.add(i * n + j), acc0);
-                    _mm256_storeu_ps(o.add((i + 1) * n + j), acc1);
-                    _mm256_storeu_ps(o.add((i + 2) * n + j), acc2);
-                    _mm256_storeu_ps(o.add((i + 3) * n + j), acc3);
-                    j += NR;
+                    if j < n {
+                        edge_tile(panel, k, b, out, i, i + MR, j, n, kb, kend);
+                    }
+                    i += MR;
                 }
-                if j < n {
-                    edge_tile(panel, k, b, out, i, i + MR, j, n, kb, kend);
+                if i < rows {
+                    edge_tile(panel, k, b, out, i, rows, 0, n, kb, kend);
                 }
-                i += MR;
+                kb = kend;
             }
-            if i < rows {
-                edge_tile(panel, k, b, out, i, rows, 0, n, kb, kend);
-            }
-            kb = kend;
         }
     }
 }
@@ -1021,49 +1026,54 @@ mod simd512 {
         b: &Mat,
         out: &mut [f32],
     ) {
-        let n = b.cols;
-        let r_main = rows - rows % MR;
-        let n_main = n - n % NR512;
-        let mut kb = 0;
-        while kb < k {
-            let kend = (kb + KC).min(k);
-            let mut i = 0;
-            while i < r_main {
-                let mut j = 0;
-                while j < n_main {
-                    let o = out.as_mut_ptr();
-                    let mut acc0 = _mm512_loadu_ps(o.add(i * n + j));
-                    let mut acc1 = _mm512_loadu_ps(o.add((i + 1) * n + j));
-                    let mut acc2 = _mm512_loadu_ps(o.add((i + 2) * n + j));
-                    let mut acc3 = _mm512_loadu_ps(o.add((i + 3) * n + j));
-                    let bp = b.data.as_ptr();
-                    let ap = panel.as_ptr();
-                    for kk in kb..kend {
-                        let bv = _mm512_loadu_ps(bp.add(kk * n + j));
-                        let a0 = _mm512_set1_ps(*ap.add(i * k + kk));
-                        let a1 = _mm512_set1_ps(*ap.add((i + 1) * k + kk));
-                        let a2 = _mm512_set1_ps(*ap.add((i + 2) * k + kk));
-                        let a3 = _mm512_set1_ps(*ap.add((i + 3) * k + kk));
-                        acc0 = _mm512_add_ps(acc0, _mm512_mul_ps(a0, bv));
-                        acc1 = _mm512_add_ps(acc1, _mm512_mul_ps(a1, bv));
-                        acc2 = _mm512_add_ps(acc2, _mm512_mul_ps(a2, bv));
-                        acc3 = _mm512_add_ps(acc3, _mm512_mul_ps(a3, bv));
+        // SAFETY: the contract above (target features verified by the
+        // caller, pointer arithmetic bounded by the loop limits) covers
+        // every intrinsic and raw-pointer dereference below.
+        unsafe {
+            let n = b.cols;
+            let r_main = rows - rows % MR;
+            let n_main = n - n % NR512;
+            let mut kb = 0;
+            while kb < k {
+                let kend = (kb + KC).min(k);
+                let mut i = 0;
+                while i < r_main {
+                    let mut j = 0;
+                    while j < n_main {
+                        let o = out.as_mut_ptr();
+                        let mut acc0 = _mm512_loadu_ps(o.add(i * n + j));
+                        let mut acc1 = _mm512_loadu_ps(o.add((i + 1) * n + j));
+                        let mut acc2 = _mm512_loadu_ps(o.add((i + 2) * n + j));
+                        let mut acc3 = _mm512_loadu_ps(o.add((i + 3) * n + j));
+                        let bp = b.data.as_ptr();
+                        let ap = panel.as_ptr();
+                        for kk in kb..kend {
+                            let bv = _mm512_loadu_ps(bp.add(kk * n + j));
+                            let a0 = _mm512_set1_ps(*ap.add(i * k + kk));
+                            let a1 = _mm512_set1_ps(*ap.add((i + 1) * k + kk));
+                            let a2 = _mm512_set1_ps(*ap.add((i + 2) * k + kk));
+                            let a3 = _mm512_set1_ps(*ap.add((i + 3) * k + kk));
+                            acc0 = _mm512_add_ps(acc0, _mm512_mul_ps(a0, bv));
+                            acc1 = _mm512_add_ps(acc1, _mm512_mul_ps(a1, bv));
+                            acc2 = _mm512_add_ps(acc2, _mm512_mul_ps(a2, bv));
+                            acc3 = _mm512_add_ps(acc3, _mm512_mul_ps(a3, bv));
+                        }
+                        _mm512_storeu_ps(o.add(i * n + j), acc0);
+                        _mm512_storeu_ps(o.add((i + 1) * n + j), acc1);
+                        _mm512_storeu_ps(o.add((i + 2) * n + j), acc2);
+                        _mm512_storeu_ps(o.add((i + 3) * n + j), acc3);
+                        j += NR512;
                     }
-                    _mm512_storeu_ps(o.add(i * n + j), acc0);
-                    _mm512_storeu_ps(o.add((i + 1) * n + j), acc1);
-                    _mm512_storeu_ps(o.add((i + 2) * n + j), acc2);
-                    _mm512_storeu_ps(o.add((i + 3) * n + j), acc3);
-                    j += NR512;
+                    if j < n {
+                        edge_tile(panel, k, b, out, i, i + MR, j, n, kb, kend);
+                    }
+                    i += MR;
                 }
-                if j < n {
-                    edge_tile(panel, k, b, out, i, i + MR, j, n, kb, kend);
+                if i < rows {
+                    edge_tile(panel, k, b, out, i, rows, 0, n, kb, kend);
                 }
-                i += MR;
+                kb = kend;
             }
-            if i < rows {
-                edge_tile(panel, k, b, out, i, rows, 0, n, kb, kend);
-            }
-            kb = kend;
         }
     }
 }

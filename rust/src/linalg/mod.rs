@@ -29,6 +29,7 @@
 pub mod engine;
 pub mod packing;
 pub mod pool;
+pub(crate) mod sync;
 
 pub use engine::{
     clone_pool, global_slabs_per_worker, global_threads, kernel_override, par_map, par_rows,

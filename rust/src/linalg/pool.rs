@@ -114,16 +114,24 @@
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::fmt;
-use std::sync::atomic::{
-    fence, AtomicBool, AtomicIsize, AtomicPtr, AtomicU64, AtomicUsize, Ordering,
-};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+// All atomics in this file go through the `linalg::sync` shim: a verbatim
+// re-export of `std::sync::atomic` in production, the instrumented shadow
+// atomics under `--cfg qgalore_modelcheck` so `modelcheck` explores the
+// REAL deque and release-protocol code below (see `modelcheck/checks.rs`).
+use crate::linalg::sync::{
+    fence, AtomicBool, AtomicIsize, AtomicPtr, AtomicU64, AtomicUsize, Ordering,
+};
 use crate::util::{env_parse, Pcg32};
 
 /// A queued unit of work.  Tasks are erased to `'static` at submission; the
 /// latch protocol in [`WorkerPool::run_scoped`] is what keeps that sound.
 type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A not-yet-erased scoped task: the `transmute` sites below cast this to
+/// [`Task`], erasing only the lifetime.
+type ScopedTask<'scope> = Box<dyn FnOnce() + Send + 'scope>;
 
 /// Env var forcing the victim-choice PCG seed (u64).  The determinism
 /// suites use it to drive whole-process runs under a hostile steal order;
@@ -156,15 +164,15 @@ const INJECTOR_GRAB_MAX: usize = 16;
 /// stores and thief loads of the same slot are data-race-free under the
 /// C11 model — the algorithm's fences and the `top` CAS decide which
 /// values are actually *used*.
-struct ClBuffer {
+struct ClBuffer<T> {
     mask: usize,
-    slots: Box<[AtomicPtr<Task>]>,
+    slots: Box<[AtomicPtr<T>]>,
 }
 
-impl ClBuffer {
-    fn alloc(cap: usize) -> *mut ClBuffer {
+impl<T> ClBuffer<T> {
+    fn alloc(cap: usize) -> *mut ClBuffer<T> {
         debug_assert!(cap.is_power_of_two());
-        let slots: Box<[AtomicPtr<Task>]> =
+        let slots: Box<[AtomicPtr<T>]> =
             (0..cap).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect();
         Box::into_raw(Box::new(ClBuffer { mask: cap - 1, slots }))
     }
@@ -175,7 +183,7 @@ impl ClBuffer {
 
     /// Slot for logical index `i`.  Indices are monotone counters; only
     /// the slot address wraps, which is why wraparound cannot ABA.
-    fn slot(&self, i: isize) -> &AtomicPtr<Task> {
+    fn slot(&self, i: isize) -> &AtomicPtr<T> {
         &self.slots[(i as usize) & self.mask]
     }
 }
@@ -185,7 +193,10 @@ impl ClBuffer {
 /// for any number of thieves.  See the module docs for the memory-ordering
 /// invariants; the operation bodies follow Lê, Pop & Cohen (2013) line for
 /// line so the orderings can be audited against the paper.
-pub(crate) struct ChaseLev {
+///
+/// Generic over the element type so the model checker can explore the real
+/// operation bodies over plain `usize` markers (`T = Task` in the pool).
+pub(crate) struct ChaseLev<T: Send> {
     /// Steal end: index of the oldest task.  Only ever advanced, only by
     /// winning a `SeqCst` CAS (thieves and the owner's last-element pop).
     top: AtomicIsize,
@@ -195,21 +206,21 @@ pub(crate) struct ChaseLev {
     /// Current ring.  Replaced (never mutated in place) by the owner on
     /// growth; old rings stay allocated in `retired` until drop so thieves
     /// holding a stale pointer still read valid memory.
-    buf: AtomicPtr<ClBuffer>,
+    buf: AtomicPtr<ClBuffer<T>>,
     /// Rings replaced by growth.  Pushed only by the owner (inside `grow`)
     /// and drained only by `Drop`; the mutex is uncontended and exists so
     /// the type stays `Sync` without a second unsafe cell.
-    retired: Mutex<Vec<*mut ClBuffer>>,
+    retired: Mutex<Vec<*mut ClBuffer<T>>>,
 }
 
-// SAFETY: the ring stores thin pointers to `Task` (which is `Send`), all
+// SAFETY: the ring stores thin pointers to boxed `T: Send` elements, all
 // cross-thread slot/index accesses are atomics ordered per Chase-Lev, and
 // buffer reclamation is deferred to `Drop` (exclusive access by &mut).
-unsafe impl Send for ChaseLev {}
-unsafe impl Sync for ChaseLev {}
+unsafe impl<T: Send> Send for ChaseLev<T> {}
+unsafe impl<T: Send> Sync for ChaseLev<T> {}
 
-impl ChaseLev {
-    fn with_capacity(cap: usize) -> Self {
+impl<T: Send> ChaseLev<T> {
+    pub(crate) fn with_capacity(cap: usize) -> Self {
         let cap = cap.next_power_of_two().max(2);
         ChaseLev {
             top: AtomicIsize::new(0),
@@ -227,7 +238,7 @@ impl ChaseLev {
     /// Observability/test hook — the scheduling path never needs a length,
     /// only pop/steal outcomes.
     #[allow(dead_code)]
-    fn len(&self) -> usize {
+    pub(crate) fn len(&self) -> usize {
         let b = self.bottom.load(Ordering::Relaxed);
         let t = self.top.load(Ordering::Relaxed);
         (b - t).max(0) as usize
@@ -235,11 +246,15 @@ impl ChaseLev {
 
     /// Owner-only: append at the bottom (LIFO end).  Wait-free — no CAS,
     /// no retry; growth is a bounded copy by the owner alone.
-    fn push(&self, task: Task) {
+    pub(crate) fn push(&self, task: T) {
         let elem = Box::into_raw(Box::new(task));
         let b = self.bottom.load(Ordering::Relaxed);
         let t = self.top.load(Ordering::Acquire);
         let mut a = self.buf.load(Ordering::Relaxed);
+        // SAFETY: `a` is the live ring (owner-only load; only the owner
+        // replaces it, and it does so inside `grow` below), and slot `b` is
+        // unclaimed: thieves only touch indices < `bottom`, which still
+        // reads `b`.
         unsafe {
             if b - t >= (*a).cap() as isize {
                 a = self.grow(a, t, b);
@@ -261,7 +276,7 @@ impl ChaseLev {
     /// Owner-only: take the newest task (LIFO end).  Wait-free; the single
     /// CAS in the last-element case either wins immediately or reports the
     /// task already stolen — no loop.
-    fn pop(&self) -> Option<Task> {
+    pub(crate) fn pop(&self) -> Option<T> {
         let b = self.bottom.load(Ordering::Relaxed) - 1;
         let a = self.buf.load(Ordering::Relaxed);
         // Speculatively claim slot b, then fence before reading `top`: the
@@ -271,6 +286,8 @@ impl ChaseLev {
         fence(Ordering::SeqCst);
         let t = self.top.load(Ordering::Relaxed);
         if t <= b {
+            // SAFETY: `a` is the live ring (owner-only), and t <= b means
+            // slot `b` was filled by a prior push of this same owner.
             let elem = unsafe { (*a).slot(b).load(Ordering::Relaxed) };
             if t == b {
                 // exactly one task left: race any thief for it via `top`
@@ -285,6 +302,9 @@ impl ChaseLev {
                 }
                 self.bottom.store(b + 1, Ordering::Relaxed);
             }
+            // SAFETY: `elem` came from `Box::into_raw` in push, and this
+            // thread owns it exclusively — plain path: thieves can no
+            // longer see index b; last-element path: this CAS won `top`.
             Some(unsafe { *Box::from_raw(elem) })
         } else {
             // empty: undo the speculative decrement
@@ -297,7 +317,7 @@ impl ChaseLev {
     /// `None` only when the deque was observed empty; a lost CAS means
     /// another thread took a task (global progress), so retrying here
     /// keeps the operation lock-free without ever spinning on a lock.
-    fn steal(&self) -> Option<Task> {
+    pub(crate) fn steal(&self) -> Option<T> {
         loop {
             let t = self.top.load(Ordering::Acquire);
             // SeqCst: order this thief's `top` read before its `bottom`
@@ -312,12 +332,17 @@ impl ChaseLev {
             // grows after this load, the retired ring we read from stays
             // allocated and still holds the same element at index t).
             let a = self.buf.load(Ordering::Acquire);
+            // SAFETY: `a` is either the live ring or a retired one (kept
+            // allocated until Drop); t < b means slot t holds a pointer
+            // published by the owner's push before the `bottom` we read.
             let elem = unsafe { (*a).slot(t).load(Ordering::Relaxed) };
             if self
                 .top
                 .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
                 .is_ok()
             {
+                // SAFETY: winning the `top` CAS grants exclusive ownership
+                // of the element at index t (owner and other thieves lose).
                 return Some(unsafe { *Box::from_raw(elem) });
             }
         }
@@ -328,25 +353,34 @@ impl ChaseLev {
     /// that loaded the old pointer keep reading valid memory — indices
     /// they can legitimately claim hold identical element pointers in both
     /// rings, and the `top` CAS still arbitrates ownership.
-    unsafe fn grow(&self, old: *mut ClBuffer, t: isize, b: isize) -> *mut ClBuffer {
-        let new = ClBuffer::alloc((*old).cap() * 2);
-        for i in t..b {
-            (*new)
-                .slot(i)
-                .store((*old).slot(i).load(Ordering::Relaxed), Ordering::Relaxed);
+    unsafe fn grow(&self, old: *mut ClBuffer<T>, t: isize, b: isize) -> *mut ClBuffer<T> {
+        // SAFETY: caller (push) passes the live ring it just loaded; the
+        // owner is the only thread that allocates, copies into, or
+        // publishes rings, and `old` stays allocated in `retired` for any
+        // thief still holding it.
+        unsafe {
+            let new = ClBuffer::alloc((*old).cap() * 2);
+            for i in t..b {
+                (*new)
+                    .slot(i)
+                    .store((*old).slot(i).load(Ordering::Relaxed), Ordering::Relaxed);
+            }
+            self.buf.store(new, Ordering::Release);
+            self.retired.lock().unwrap().push(old);
+            new
         }
-        self.buf.store(new, Ordering::Release);
-        self.retired.lock().unwrap().push(old);
-        new
     }
 }
 
-impl Drop for ChaseLev {
+impl<T: Send> Drop for ChaseLev<T> {
     fn drop(&mut self) {
         // &mut self: no concurrent owners or thieves remain.  Free any
         // undelivered tasks (their captured state included), the live
         // ring, and every retired generation.
         while self.pop().is_some() {}
+        // SAFETY: exclusive access — every ring pointer (live + retired)
+        // came from `ClBuffer::alloc`'s Box::into_raw and is freed exactly
+        // once here.
         unsafe {
             drop(Box::from_raw(*self.buf.get_mut()));
             for p in self.retired.get_mut().unwrap().drain(..) {
@@ -378,7 +412,7 @@ enum Sched {
 
 struct Shared {
     /// One Chase-Lev deque per worker (`Steal` only; empty otherwise).
-    deques: Vec<ChaseLev>,
+    deques: Vec<ChaseLev<Task>>,
     /// Mutex queues: `[injector]` for `Steal`, one per worker for
     /// `MutexSteal`, `[the queue]` for `Fifo`.
     queues: Vec<Mutex<VecDeque<Task>>>,
@@ -549,14 +583,16 @@ impl<'scope> GraphNode<'scope> {
     }
 }
 
-/// Shared state of one in-flight `run_graph` submission.  Nodes whose
-/// dependencies are not yet met park their (wrapped, `'static`-erased)
-/// task in `slots`; the LAST finishing dependency takes it out and
-/// enqueues it, so a node enters the deques exactly once and only when
-/// runnable.
-struct GraphRun {
-    shared: Arc<Shared>,
-    latch: Latch,
+/// The dependency-release / abort-skip protocol of one in-flight graph,
+/// factored out of [`GraphRun`] so the model checker can drive the *real*
+/// release code over plain markers (`T = Task` in the pool, `T = usize` in
+/// `modelcheck::checks`).
+///
+/// Invariant (explored exhaustively by `modelcheck`, sampled by the stress
+/// suites): each node's parked payload leaves its slot exactly once — taken
+/// by the unique dependency whose `fetch_sub` observes 1 — and an abort
+/// skips payloads but never releases, so the latch always settles.
+pub(crate) struct GraphProtocol<T> {
     /// First-panic fail-fast flag: once set, nodes that have not started
     /// yet skip their payload (but still complete and still release their
     /// successors, so the latch always opens and nothing leaks).
@@ -565,8 +601,106 @@ struct GraphRun {
     remaining: Vec<AtomicUsize>,
     /// Successor adjacency, one list per node.
     succs: Vec<Vec<usize>>,
-    /// Parked wrapped tasks awaiting their last dependency.
-    slots: Vec<Mutex<Option<Task>>>,
+    /// Parked payloads awaiting their last dependency.
+    slots: Vec<Mutex<Option<T>>>,
+    /// Nodes with no dependencies, ascending (submitted directly).
+    roots: Vec<usize>,
+}
+
+impl<T> GraphProtocol<T> {
+    /// Validate `deps` (index bounds + acyclicity via a Kahn pass) and
+    /// build the release state.  Panics on a malformed graph BEFORE the
+    /// caller submits anything.
+    pub(crate) fn build(deps: &[Vec<usize>]) -> Self {
+        let n = deps.len();
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indeg = vec![0usize; n];
+        for (i, ds) in deps.iter().enumerate() {
+            for &d in ds {
+                assert!(d < n, "graph node {i} depends on node {d}, but there are only {n} nodes");
+                succs[d].push(i);
+                indeg[i] += 1;
+            }
+        }
+        {
+            // Kahn pass: every node must be schedulable
+            let mut left = indeg.clone();
+            let mut ready: Vec<usize> = (0..n).filter(|&i| left[i] == 0).collect();
+            let mut seen = 0usize;
+            while let Some(i) = ready.pop() {
+                seen += 1;
+                for &s in &succs[i] {
+                    left[s] -= 1;
+                    if left[s] == 0 {
+                        ready.push(s);
+                    }
+                }
+            }
+            assert_eq!(
+                seen, n,
+                "dependency graph has a cycle (only {seen} of {n} nodes schedulable)"
+            );
+        }
+        GraphProtocol {
+            abort: AtomicBool::new(false),
+            remaining: indeg.iter().map(|&d| AtomicUsize::new(d)).collect(),
+            succs,
+            slots: (0..n).map(|_| Mutex::new(None)).collect(),
+            roots: (0..n).filter(|&i| indeg[i] == 0).collect(),
+        }
+    }
+
+    /// Park node `i`'s payload until its last dependency releases it.
+    pub(crate) fn park(&self, i: usize, payload: T) {
+        *self.slots[i].lock().unwrap() = Some(payload);
+    }
+
+    /// Take node `i`'s parked payload, if any (roots at submission time).
+    pub(crate) fn take(&self, i: usize) -> Option<T> {
+        self.slots[i].lock().unwrap().take()
+    }
+
+    /// Nodes with zero dependencies, ascending.
+    pub(crate) fn roots(&self) -> &[usize] {
+        &self.roots
+    }
+
+    /// Fail-fast check a node runs before starting its payload.
+    pub(crate) fn abort_requested(&self) -> bool {
+        self.abort.load(Ordering::Acquire)
+    }
+
+    /// First panic wins: nodes that have not started will skip payloads.
+    pub(crate) fn request_abort(&self) {
+        self.abort.store(true, Ordering::Release);
+    }
+
+    /// Node `i` finished: decrement each successor's unmet count.  The
+    /// unique decrement observing 1 takes the parked payload, so a node is
+    /// released exactly once; the returned payloads are the caller's to
+    /// enqueue.
+    pub(crate) fn release_successors(&self, i: usize) -> Vec<T> {
+        let mut unlocked = Vec::new();
+        for &s in &self.succs[i] {
+            if self.remaining[s].fetch_sub(1, Ordering::AcqRel) == 1 {
+                if let Some(t) = self.slots[s].lock().unwrap().take() {
+                    unlocked.push(t);
+                }
+            }
+        }
+        unlocked
+    }
+}
+
+/// Shared state of one in-flight `run_graph` submission.  Nodes whose
+/// dependencies are not yet met park their (wrapped, `'static`-erased)
+/// task in the protocol's slots; the LAST finishing dependency takes it
+/// out and enqueues it, so a node enters the deques exactly once and only
+/// when runnable.
+struct GraphRun {
+    shared: Arc<Shared>,
+    latch: Latch,
+    proto: GraphProtocol<Task>,
 }
 
 /// Pop one task from the stealing pool's injector.  A pool worker
@@ -861,9 +995,7 @@ impl WorkerPool {
                 // SAFETY: see the invariant above — we block on `latch`
                 // below until every wrapped task has run to completion, so
                 // the 'scope borrows stay live for every execution.
-                unsafe {
-                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Task>(wrapped)
-                }
+                unsafe { std::mem::transmute::<ScopedTask<'scope>, Task>(wrapped) }
             })
             .collect();
         // A nested submission (this thread is a worker of THIS pool) owns a
@@ -946,58 +1078,25 @@ impl WorkerPool {
             deps.push(node.deps);
             tasks.push(node.task);
         }
-        // Validate + build adjacency before any submission, so a malformed
-        // graph cannot strand half-submitted work in the deques.
-        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
-        let mut indeg = vec![0usize; n];
-        for (i, ds) in deps.iter().enumerate() {
-            for &d in ds {
-                assert!(d < n, "graph node {i} depends on node {d}, but there are only {n} nodes");
-                succs[d].push(i);
-                indeg[i] += 1;
-            }
-        }
-        {
-            // Kahn pass: every node must be schedulable
-            let mut left = indeg.clone();
-            let mut ready: Vec<usize> = (0..n).filter(|&i| left[i] == 0).collect();
-            let mut seen = 0usize;
-            while let Some(i) = ready.pop() {
-                seen += 1;
-                for &s in &succs[i] {
-                    left[s] -= 1;
-                    if left[s] == 0 {
-                        ready.push(s);
-                    }
-                }
-            }
-            assert_eq!(
-                seen, n,
-                "dependency graph has a cycle (only {seen} of {n} nodes schedulable)"
-            );
-        }
+        // Validate + build the release protocol before any submission, so a
+        // malformed graph cannot strand half-submitted work in the deques.
+        let proto: GraphProtocol<Task> = GraphProtocol::build(&deps);
         if n == 1 {
             // a single node has nothing to overlap with; run inline
             // (panics propagate naturally, like run_scoped's fast path)
             (tasks.into_iter().next().unwrap())();
             return;
         }
-        let run = Arc::new(GraphRun {
-            shared: Arc::clone(&self.shared),
-            latch: Latch::new(n),
-            abort: AtomicBool::new(false),
-            remaining: indeg.iter().map(|&d| AtomicUsize::new(d)).collect(),
-            succs,
-            slots: (0..n).map(|_| Mutex::new(None)).collect(),
-        });
+        let run =
+            Arc::new(GraphRun { shared: Arc::clone(&self.shared), latch: Latch::new(n), proto });
         for (i, task) in tasks.into_iter().enumerate() {
             let r = Arc::clone(&run);
             let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
-                if !r.abort.load(Ordering::Acquire) {
+                if !r.proto.abort_requested() {
                     if let Err(payload) =
                         std::panic::catch_unwind(std::panic::AssertUnwindSafe(task))
                     {
-                        r.abort.store(true, Ordering::Release);
+                        r.proto.request_abort();
                         let mut slot = r.latch.panic.lock().unwrap();
                         if slot.is_none() {
                             *slot = Some(payload);
@@ -1011,14 +1110,7 @@ impl WorkerPool {
                     let (pool, id) = h.get();
                     (pool == Arc::as_ptr(&r.shared) as usize).then_some(id)
                 });
-                let mut unlocked: Vec<Task> = Vec::new();
-                for &s in &r.succs[i] {
-                    if r.remaining[s].fetch_sub(1, Ordering::AcqRel) == 1 {
-                        if let Some(t) = r.slots[s].lock().unwrap().take() {
-                            unlocked.push(t);
-                        }
-                    }
-                }
+                let unlocked = r.proto.release_successors(i);
                 if !unlocked.is_empty() {
                     r.shared.enqueue(unlocked, home);
                 }
@@ -1027,9 +1119,8 @@ impl WorkerPool {
             // SAFETY: see the invariant above — the latch below holds this
             // call until every node (parked or enqueued) has run, so the
             // 'scope borrows stay live for every execution.
-            let wrapped =
-                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Task>(wrapped) };
-            *run.slots[i].lock().unwrap() = Some(wrapped);
+            let wrapped = unsafe { std::mem::transmute::<ScopedTask<'scope>, Task>(wrapped) };
+            run.proto.park(i, wrapped);
         }
         // Submit the roots (nodes with no dependencies) as one batch; every
         // other node is released by its last finishing dependency.
@@ -1038,11 +1129,9 @@ impl WorkerPool {
             (pool == Arc::as_ptr(&self.shared) as usize).then_some(id)
         });
         let mut roots: Vec<Task> = Vec::new();
-        for (i, &d) in indeg.iter().enumerate() {
-            if d == 0 {
-                if let Some(t) = run.slots[i].lock().unwrap().take() {
-                    roots.push(t);
-                }
+        for &i in run.proto.roots() {
+            if let Some(t) = run.proto.take(i) {
+                roots.push(t);
             }
         }
         self.shared.enqueue(roots, home);

@@ -1,0 +1,23 @@
+//! Atomics shim for the concurrency core.
+//!
+//! Production builds re-export `std::sync::atomic` verbatim — the shim is
+//! zero-cost and `pool.rs` compiles to exactly the code it had before the
+//! shim existed.  Under `--cfg qgalore_modelcheck` the same names resolve
+//! to the instrumented shadow atomics in [`crate::modelcheck::shadow`], so
+//! the schedule explorer runs the *real* Chase-Lev / `run_graph` release
+//! code rather than a transliteration.
+//!
+//! `Ordering` always comes from std: the shadow types take the real enum
+//! and classify it themselves.
+
+pub(crate) use std::sync::atomic::Ordering;
+
+#[cfg(not(qgalore_modelcheck))]
+pub(crate) use std::sync::atomic::{
+    fence, AtomicBool, AtomicIsize, AtomicPtr, AtomicU64, AtomicUsize,
+};
+
+#[cfg(qgalore_modelcheck)]
+pub(crate) use crate::modelcheck::shadow::{
+    fence, AtomicBool, AtomicIsize, AtomicPtr, AtomicU64, AtomicUsize,
+};

@@ -50,6 +50,12 @@ COMMANDS
   memory     analytic memory breakdown
              --config C [--method M] --tokens N
   inspect    summarize the artifact manifest
+  modelcheck bounded-schedule exploration of the pool/run_graph concurrency
+             core; exhaustive only in a `--cfg qgalore_modelcheck` build
+             --bound N (preemption budget, default 2) --max-schedules N
+  lint       repo-invariant lint pass (SAFETY comments, kernel fma,
+             plan-path hash iteration, artifact unwraps)
+             --root DIR (default rust/src, falling back to src)
 
 METHODS: full adam8bit lowrank lora relora qlora galore galore8bit qgalore
 CONFIGS: llama-micro llama-tiny llama-nano llama-small (trainable);
@@ -361,6 +367,68 @@ fn main() -> Result<()> {
                     human_bytes(b.total()),
                 );
             }
+        }
+        "modelcheck" => {
+            let mcfg = qgalore::modelcheck::Config {
+                preemption_bound: args.u32_or("bound", 2)?,
+                max_schedules: args.u64_or("max-schedules", 250_000)?,
+                ..Default::default()
+            };
+            args.reject_unknown()?;
+            let report = qgalore::modelcheck::run_suite(&mcfg);
+            if report.shimmed {
+                println!("modelcheck: shadow-atomic build, exploration is exhaustive");
+            } else {
+                println!(
+                    "modelcheck: std-atomic build — schedules are NOT enumerated; \
+                     rebuild with RUSTFLAGS=\"--cfg qgalore_modelcheck\" for real \
+                     exploration"
+                );
+            }
+            let mut failed = 0usize;
+            for (name, r) in &report.scenarios {
+                match &r.violation {
+                    None => println!(
+                        "  ok   {name}: {} schedules{}",
+                        r.schedules,
+                        if r.exhausted { "" } else { " (budget hit)" }
+                    ),
+                    Some(v) => {
+                        failed += 1;
+                        println!("  FAIL {name} (schedule {}): {}", v.schedule_index, v.message);
+                        for t in &v.trace {
+                            println!("         {t}");
+                        }
+                    }
+                }
+            }
+            if failed > 0 {
+                return Err(anyhow!("modelcheck found {failed} violation(s)"));
+            }
+        }
+        "lint" => {
+            let root = args.flag("root").map(std::path::PathBuf::from);
+            args.reject_unknown()?;
+            let root = root.unwrap_or_else(|| {
+                let nested = std::path::PathBuf::from("rust/src");
+                if nested.is_dir() {
+                    nested
+                } else {
+                    std::path::PathBuf::from("src")
+                }
+            });
+            let findings = qgalore::modelcheck::lint_tree(&root)?;
+            for f in &findings {
+                println!("{f}");
+            }
+            if !findings.is_empty() {
+                return Err(anyhow!(
+                    "{} lint violation(s) under {}",
+                    findings.len(),
+                    root.display()
+                ));
+            }
+            println!("lint clean: {}", root.display());
         }
         "inspect" => {
             args.reject_unknown()?;

@@ -1,0 +1,574 @@
+//! Repo-invariant lint pass (`qgalore lint`).
+//!
+//! A handful of determinism/soundness invariants in this repo are written
+//! prose — SAFETY comments on `unsafe` blocks, "never fma in kernels",
+//! "never iterate hash collections on a plan path" — and prose rots.  This
+//! module turns them into machine checks over `rust/src`:
+//!
+//! 1. **unsafe-safety-comment** (everywhere): every `unsafe {}` block must
+//!    have a comment containing "SAFETY" on the same line or in the
+//!    comment/attribute run directly above it.  `unsafe fn` / `unsafe impl`
+//!    / `unsafe trait` signatures are exempt (they carry `# Safety` docs,
+//!    and `deny(unsafe_op_in_unsafe_fn)` forces their bodies back through
+//!    this rule).
+//! 2. **kernel-mul-add** (`linalg/`, `quant/`): no `mul_add` — a fused
+//!    multiply-add rounds once, the naive reference rounds twice, and the
+//!    bitwise kernel contract dies.  Backed by `clippy.toml`'s
+//!    `disallowed-methods`; this copy also catches non-method uses.
+//! 3. **plan-hash-iteration** (`optim/`, `coordinator/`, `scheduler/`):
+//!    no `HashMap`/`HashSet` in plan/join-order paths.  Their iteration
+//!    order is randomized per process, so any plan built by walking one
+//!    diverges between runs; use `BTreeMap`/`Vec` keyed deterministically.
+//! 4. **artifact-unwrap** (`optim/`): no `.unwrap()` on a line touching
+//!    `outputs` — artifact execution results flow back as `Result`/`Option`
+//!    and must surface through `?` with context, not panic mid-step.
+//!
+//! Rules 2–4 skip `#[cfg(test)]` modules; rule 1 applies everywhere.  The
+//! scanner strips comments, strings, and char literals first, so prose
+//! mentioning `unsafe` or `mul_add` (like this paragraph) never trips a
+//! rule.  A deliberate exception is suppressed in place with a comment
+//! containing `lint: allow(<rule>)` on the flagged line or the line above.
+
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+
+/// One lint violation.
+#[derive(Debug, Clone)]
+pub struct LintFinding {
+    pub file: String,
+    /// 1-indexed line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for LintFinding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+pub const RULE_UNSAFE: &str = "unsafe-safety-comment";
+pub const RULE_MUL_ADD: &str = "kernel-mul-add";
+pub const RULE_HASH: &str = "plan-hash-iteration";
+pub const RULE_UNWRAP: &str = "artifact-unwrap";
+
+const MSG_UNSAFE: &str = "unsafe block without a SAFETY comment on the line or in the \
+     comment run directly above";
+const MSG_MUL_ADD: &str = "fused multiply-add in a kernel module breaks the bitwise \
+     contract with the naive reference (one rounding vs two)";
+const MSG_HASH: &str = "hash collections have randomized iteration order; plan paths \
+     must use BTreeMap/Vec for run-to-run determinism";
+const MSG_UNWRAP: &str = "artifact outputs must be propagated with `?`/context, not \
+     unwrapped";
+
+/// Lint every `.rs` file under `root` (recursively, in sorted order).
+pub fn lint_tree(root: &Path) -> Result<Vec<LintFinding>> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    lint_paths(&files)
+}
+
+/// Lint an explicit list of files.
+pub fn lint_paths(paths: &[PathBuf]) -> Result<Vec<LintFinding>> {
+    let mut findings = Vec::new();
+    for p in paths {
+        let src = std::fs::read_to_string(p)
+            .map_err(|e| crate::anyhow!("reading {}: {e}", p.display()))?;
+        findings.extend(lint_source(&p.to_string_lossy(), &src));
+    }
+    Ok(findings)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let rd = std::fs::read_dir(dir)
+        .map_err(|e| crate::anyhow!("walking {}: {e}", dir.display()))?;
+    for entry in rd {
+        let path = entry.map_err(|e| crate::anyhow!("walking {}: {e}", dir.display()))?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint one file's source text.  `file` is used for rule dispatch (path
+/// components select which rules apply) and for reporting.
+pub fn lint_source(file: &str, src: &str) -> Vec<LintFinding> {
+    let scrubbed = scrub(src);
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let scrub_lines: Vec<&str> = scrubbed.lines().collect();
+    let in_test = test_line_mask(&scrub_lines);
+    let norm = file.replace('\\', "/");
+    let mut findings = Vec::new();
+
+    check_unsafe_blocks(file, &scrubbed, &raw_lines, &mut findings);
+
+    let kernel = norm.contains("linalg/") || norm.contains("quant/");
+    let plan = norm.contains("optim/")
+        || norm.contains("coordinator/")
+        || norm.contains("scheduler/");
+    for (idx, line) in scrub_lines.iter().enumerate() {
+        if in_test.get(idx).copied().unwrap_or(false) {
+            continue;
+        }
+        if kernel && has_word(line, "mul_add") {
+            findings.push(LintFinding {
+                file: file.to_string(),
+                line: idx + 1,
+                rule: RULE_MUL_ADD,
+                message: MSG_MUL_ADD.to_string(),
+            });
+        }
+        if plan && (has_word(line, "HashMap") || has_word(line, "HashSet")) {
+            findings.push(LintFinding {
+                file: file.to_string(),
+                line: idx + 1,
+                rule: RULE_HASH,
+                message: MSG_HASH.to_string(),
+            });
+        }
+        if norm.contains("optim/") && line.contains(".unwrap(") && has_word(line, "outputs") {
+            findings.push(LintFinding {
+                file: file.to_string(),
+                line: idx + 1,
+                rule: RULE_UNWRAP,
+                message: MSG_UNWRAP.to_string(),
+            });
+        }
+    }
+
+    findings.retain(|f| !suppressed(&raw_lines, f.line, f.rule));
+    findings
+}
+
+/// True when the finding's line (or the one above) carries
+/// `lint: allow(<rule>)`.
+fn suppressed(raw_lines: &[&str], line: usize, rule: &str) -> bool {
+    let tag = format!("lint: allow({rule})");
+    let idx = line - 1;
+    raw_lines.get(idx).is_some_and(|l| l.contains(&tag))
+        || idx > 0 && raw_lines.get(idx - 1).is_some_and(|l| l.contains(&tag))
+}
+
+// ---------------------------------------------------------------------------
+// rule 1: unsafe blocks
+// ---------------------------------------------------------------------------
+
+fn check_unsafe_blocks(
+    file: &str,
+    scrubbed: &str,
+    raw_lines: &[&str],
+    findings: &mut Vec<LintFinding>,
+) {
+    let bytes = scrubbed.as_bytes();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i] == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if scrubbed[i..].starts_with("unsafe")
+            && !prev_is_ident(bytes, i)
+            && !next_is_ident(bytes, i + 6)
+        {
+            let mut j = i + 6;
+            while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            // only bare `unsafe {` blocks; `unsafe fn|impl|trait|extern`
+            // signatures are governed by their `# Safety` doc sections
+            if bytes.get(j) == Some(&b'{') && !has_safety_comment(raw_lines, line) {
+                findings.push(LintFinding {
+                    file: file.to_string(),
+                    line,
+                    rule: RULE_UNSAFE,
+                    message: MSG_UNSAFE.to_string(),
+                });
+            }
+            i += 6;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+fn prev_is_ident(bytes: &[u8], i: usize) -> bool {
+    i > 0 && (bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_')
+}
+
+fn next_is_ident(bytes: &[u8], i: usize) -> bool {
+    bytes.get(i).is_some_and(|b| b.is_ascii_alphanumeric() || *b == b'_')
+}
+
+/// "SAFETY" (case-insensitive) on the flagged line itself, or in the run of
+/// comment/attribute/blank lines directly above it.
+fn has_safety_comment(raw_lines: &[&str], line: usize) -> bool {
+    let idx = line - 1;
+    if raw_lines.get(idx).is_some_and(|l| contains_safety(l)) {
+        return true;
+    }
+    let mut j = idx;
+    for _ in 0..12 {
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+        let raw = raw_lines[j];
+        if contains_safety(raw) {
+            return true;
+        }
+        let t = raw.trim_start();
+        let is_comment = t.starts_with("//") || t.starts_with("/*") || t.starts_with('*');
+        let is_attr = t.starts_with("#[") || t.starts_with("#![");
+        if !(t.is_empty() || is_comment || is_attr) {
+            // a code line intervenes — the comment run above has ended
+            return false;
+        }
+    }
+    false
+}
+
+fn contains_safety(line: &str) -> bool {
+    line.to_ascii_lowercase().contains("safety")
+}
+
+// ---------------------------------------------------------------------------
+// token + test-region helpers
+// ---------------------------------------------------------------------------
+
+/// Word-boundary containment: `needle` appears in `hay` not flanked by
+/// identifier characters.
+fn has_word(hay: &str, needle: &str) -> bool {
+    let bytes = hay.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = hay[start..].find(needle) {
+        let at = start + pos;
+        if !prev_is_ident(bytes, at) && !next_is_ident(bytes, at + needle.len()) {
+            return true;
+        }
+        start = at + needle.len();
+    }
+    false
+}
+
+/// Per-line mask of `#[cfg(test)] mod ... { }` regions, computed on the
+/// scrubbed text by brace counting.
+fn test_line_mask(scrub_lines: &[&str]) -> Vec<bool> {
+    let mut mask = vec![false; scrub_lines.len()];
+    let mut idx = 0;
+    while idx < scrub_lines.len() {
+        if scrub_lines[idx].contains("#[cfg(test)]") {
+            // find the opening brace of the item this attribute decorates,
+            // then its matching close
+            let mut depth = 0i64;
+            let mut opened = false;
+            let mut j = idx;
+            'scan: while j < scrub_lines.len() {
+                for b in scrub_lines[j].bytes() {
+                    match b {
+                        b'{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        b'}' => depth -= 1,
+                        _ => {}
+                    }
+                    if opened && depth == 0 {
+                        break 'scan;
+                    }
+                }
+                j += 1;
+            }
+            for m in mask.iter_mut().take((j + 1).min(scrub_lines.len())).skip(idx) {
+                *m = true;
+            }
+            idx = j + 1;
+        } else {
+            idx += 1;
+        }
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+// source scrubber
+// ---------------------------------------------------------------------------
+
+/// Replace the contents of comments, string literals, and char literals with
+/// spaces (newlines preserved), so rules only ever see code.
+fn scrub(src: &str) -> String {
+    let bytes = src.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let b = bytes[i];
+        match b {
+            b'/' if bytes.get(i + 1) == Some(&b'/') => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            b'/' if bytes.get(i + 1) == Some(&b'*') => {
+                let mut depth = 1usize;
+                out.extend_from_slice(b"  ");
+                i += 2;
+                while i < bytes.len() && depth > 0 {
+                    if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        out.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if bytes[i] == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        out.extend_from_slice(b"  ");
+                        i += 2;
+                    } else {
+                        out.push(if bytes[i] == b'\n' { b'\n' } else { b' ' });
+                        i += 1;
+                    }
+                }
+            }
+            b'r' | b'b' if !prev_is_ident(bytes, i) && raw_str_prefix(bytes, i).is_some() => {
+                let (skip, hashes) = raw_str_prefix(bytes, i).expect("checked above");
+                for _ in 0..skip {
+                    out.push(b' ');
+                }
+                i += skip;
+                // consume until `"` followed by `hashes` hash marks
+                while i < bytes.len() {
+                    if bytes[i] == b'"' && count_hashes(bytes, i + 1) >= hashes {
+                        for _ in 0..(1 + hashes) {
+                            out.push(b' ');
+                        }
+                        i += 1 + hashes;
+                        break;
+                    }
+                    out.push(if bytes[i] == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+            }
+            b'"' => {
+                out.push(b' ');
+                i += 1;
+                while i < bytes.len() {
+                    match bytes[i] {
+                        b'\\' => {
+                            out.extend_from_slice(b"  ");
+                            i += 2;
+                        }
+                        b'"' => {
+                            out.push(b' ');
+                            i += 1;
+                            break;
+                        }
+                        b'\n' => {
+                            out.push(b'\n');
+                            i += 1;
+                        }
+                        _ => {
+                            out.push(b' ');
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            b'\'' => {
+                // lifetime (`'a`, `'static`) vs char literal (`'x'`, `'\n'`)
+                let is_char = match bytes.get(i + 1) {
+                    Some(b'\\') => true,
+                    Some(c) if c.is_ascii_alphanumeric() || *c == b'_' => {
+                        bytes.get(i + 2) == Some(&b'\'')
+                    }
+                    Some(_) => true, // e.g. '∂', ''' — treat as literal
+                    None => false,
+                };
+                if !is_char {
+                    out.push(b'\'');
+                    i += 1;
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                    while i < bytes.len() {
+                        match bytes[i] {
+                            b'\\' => {
+                                out.extend_from_slice(b"  ");
+                                i += 2;
+                            }
+                            b'\'' => {
+                                out.push(b' ');
+                                i += 1;
+                                break;
+                            }
+                            _ => {
+                                out.push(b' ');
+                                i += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    // scrubbed output is pure ASCII (non-ASCII bytes were blanked)
+    String::from_utf8(out).expect("scrubber emits ASCII + preserved ASCII code bytes")
+}
+
+/// `r"`, `r#"`, `b"`, `br#"`-style raw/byte string prefix at `i`: returns
+/// (prefix length including the opening quote, hash count).
+fn raw_str_prefix(bytes: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if bytes.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if bytes.get(j) != Some(&b'r') {
+        // plain `b"..."` byte strings go through the escaped-string arm
+        return None;
+    }
+    j += 1;
+    let hashes = count_hashes(bytes, j);
+    j += hashes;
+    if bytes.get(j) != Some(&b'"') {
+        return None;
+    }
+    Some((j - i + 1, hashes))
+}
+
+fn count_hashes(bytes: &[u8], mut j: usize) -> usize {
+    let start = j;
+    while bytes.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    j - start
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(findings: &[LintFinding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- seeded violations: the lint MUST fail on each ----------------
+
+    #[test]
+    fn flags_unsafe_block_without_safety_comment() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let f = lint_source("linalg/fake.rs", src);
+        assert_eq!(rules(&f), vec![RULE_UNSAFE], "{f:?}");
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn accepts_unsafe_block_with_safety_comment() {
+        let src = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p valid\n    unsafe { *p }\n}\n";
+        assert!(lint_source("linalg/fake.rs", src).is_empty());
+        // ...including through an interleaved attribute, and lowercase
+        let src2 = "fn f() {\n    // safety: cfg-gated\n    #[cfg(target_arch = \"x86_64\")]\n    unsafe { body() }\n}\n";
+        assert!(lint_source("x.rs", src2).is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_and_impl_signatures_are_exempt() {
+        let src = "unsafe impl Send for X {}\n/// # Safety\n/// docs\npub unsafe fn g() {}\ntype C = unsafe fn(usize);\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_mul_add_in_kernel_modules_only() {
+        let src = "fn k(a: f32, b: f32, c: f32) -> f32 {\n    a.mul_add(b, c)\n}\n";
+        assert_eq!(rules(&lint_source("linalg/fake.rs", src)), vec![RULE_MUL_ADD]);
+        assert_eq!(rules(&lint_source("quant/fake.rs", src)), vec![RULE_MUL_ADD]);
+        assert!(lint_source("report/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_hash_collections_on_plan_paths() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules(&lint_source("optim/fake.rs", src)), vec![RULE_HASH]);
+        assert_eq!(rules(&lint_source("coordinator/fake.rs", src)), vec![RULE_HASH]);
+        assert_eq!(rules(&lint_source("scheduler/fake.rs", src)), vec![RULE_HASH]);
+        assert!(lint_source("data/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_unwrap_on_artifact_outputs_in_optim() {
+        let src = "fn s() {\n    let v = outputs.pop().unwrap();\n    let _ = v;\n}\n";
+        assert_eq!(rules(&lint_source("optim/fake.rs", src)), vec![RULE_UNWRAP]);
+        // unwraps not touching outputs stay legal (Option-field invariants)
+        let src2 = "fn s(o: Option<u8>) -> u8 {\n    o.unwrap()\n}\n";
+        assert!(lint_source("optim/fake.rs", src2).is_empty());
+    }
+
+    // ---- precision: scrubbing, test regions, suppression ---------------
+
+    #[test]
+    fn prose_and_strings_never_trip_rules() {
+        let src = concat!(
+            "// an unsafe { block } in a comment, plus mul_add and HashMap\n",
+            "/* unsafe { } */\n",
+            "fn f() -> &'static str {\n",
+            "    let _c = 'x';\n",
+            "    let _e = '\\'';\n",
+            "    let _r = r#\"unsafe { mul_add } HashMap\"#;\n",
+            "    \"unsafe { } .unwrap( outputs mul_add HashMap\"\n",
+            "}\n",
+        );
+        assert!(lint_source("optim/fake.rs", src).is_empty());
+        assert!(lint_source("linalg/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_modules_are_exempt_from_determinism_rules() {
+        let src = concat!(
+            "fn prod() {}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    use std::collections::HashMap;\n",
+            "    fn t(a: f32) -> f32 { a.mul_add(a, a) }\n",
+            "}\n",
+        );
+        assert!(lint_source("optim/fake.rs", src).is_empty());
+        assert!(lint_source("linalg/fake.rs", src).is_empty());
+        // ...but the same lines outside the test module are flagged
+        let bad = "use std::collections::HashMap;\nfn prod() {}\n";
+        assert_eq!(rules(&lint_source("optim/fake.rs", bad)), vec![RULE_HASH]);
+    }
+
+    #[test]
+    fn inline_allow_suppresses_one_rule() {
+        let src = concat!(
+            "// deliberate: seeded corpus stats, order never observed\n",
+            "// lint: allow(plan-hash-iteration)\n",
+            "use std::collections::HashMap;\n",
+        );
+        assert!(lint_source("optim/fake.rs", src).is_empty());
+        // the tag names ONE rule; others still fire
+        let src2 = "// lint: allow(kernel-mul-add)\nuse std::collections::HashMap;\n";
+        assert_eq!(rules(&lint_source("optim/fake.rs", src2)), vec![RULE_HASH]);
+    }
+
+    // ---- the acceptance gate: the tree itself lints clean ---------------
+
+    #[test]
+    fn repo_tree_is_lint_clean() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let findings = lint_tree(&root).expect("walk rust/src");
+        assert!(
+            findings.is_empty(),
+            "lint violations in tree:\n{}",
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

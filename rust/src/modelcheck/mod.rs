@@ -1,0 +1,73 @@
+//! In-tree concurrency model checker + repo-invariant lint pass.
+//!
+//! # Why
+//!
+//! The whole reproduction rests on one systems claim: the stealing pool
+//! and the `run_graph` executor produce bitwise-identical results to
+//! sequential execution.  The stress suites and golden traces *sample*
+//! interleavings; this module *enumerates* them (under a bound), so
+//! ordering bugs in the Chase-Lev deque or the graph release protocol are
+//! caught at analysis time instead of after a thousand lucky steal-seed
+//! runs.
+//!
+//! # How — the shim, the scheduler, the memory model
+//!
+//! * **Shim** ([`crate::linalg::sync`]): `pool.rs` names its atomics
+//!   through a one-line re-export layer.  Production builds get
+//!   `std::sync::atomic` verbatim (zero cost); under
+//!   `--cfg qgalore_modelcheck` the same names resolve to the [`shadow`]
+//!   wrappers, so the checker executes the *real* deque and release code —
+//!   not a transliteration that could drift.
+//! * **Scheduler** ([`sched`]): N scenario closures run on real OS threads,
+//!   but only the thread holding the execution token proceeds; every shadow
+//!   operation is a decision point.  Exploration is DFS over recorded
+//!   decision lists with full re-execution per schedule (CHESS-style), with
+//!   *preemption bounding*: staying on the current thread is free, context
+//!   switches / store deferrals / writebacks spend a small budget (default
+//!   2).  Most ordering bugs need only 1–2 preemptions, so the bounded
+//!   tree is both small and effective.
+//! * **Memory model**: a PSO-style per-thread store buffer.  Non-SeqCst
+//!   stores may be deferred (a budgeted branch) and commit later at
+//!   explored writeback points; `Release` stores/fences open a new epoch
+//!   that buffered stores cannot be overtaken across; SeqCst stores,
+//!   fences, and all RMWs drain the buffer synchronously; loads forward
+//!   from the thread's own buffer.
+//!
+//! # Limits (and why miri stays in CI)
+//!
+//! The model reorders *stores* but never *loads*, and treats every RMW as
+//! at least AcqRel.  That is enough to distinguish the deque's documented
+//! fence placements (the mutant tests prove it: weakening `pop`'s SeqCst
+//! fence or dropping `push`'s Release fence is flagged), but it is not the
+//! full C11 weak-memory semantics — load-load reordering and release-
+//! sequence subtleties are miri's domain.  The two passes are
+//! complementary: modelcheck exhausts schedules under a simplified memory
+//! model; miri samples schedules under the precise model.  CI runs both.
+//!
+//! # Validation
+//!
+//! A checker that cannot fail is worthless, so [`mutants`] re-implements
+//! the deque over shadow atomics with deliberately weakened orderings and
+//! the release protocol with deliberately broken policies; regression
+//! tests assert every mutant is flagged and the faithful configuration is
+//! not.  [`checks`] then points the explorer at the real (shimmed)
+//! `ChaseLev` / `GraphProtocol` code.
+//!
+//! # The lint pass ([`lint`])
+//!
+//! `qgalore lint` walks `rust/src` and enforces the repo's written
+//! determinism/soundness invariants: `unsafe` blocks carry SAFETY
+//! comments, kernel modules never call `mul_add` (fma would break bitwise
+//! identity), plan/join-order paths never iterate hash collections, and
+//! `optim` never unwraps artifact outputs.  `clippy.toml` backs up the
+//! fma/hash rules with stock clippy's `disallowed_methods`.
+
+pub mod checks;
+pub mod lint;
+pub mod mutants;
+pub mod sched;
+pub mod shadow;
+
+pub use checks::{run_suite, SuiteReport};
+pub use lint::{lint_paths, lint_tree, LintFinding};
+pub use sched::{explore, Config, Report, Scenario, Violation};

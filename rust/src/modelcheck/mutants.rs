@@ -1,0 +1,372 @@
+//! Mutant implementations that validate the checker itself.
+//!
+//! A model checker that never fires is indistinguishable from one that
+//! explores nothing, so this module re-implements the two protocols under
+//! test with deliberately planted bugs and asserts the explorer flags each
+//! one (and does NOT flag the faithful configuration):
+//!
+//! * [`VChaseLev`] — a fixed-capacity, value-semantics transliteration of
+//!   the deque's push/pop/steal over [`shadow`] atomics, parameterized by
+//!   [`Weaken`].  Value semantics (`usize` ids, `0` = unpublished
+//!   sentinel) mean an ordering bug surfaces as a clean assertion — a lost
+//!   or doubled id — never as a double-free of a real boxed task.
+//! * [`VGraph`] — the `run_graph` successor-release step parameterized by
+//!   [`ReleasePolicy`]: the real last-dependency rule, a dropped release
+//!   (lost node), and an every-dependency release (runs before its deps).
+//!
+//! These always use the shadow atomics directly (no shim), so the mutant
+//! regression tests are live in EVERY build of the test suite, not only
+//! under `--cfg qgalore_modelcheck`.
+
+use std::sync::{Arc, Mutex};
+
+use super::sched::{explore, Config, Report, Scenario};
+use super::shadow::{fence, AtomicIsize, AtomicUsize};
+use std::sync::atomic::Ordering;
+
+/// Which ordering to weaken in [`VChaseLev`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Weaken {
+    /// Faithful transliteration of the real orderings.
+    None,
+    /// `pop`'s SeqCst fence demoted to Release — the owner's speculative
+    /// `bottom` decrement and its `top` read are no longer globally
+    /// ordered against a thief's CAS, so owner and thief can both take
+    /// the last element.
+    PopFenceRelease,
+    /// `push`'s Release fence dropped — the `bottom` publication can
+    /// overtake the slot store, so a thief can claim a slot whose element
+    /// write has not landed (it reads the `0` sentinel).
+    PushSkipReleaseFence,
+}
+
+/// Fixed-capacity value-semantics Chase-Lev deque over shadow atomics.
+/// Slot values are ids >= 1; `0` marks a never-published slot.
+pub struct VChaseLev {
+    top: AtomicIsize,
+    bottom: AtomicIsize,
+    slots: Vec<AtomicUsize>,
+    mask: usize,
+    weaken: Weaken,
+}
+
+impl VChaseLev {
+    pub fn new(cap: usize, weaken: Weaken) -> Self {
+        assert!(cap.is_power_of_two());
+        VChaseLev {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            slots: (0..cap).map(|_| AtomicUsize::new(0)).collect(),
+            mask: cap - 1,
+            weaken,
+        }
+    }
+
+    /// Owner-only push (the harness never overfills, so no grow path).
+    pub fn push(&self, id: usize) {
+        debug_assert!(id != 0, "0 is the unpublished-slot sentinel");
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        assert!(b - t < self.slots.len() as isize, "mutant harness overfilled the ring");
+        self.slots[(b as usize) & self.mask].store(id, Ordering::Relaxed);
+        if self.weaken != Weaken::PushSkipReleaseFence {
+            fence(Ordering::Release);
+        }
+        self.bottom.store(b + 1, Ordering::Relaxed);
+    }
+
+    /// Owner-only pop.
+    pub fn pop(&self) -> Option<usize> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        match self.weaken {
+            Weaken::PopFenceRelease => fence(Ordering::Release),
+            _ => fence(Ordering::SeqCst),
+        }
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            let v = self.slots[(b as usize) & self.mask].load(Ordering::Relaxed);
+            if t == b {
+                if self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_err()
+                {
+                    self.bottom.store(b + 1, Ordering::Relaxed);
+                    return None;
+                }
+                self.bottom.store(b + 1, Ordering::Relaxed);
+            }
+            Some(v)
+        } else {
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Thief steal.
+    pub fn steal(&self) -> Option<usize> {
+        loop {
+            let t = self.top.load(Ordering::Acquire);
+            fence(Ordering::SeqCst);
+            let b = self.bottom.load(Ordering::Acquire);
+            if t >= b {
+                return None;
+            }
+            let v = self.slots[(t as usize) & self.mask].load(Ordering::Relaxed);
+            if self.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed).is_ok() {
+                return Some(v);
+            }
+        }
+    }
+}
+
+/// Explore the canonical owner-vs-thief scenario over a [`VChaseLev`] with
+/// the given weakening: the owner pushes ids {1, 2} then pops twice, a
+/// thief steals twice; the finale asserts every pushed id was taken
+/// exactly once (counting what is left in the ring) and no taker ever saw
+/// the unpublished sentinel.
+pub fn explore_deque(weaken: Weaken, cfg: &Config) -> Report {
+    explore(cfg, || {
+        let d = Arc::new(VChaseLev::new(4, weaken));
+        let taken: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        let owner = {
+            let d = Arc::clone(&d);
+            let taken = Arc::clone(&taken);
+            Box::new(move || {
+                d.push(1);
+                d.push(2);
+                for _ in 0..2 {
+                    if let Some(v) = d.pop() {
+                        assert!(v != 0, "owner popped an unpublished slot");
+                        taken.lock().unwrap().push(v);
+                    }
+                }
+            }) as Box<dyn FnOnce() + Send>
+        };
+        let thief = {
+            let d = Arc::clone(&d);
+            let taken = Arc::clone(&taken);
+            Box::new(move || {
+                for _ in 0..2 {
+                    if let Some(v) = d.steal() {
+                        assert!(v != 0, "thief stole an unpublished slot");
+                        taken.lock().unwrap().push(v);
+                    }
+                }
+            }) as Box<dyn FnOnce() + Send>
+        };
+        let finale = {
+            let d = Arc::clone(&d);
+            let taken = Arc::clone(&taken);
+            Box::new(move || {
+                let mut got = taken.lock().unwrap().clone();
+                while let Some(v) = d.pop() {
+                    assert!(v != 0, "drain found an unpublished slot");
+                    got.push(v);
+                }
+                got.sort_unstable();
+                assert_eq!(got, vec![1, 2], "ids lost or duplicated: {got:?}");
+            }) as Box<dyn FnOnce() + Send>
+        };
+        Scenario { threads: vec![owner, thief], finale }
+    })
+}
+
+/// Successor-release policy for [`VGraph`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReleasePolicy {
+    /// The real rule: the unique `fetch_sub` observing 1 takes the slot.
+    LastDep,
+    /// Decrement but never take — a finished dependency forgets to release,
+    /// so the successor is stranded in its slot (lost node).
+    Dropped,
+    /// Take on EVERY decrement — the first finishing dependency releases
+    /// the successor while other dependencies are still running.
+    Every,
+}
+
+/// Value transliteration of `GraphProtocol`'s release step (payload = node
+/// id), parameterized so broken policies can be planted.
+pub struct VGraph {
+    remaining: Vec<AtomicUsize>,
+    succs: Vec<Vec<usize>>,
+    slots: Vec<Mutex<Option<usize>>>,
+    policy: ReleasePolicy,
+}
+
+impl VGraph {
+    /// Build from dependency lists (same orientation as `GraphNode::deps`);
+    /// non-root nodes are parked as their own ids.
+    pub fn build(deps: &[Vec<usize>], policy: ReleasePolicy) -> Self {
+        let n = deps.len();
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut indeg = vec![0usize; n];
+        for (i, ds) in deps.iter().enumerate() {
+            for &d in ds {
+                succs[d].push(i);
+                indeg[i] += 1;
+            }
+        }
+        VGraph {
+            remaining: indeg.iter().map(|&d| AtomicUsize::new(d)).collect(),
+            succs,
+            slots: indeg
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| Mutex::new((d > 0).then_some(i)))
+                .collect(),
+            policy,
+        }
+    }
+
+    pub fn roots(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| self.slots[i].lock().unwrap().is_none()).collect()
+    }
+
+    /// Node `i` finished: release successors per the configured policy.
+    pub fn release(&self, i: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        for &s in &self.succs[i] {
+            let last = self.remaining[s].fetch_sub(1, Ordering::AcqRel) == 1;
+            let take = match self.policy {
+                ReleasePolicy::LastDep => last,
+                ReleasePolicy::Dropped => false,
+                ReleasePolicy::Every => true,
+            };
+            if take {
+                if let Some(t) = self.slots[s].lock().unwrap().take() {
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn stranded(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| self.slots[i].lock().unwrap().is_some()).collect()
+    }
+}
+
+/// Explore the two-root join graph 0,1 -> 2 -> 3 under `policy` with two
+/// virtual workers (worker k starts from root k, then drains whatever its
+/// releases hand back).  The finale asserts every node completed exactly
+/// once, each node ran only after all of its dependencies, and no payload
+/// is stranded in a slot.
+pub fn explore_graph(policy: ReleasePolicy, cfg: &Config) -> Report {
+    let deps: Vec<Vec<usize>> = vec![vec![], vec![], vec![0, 1], vec![2]];
+    explore(cfg, move || {
+        let g = Arc::new(VGraph::build(&deps, policy));
+        let done: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        let deps = deps.clone();
+        let worker = |root: usize| {
+            let g = Arc::clone(&g);
+            let done = Arc::clone(&done);
+            let deps = deps.clone();
+            Box::new(move || {
+                let mut work = vec![root];
+                while let Some(node) = work.pop() {
+                    {
+                        let mut log = done.lock().unwrap();
+                        for &d in &deps[node] {
+                            assert!(
+                                log.contains(&d),
+                                "node {node} ran before its dependency {d} completed"
+                            );
+                        }
+                        log.push(node);
+                    }
+                    work.extend(g.release(node));
+                }
+            }) as Box<dyn FnOnce() + Send>
+        };
+        let finale = {
+            let g = Arc::clone(&g);
+            let done = Arc::clone(&done);
+            let n = deps.len();
+            Box::new(move || {
+                let mut log = done.lock().unwrap().clone();
+                log.sort_unstable();
+                assert_eq!(
+                    log,
+                    (0..n).collect::<Vec<_>>(),
+                    "nodes lost or completed more than once: {log:?}"
+                );
+                assert!(g.stranded().is_empty(), "payloads stranded: {:?}", g.stranded());
+            }) as Box<dyn FnOnce() + Send>
+        };
+        Scenario { threads: vec![worker(0), worker(1)], finale }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> Config {
+        Config::default()
+    }
+
+    #[test]
+    fn faithful_deque_transliteration_passes() {
+        let r = explore_deque(Weaken::None, &cfg());
+        assert!(r.ok(), "faithful orderings flagged: {:?}", r.violation);
+        assert!(r.exhausted, "bounded tree not fully explored ({} schedules)", r.schedules);
+        assert!(r.schedules > 10, "suspiciously few schedules: {}", r.schedules);
+    }
+
+    #[test]
+    fn pop_fence_demoted_to_release_is_flagged() {
+        let r = explore_deque(Weaken::PopFenceRelease, &cfg());
+        assert!(
+            !r.ok(),
+            "checker missed the pop SeqCst->Release mutant after {} schedules",
+            r.schedules
+        );
+    }
+
+    #[test]
+    fn push_missing_release_fence_is_flagged() {
+        let r = explore_deque(Weaken::PushSkipReleaseFence, &cfg());
+        assert!(
+            !r.ok(),
+            "checker missed the push release-fence-drop mutant after {} schedules",
+            r.schedules
+        );
+    }
+
+    #[test]
+    fn faithful_release_policy_passes() {
+        let r = explore_graph(ReleasePolicy::LastDep, &cfg());
+        assert!(r.ok(), "last-dependency release flagged: {:?}", r.violation);
+        assert!(r.exhausted, "bounded tree not fully explored ({} schedules)", r.schedules);
+    }
+
+    #[test]
+    fn dropped_release_is_flagged() {
+        let r = explore_graph(ReleasePolicy::Dropped, &cfg());
+        assert!(!r.ok(), "checker missed the dropped-release mutant");
+        let v = r.violation.unwrap();
+        assert!(
+            v.message.contains("lost") || v.message.contains("stranded"),
+            "unexpected violation shape: {}",
+            v.message
+        );
+    }
+
+    #[test]
+    fn double_release_is_flagged() {
+        let r = explore_graph(ReleasePolicy::Every, &cfg());
+        assert!(!r.ok(), "checker missed the every-dependency release mutant");
+    }
+
+    #[test]
+    fn violation_reports_carry_schedule_index_and_stay_bounded() {
+        // The smoke contract the CI leg relies on: mutants are found well
+        // inside the schedule budget, and the report says where.
+        let r = explore_deque(Weaken::PopFenceRelease, &cfg());
+        let v = r.violation.expect("mutant must be flagged");
+        assert_eq!(v.schedule_index, r.schedules - 1);
+        assert!(r.schedules < 250_000, "mutant search blew the schedule budget");
+    }
+}

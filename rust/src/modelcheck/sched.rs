@@ -1,0 +1,524 @@
+//! DFS schedule explorer: virtual threads, decision recording, and a
+//! store-buffer memory model (see the module doc in `mod.rs` for the design
+//! rationale and the model's limits).
+//!
+//! One schedule = one full re-execution of the scenario under a recorded
+//! decision list.  Exploration is depth-first: run to completion taking the
+//! first option at every new decision point, then backtrack the deepest
+//! decision that still has untried options and replay.  Preemption bounding
+//! keeps the tree small: continuing the active thread is free, while context
+//! switches, store deferrals, and buffer writebacks each spend one unit of
+//! the preemption budget.
+//!
+//! Harness discipline (asserted informally, violated harnesses hang or
+//! diverge):
+//! * never hold a `std::sync` lock across a shadow-atomic operation;
+//! * no spin loops without shadow ops inside (every blocking wait must pass
+//!   through a decision point so the scheduler can hand the token over);
+//! * the finale closure must capture `Arc`s to all state it checks, so
+//!   buffered commit pointers outlive the thread bodies.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+const NO_ACTIVE: usize = usize::MAX;
+
+/// Exploration limits.  The defaults keep a 2–3 thread scenario with ~40
+/// shadow ops in the low thousands of schedules.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Budget spent by context switches, store deferrals and writebacks.
+    pub preemption_bound: u32,
+    /// Hard cap on explored schedules; exceeding it ends exploration with
+    /// `exhausted == false`.
+    pub max_schedules: u64,
+    /// Per-schedule shadow-op cap (livelock guard).
+    pub max_steps: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { preemption_bound: 2, max_schedules: 250_000, max_steps: 20_000 }
+    }
+}
+
+/// A schedule under which a scenario invariant failed.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub message: String,
+    /// 0-based index of the failing schedule in exploration order.
+    pub schedule_index: u64,
+    /// Recent scheduler events (switches, writebacks) leading to the failure.
+    pub trace: Vec<String>,
+}
+
+/// Outcome of [`explore`].
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Number of schedules executed (including a failing one, if any).
+    pub schedules: u64,
+    pub violation: Option<Violation>,
+    /// True iff the bounded schedule tree was fully explored.
+    pub exhausted: bool,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        self.violation.is_none()
+    }
+}
+
+/// One concurrency scenario: thread bodies plus a single-threaded finale
+/// that checks invariants after every body has joined.
+pub struct Scenario {
+    pub threads: Vec<Box<dyn FnOnce() + Send + 'static>>,
+    pub finale: Box<dyn FnOnce() + Send + 'static>,
+}
+
+/// A store captured in a thread's write buffer.  `commit` performs the real
+/// store; `addr` is the address of the underlying std atomic, `val` the
+/// type-erased value (see `shadow.rs` for the encodings).
+pub(crate) struct StoreEntry {
+    pub(crate) addr: usize,
+    pub(crate) val: u64,
+    pub(crate) group: u64,
+    pub(crate) commit: unsafe fn(usize, u64),
+}
+
+struct ThreadState {
+    finished: bool,
+    buffer: VecDeque<StoreEntry>,
+    /// Release-epoch counter: a store may only overtake (write through past)
+    /// buffered entries of its own epoch.
+    group: u64,
+}
+
+struct SimCore {
+    active: usize,
+    threads: Vec<ThreadState>,
+    /// DFS decision list: (chosen, total options) per decision point.
+    decisions: Vec<(u32, u32)>,
+    cursor: usize,
+    preemptions: u32,
+    bound: u32,
+    steps: u64,
+    max_steps: u64,
+    trace: Vec<String>,
+    failed: Option<String>,
+}
+
+pub(crate) struct SimShared {
+    core: Mutex<SimCore>,
+    cv: Condvar,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<SimShared>, usize)>> = const { RefCell::new(None) };
+}
+
+/// The sim handle installed on the calling OS thread, if any.  `None` means
+/// shadow atomics delegate straight to the real std atomics.
+pub(crate) fn current() -> Option<(Arc<SimShared>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+impl SimCore {
+    /// Record or replay one decision with `n` options; trivial (n <= 1)
+    /// decisions are not recorded.
+    fn decide(&mut self, n: u32) -> u32 {
+        if n <= 1 {
+            return 0;
+        }
+        if self.cursor < self.decisions.len() {
+            let (chosen, total) = self.decisions[self.cursor];
+            if total != n {
+                self.fail(format!(
+                    "replay divergence at decision {}: recorded {} options, now {} \
+                     (scenario factory must be deterministic)",
+                    self.cursor, total, n
+                ));
+                return 0;
+            }
+            self.cursor += 1;
+            chosen
+        } else {
+            self.decisions.push((0, n));
+            self.cursor += 1;
+            0
+        }
+    }
+
+    fn runnable_others(&self, tid: usize) -> Vec<usize> {
+        (0..self.threads.len()).filter(|&t| t != tid && !self.threads[t].finished).collect()
+    }
+
+    fn buffered_threads(&self) -> Vec<usize> {
+        (0..self.threads.len()).filter(|&t| !self.threads[t].buffer.is_empty()).collect()
+    }
+
+    fn note(&mut self, msg: String) {
+        if self.trace.len() >= 64 {
+            self.trace.remove(0);
+        }
+        self.trace.push(msg);
+    }
+
+    /// Latch a violation: flush every buffer so teardown reads committed
+    /// state, then release all threads to free-run to completion.
+    fn fail(&mut self, msg: String) {
+        if self.failed.is_some() {
+            return;
+        }
+        for t in &mut self.threads {
+            while let Some(e) = t.buffer.pop_front() {
+                // SAFETY: the entry's commit fn was captured together with
+                // the address of a live shadow atomic; the finale holds the
+                // owning Arcs, so the target outlives every buffered entry.
+                unsafe { (e.commit)(e.addr, e.val) };
+            }
+        }
+        self.failed = Some(msg);
+        self.active = NO_ACTIVE;
+    }
+
+    fn flush_own(&mut self, tid: usize) {
+        while let Some(e) = self.threads[tid].buffer.pop_front() {
+            // SAFETY: as in `fail` — the target atomic is kept alive by the
+            // scenario's Arcs until after every commit pointer is drained.
+            unsafe { (e.commit)(e.addr, e.val) };
+        }
+    }
+}
+
+impl SimShared {
+    /// Block until `tid` holds the execution token, then run the scheduling
+    /// decision for this op.  Returns false when the sim has failed and the
+    /// caller should delegate to the real operation (free-run teardown).
+    pub(crate) fn enter(&self, tid: usize) -> bool {
+        let mut core = self.core.lock().unwrap();
+        loop {
+            if core.failed.is_some() {
+                return false;
+            }
+            if core.active == tid {
+                break;
+            }
+            core = self.cv.wait(core).unwrap();
+        }
+        core.steps += 1;
+        if core.steps > core.max_steps {
+            let cap = core.max_steps;
+            core.fail(format!("step bound {cap} exceeded (livelock or unbounded retry loop)"));
+            self.cv.notify_all();
+            return false;
+        }
+        // Writebacks re-enter the decision loop: several buffered stores may
+        // drain at one program point.
+        loop {
+            enum Opt {
+                Run,
+                Switch(usize),
+                Writeback(usize),
+            }
+            let mut opts = vec![Opt::Run];
+            if core.preemptions < core.bound {
+                for t in core.runnable_others(tid) {
+                    opts.push(Opt::Switch(t));
+                }
+                for t in core.buffered_threads() {
+                    opts.push(Opt::Writeback(t));
+                }
+            }
+            let choice = core.decide(opts.len() as u32) as usize;
+            if core.failed.is_some() {
+                self.cv.notify_all();
+                return false;
+            }
+            match opts[choice] {
+                Opt::Run => return true,
+                Opt::Switch(t) => {
+                    core.preemptions += 1;
+                    core.active = t;
+                    core.note(format!("switch {tid}->{t}"));
+                    self.cv.notify_all();
+                    loop {
+                        if core.failed.is_some() {
+                            return false;
+                        }
+                        if core.active == tid {
+                            return true;
+                        }
+                        core = self.cv.wait(core).unwrap();
+                    }
+                }
+                Opt::Writeback(t) => {
+                    core.preemptions += 1;
+                    if let Some(e) = core.threads[t].buffer.pop_front() {
+                        // SAFETY: as in `SimCore::fail` — scenario Arcs keep
+                        // the target atomic alive past all buffered commits.
+                        unsafe { (e.commit)(e.addr, e.val) };
+                    }
+                    core.note(format!("writeback t{t}"));
+                    // stay in the loop: the current thread still holds the
+                    // token and decides again.
+                }
+            }
+        }
+    }
+
+    /// Mark `tid` finished: flush its buffer and hand the token to another
+    /// runnable thread (a free decision).
+    fn finish(&self, tid: usize) {
+        let mut core = self.core.lock().unwrap();
+        core.flush_own(tid);
+        core.threads[tid].finished = true;
+        if core.active == tid || core.active == NO_ACTIVE {
+            let next = core.runnable_others(tid);
+            if next.is_empty() {
+                core.active = NO_ACTIVE;
+            } else {
+                let k = core.decide(next.len() as u32) as usize;
+                core.active = next[k.min(next.len() - 1)];
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    fn fail_from(&self, msg: String) {
+        let mut core = self.core.lock().unwrap();
+        core.fail(msg);
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn with_core<R>(&self, f: impl FnOnce(&mut SimCore) -> R) -> R {
+        let mut core = self.core.lock().unwrap();
+        f(&mut core)
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Explore every bounded schedule of the scenarios produced by `factory`.
+/// The factory is invoked once per schedule and must be deterministic: same
+/// threads, same per-thread shadow-op sequences given the same decisions.
+pub fn explore(cfg: &Config, mut factory: impl FnMut() -> Scenario) -> Report {
+    let mut decisions: Vec<(u32, u32)> = Vec::new();
+    let mut schedules: u64 = 0;
+    loop {
+        let scenario = factory();
+        let n_threads = scenario.threads.len();
+        assert!(n_threads >= 1, "scenario needs at least one thread");
+        let sim = Arc::new(SimShared {
+            core: Mutex::new(SimCore {
+                active: NO_ACTIVE,
+                threads: (0..n_threads)
+                    .map(|_| ThreadState { finished: false, buffer: VecDeque::new(), group: 0 })
+                    .collect(),
+                decisions: std::mem::take(&mut decisions),
+                cursor: 0,
+                preemptions: 0,
+                bound: cfg.preemption_bound,
+                steps: 0,
+                max_steps: cfg.max_steps,
+                trace: Vec::new(),
+                failed: None,
+            }),
+            cv: Condvar::new(),
+        });
+        // Initial free decision: which thread runs first.
+        {
+            let mut core = sim.core.lock().unwrap();
+            let first = core.decide(n_threads as u32) as usize;
+            core.active = first.min(n_threads - 1);
+        }
+        let handles: Vec<_> = scenario
+            .threads
+            .into_iter()
+            .enumerate()
+            .map(|(tid, body)| {
+                let sim = Arc::clone(&sim);
+                std::thread::spawn(move || {
+                    CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&sim), tid)));
+                    let r = catch_unwind(AssertUnwindSafe(body));
+                    if let Err(p) = r {
+                        sim.fail_from(format!("thread {tid} panicked: {}", panic_message(&*p)));
+                    }
+                    sim.finish(tid);
+                    CURRENT.with(|c| *c.borrow_mut() = None);
+                })
+            })
+            .collect();
+        for h in handles {
+            // A scenario thread that panics is already converted into a
+            // violation above; the join itself cannot fail.
+            let _ = h.join();
+        }
+        schedules += 1;
+        let (mut failed, trace, used) = sim.with_core(|core| {
+            (
+                core.failed.take(),
+                std::mem::take(&mut core.trace),
+                std::mem::take(&mut core.decisions),
+            )
+        });
+        if failed.is_none() {
+            // Finale runs single-threaded with no sim installed: every
+            // buffer was flushed at thread finish, so it sees final state.
+            if let Err(p) = catch_unwind(AssertUnwindSafe(scenario.finale)) {
+                failed = Some(format!("finale assertion failed: {}", panic_message(&*p)));
+            }
+        }
+        if let Some(message) = failed {
+            return Report {
+                schedules,
+                violation: Some(Violation { message, schedule_index: schedules - 1, trace }),
+                exhausted: false,
+            };
+        }
+        decisions = used;
+        // Backtrack: advance the deepest decision with untried options.
+        let mut advanced = false;
+        while let Some(&(chosen, total)) = decisions.last() {
+            if chosen + 1 < total {
+                let last = decisions.len() - 1;
+                decisions[last].0 += 1;
+                advanced = true;
+                break;
+            }
+            decisions.pop();
+        }
+        if !advanced {
+            return Report { schedules, violation: None, exhausted: true };
+        }
+        if schedules >= cfg.max_schedules {
+            return Report { schedules, violation: None, exhausted: false };
+        }
+    }
+}
+
+// ---- memory-model operations, called by the shadow atomics ------------
+
+/// Is write-through past the buffered entries legal for a store to `addr`
+/// in release-epoch `group`?  Coherence forbids overtaking a same-address
+/// entry; release ordering forbids overtaking an earlier epoch.
+fn must_defer(ts: &ThreadState, addr: usize) -> bool {
+    ts.buffer.iter().any(|e| e.addr == addr || e.group < ts.group)
+}
+
+/// Shadow store.  `release` marks Release/AcqRel/SeqCst-release semantics;
+/// `seq_cst` additionally forces a full flush + immediate commit.
+pub(crate) fn sim_store(
+    sim: &Arc<SimShared>,
+    tid: usize,
+    addr: usize,
+    val: u64,
+    commit: unsafe fn(usize, u64),
+    release: bool,
+    seq_cst: bool,
+) {
+    if !sim.enter(tid) {
+        // SAFETY: free-run teardown; target alive per scenario contract.
+        unsafe { commit(addr, val) };
+        return;
+    }
+    let mut core = sim.core.lock().unwrap();
+    if core.failed.is_some() {
+        drop(core);
+        // SAFETY: as above.
+        unsafe { commit(addr, val) };
+        return;
+    }
+    if seq_cst {
+        core.flush_own(tid);
+        drop(core);
+        // SAFETY: committing under the exploration token; target alive.
+        unsafe { commit(addr, val) };
+        return;
+    }
+    if release {
+        // fence(Release); store — the new epoch orders this store after
+        // everything already buffered.
+        core.threads[tid].group += 1;
+    }
+    let group = core.threads[tid].group;
+    let forced = must_defer(&core.threads[tid], addr);
+    let defer = if forced {
+        true
+    } else if core.preemptions < core.bound {
+        let d = core.decide(2) == 1;
+        if core.failed.is_some() {
+            drop(core);
+            sim.cv.notify_all();
+            // SAFETY: free-run teardown; target alive per scenario contract.
+            unsafe { commit(addr, val) };
+            return;
+        }
+        if d {
+            core.preemptions += 1;
+        }
+        d
+    } else {
+        false
+    };
+    if defer {
+        core.threads[tid].buffer.push_back(StoreEntry { addr, val, group, commit });
+    } else {
+        drop(core);
+        // SAFETY: committing under the exploration token; target alive.
+        unsafe { commit(addr, val) };
+    }
+}
+
+/// Shadow load with store-forwarding from the thread's own buffer.
+pub(crate) fn sim_load(
+    sim: &Arc<SimShared>,
+    tid: usize,
+    addr: usize,
+    real: impl Fn() -> u64,
+) -> u64 {
+    if !sim.enter(tid) {
+        return real();
+    }
+    let core = sim.core.lock().unwrap();
+    if let Some(e) = core.threads[tid].buffer.iter().rev().find(|e| e.addr == addr) {
+        return e.val;
+    }
+    drop(core);
+    real()
+}
+
+/// Shadow fence.  SeqCst drains the calling thread's buffer synchronously;
+/// Release/AcqRel opens a new epoch; Acquire is a no-op (the model does not
+/// reorder loads).
+pub(crate) fn sim_fence(sim: &Arc<SimShared>, tid: usize, release: bool, seq_cst: bool) {
+    if !sim.enter(tid) {
+        return;
+    }
+    let mut core = sim.core.lock().unwrap();
+    if seq_cst {
+        core.flush_own(tid);
+    } else if release {
+        core.threads[tid].group += 1;
+    }
+}
+
+/// Shadow read-modify-write: drain the buffer, then run the real atomic op
+/// under the token.  All RMWs are treated as at least AcqRel — the pool
+/// only uses SeqCst/AcqRel RMWs, so nothing is weakened by the model here.
+pub(crate) fn sim_rmw<R>(sim: &Arc<SimShared>, tid: usize, real: impl FnOnce() -> R) -> R {
+    if sim.enter(tid) {
+        let mut core = sim.core.lock().unwrap();
+        core.flush_own(tid);
+    }
+    real()
+}

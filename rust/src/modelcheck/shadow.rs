@@ -1,0 +1,288 @@
+//! Shadow atomics: drop-in stand-ins for `std::sync::atomic` types that
+//! route every operation through the schedule explorer in `sched.rs` when a
+//! sim is installed on the calling thread, and delegate to the wrapped std
+//! atomic otherwise.
+//!
+//! Delegation makes the types safe to substitute crate-wide under
+//! `--cfg qgalore_modelcheck`: the entire ordinary test suite runs
+//! unchanged, and only threads spawned by [`super::sched::explore`] see
+//! instrumented behavior.
+//!
+//! Value encoding is type-erased to `u64` for the store buffer:
+//! `usize as u64`, `isize as i64 as u64`, `bool as u64`, pointers via
+//! `usize`.  Each type supplies a monomorphic commit fn pointer that casts
+//! the erased address/value back and performs the real store.
+
+use std::sync::atomic::Ordering;
+
+use super::sched::{current, sim_fence, sim_load, sim_rmw, sim_store};
+
+fn is_seq_cst(o: Ordering) -> bool {
+    matches!(o, Ordering::SeqCst)
+}
+
+fn is_release(o: Ordering) -> bool {
+    matches!(o, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+/// Memory fence routed through the sim when one is installed.
+pub fn fence(order: Ordering) {
+    if let Some((sim, tid)) = current() {
+        sim_fence(&sim, tid, is_release(order), is_seq_cst(order));
+    } else {
+        std::sync::atomic::fence(order);
+    }
+}
+
+fn enc_usize(v: usize) -> u64 {
+    v as u64
+}
+
+fn dec_usize(v: u64) -> usize {
+    v as usize
+}
+
+fn enc_isize(v: isize) -> u64 {
+    v as i64 as u64
+}
+
+fn dec_isize(v: u64) -> isize {
+    v as i64 as isize
+}
+
+fn enc_u64(v: u64) -> u64 {
+    v
+}
+
+fn dec_u64(v: u64) -> u64 {
+    v
+}
+
+macro_rules! shadow_int {
+    ($name:ident, $std:ident, $prim:ty, $commit:ident, $enc:ident, $dec:ident) => {
+        #[doc = concat!("Shadow counterpart of [`std::sync::atomic::", stringify!($std), "`].")]
+        #[derive(Debug, Default)]
+        pub struct $name {
+            inner: std::sync::atomic::$std,
+        }
+
+        unsafe fn $commit(addr: usize, val: u64) {
+            let target = addr as *const std::sync::atomic::$std;
+            // SAFETY: `addr` was produced from `&self.inner` of a live
+            // shadow atomic; the scenario contract (finale holds the owning
+            // Arcs) keeps it alive until every buffered entry is committed.
+            unsafe { (*target).store($dec(val), Ordering::SeqCst) }
+        }
+
+        impl $name {
+            pub const fn new(v: $prim) -> Self {
+                Self { inner: std::sync::atomic::$std::new(v) }
+            }
+
+            fn addr(&self) -> usize {
+                &self.inner as *const std::sync::atomic::$std as usize
+            }
+
+            pub fn load(&self, order: Ordering) -> $prim {
+                if let Some((sim, tid)) = current() {
+                    let real = || $enc(self.inner.load(Ordering::SeqCst));
+                    $dec(sim_load(&sim, tid, self.addr(), real))
+                } else {
+                    self.inner.load(order)
+                }
+            }
+
+            pub fn store(&self, v: $prim, order: Ordering) {
+                if let Some((sim, tid)) = current() {
+                    sim_store(
+                        &sim,
+                        tid,
+                        self.addr(),
+                        $enc(v),
+                        $commit,
+                        is_release(order),
+                        is_seq_cst(order),
+                    );
+                } else {
+                    self.inner.store(v, order);
+                }
+            }
+
+            pub fn swap(&self, v: $prim, order: Ordering) -> $prim {
+                if let Some((sim, tid)) = current() {
+                    sim_rmw(&sim, tid, || self.inner.swap(v, order))
+                } else {
+                    self.inner.swap(v, order)
+                }
+            }
+
+            pub fn compare_exchange(
+                &self,
+                cur: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                if let Some((sim, tid)) = current() {
+                    sim_rmw(&sim, tid, || self.inner.compare_exchange(cur, new, success, failure))
+                } else {
+                    self.inner.compare_exchange(cur, new, success, failure)
+                }
+            }
+
+            pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                if let Some((sim, tid)) = current() {
+                    sim_rmw(&sim, tid, || self.inner.fetch_add(v, order))
+                } else {
+                    self.inner.fetch_add(v, order)
+                }
+            }
+
+            pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                if let Some((sim, tid)) = current() {
+                    sim_rmw(&sim, tid, || self.inner.fetch_sub(v, order))
+                } else {
+                    self.inner.fetch_sub(v, order)
+                }
+            }
+
+            pub fn get_mut(&mut self) -> &mut $prim {
+                self.inner.get_mut()
+            }
+
+            pub fn into_inner(self) -> $prim {
+                self.inner.into_inner()
+            }
+        }
+    };
+}
+
+shadow_int!(AtomicUsize, AtomicUsize, usize, commit_usize, enc_usize, dec_usize);
+shadow_int!(AtomicIsize, AtomicIsize, isize, commit_isize, enc_isize, dec_isize);
+shadow_int!(AtomicU64, AtomicU64, u64, commit_u64, enc_u64, dec_u64);
+
+/// Shadow counterpart of [`std::sync::atomic::AtomicBool`].
+#[derive(Debug, Default)]
+pub struct AtomicBool {
+    inner: std::sync::atomic::AtomicBool,
+}
+
+unsafe fn commit_bool(addr: usize, val: u64) {
+    // SAFETY: `addr` points to the `inner` of a live shadow AtomicBool (see
+    // the commit-fn contract in the module doc).
+    unsafe { (*(addr as *const std::sync::atomic::AtomicBool)).store(val != 0, Ordering::SeqCst) }
+}
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> Self {
+        Self { inner: std::sync::atomic::AtomicBool::new(v) }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const std::sync::atomic::AtomicBool as usize
+    }
+
+    pub fn load(&self, order: Ordering) -> bool {
+        if let Some((sim, tid)) = current() {
+            sim_load(&sim, tid, self.addr(), || self.inner.load(Ordering::SeqCst) as u64) != 0
+        } else {
+            self.inner.load(order)
+        }
+    }
+
+    pub fn store(&self, v: bool, order: Ordering) {
+        if let Some((sim, tid)) = current() {
+            sim_store(
+                &sim,
+                tid,
+                self.addr(),
+                v as u64,
+                commit_bool,
+                is_release(order),
+                is_seq_cst(order),
+            );
+        } else {
+            self.inner.store(v, order);
+        }
+    }
+
+    pub fn swap(&self, v: bool, order: Ordering) -> bool {
+        if let Some((sim, tid)) = current() {
+            sim_rmw(&sim, tid, || self.inner.swap(v, order))
+        } else {
+            self.inner.swap(v, order)
+        }
+    }
+
+    pub fn get_mut(&mut self) -> &mut bool {
+        self.inner.get_mut()
+    }
+}
+
+/// Shadow counterpart of [`std::sync::atomic::AtomicPtr`].
+#[derive(Debug, Default)]
+pub struct AtomicPtr<T> {
+    inner: std::sync::atomic::AtomicPtr<T>,
+}
+
+unsafe fn commit_ptr<T>(addr: usize, val: u64) {
+    // SAFETY: `addr` points to the `inner` of a live shadow AtomicPtr<T>
+    // (see the commit-fn contract in the module doc).
+    unsafe {
+        (*(addr as *const std::sync::atomic::AtomicPtr<T>))
+            .store(val as usize as *mut T, Ordering::SeqCst)
+    }
+}
+
+impl<T> AtomicPtr<T> {
+    pub const fn new(p: *mut T) -> Self {
+        Self { inner: std::sync::atomic::AtomicPtr::new(p) }
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const std::sync::atomic::AtomicPtr<T> as usize
+    }
+
+    pub fn load(&self, order: Ordering) -> *mut T {
+        if let Some((sim, tid)) = current() {
+            let real = || self.inner.load(Ordering::SeqCst) as usize as u64;
+            sim_load(&sim, tid, self.addr(), real) as usize as *mut T
+        } else {
+            self.inner.load(order)
+        }
+    }
+
+    pub fn store(&self, p: *mut T, order: Ordering) {
+        if let Some((sim, tid)) = current() {
+            sim_store(
+                &sim,
+                tid,
+                self.addr(),
+                p as usize as u64,
+                commit_ptr::<T>,
+                is_release(order),
+                is_seq_cst(order),
+            );
+        } else {
+            self.inner.store(p, order);
+        }
+    }
+
+    pub fn compare_exchange(
+        &self,
+        cur: *mut T,
+        new: *mut T,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<*mut T, *mut T> {
+        if let Some((sim, tid)) = current() {
+            sim_rmw(&sim, tid, || self.inner.compare_exchange(cur, new, success, failure))
+        } else {
+            self.inner.compare_exchange(cur, new, success, failure)
+        }
+    }
+
+    pub fn get_mut(&mut self) -> &mut *mut T {
+        self.inner.get_mut()
+    }
+}

@@ -79,13 +79,19 @@ impl HostTensor {
 
     fn bytes(&self) -> &[u8] {
         match self {
+            // SAFETY: viewing an initialized f32 slice as bytes; the pointer
+            // is valid for `len * 4` bytes and u8 has no alignment demands.
             HostTensor::F32(v) => unsafe {
                 std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
             },
+            // SAFETY: i8 and u8 have identical size/alignment; the slice is
+            // initialized and lives as long as `self`.
             HostTensor::I8(v) => unsafe {
                 std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len())
             },
             HostTensor::U8(v) => v,
+            // SAFETY: viewing an initialized i32 slice as bytes; the pointer
+            // is valid for `len * 4` bytes and u8 has no alignment demands.
             HostTensor::I32(v) => unsafe {
                 std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
             },
